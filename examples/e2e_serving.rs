@@ -1,0 +1,164 @@
+//! End-to-end driver (DESIGN.md §7 real mode): load the AOT-compiled
+//! model into two stateless PJRT engines, serve a batch of concurrent
+//! requests through the full HTTP → coordinator → engine path, verify
+//! output determinism across the cross-engine KV handoff, and report
+//! latency/throughput. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run after `make artifacts` with:
+//!   `cargo run --release --example e2e_serving`
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use arrow::json::Json;
+use arrow::util::rng::Rng;
+use arrow::util::stats;
+
+const PORT: u16 = 18233;
+const N_REQUESTS: usize = 24;
+const CONCURRENCY: usize = 6;
+
+fn http_post(addr: &str, path: &str, body: &str) -> Result<String, String> {
+    let mut s = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+    s.set_read_timeout(Some(Duration::from_secs(180))).ok();
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).map_err(|e| e.to_string())?;
+    let mut out = String::new();
+    s.read_to_string(&mut out).map_err(|e| e.to_string())?;
+    out.split_once("\r\n\r\n")
+        .map(|x| x.1.to_string())
+        .ok_or_else(|| "no body".into())
+}
+
+fn http_get(addr: &str, path: &str) -> Result<String, String> {
+    let mut s = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+    s.set_read_timeout(Some(Duration::from_secs(10))).ok();
+    s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
+        .map_err(|e| e.to_string())?;
+    let mut out = String::new();
+    s.read_to_string(&mut out).map_err(|e| e.to_string())?;
+    out.split_once("\r\n\r\n")
+        .map(|x| x.1.to_string())
+        .ok_or_else(|| "no body".into())
+}
+
+fn main() {
+    let addr = format!("127.0.0.1:{PORT}");
+    // Start the real server in-process (2 stateless engines).
+    std::thread::spawn(|| {
+        arrow::server::serve(arrow::server::ServeConfig {
+            artifacts_dir: "artifacts".into(),
+            port: PORT,
+            instances: 2,
+            ttft_slo: 2.0,
+            tpot_slo: 0.5,
+        })
+        .expect("server failed — run `make artifacts` first");
+    });
+
+    // Wait for readiness (engine compilation takes a few seconds).
+    let t0 = Instant::now();
+    loop {
+        if http_get(&addr, "/healthz").map(|b| b == "ok").unwrap_or(false) {
+            break;
+        }
+        if t0.elapsed() > Duration::from_secs(120) {
+            eprintln!("server did not become ready; did you run `make artifacts`?");
+            std::process::exit(1);
+        }
+        std::thread::sleep(Duration::from_millis(250));
+    }
+    println!("server ready in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // Fire N_REQUESTS concurrent completions (varied prompts/lengths).
+    let mut rng = Rng::new(7);
+    let jobs: Vec<(Vec<i64>, usize)> = (0..N_REQUESTS)
+        .map(|_| {
+            let len = rng.int_range(4, 48) as usize;
+            let prompt: Vec<i64> = (0..len).map(|_| rng.int_range(1, 2047)).collect();
+            let max_tokens = rng.int_range(4, 24) as usize;
+            (prompt, max_tokens)
+        })
+        .collect();
+
+    let bench_t0 = Instant::now();
+    let results = arrow::util::threads::parallel_map(jobs.clone(), CONCURRENCY, |(prompt, max_tokens)| {
+        let body = Json::obj(vec![
+            (
+                "tokens",
+                Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+            ("max_tokens", Json::Num(*max_tokens as f64)),
+        ]);
+        let t0 = Instant::now();
+        let resp = http_post(&format!("127.0.0.1:{PORT}"), "/v1/completions", &body.encode());
+        (resp, t0.elapsed().as_secs_f64())
+    });
+    let wall = bench_t0.elapsed().as_secs_f64();
+
+    // Validate + aggregate.
+    let mut latencies = Vec::new();
+    let mut tokens_out = 0usize;
+    let mut failures = 0usize;
+    let mut first_result: Option<Vec<i64>> = None;
+    for ((_, max_tokens), (resp, lat)) in jobs.iter().zip(&results) {
+        match resp.as_ref().ok().and_then(|b| Json::parse(b).ok()) {
+            Some(v) if v.get("tokens").as_arr().is_some() => {
+                let toks = v.get("tokens").as_arr().unwrap();
+                assert_eq!(toks.len(), *max_tokens, "wrong output length");
+                tokens_out += toks.len();
+                latencies.push(*lat);
+                if first_result.is_none() {
+                    first_result =
+                        Some(toks.iter().filter_map(|x| x.as_i64()).collect());
+                }
+            }
+            _ => failures += 1,
+        }
+    }
+    assert_eq!(failures, 0, "all requests must succeed");
+
+    // Determinism across the KV-handoff path: replay request 0 and
+    // compare token-for-token.
+    let (p0, m0) = &jobs[0];
+    let body = Json::obj(vec![
+        (
+            "tokens",
+            Json::Arr(p0.iter().map(|&t| Json::Num(t as f64)).collect()),
+        ),
+        ("max_tokens", Json::Num(*m0 as f64)),
+    ]);
+    let replay = http_post(&addr, "/v1/completions", &body.encode()).unwrap();
+    let replay_tokens: Vec<i64> = Json::parse(&replay)
+        .unwrap()
+        .get("tokens")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|x| x.as_i64())
+        .collect();
+    assert_eq!(
+        Some(replay_tokens),
+        first_result,
+        "greedy decoding must be deterministic"
+    );
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!("\n=== E2E serving report ===");
+    println!("requests        : {N_REQUESTS} (concurrency {CONCURRENCY}), 0 failures");
+    println!("output tokens   : {tokens_out}");
+    println!("wall time       : {wall:.2}s");
+    println!("throughput      : {:.1} tokens/s, {:.2} req/s", tokens_out as f64 / wall, N_REQUESTS as f64 / wall);
+    println!("latency p50     : {:.3}s", stats::percentile_sorted(&latencies, 50.0));
+    println!("latency p90     : {:.3}s", stats::percentile_sorted(&latencies, 90.0));
+    println!("latency max     : {:.3}s", latencies.last().unwrap());
+    println!("determinism     : replay of request 0 matched token-for-token");
+    let metrics = http_get(&addr, "/metrics").unwrap();
+    println!("server /metrics : {metrics}");
+    println!("\nE2E OK — full stack (HTTP → coordinator → PJRT engines → KV handoff) verified.");
+    std::process::exit(0);
+}

@@ -1,0 +1,48 @@
+//! Quickstart: simulate Arrow vs the static baselines on a bursty
+//! workload and print the headline comparison in under a second.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use arrow::costmodel::CostModel;
+use arrow::metrics::SloReport;
+use arrow::scenarios::{build, System};
+use arrow::trace::catalog;
+
+fn main() {
+    // The Azure Code trace: long prompts, tiny outputs, heavy bursts —
+    // the workload where adaptive PD-ratio scheduling matters most.
+    let w = catalog::by_name("azure_code").expect("catalog");
+    let trace = w.generate(42).clip_seconds(300.0);
+    println!(
+        "workload: {} ({} requests over {:.0}s, TTFT SLO {}s, TPOT SLO {}s)",
+        w.name(),
+        trace.len(),
+        trace.duration(),
+        w.ttft_slo,
+        w.tpot_slo
+    );
+
+    // Push the cluster to 12x the recorded arrival rate.
+    let t = trace.with_rate(trace.rate() * 12.0);
+    println!("replaying at {:.1} req/s on 8 simulated H800 GPUs\n", t.rate());
+
+    println!(
+        "{:<14} {:>10} {:>10} {:>10} {:>7}",
+        "system", "SLO att.", "p90 TTFT", "p90 TPOT", "flips"
+    );
+    for sys in System::all() {
+        let cluster = build(sys, 8, &CostModel::h800_llama8b(), w.ttft_slo, w.tpot_slo, false);
+        let res = cluster.run(&t);
+        let rep = SloReport::from_records(&res.records, w.ttft_slo, w.tpot_slo, t.duration());
+        println!(
+            "{:<14} {:>9.1}% {:>9.2}s {:>9.3}s {:>7}",
+            sys.label(),
+            rep.slo_attainment * 100.0,
+            rep.p90_ttft,
+            rep.p90_tpot,
+            res.total_flips
+        );
+    }
+    println!("\nArrow's elastic pools absorb the bursts that overwhelm the");
+    println!("static 4P/4D splits; see `arrow figures fig7` for full sweeps.");
+}

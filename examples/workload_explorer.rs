@@ -1,0 +1,64 @@
+//! Workload explorer: regenerate the four production-trace surrogates,
+//! print their §3.1 statistics next to the paper's published numbers, and
+//! render quick ASCII load timelines (Fig. 1's shape at terminal scale).
+//!
+//! Run with: `cargo run --release --example workload_explorer`
+
+use arrow::trace::catalog;
+
+fn sparkline(values: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = values.iter().cloned().fold(f64::MIN, f64::max).max(1.0);
+    values
+        .iter()
+        .map(|&v| BARS[((v / max) * 7.0).round().clamp(0.0, 7.0) as usize])
+        .collect()
+}
+
+fn main() {
+    println!("paper-published statistics vs synthetic surrogates (seed 1):\n");
+    println!(
+        "{:<15} {:>7} {:>9} {:>9} {:>7} {:>7}  paper says",
+        "trace", "#req", "med_in", "med_out", "io_r", "min_cv"
+    );
+    let published = [
+        ("azure_code", "r=0.95, cv=0.80, 8819 reqs"),
+        ("azure_conv", "r=0.29, 19366 reqs"),
+        ("burstgpt", "cv=1.11, 6009 reqs"),
+        ("mooncake_conv", "cv=0.16, long-context, 1756 reqs"),
+    ];
+    for (name, note) in published {
+        let w = catalog::by_name(name).unwrap();
+        let t = w.generate(1);
+        let s = t.stats();
+        println!(
+            "{:<15} {:>7} {:>9.0} {:>9.0} {:>7.2} {:>7.2}  {}",
+            name, s.n, s.median_input, s.median_output, s.io_correlation, s.minute_input_cv, note
+        );
+    }
+
+    println!("\nper-minute input-token load (Fig. 1 at terminal scale):\n");
+    for w in catalog::table1() {
+        let t = w.generate(1);
+        let series: Vec<f64> = t
+            .per_minute_load()
+            .iter()
+            .map(|m| m.input_tokens as f64)
+            .collect();
+        println!("{:<15} {}", w.name(), sparkline(&series));
+    }
+
+    println!("\nrate rescaling (§7.1 evaluation workflow):");
+    let t = catalog::by_name("azure_code").unwrap().generate(1);
+    for mult in [1.0, 2.0, 8.0] {
+        let r = t.with_rate(t.rate() * mult);
+        println!(
+            "  x{:<4} -> {:.2} req/s over {:.0}s ({} requests, lengths unchanged)",
+            mult,
+            r.rate(),
+            r.duration(),
+            r.len()
+        );
+    }
+    println!("\nexport all traces as JSONL with: `arrow traces --out results/traces`");
+}

@@ -1,0 +1,5 @@
+"""Build-time-only package: L1 Pallas kernels + L2 JAX model + AOT lowering.
+
+Never imported at serving time — `make artifacts` runs once and the rust
+binary is self-contained afterwards.
+"""

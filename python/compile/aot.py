@@ -1,0 +1,160 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts.
+
+Run once by ``make artifacts``; python never appears on the request path.
+
+Interchange format is HLO text, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted into ``artifacts/``:
+
+  model_config.json        — hyper-params + serving shapes + artifact index
+  weights.bin              — all parameters, little-endian f32, in the
+                             canonical ``param_spec`` order
+  weights_manifest.json    — name/shape/offset of each tensor in weights.bin
+  prefill_s{S}.hlo.txt     — one per prefill bucket S
+  decode_b{B}.hlo.txt      — the batched decode step
+
+Parameter convention for the HLO entry computations: the model weights come
+first (in ``param_spec`` order), then the step-specific operands. Outputs
+are a tuple (lowered with return_tuple=True; rust unwraps with to_tupleN).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import TINY, TEST, ModelConfig
+from . import model as M
+
+CONFIGS = {"tiny": TINY, "test": TEST}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the only format the rust
+    side's XLA 0.5.1 parses; see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _prefill_fn(cfg: ModelConfig, param_names, *args):
+    n = len(param_names)
+    params = dict(zip(param_names, args[:n]))
+    tokens, valid_len = args[n], args[n + 1]
+    first, k, v = M.prefill_step(params, tokens, valid_len, cfg, use_pallas=True)
+    return first, k, v
+
+
+def _decode_fn(cfg: ModelConfig, param_names, *args):
+    n = len(param_names)
+    params = dict(zip(param_names, args[:n]))
+    tokens, k_cache, v_cache, cache_len = args[n : n + 4]
+    # return_rows: the artifact outputs only the per-layer new K/V rows
+    # [L, B, H, Dh]; the rust host scatters them (EXPERIMENTS.md §Perf-L2).
+    nxt, k_rows, v_rows = M.decode_step(
+        params, tokens, k_cache, v_cache, cache_len, cfg,
+        use_pallas=True, return_rows=True,
+    )
+    return nxt, k_rows, v_rows
+
+
+def lower_prefill(cfg: ModelConfig, s: int) -> str:
+    spec = M.param_spec(cfg)
+    names = [n for n, _ in spec]
+    shapes = [jax.ShapeDtypeStruct(sh, jnp.float32) for _, sh in spec]
+    tok = jax.ShapeDtypeStruct((1, s), jnp.int32)
+    vlen = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = functools.partial(_prefill_fn, cfg, names)
+    lowered = jax.jit(fn).lower(*shapes, tok, vlen)
+    return to_hlo_text(lowered)
+
+
+def lower_decode(cfg: ModelConfig) -> str:
+    spec = M.param_spec(cfg)
+    names = [n for n, _ in spec]
+    shapes = [jax.ShapeDtypeStruct(sh, jnp.float32) for _, sh in spec]
+    b, t, l = cfg.decode_batch, cfg.max_seq_len, cfg.n_layers
+    tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    kv = jax.ShapeDtypeStruct((l, b, t, cfg.n_heads, cfg.head_dim), jnp.float32)
+    clen = jax.ShapeDtypeStruct((b,), jnp.int32)
+    fn = functools.partial(_decode_fn, cfg, names)
+    lowered = jax.jit(fn).lower(*shapes, tok, kv, kv, clen)
+    return to_hlo_text(lowered)
+
+
+def write_weights(cfg: ModelConfig, out_dir: str, seed: int) -> dict:
+    params = M.init_params(cfg, seed)
+    manifest = []
+    offset = 0
+    blob_path = os.path.join(out_dir, "weights.bin")
+    with open(blob_path, "wb") as f:
+        for name, shape in M.param_spec(cfg):
+            arr = np.asarray(params[name], dtype="<f4")
+            assert tuple(arr.shape) == tuple(shape), name
+            f.write(arr.tobytes())
+            manifest.append(
+                {
+                    "name": name,
+                    "shape": list(shape),
+                    "offset_bytes": offset,
+                    "size_bytes": arr.nbytes,
+                }
+            )
+            offset += arr.nbytes
+    with open(os.path.join(out_dir, "weights_manifest.json"), "w") as f:
+        json.dump({"dtype": "f32le", "total_bytes": offset, "tensors": manifest}, f,
+                  indent=1)
+    return params
+
+
+def build(cfg: ModelConfig, out_dir: str, seed: int = 0) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    write_weights(cfg, out_dir, seed)
+
+    artifacts = {"prefill": {}, "decode": None}
+    for s in cfg.prefill_buckets:
+        name = f"prefill_s{s}.hlo.txt"
+        text = lower_prefill(cfg, s)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        artifacts["prefill"][str(s)] = name
+        print(f"  {name}: {len(text)} chars")
+    name = f"decode_b{cfg.decode_batch}.hlo.txt"
+    text = lower_decode(cfg)
+    with open(os.path.join(out_dir, name), "w") as f:
+        f.write(text)
+    artifacts["decode"] = name
+    print(f"  {name}: {len(text)} chars")
+
+    config = cfg.to_dict()
+    config["artifacts"] = artifacts
+    config["seed"] = seed
+    with open(os.path.join(out_dir, "model_config.json"), "w") as f:
+        json.dump(config, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--config", default="tiny", choices=sorted(CONFIGS))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = CONFIGS[args.config]
+    print(f"AOT-lowering model '{cfg.name}' ({cfg.n_params/1e6:.2f}M params) "
+          f"-> {args.out}")
+    build(cfg, args.out, args.seed)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Model configurations for the AOT-compiled serving model.
+
+The serving demo uses a tiny Llama-style decoder so that the full
+HTTP -> Arrow scheduler -> PJRT execute path runs in real time on CPU.
+The paper's Llama-3.1-8B latencies are reproduced by the *calibrated cost
+model* on the rust side (see DESIGN.md §3); this model's job is to prove the
+three-layer stack composes, and to provide real per-iteration latencies for
+calibrating the simulator's quadratic-prefill / linear-decode fits.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static hyper-parameters of the Llama-style decoder."""
+
+    name: str = "tiny-llama"
+    vocab_size: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    head_dim: int = 32
+    ffn_dim: int = 704          # SwiGLU inner dim, ~8/3 * d_model rounded
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # Serving shapes (static: one HLO artifact per bucket).
+    prefill_buckets: tuple = (32, 128, 256)
+    decode_batch: int = 4
+    max_seq_len: int = 384      # KV capacity per slot (max bucket + headroom)
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        """f32 K+V bytes for one token across all layers."""
+        return self.n_layers * 2 * self.n_heads * self.head_dim * 4
+
+    @property
+    def n_params(self) -> int:
+        d, h, hd, f = self.d_model, self.n_heads, self.head_dim, self.ffn_dim
+        per_layer = (
+            4 * d * (h * hd)   # wq wk wv wo
+            + 3 * d * f        # w_gate w_up w_down
+            + 2 * d            # two rmsnorm scales
+        )
+        return self.vocab_size * d * 2 + self.n_layers * per_layer + d
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["prefill_buckets"] = list(self.prefill_buckets)
+        d["kv_bytes_per_token"] = self.kv_bytes_per_token
+        d["n_params"] = self.n_params
+        return d
+
+
+TINY = ModelConfig()
+
+# Smaller config used only by fast unit tests.
+TEST = ModelConfig(
+    name="test-llama",
+    vocab_size=64,
+    d_model=32,
+    n_layers=2,
+    n_heads=2,
+    head_dim=16,
+    ffn_dim=48,
+    prefill_buckets=(8, 16),
+    decode_batch=2,
+    max_seq_len=24,
+)

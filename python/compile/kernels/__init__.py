@@ -1,0 +1,5 @@
+"""L1 Pallas kernels and their pure-jnp reference oracles."""
+
+from . import ref  # noqa: F401
+from .attention import decode_attention, flash_prefill_attention  # noqa: F401
+from .rmsnorm import rmsnorm  # noqa: F401

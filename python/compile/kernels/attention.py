@@ -1,0 +1,204 @@
+"""Pallas attention kernels (L1) — the serving hot-spot.
+
+Two kernels, mirroring the two phases the paper disaggregates:
+
+* ``flash_prefill_attention`` — causal flash attention with online softmax,
+  tiled over (head, q-block) grid steps, K/V streamed block-by-block.
+  This is the quadratic-in-S prefill workload (paper §3.1/§4.2).
+* ``decode_attention`` — single-token attention of a batch of queries
+  against padded per-sequence KV caches; linear in total cached tokens
+  (paper §4.3).
+
+TPU adaptation of the paper's GPU setting (DESIGN.md §4): tiles are sized
+for VMEM staging via BlockSpec instead of CUDA shared-memory blocks; the
+inner q@k^T / p@v contractions are MXU-shaped matmuls. Kernels run with
+``interpret=True`` so the AOT HLO contains plain ops the CPU PJRT client
+executes; real-TPU perf is estimated from the block geometry (DESIGN.md §9).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU systolic dimension; for the tiny
+# demo model (S <= 288) blocks clamp to the sequence length.
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+_NEG_INF = -1e30
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, vlen_ref, o_ref, *, block_k: int, s: int):
+    """One grid step: all K/V blocks folded into one q-block of one head.
+
+    Online-softmax accumulators (m, l, acc) live in registers/VMEM for the
+    whole step; K/V are visited in ``block_k`` chunks.
+    """
+    h = pl.program_id(0)
+    qi = pl.program_id(1)
+    del h  # head is selected by the BlockSpec index_map
+    q = q_ref[...].astype(jnp.float32)  # [block_q, d]
+    block_q, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    q = q * scale
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    vlen = vlen_ref[0]
+
+    n_kb = s // block_k
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[...], kb * block_k, block_k).astype(
+            jnp.float32
+        )  # [block_k, d]
+        v = jax.lax.dynamic_slice_in_dim(v_ref[...], kb * block_k, block_k).astype(
+            jnp.float32
+        )
+        logits = q @ k.T  # [block_q, block_k] — MXU matmul
+        k_pos = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1
+        )
+        mask = (k_pos <= q_pos) & (k_pos < vlen)
+        logits = jnp.where(mask, logits, _NEG_INF)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)  # [block_q, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + p @ v  # MXU matmul
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    # Padding queries attend to nothing valid when vlen==0; avoid 0/0.
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_prefill_attention(
+    q: jnp.ndarray,  # [S, H, D]
+    k: jnp.ndarray,  # [S, H, D]
+    v: jnp.ndarray,  # [S, H, D]
+    valid_len,       # scalar int32 (static or traced)
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Causal flash attention over one padded prefill sequence."""
+    s, h, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q or s % block_k:
+        raise ValueError(f"S={s} must be divisible by block sizes {block_q},{block_k}")
+    vlen = jnp.asarray(valid_len, jnp.int32).reshape((1,))
+
+    # Layout: put head first so each grid step sees a contiguous [S, D] slab.
+    qt = q.transpose(1, 0, 2)  # [H, S, D]
+    kt = k.transpose(1, 0, 2)
+    vt = v.transpose(1, 0, 2)
+
+    grid = (h, s // block_q)
+    out = pl.pallas_call(
+        functools.partial(_prefill_kernel, block_k=block_k, s=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda hh, qi: (hh, qi, 0)),
+            pl.BlockSpec((None, s, d), lambda hh, qi: (hh, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda hh, qi: (hh, 0, 0)),
+            pl.BlockSpec((1,), lambda hh, qi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda hh, qi: (hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt, vlen)
+    return out.transpose(1, 0, 2)  # back to [S, H, D]
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, block_t: int, t: int):
+    """One grid step = one batch element: attend one query to its KV cache."""
+    q = q_ref[...].astype(jnp.float32)  # [H, D]
+    h, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    q = q * scale
+    clen = len_ref[...]  # scalar: BlockSpec (None,) collapses the batch dim
+
+    n_tb = t // block_t
+
+    def body(tb, carry):
+        m_prev, l_prev, acc = carry
+        kk = jax.lax.dynamic_slice_in_dim(k_ref[...], tb * block_t, block_t).astype(
+            jnp.float32
+        )  # [block_t, H, D]
+        vv = jax.lax.dynamic_slice_in_dim(v_ref[...], tb * block_t, block_t).astype(
+            jnp.float32
+        )
+        logits = jnp.einsum("hd,thd->ht", q, kk)  # [H, block_t]
+        t_pos = tb * block_t + jax.lax.broadcasted_iota(jnp.int32, (1, block_t), 1)
+        logits = jnp.where(t_pos < clen, logits, _NEG_INF)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)  # [H, block_t]
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("ht,thd->hd", p, vv)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((h, 1), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((h, 1), jnp.float32)
+    acc0 = jnp.zeros((h, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_tb, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,          # [B, H, D]
+    k_cache: jnp.ndarray,    # [B, T, H, D]
+    v_cache: jnp.ndarray,    # [B, T, H, D]
+    cache_len: jnp.ndarray,  # [B] int32
+    *,
+    block_t: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched single-token decode attention against padded KV caches."""
+    b, h, d = q.shape
+    t = k_cache.shape[1]
+    block_t = min(block_t, t)
+    if t % block_t:
+        raise ValueError(f"T={t} must be divisible by block_t={block_t}")
+    clen = cache_len.astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_t=block_t, t=t),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((None, h, d), lambda bb: (bb, 0, 0)),
+            pl.BlockSpec((None, t, h, d), lambda bb: (bb, 0, 0, 0)),
+            pl.BlockSpec((None, t, h, d), lambda bb: (bb, 0, 0, 0)),
+            pl.BlockSpec((None,), lambda bb: (bb,)),
+        ],
+        out_specs=pl.BlockSpec((None, h, d), lambda bb: (bb, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(q, k_cache, v_cache, clen)
+    return out
+
+
+def vmem_estimate_prefill(s: int, d: int, block_q: int, block_k: int) -> int:
+    """Bytes of VMEM one prefill grid step touches (f32). Used by DESIGN §9."""
+    q_tile = block_q * d * 4
+    kv_resident = 2 * s * d * 4  # full K and V slabs for the head
+    accs = block_q * (d + 2) * 4
+    out = block_q * d * 4
+    return q_tile + kv_resident + accs + out
+
+
+def vmem_estimate_decode(t: int, h: int, d: int, block_t: int) -> int:
+    """Bytes of VMEM one decode grid step touches (f32)."""
+    q_tile = h * d * 4
+    kv_resident = 2 * t * h * d * 4
+    accs = h * (d + 2) * 4
+    return q_tile + kv_resident + accs + h * d * 4

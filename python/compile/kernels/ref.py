@@ -1,0 +1,78 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here; pytest asserts allclose between the two across
+hypothesis-generated shapes. These references are also what the L2 model
+falls back to when ``use_pallas=False`` (useful for debugging lowering
+issues independently of kernel bugs).
+"""
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm over the last axis: x * scale / rms(x)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jnp.reciprocal(jnp.sqrt(var + eps)) * scale).astype(x.dtype)
+
+
+def causal_attention_ref(
+    q: jnp.ndarray,  # [S, H, D]
+    k: jnp.ndarray,  # [S, H, D]
+    v: jnp.ndarray,  # [S, H, D]
+    valid_len=None,
+) -> jnp.ndarray:
+    """Causal self-attention for a single (prefill) sequence.
+
+    Positions >= valid_len are padding: they may attend (their output is
+    garbage and discarded) but are never attended *to* by valid positions.
+    """
+    s = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    # [H, S, S]
+    logits = jnp.einsum("qhd,khd->hqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    pos = jnp.arange(s)
+    mask = pos[None, :] <= pos[:, None]  # causal [q, k]
+    if valid_len is not None:
+        mask = mask & (pos[None, :] < valid_len)
+    logits = jnp.where(mask[None, :, :], logits, -1e30)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,khd->qhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,          # [B, H, D] single new query per sequence
+    k_cache: jnp.ndarray,    # [B, T, H, D]
+    v_cache: jnp.ndarray,    # [B, T, H, D]
+    cache_len: jnp.ndarray,  # [B] int32: number of valid cache entries
+) -> jnp.ndarray:
+    """Single-token decode attention against a (padded) KV cache.
+
+    Entry ``t`` of the cache is valid iff ``t < cache_len[b]``. The new
+    token's own K/V must already be written at position ``cache_len[b]-1``
+    by the caller (i.e. cache_len counts it).
+    """
+    t = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum(
+        "bhd,bthd->bht", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    )
+    logits = logits * scale
+    valid = jnp.arange(t)[None, :] < cache_len[:, None]  # [B, T]
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bht,bthd->bhd", probs, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """SwiGLU FFN: down( silu(x@gate) * (x@up) )."""
+    xf = x.astype(jnp.float32)
+    g = xf @ w_gate.astype(jnp.float32)
+    u = xf @ w_up.astype(jnp.float32)
+    out = (g * jnp.reciprocal(1.0 + jnp.exp(-g)) * u) @ w_down.astype(jnp.float32)
+    return out.astype(x.dtype)

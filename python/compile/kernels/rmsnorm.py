@@ -1,0 +1,44 @@
+"""Pallas RMSNorm kernel — the small fused pre-attention/pre-FFN norm.
+
+Grid is one step per row-block; the reduction over the feature axis happens
+entirely in VMEM. Validated against ``ref.rmsnorm_ref`` by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # [block_rows, d]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    inv = jnp.reciprocal(jnp.sqrt(var + eps))
+    o_ref[...] = (x * inv * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(
+    x: jnp.ndarray,      # [N, D]
+    scale: jnp.ndarray,  # [D]
+    eps: float = 1e-5,
+    *,
+    block_rows: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """RMSNorm over the last axis of a 2-D array."""
+    n, d = x.shape
+    block_rows = min(block_rows, n)
+    if n % block_rows:
+        raise ValueError(f"N={n} must be divisible by block_rows={block_rows}")
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

@@ -1,0 +1,239 @@
+"""L2: Llama-style decoder model (JAX), calling the L1 Pallas kernels.
+
+Two entry points are AOT-lowered per model (see ``aot.py``):
+
+* ``prefill_step(params, tokens[1,S], valid_len)`` →
+  ``(first_token[1] i32, k_cache [L,S,H,Dh], v_cache [L,S,H,Dh])``
+  One HLO artifact per prefill bucket S; quadratic cost in S.
+
+* ``decode_step(params, tokens[B], k_cache [L,B,T,H,Dh], v_cache alike,
+  cache_len[B])`` → ``(next_tokens[B] i32, k_cache', v_cache')``
+  ``cache_len[b]`` is the number of tokens already cached for slot ``b``
+  (0 = inactive slot). The new token's K/V is written at position
+  ``cache_len[b]``; attention then covers ``cache_len[b]+1`` entries.
+  Linear cost in total cached tokens — exactly the scaling the paper's
+  decode-load analysis (§4.3) relies on.
+
+Weights are explicit parameters (not baked constants) so the HLO stays
+small; the rust runtime feeds them from ``artifacts/weights.bin`` following
+``weights_manifest.json`` (see ``aot.py``).
+
+Greedy argmax sampling happens inside the graph so the coordinator moves
+only token ids, never logits.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.attention import decode_attention, flash_prefill_attention
+from .kernels.rmsnorm import rmsnorm
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the canonical flattening order used by
+    both ``aot.py`` (weights.bin writer) and the rust runtime (reader)."""
+    d, h, hd, f = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.ffn_dim
+    spec: list[tuple[str, tuple[int, ...]]] = [("embed", (cfg.vocab_size, d))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "attn_norm", (d,)),
+            (p + "wq", (d, h * hd)),
+            (p + "wk", (d, h * hd)),
+            (p + "wv", (d, h * hd)),
+            (p + "wo", (h * hd, d)),
+            (p + "ffn_norm", (d,)),
+            (p + "w_gate", (d, f)),
+            (p + "w_up", (d, f)),
+            (p + "w_down", (f, d)),
+        ]
+    spec += [("final_norm", (d,)), ("unembed", (d, cfg.vocab_size))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, jnp.ndarray]:
+    """Seeded random init (scaled normal). No pretrained weights are
+    available offline; the serving demo needs realistic *compute*, not
+    realistic *text* (DESIGN.md §3)."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            std = 1.0 / math.sqrt(shape[0])
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) * std
+            )
+    return params
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def _rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [..., H, Dh]; positions broadcastable to x[...,0,0]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None, None].astype(jnp.float32) * freqs  # [..., 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(
+        x.dtype
+    )
+
+
+def _norm(x2d, scale, cfg: ModelConfig, use_pallas: bool):
+    if use_pallas and x2d.shape[0] % min(128, x2d.shape[0]) == 0:
+        return rmsnorm(x2d, scale, cfg.norm_eps, block_rows=min(128, x2d.shape[0]))
+    return ref.rmsnorm_ref(x2d, scale, cfg.norm_eps)
+
+
+def _ffn(x2d, p, prefix):
+    return ref.swiglu_ref(
+        x2d, p[prefix + "w_gate"], p[prefix + "w_up"], p[prefix + "w_down"]
+    )
+
+
+# --------------------------------------------------------------------------
+# Prefill
+# --------------------------------------------------------------------------
+
+def prefill_step(
+    params: dict,
+    tokens: jnp.ndarray,  # [1, S] int32, padded with zeros beyond valid_len
+    valid_len: jnp.ndarray,  # scalar int32
+    cfg: ModelConfig,
+    *,
+    use_pallas: bool = True,
+):
+    """Full-sequence prefill. Returns the greedily sampled first output
+    token and the per-layer K/V for handoff to a decode instance."""
+    s = tokens.shape[1]
+    h, hd = cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens[0]]  # [S, D]
+    positions = jnp.arange(s)
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        xn = _norm(x, params[p + "attn_norm"], cfg, use_pallas)
+        q = (xn @ params[p + "wq"]).reshape(s, h, hd)
+        k = (xn @ params[p + "wk"]).reshape(s, h, hd)
+        v = (xn @ params[p + "wv"]).reshape(s, h, hd)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+        if use_pallas:
+            attn = flash_prefill_attention(
+                q, k, v, valid_len, block_q=min(128, s), block_k=min(128, s)
+            )
+        else:
+            attn = ref.causal_attention_ref(q, k, v, valid_len)
+        x = x + attn.reshape(s, h * hd) @ params[p + "wo"]
+        xn = _norm(x, params[p + "ffn_norm"], cfg, use_pallas)
+        x = x + _ffn(xn, params, p)
+        ks.append(k)
+        vs.append(v)
+    xn = _norm(x, params["final_norm"], cfg, use_pallas)
+    logits = xn @ params["unembed"]  # [S, V]
+    # The first output token comes from the *last valid* position.
+    last = logits[valid_len - 1]
+    first_token = jnp.argmax(last, axis=-1).astype(jnp.int32).reshape(1)
+    k_cache = jnp.stack(ks)  # [L, S, H, Dh]
+    v_cache = jnp.stack(vs)
+    return first_token, k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def decode_step(
+    params: dict,
+    tokens: jnp.ndarray,     # [B] int32 — last emitted token per slot
+    k_cache: jnp.ndarray,    # [L, B, T, H, Dh]
+    v_cache: jnp.ndarray,    # [L, B, T, H, Dh]
+    cache_len: jnp.ndarray,  # [B] int32 — tokens already cached (0 = idle)
+    cfg: ModelConfig,
+    *,
+    use_pallas: bool = True,
+    return_rows: bool = False,
+):
+    """One continuous-batching decode iteration over B slots.
+
+    With ``return_rows=True`` (the AOT serving artifact), the updated
+    caches are NOT returned; instead the per-layer new K/V rows
+    ``[L, B, H, Dh]`` are, and the host scatters them at position
+    ``cache_len[b]`` — shrinking the per-step device→host transfer from
+    O(L·B·T·H·Dh) to O(L·B·H·Dh) (see EXPERIMENTS.md §Perf-L2).
+    """
+    b = tokens.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens]  # [B, D]
+    pos = cache_len  # new token's position index
+    new_len = cache_len + 1
+    k_out, v_out = k_cache, v_cache
+    k_rows, v_rows = [], []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        xn = _norm(x, params[p + "attn_norm"], cfg, use_pallas)
+        q = (xn @ params[p + "wq"]).reshape(b, h, hd)
+        k = (xn @ params[p + "wk"]).reshape(b, h, hd)
+        v = (xn @ params[p + "wv"]).reshape(b, h, hd)
+        q = _rope(q, pos, cfg.rope_theta)
+        k = _rope(k, pos, cfg.rope_theta)
+        # Scatter the new K/V at position cache_len[b] for every slot.
+        bidx = jnp.arange(b)
+        k_out = k_out.at[i, bidx, pos].set(k)
+        v_out = v_out.at[i, bidx, pos].set(v)
+        k_rows.append(k)
+        v_rows.append(v)
+        if use_pallas:
+            t_cap = k_cache.shape[2]
+            block_t = next(bt for bt in (128, 64, 32, 16, 8, 4, 2, 1)
+                           if t_cap % bt == 0)
+            attn = decode_attention(q, k_out[i], v_out[i], new_len,
+                                    block_t=block_t)
+        else:
+            attn = ref.decode_attention_ref(q, k_out[i], v_out[i], new_len)
+        x = x + attn.reshape(b, h * hd) @ params[p + "wo"]
+        xn = _norm(x, params[p + "ffn_norm"], cfg, use_pallas)
+        x = x + _ffn(xn, params, p)
+    xn = _norm(x, params["final_norm"], cfg, use_pallas)
+    logits = xn @ params["unembed"]  # [B, V]
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if return_rows:
+        return next_tokens, jnp.stack(k_rows), jnp.stack(v_rows)
+    return next_tokens, k_out, v_out
+
+
+# --------------------------------------------------------------------------
+# Reference full generation (tests only)
+# --------------------------------------------------------------------------
+
+def generate_ref(params, prompt: jnp.ndarray, n_new: int, cfg: ModelConfig):
+    """Greedy generation via repeated full prefill — O(n^3), tests only.
+    The prefill/decode split must produce exactly this token sequence."""
+    toks = list(int(t) for t in prompt)
+    out = []
+    for _ in range(n_new):
+        s = len(toks)
+        # pad to next bucket-free length (any length works for the ref path)
+        tok_arr = jnp.asarray([toks], jnp.int32)
+        first, _, _ = prefill_step(
+            params, tok_arr, jnp.int32(s), cfg, use_pallas=False
+        )
+        nxt = int(first[0])
+        out.append(nxt)
+        toks.append(nxt)
+    return out

@@ -1,0 +1,96 @@
+"""AOT path tests: HLO text emission, weights blob layout, artifact index.
+
+Uses the TEST config (tiny shapes) so lowering stays fast. The emitted HLO
+must be plain text starting with ``HloModule`` — the only format the rust
+side's xla_extension 0.5.1 parses (64-bit-proto-id issue; see aot.py).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.configs import TEST
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.build(TEST, str(out), seed=0)
+    return str(out)
+
+
+def test_hlo_text_format(built):
+    for s in TEST.prefill_buckets:
+        path = os.path.join(built, f"prefill_s{s}.hlo.txt")
+        with open(path) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), "must be HLO text, not proto"
+        assert "ENTRY" in text
+    with open(os.path.join(built, f"decode_b{TEST.decode_batch}.hlo.txt")) as f:
+        assert f.read().startswith("HloModule")
+
+
+def test_hlo_entry_parameter_count(built):
+    """Entry computation takes |params| + step operands."""
+    n_params = len(M.param_spec(TEST))
+    with open(os.path.join(built, f"prefill_s{TEST.prefill_buckets[0]}.hlo.txt")) as f:
+        text = f.read()
+    entry = text[text.index("ENTRY"):]
+    body = entry[: entry.index("ROOT")]
+    n_args = body.count("parameter(")
+    assert n_args == n_params + 2  # tokens, valid_len
+    with open(os.path.join(built, f"decode_b{TEST.decode_batch}.hlo.txt")) as f:
+        text = f.read()
+    entry = text[text.index("ENTRY"):]
+    body = entry[: entry.index("ROOT")]
+    assert body.count("parameter(") == n_params + 4  # tok, k, v, clen
+
+
+def test_weights_blob_layout(built):
+    with open(os.path.join(built, "weights_manifest.json")) as f:
+        man = json.load(f)
+    assert man["dtype"] == "f32le"
+    spec = M.param_spec(TEST)
+    assert [t["name"] for t in man["tensors"]] == [n for n, _ in spec]
+    # Offsets are contiguous and sizes match shapes.
+    off = 0
+    for t, (_, shape) in zip(man["tensors"], spec):
+        assert t["offset_bytes"] == off
+        assert t["size_bytes"] == int(np.prod(shape)) * 4
+        off += t["size_bytes"]
+    assert man["total_bytes"] == off
+    assert os.path.getsize(os.path.join(built, "weights.bin")) == off
+
+
+def test_weights_blob_values_roundtrip(built):
+    """weights.bin content == init_params(seed) in canonical order."""
+    params = M.init_params(TEST, seed=0)
+    with open(os.path.join(built, "weights_manifest.json")) as f:
+        man = json.load(f)
+    blob = np.fromfile(os.path.join(built, "weights.bin"), dtype="<f4")
+    for t in man["tensors"]:
+        n = t["size_bytes"] // 4
+        got = blob[t["offset_bytes"] // 4 :][:n].reshape(t["shape"])
+        np.testing.assert_allclose(got, np.asarray(params[t["name"]]),
+                                   rtol=0, atol=0)
+
+
+def test_model_config_index(built):
+    with open(os.path.join(built, "model_config.json")) as f:
+        cfg = json.load(f)
+    assert cfg["name"] == TEST.name
+    assert set(cfg["artifacts"]["prefill"]) == {str(s) for s in TEST.prefill_buckets}
+    assert cfg["artifacts"]["decode"] == f"decode_b{TEST.decode_batch}.hlo.txt"
+    assert cfg["kv_bytes_per_token"] == TEST.kv_bytes_per_token
+    assert cfg["n_params"] == TEST.n_params
+
+
+def test_lowered_prefill_deterministic():
+    """Same config → byte-identical HLO text (hermetic AOT)."""
+    a = aot.lower_prefill(TEST, TEST.prefill_buckets[0])
+    b = aot.lower_prefill(TEST, TEST.prefill_buckets[0])
+    assert a == b

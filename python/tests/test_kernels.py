@@ -1,0 +1,198 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/valid-lengths; assert_allclose against
+``kernels/ref.py``. This is the CORE correctness signal for the kernels
+that end up inside every AOT artifact.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    decode_attention,
+    flash_prefill_attention,
+    ref,
+    rmsnorm,
+)
+from compile.kernels.attention import (
+    vmem_estimate_decode,
+    vmem_estimate_prefill,
+)
+
+RTOL, ATOL = 2e-5, 2e-5
+
+
+def _rand(rng, shape, dtype=np.float32):
+    x = rng.standard_normal(shape).astype(dtype)
+    return jnp.asarray(x)
+
+
+# ---------------------------------------------------------------- prefill
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s_blocks=st.integers(1, 4),
+    block=st.sampled_from([8, 16, 32]),
+    h=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16, 32]),
+    vfrac=st.floats(0.1, 1.0),
+)
+def test_prefill_matches_ref(seed, s_blocks, block, h, d, vfrac):
+    s = s_blocks * block
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, (s, h, d)) for _ in range(3))
+    vlen = max(1, int(round(s * vfrac)))
+    out = flash_prefill_attention(q, k, v, vlen, block_q=block, block_k=block)
+    exp = ref.causal_attention_ref(q, k, v, vlen)
+    # Only valid positions are meaningful.
+    assert_allclose(np.asarray(out[:vlen]), np.asarray(exp[:vlen]),
+                    rtol=RTOL, atol=ATOL)
+
+
+def test_prefill_full_length_no_mask():
+    rng = np.random.default_rng(7)
+    s, h, d = 64, 4, 32
+    q, k, v = (_rand(rng, (s, h, d)) for _ in range(3))
+    out = flash_prefill_attention(q, k, v, s, block_q=32, block_k=16)
+    exp = ref.causal_attention_ref(q, k, v, s)
+    assert_allclose(np.asarray(out), np.asarray(exp), rtol=RTOL, atol=ATOL)
+
+
+def test_prefill_vlen_one_attends_only_first():
+    """With valid_len=1 the first query attends only to itself => out = v[0]."""
+    rng = np.random.default_rng(3)
+    s, h, d = 16, 2, 8
+    q, k, v = (_rand(rng, (s, h, d)) for _ in range(3))
+    out = flash_prefill_attention(q, k, v, 1, block_q=8, block_k=8)
+    assert_allclose(np.asarray(out[0]), np.asarray(v[0]), rtol=RTOL, atol=ATOL)
+
+
+def test_prefill_block_mismatch_raises():
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (24, 2, 8))
+    with pytest.raises(ValueError):
+        flash_prefill_attention(q, q, q, 24, block_q=16, block_k=16)
+
+
+def test_prefill_rejects_nonsquare_padding_leak():
+    """Tokens past valid_len must not influence valid outputs."""
+    rng = np.random.default_rng(11)
+    s, h, d = 32, 2, 16
+    q, k, v = (_rand(rng, (s, h, d)) for _ in range(3))
+    vlen = 10
+    out1 = flash_prefill_attention(q, k, v, vlen, block_q=16, block_k=16)
+    # Scramble the padding region of k/v; valid outputs must be unchanged.
+    k2 = k.at[vlen:].set(999.0)
+    v2 = v.at[vlen:].set(-999.0)
+    out2 = flash_prefill_attention(q, k2, v2, vlen, block_q=16, block_k=16)
+    assert_allclose(np.asarray(out1[:vlen]), np.asarray(out2[:vlen]),
+                    rtol=RTOL, atol=ATOL)
+
+
+# ----------------------------------------------------------------- decode
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 4),
+    t_blocks=st.integers(1, 4),
+    block=st.sampled_from([8, 16]),
+    h=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16, 32]),
+)
+def test_decode_matches_ref(seed, b, t_blocks, block, h, d):
+    t = t_blocks * block
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, d))
+    kc = _rand(rng, (b, t, h, d))
+    vc = _rand(rng, (b, t, h, d))
+    clen = jnp.asarray(rng.integers(1, t + 1, size=b), jnp.int32)
+    out = decode_attention(q, kc, vc, clen, block_t=block)
+    exp = ref.decode_attention_ref(q, kc, vc, clen)
+    assert_allclose(np.asarray(out), np.asarray(exp), rtol=RTOL, atol=ATOL)
+
+
+def test_decode_len_one_returns_v0():
+    rng = np.random.default_rng(5)
+    b, t, h, d = 2, 16, 2, 8
+    q = _rand(rng, (b, h, d))
+    kc = _rand(rng, (b, t, h, d))
+    vc = _rand(rng, (b, t, h, d))
+    clen = jnp.asarray([1, 1], jnp.int32)
+    out = decode_attention(q, kc, vc, clen, block_t=8)
+    assert_allclose(np.asarray(out), np.asarray(vc[:, 0]), rtol=RTOL, atol=ATOL)
+
+
+def test_decode_padding_isolation():
+    """Cache entries >= cache_len must not influence the output."""
+    rng = np.random.default_rng(9)
+    b, t, h, d = 2, 32, 2, 8
+    q = _rand(rng, (b, h, d))
+    kc = _rand(rng, (b, t, h, d))
+    vc = _rand(rng, (b, t, h, d))
+    clen = jnp.asarray([5, 17], jnp.int32)
+    out1 = decode_attention(q, kc, vc, clen, block_t=16)
+    kc2 = kc.at[0, 5:].set(1e4).at[1, 17:].set(1e4)
+    vc2 = vc.at[0, 5:].set(-1e4).at[1, 17:].set(-1e4)
+    out2 = decode_attention(q, kc2, vc2, clen, block_t=16)
+    assert_allclose(np.asarray(out1), np.asarray(out2), rtol=RTOL, atol=ATOL)
+
+
+def test_decode_heterogeneous_lengths_independent_slots():
+    """Each slot's output depends only on its own cache/query."""
+    rng = np.random.default_rng(13)
+    b, t, h, d = 3, 16, 2, 8
+    q = _rand(rng, (b, h, d))
+    kc = _rand(rng, (b, t, h, d))
+    vc = _rand(rng, (b, t, h, d))
+    clen = jnp.asarray([4, 9, 16], jnp.int32)
+    full = decode_attention(q, kc, vc, clen, block_t=8)
+    for i in range(b):
+        solo = decode_attention(q[i:i+1], kc[i:i+1], vc[i:i+1], clen[i:i+1],
+                                block_t=8)
+        assert_allclose(np.asarray(full[i]), np.asarray(solo[0]),
+                        rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------- rmsnorm
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_blocks=st.integers(1, 4),
+    block=st.sampled_from([4, 8, 16]),
+    d=st.sampled_from([8, 32, 128]),
+)
+def test_rmsnorm_matches_ref(seed, n_blocks, block, d):
+    n = n_blocks * block
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, d))
+    sc = _rand(rng, (d,))
+    out = rmsnorm(x, sc, block_rows=block)
+    exp = ref.rmsnorm_ref(x, sc)
+    assert_allclose(np.asarray(out), np.asarray(exp), rtol=RTOL, atol=ATOL)
+
+
+def test_rmsnorm_unit_scale_unit_rows():
+    """Rows with rms 1 and scale 1 pass through unchanged."""
+    x = jnp.ones((8, 16), jnp.float32)
+    out = rmsnorm(x, jnp.ones((16,), jnp.float32), block_rows=8)
+    assert_allclose(np.asarray(out), np.ones((8, 16), np.float32),
+                    rtol=1e-4, atol=1e-5)
+
+
+# -------------------------------------------------------- vmem estimates
+
+def test_vmem_estimates_monotone_and_bounded():
+    small = vmem_estimate_prefill(128, 32, 64, 64)
+    big = vmem_estimate_prefill(256, 32, 128, 128)
+    assert 0 < small < big
+    assert vmem_estimate_prefill(256, 32, 128, 128) < 16 * 2**20  # fits VMEM
+    assert vmem_estimate_decode(288, 8, 32, 128) < 16 * 2**20
+    assert vmem_estimate_decode(128, 8, 32, 64) < vmem_estimate_decode(
+        256, 8, 32, 64
+    )

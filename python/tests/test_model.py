@@ -1,0 +1,210 @@
+"""L2 correctness: model shapes, pallas/ref agreement, prefill/decode split.
+
+The decisive test is ``test_split_generation_matches_ref``: greedy tokens
+produced by (one prefill) + (N decode steps through the KV cache handoff)
+must exactly equal tokens produced by repeated full-prefill generation.
+That equivalence is what makes the disaggregated serving path correct.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.configs import TEST, TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(TEST, seed=0)
+
+
+def _padded(prompt, s):
+    toks = jnp.zeros((1, s), jnp.int32).at[0, : len(prompt)].set(
+        jnp.asarray(prompt, jnp.int32)
+    )
+    return toks, jnp.int32(len(prompt))
+
+
+# ----------------------------------------------------------------- shapes
+
+def test_param_spec_matches_count():
+    cfg = TEST
+    total = sum(int(np.prod(sh)) for _, sh in M.param_spec(cfg))
+    assert total == cfg.n_params
+
+
+def test_param_spec_order_deterministic():
+    a = [n for n, _ in M.param_spec(TEST)]
+    b = [n for n, _ in M.param_spec(TEST)]
+    assert a == b
+    assert a[0] == "embed" and a[-1] == "unembed"
+
+
+def test_init_params_deterministic():
+    p1 = M.init_params(TEST, seed=3)
+    p2 = M.init_params(TEST, seed=3)
+    for k in p1:
+        assert_allclose(np.asarray(p1[k]), np.asarray(p2[k]))
+
+
+def test_init_params_seed_sensitivity():
+    p1 = M.init_params(TEST, seed=1)
+    p2 = M.init_params(TEST, seed=2)
+    assert not np.allclose(np.asarray(p1["embed"]), np.asarray(p2["embed"]))
+
+
+def test_prefill_shapes(params):
+    cfg = TEST
+    s = cfg.prefill_buckets[0]
+    toks, vlen = _padded([1, 2, 3], s)
+    first, k, v = M.prefill_step(params, toks, vlen, cfg)
+    assert first.shape == (1,) and first.dtype == jnp.int32
+    assert k.shape == (cfg.n_layers, s, cfg.n_heads, cfg.head_dim)
+    assert v.shape == k.shape
+
+
+def test_decode_shapes(params):
+    cfg = TEST
+    b, t, l = cfg.decode_batch, cfg.max_seq_len, cfg.n_layers
+    kv = jnp.zeros((l, b, t, cfg.n_heads, cfg.head_dim), jnp.float32)
+    tok = jnp.zeros((b,), jnp.int32)
+    clen = jnp.zeros((b,), jnp.int32)
+    nxt, k, v = M.decode_step(params, tok, kv, kv, clen, cfg)
+    assert nxt.shape == (b,) and nxt.dtype == jnp.int32
+    assert k.shape == kv.shape and v.shape == kv.shape
+
+
+# ------------------------------------------------- pallas == ref (at L2)
+
+def test_prefill_pallas_matches_ref(params):
+    cfg = TEST
+    s = cfg.prefill_buckets[1]
+    toks, vlen = _padded([5, 9, 2, 7, 11, 3], s)
+    f1, k1, v1 = M.prefill_step(params, toks, vlen, cfg, use_pallas=True)
+    f2, k2, v2 = M.prefill_step(params, toks, vlen, cfg, use_pallas=False)
+    assert int(f1[0]) == int(f2[0])
+    assert_allclose(np.asarray(k1), np.asarray(k2), rtol=1e-4, atol=1e-4)
+    assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4, atol=1e-4)
+
+
+def test_decode_pallas_matches_ref(params):
+    cfg = TEST
+    b, t, l = cfg.decode_batch, cfg.max_seq_len, cfg.n_layers
+    rng = np.random.default_rng(0)
+    kv = jnp.asarray(rng.standard_normal((l, b, t, cfg.n_heads, cfg.head_dim)),
+                     jnp.float32) * 0.3
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, b), jnp.int32)
+    clen = jnp.asarray([3, 7], jnp.int32)[:b]
+    n1, k1, v1 = M.decode_step(params, tok, kv, kv, clen, cfg, use_pallas=True)
+    n2, k2, v2 = M.decode_step(params, tok, kv, kv, clen, cfg, use_pallas=False)
+    assert np.array_equal(np.asarray(n1), np.asarray(n2))
+    assert_allclose(np.asarray(k1), np.asarray(k2), rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------- split-generation oracle
+
+def test_split_generation_matches_ref(params):
+    """prefill -> KV handoff -> decode iterations == full-prefill greedy."""
+    cfg = TEST
+    prompt = [3, 7, 11, 2, 9, 1, 4, 8]
+    n_new = 5
+    expected = M.generate_ref(params, jnp.asarray(prompt, jnp.int32), n_new, cfg)
+
+    s = cfg.prefill_buckets[1]
+    toks, vlen = _padded(prompt, s)
+    first, kpre, vpre = M.prefill_step(params, toks, vlen, cfg)
+
+    b, t, l = cfg.decode_batch, cfg.max_seq_len, cfg.n_layers
+    kc = jnp.zeros((l, b, t, cfg.n_heads, cfg.head_dim), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    kc = kc.at[:, 0, : len(prompt)].set(kpre[:, : len(prompt)])
+    vc = vc.at[:, 0, : len(prompt)].set(vpre[:, : len(prompt)])
+    clen = jnp.zeros((b,), jnp.int32).at[0].set(len(prompt))
+    tok = jnp.zeros((b,), jnp.int32).at[0].set(int(first[0]))
+
+    got = [int(first[0])]
+    for _ in range(n_new - 1):
+        nxt, kc, vc = M.decode_step(params, tok, kc, vc, clen, cfg)
+        clen = clen + 1
+        tok = nxt
+        got.append(int(nxt[0]))
+    assert got == expected
+
+
+def test_split_generation_two_slots_independent(params):
+    """Two concurrent sequences in one decode batch generate the same
+    tokens as each alone — continuous batching must not cross-talk."""
+    cfg = TEST
+    prompts = [[3, 7, 11, 2], [9, 1, 4, 8, 5, 6]]
+    n_new = 4
+    solo = [
+        M.generate_ref(params, jnp.asarray(p, jnp.int32), n_new, cfg)
+        for p in prompts
+    ]
+
+    s = cfg.prefill_buckets[1]
+    b, t, l = cfg.decode_batch, cfg.max_seq_len, cfg.n_layers
+    kc = jnp.zeros((l, b, t, cfg.n_heads, cfg.head_dim), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    clen = jnp.zeros((b,), jnp.int32)
+    tok = jnp.zeros((b,), jnp.int32)
+    for slot, p in enumerate(prompts):
+        toks, vlen = _padded(p, s)
+        first, kpre, vpre = M.prefill_step(params, toks, vlen, cfg)
+        kc = kc.at[:, slot, : len(p)].set(kpre[:, : len(p)])
+        vc = vc.at[:, slot, : len(p)].set(vpre[:, : len(p)])
+        clen = clen.at[slot].set(len(p))
+        tok = tok.at[slot].set(int(first[0]))
+
+    got = [[int(tok[0])], [int(tok[1])]]
+    for _ in range(n_new - 1):
+        nxt, kc, vc = M.decode_step(params, tok, kc, vc, clen, cfg)
+        clen = clen + 1
+        tok = nxt
+        got[0].append(int(nxt[0]))
+        got[1].append(int(nxt[1]))
+    assert got[0] == solo[0]
+    assert got[1] == solo[1]
+
+
+def test_prefill_bucket_invariance(params):
+    """The same prompt in different buckets yields identical first token
+    and KV prefix — bucket padding must be inert."""
+    cfg = TEST
+    prompt = [2, 4, 6]
+    outs = []
+    for s in cfg.prefill_buckets:
+        toks, vlen = _padded(prompt, s)
+        first, k, v = M.prefill_step(params, toks, vlen, cfg)
+        outs.append((int(first[0]), np.asarray(k[:, : len(prompt)])))
+    assert outs[0][0] == outs[1][0]
+    assert_allclose(outs[0][1], outs[1][1], rtol=1e-4, atol=1e-4)
+
+
+def test_idle_slots_do_not_disturb_active(params):
+    """Garbage in idle slots (cache_len=0) must not change active slots."""
+    cfg = TEST
+    b, t, l = cfg.decode_batch, cfg.max_seq_len, cfg.n_layers
+    rng = np.random.default_rng(1)
+    kv = jnp.asarray(
+        rng.standard_normal((l, b, t, cfg.n_heads, cfg.head_dim)), jnp.float32
+    ) * 0.2
+    tok = jnp.asarray([7] + [0] * (b - 1), jnp.int32)
+    clen = jnp.asarray([4] + [0] * (b - 1), jnp.int32)
+    n1, _, _ = M.decode_step(params, tok, kv, kv, clen, cfg)
+    # scramble idle slots
+    kv2 = kv.at[:, 1:].set(jnp.asarray(
+        rng.standard_normal((l, b - 1, t, cfg.n_heads, cfg.head_dim)),
+        jnp.float32))
+    tok2 = tok.at[1:].set(13)
+    n2, _, _ = M.decode_step(params, tok2, kv2, kv2, clen, cfg)
+    assert int(n1[0]) == int(n2[0])
+
+
+def test_tiny_config_consistency():
+    cfg = TINY
+    assert cfg.max_seq_len >= max(cfg.prefill_buckets)
+    assert cfg.d_model == cfg.n_heads * cfg.head_dim
+    assert cfg.n_params > 1_000_000

@@ -1,0 +1,81 @@
+//! End-to-end benchmark regenerating the Fig. 7 comparison rows (one per
+//! paper table/figure, per the reproduction brief): for every Table-1
+//! workload, the four Fig. 7 systems at a low / medium / high rate, plus
+//! the headline max-sustainable-rate ratios.
+//!
+//! Full-resolution sweeps live in `arrow figures fig7`; this bench is the
+//! fast regression gate over the same code path.
+
+use arrow::costmodel::CostModel;
+use arrow::metrics::{max_sustainable_rate, SloReport};
+use arrow::scenarios::{build, System};
+use arrow::trace::catalog;
+use arrow::util::threads::{default_workers, parallel_map};
+
+const SYSTEMS: [System; 4] = [
+    System::Arrow,
+    System::VllmColocated,
+    System::VllmDisaggregated,
+    System::DistServe,
+];
+
+fn main() {
+    let clip = 240.0;
+    println!("== Fig. 7 regression rows (clip {clip}s, 8 GPUs, target 90%) ==");
+    for w in catalog::table1() {
+        let trace = w.generate(1).clip_seconds(clip);
+        let base = trace.rate();
+        println!(
+            "\n[{}] {} requests, base {:.2} req/s, SLO ttft={}s tpot={}s",
+            w.name(),
+            trace.len(),
+            base,
+            w.ttft_slo,
+            w.tpot_slo
+        );
+        println!(
+            "{:<14} {:>8} {:>8} {:>8} {:>10}",
+            "system", "low", "med", "high", "max_rate"
+        );
+        let mults = [2.0, 8.0, 24.0];
+        let jobs: Vec<(System, Option<f64>)> = SYSTEMS
+            .iter()
+            .flat_map(|&s| {
+                mults
+                    .iter()
+                    .map(move |&m| (s, Some(m)))
+                    .chain(std::iter::once((s, None)))
+            })
+            .collect();
+        let results = parallel_map(jobs.clone(), default_workers(), |&(sys, mult)| {
+            let eval = |rate: f64| {
+                let t = trace.with_rate(rate);
+                let cl = build(sys, 8, &CostModel::h800_llama8b(), w.ttft_slo, w.tpot_slo, false);
+                let res = cl.run(&t);
+                SloReport::from_records(&res.records, w.ttft_slo, w.tpot_slo, t.duration())
+            };
+            match mult {
+                Some(m) => eval(base * m).slo_attainment,
+                None => max_sustainable_rate(eval, base, 0.9, 0.05),
+            }
+        });
+        let per_sys = mults.len() + 1;
+        let arrow_max = results[per_sys - 1];
+        for (si, sys) in SYSTEMS.iter().enumerate() {
+            let r = &results[si * per_sys..(si + 1) * per_sys];
+            print!(
+                "{:<14} {:>8.3} {:>8.3} {:>8.3} {:>9.1}",
+                sys.label(),
+                r[0],
+                r[1],
+                r[2],
+                r[3]
+            );
+            if *sys != System::Arrow && r[3] > 0.0 {
+                print!("  (arrow {:.2}x)", arrow_max / r[3]);
+            }
+            println!();
+        }
+    }
+    println!("\npaper headline: arrow 3.60-5.62x over vLLM, 4.06-7.78x over vLLM-disagg.");
+}

@@ -1,0 +1,98 @@
+//! L1/L2 execution bench: real PJRT latencies of the AOT artifacts —
+//! prefill per bucket and decode per batch occupancy. These numbers feed
+//! the cost-model calibration (EXPERIMENTS.md §Calib) and gate the
+//! runtime hot path (KV marshalling overhead).
+//!
+//! Skips gracefully when `artifacts/` is absent (run `make artifacts`).
+
+use std::time::Instant;
+
+use arrow::runtime::ModelRuntime;
+use arrow::util::benchkit::fmt_dur;
+
+fn main() {
+    let dir = std::env::var("ARROW_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("model_config.json").exists() {
+        println!("runtime_exec: no artifacts at '{dir}' — run `make artifacts`; skipping.");
+        return;
+    }
+    let t0 = Instant::now();
+    let rt = match ModelRuntime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("runtime_exec: cannot load artifacts: {e}; skipping.");
+            return;
+        }
+    };
+    println!(
+        "loaded '{}' ({:.1}M params) + compiled {} executables in {}",
+        rt.info.name,
+        rt.info.n_params as f64 / 1e6,
+        rt.info.prefill_buckets.len() + 1,
+        fmt_dur(t0.elapsed().as_secs_f64())
+    );
+
+    println!("\n== prefill latency per bucket ==");
+    for &bucket in &rt.info.prefill_buckets.clone() {
+        let prompt: Vec<i32> = (0..bucket as i32).map(|i| i % 101 + 1).collect();
+        rt.prefill(&prompt).unwrap(); // warmup
+        let reps = 5;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let out = rt.prefill(&prompt).unwrap();
+            std::hint::black_box(out.first_token);
+        }
+        let dt = t0.elapsed().as_secs_f64() / reps as f64;
+        println!(
+            "  s={bucket:<5} {:>10}  ({:.1} tokens/s)",
+            fmt_dur(dt),
+            bucket as f64 / dt
+        );
+    }
+
+    println!("\n== decode latency vs batch occupancy ==");
+    let prompt: Vec<i32> = (1..32).collect();
+    let pre = rt.prefill(&prompt).unwrap();
+    for active in 1..=rt.info.decode_batch {
+        let mut st = rt.new_decode_state();
+        for slot in 0..active {
+            st.insert_prefill(slot, prompt.len(), &pre.k, &pre.v, pre.first_token, pre.bucket);
+        }
+        rt.decode_step(&mut st).unwrap(); // warmup
+        let reps = 10;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            rt.decode_step(&mut st).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64() / reps as f64;
+        println!(
+            "  batch={active} tokens={:<5} {:>10}  ({:.1} tokens/s)",
+            st.total_cached_tokens(),
+            fmt_dur(dt),
+            active as f64 / dt
+        );
+    }
+
+    println!("\n== KV handoff (migration memcpy) ==");
+    let mut st = rt.new_decode_state();
+    let reps = 50;
+    let t0 = Instant::now();
+    for i in 0..reps {
+        st.insert_prefill(
+            (i % rt.info.decode_batch as u64) as usize,
+            prompt.len(),
+            &pre.k,
+            &pre.v,
+            pre.first_token,
+            pre.bucket,
+        );
+    }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    let bytes = pre.k.len() * 8; // k + v, f32
+    println!(
+        "  insert_prefill: {:>10} for {:.1} KB  ({:.2} GB/s)",
+        fmt_dur(dt),
+        bytes as f64 / 1024.0,
+        bytes as f64 / dt / 1e9
+    );
+}

@@ -1,0 +1,73 @@
+//! L3 hot-path microbenchmarks: scheduler decision latency.
+//!
+//! The Arrow global scheduler sits on the request path of every arriving
+//! request; its placement decision must be negligible next to a ~10 ms
+//! model iteration. Target (DESIGN.md §9): well under 1 ms/decision even
+//! on a loaded 64-instance cluster.
+
+use arrow::coordinator::arrow::{ArrowConfig, ArrowPolicy};
+use arrow::coordinator::predictor::TtftPredictor;
+use arrow::costmodel::CostModel;
+use arrow::engine::SimInstance;
+use arrow::request::{InstanceId, Request, RequestId};
+use arrow::sim::policy::Policy;
+use arrow::util::benchkit::{black_box, Bencher};
+use arrow::util::rng::Rng;
+
+fn loaded_cluster(n: usize, queue_depth: usize, seed: u64) -> Vec<SimInstance> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let mut inst = SimInstance::new(InstanceId(i), CostModel::h800_llama8b());
+            for q in 0..queue_depth {
+                inst.enqueue_prefill(
+                    RequestId((i * queue_depth + q) as u64),
+                    rng.int_range(200, 20_000) as u32,
+                );
+            }
+            let kv = rng.int_range(1_000, 200_000) as u64;
+            assert!(inst.try_reserve_kv(kv));
+            inst.enqueue_decode(RequestId(900_000 + i as u64), kv as u32, 100);
+            inst
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== scheduler decision latency (L3 hot path) ==");
+
+    for &(n, depth) in &[(8usize, 4usize), (16, 8), (64, 16)] {
+        let instances = loaded_cluster(n, depth, 7);
+        let mut policy = ArrowPolicy::new(ArrowConfig::new(3.0, 0.1, n), n);
+        policy.init(&instances);
+        let mut rng = Rng::new(1);
+        let mut id = 0u64;
+        b.bench(&format!("arrow place_prefill n={n} depth={depth}"), || {
+            id += 1;
+            let req = Request::new(id, 0.0, rng.int_range(100, 30_000) as u32, 50);
+            black_box(policy.place_prefill(0.0, &req, &instances))
+        });
+        b.bench(&format!("arrow place_decode  n={n} depth={depth}"), || {
+            id += 1;
+            let req = Request::new(id, 0.0, 2_000, 50);
+            black_box(policy.place_decode(0.0, &req, InstanceId(0), &instances))
+        });
+        b.bench(&format!("arrow on_tick       n={n} depth={depth}"), || {
+            policy.on_tick(1.0, &instances);
+        });
+    }
+
+    println!("\n== TTFT predictor ==");
+    let cost = CostModel::h800_llama8b();
+    let pred = TtftPredictor::profile(&cost, 2048);
+    let queue: Vec<(u32, u32)> = (0..32).map(|i| (1_000 + i * 500, 800 + i * 100)).collect();
+    b.bench("predictor profile+fit", || {
+        black_box(TtftPredictor::profile(&cost, 2048))
+    });
+    b.bench("predictor queue_delay(32 queued)", || {
+        black_box(pred.queue_delay(&queue))
+    });
+
+    println!("\ntarget: every decision well under 1ms — see DESIGN.md §9.");
+}

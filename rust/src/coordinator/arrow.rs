@@ -1,0 +1,604 @@
+//! The Arrow adaptive scheduler (paper §5) — the system contribution.
+//!
+//! Combines:
+//! * stateless instances + elastic pools ([`Pools`]),
+//! * the startup-profiled [`TtftPredictor`] (Insight 1),
+//! * SLO-aware prefill request scheduling (Algorithm 1),
+//! * SLO-aware decode request scheduling (Algorithm 2),
+//! * instance scheduling `try_move_decode_to_prefill` /
+//!   `try_move_prefill_to_decode` (Algorithms 3 & 4),
+//! * monitor-tick instance scheduling: TPOT-violation flips, drained-pool
+//!   settling, idle-prefill harvesting (§5.5),
+//! * the overload policy: decode is prioritized, D→P flips are abandoned
+//!   when decode load is high (§5.5 "Scheduling in Overload Scenario").
+
+use super::pools::{Pool, Pools};
+use super::predictor::TtftPredictor;
+use crate::engine::SimInstance;
+use crate::request::{InstanceId, Request, Time};
+use crate::sim::policy::Policy;
+
+/// Tunables for the Arrow policy (defaults follow the paper's text).
+#[derive(Debug, Clone)]
+pub struct ArrowConfig {
+    /// TTFT SLO (Table 1, per workload).
+    pub ttft_slo: f64,
+    /// TPOT SLO (Table 1, per workload).
+    pub tpot_slo: f64,
+    /// Initial number of prefill instances (rest start as decode).
+    pub initial_prefill: usize,
+    /// Decode load (fraction of max running tokens) below which Alg. 1 is
+    /// allowed to steal a decode instance (overload guard, §5.5).
+    pub decode_low_watermark: f64,
+    /// Consecutive monitor ticks of TPOT violation before flipping a
+    /// prefill instance to decode (§5.5 condition 2).
+    pub tpot_violation_ticks: u32,
+    /// Fraction of decode-capable instances whose token interval must
+    /// exceed the TPOT threshold to count a violation tick.
+    pub tpot_violation_frac: f64,
+}
+
+impl ArrowConfig {
+    pub fn new(ttft_slo: f64, tpot_slo: f64, n_instances: usize) -> Self {
+        ArrowConfig {
+            ttft_slo,
+            tpot_slo,
+            initial_prefill: n_instances / 2,
+            decode_low_watermark: 0.5,
+            tpot_violation_ticks: 2,
+            tpot_violation_frac: 0.5,
+        }
+    }
+}
+
+pub struct ArrowPolicy {
+    cfg: ArrowConfig,
+    pools: Pools,
+    /// One TTFT predictor per instance — heterogeneous clusters (paper
+    /// §8) profile each instance type separately at startup.
+    predictors: Vec<TtftPredictor>,
+    /// Profiled "Max Running Tokens" (paper §5.3) per instance: largest
+    /// decode batch token count that still meets the TPOT SLO, capped by
+    /// that instance's KV memory.
+    max_running_tokens: Vec<u64>,
+    /// Consecutive ticks with cluster-wide TPOT violation.
+    violation_ticks: u32,
+}
+
+impl ArrowPolicy {
+    pub fn new(cfg: ArrowConfig, n_instances: usize) -> Self {
+        let pools = Pools::new(n_instances, cfg.initial_prefill.min(n_instances));
+        ArrowPolicy {
+            cfg,
+            pools,
+            predictors: Vec::new(),
+            max_running_tokens: Vec::new(),
+            violation_ticks: 0,
+        }
+    }
+
+    pub fn pools(&self) -> &Pools {
+        &self.pools
+    }
+
+    fn predictor(&self, inst: usize) -> &TtftPredictor {
+        self.predictors.get(inst).expect("policy not initialized")
+    }
+
+    /// Per-instance Max Running Tokens (∞ before init — tests only).
+    fn mrt(&self, inst: usize) -> u64 {
+        self.max_running_tokens.get(inst).copied().unwrap_or(u64::MAX)
+    }
+
+    // ------------------------------------------------------ load queries
+
+    /// Predicted prefill queueing delay of an instance (Insight 1),
+    /// using that instance's own profiled curve (heterogeneous-safe).
+    fn prefill_delay(&self, inst: &SimInstance) -> f64 {
+        self.predictor(inst.id.0).queue_delay(&inst.prefill_queue_view())
+    }
+
+    /// Argmin of predicted prefill delay over a pool.
+    fn min_prefill_delay(
+        &self,
+        pool: Pool,
+        instances: &[SimInstance],
+    ) -> Option<(InstanceId, f64)> {
+        self.pools
+            .members(pool)
+            .into_iter()
+            .map(|id| (id, self.prefill_delay(&instances[id.0])))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// Argmin of running tokens over a pool.
+    fn min_running_tokens(
+        &self,
+        pool: Pool,
+        instances: &[SimInstance],
+    ) -> Option<(InstanceId, u64)> {
+        self.pools
+            .members(pool)
+            .into_iter()
+            .map(|id| (id, instances[id.0].running_tokens()))
+            .min_by_key(|&(_, t)| t)
+    }
+
+    /// Is cluster-wide decode load low enough to steal an instance for
+    /// prefill? (overload guard in Alg. 1, §5.5)
+    fn decode_load_low(&self, instances: &[SimInstance]) -> bool {
+        let ids: Vec<InstanceId> = self
+            .pools
+            .members(Pool::Decode)
+            .into_iter()
+            .chain(self.pools.members(Pool::PrefillToDecode))
+            .collect();
+        if ids.is_empty() {
+            return false;
+        }
+        // Mean utilization relative to each instance's own capacity.
+        let mean_util = ids
+            .iter()
+            .map(|id| {
+                let cap = self.mrt(id.0).min(instances[id.0].cost.max_kv_tokens) as f64;
+                instances[id.0].running_tokens() as f64 / cap.max(1.0)
+            })
+            .sum::<f64>()
+            / ids.len() as f64;
+        mean_util < self.cfg.decode_low_watermark
+    }
+
+    /// Recent token interval of an instance, NaN treated as "no evidence".
+    fn interval_ok(&self, inst: &SimInstance) -> bool {
+        let v = inst.avg_token_interval();
+        v.is_nan() || v <= self.cfg.tpot_slo
+    }
+
+    // -------------------------------------------- Algorithms 3 & 4 (§5.5)
+
+    /// Algorithm 3: reassign a decode instance to prefill duty. Returns
+    /// the flipped instance. Keeps ≥ 2 decode-capable instances' worth of
+    /// service by requiring |D| + |P→D| > 1.
+    fn try_move_decode_to_prefill(&mut self, instances: &[SimInstance]) -> Option<InstanceId> {
+        if self.pools.decode_capable_count() <= 1 {
+            return None;
+        }
+        // Prefer an instance that was only *scheduled* for decode (P→D);
+        // else the least-loaded decode instance.
+        let pick = self
+            .min_running_tokens(Pool::PrefillToDecode, instances)
+            .or_else(|| self.min_running_tokens(Pool::Decode, instances))?;
+        let id = pick.0;
+        self.pools
+            .flip_to_prefill(id, instances[id.0].has_decode_work());
+        Some(id)
+    }
+
+    /// Algorithm 4: reassign a prefill instance to decode duty.
+    fn try_move_prefill_to_decode(&mut self, instances: &[SimInstance]) -> Option<InstanceId> {
+        if self.pools.prefill_capable_count() <= 1 {
+            return None;
+        }
+        let pick = self
+            .min_prefill_delay(Pool::DecodeToPrefill, instances)
+            .or_else(|| self.min_prefill_delay(Pool::Prefill, instances))?;
+        let id = pick.0;
+        self.pools
+            .flip_to_decode(id, instances[id.0].has_prefill_work());
+        Some(id)
+    }
+}
+
+impl Policy for ArrowPolicy {
+    fn name(&self) -> &'static str {
+        "arrow-slo-aware"
+    }
+
+    fn init(&mut self, instances: &[SimInstance]) {
+        // Startup profiling (paper §5.3): fit one TTFT quadratic and
+        // measure Max Running Tokens per instance — heterogeneous
+        // instances (different TP degree / hardware, §8) get their own
+        // curves, so placement decisions stay accurate across them.
+        self.predictors = instances
+            .iter()
+            .map(|i| TtftPredictor::profile(&i.cost, i.chunk_tokens))
+            .collect();
+        self.max_running_tokens = instances
+            .iter()
+            .map(|i| i.cost.max_running_tokens(self.cfg.tpot_slo))
+            .collect();
+    }
+
+    /// Algorithm 1: SLO-aware prefill scheduling.
+    fn place_prefill(
+        &mut self,
+        _now: Time,
+        req: &Request,
+        instances: &[SimInstance],
+    ) -> InstanceId {
+        // "Own" prefill time is instance-dependent on heterogeneous
+        // clusters; evaluate per candidate below via its own predictor.
+        let own_on = |p: &ArrowPolicy, id: InstanceId| {
+            p.predictor(id.0).prefill_seconds(req.input_len)
+        };
+        let t1 = self.min_prefill_delay(Pool::Prefill, instances);
+        if let Some((id, delay)) = t1 {
+            if delay + own_on(self, id) <= self.cfg.ttft_slo {
+                return id;
+            }
+        }
+        let t2 = self.min_prefill_delay(Pool::DecodeToPrefill, instances);
+        if let Some((id, delay)) = t2 {
+            if delay + own_on(self, id) <= self.cfg.ttft_slo {
+                return id;
+            }
+        }
+        // Hopeless requests — prefill time alone exceeds the TTFT SLO on
+        // the best candidate — can never comply (Insight 2's monotonicity:
+        // no remedial action exists); growing the prefill pool would burn
+        // a flip for nothing.
+        let best = t1.or(t2);
+        if let Some((id, _)) = best {
+            if own_on(self, id) > self.cfg.ttft_slo {
+                return id;
+            }
+        }
+        // Try to grow the prefill pool — but only if decode can spare an
+        // instance (overload policy: decode has priority).
+        if self.decode_load_low(instances) {
+            if let Some(t3) = self.try_move_decode_to_prefill(instances) {
+                return t3;
+            }
+        }
+        // Fall back to the least-loaded prefill-capable instance.
+        t1.or(t2)
+            .map(|(id, _)| id)
+            .or_else(|| {
+                // No prefill-capable instance at all: force a flip.
+                self.try_move_decode_to_prefill(instances)
+            })
+            .unwrap_or(InstanceId(0))
+    }
+
+    /// Algorithm 2: SLO-aware decode scheduling.
+    fn place_decode(
+        &mut self,
+        _now: Time,
+        req: &Request,
+        prefill_instance: InstanceId,
+        instances: &[SimInstance],
+    ) -> InstanceId {
+        // If the prefill instance was meanwhile reassigned toward decode,
+        // keep the request local — zero KV transfer (§5.3).
+        if self.pools.pool_of(prefill_instance).decode_capable() {
+            return prefill_instance;
+        }
+        // Admission counts the incoming request's own KV footprint.
+        let incoming = req.input_len as u64;
+        let t1 = self.min_running_tokens(Pool::Decode, instances);
+        if let Some((id, tokens)) = t1 {
+            if tokens + incoming <= self.mrt(id.0)
+                && self.interval_ok(&instances[id.0])
+            {
+                return id;
+            }
+        }
+        let t2 = self.min_running_tokens(Pool::PrefillToDecode, instances);
+        if let Some((id, tokens)) = t2 {
+            if tokens + incoming <= self.mrt(id.0)
+                && self.interval_ok(&instances[id.0])
+            {
+                return id;
+            }
+        }
+        if let Some(t3) = self.try_move_prefill_to_decode(instances) {
+            return t3;
+        }
+        // Fallback: lesser-loaded of t1/t2 (Alg. 2's final branch).
+        match (t1, t2) {
+            (Some((a, ta)), Some((b, tb))) => {
+                if ta <= tb {
+                    a
+                } else {
+                    b
+                }
+            }
+            (Some((a, _)), None) => a,
+            (None, Some((b, _))) => b,
+            (None, None) => prefill_instance,
+        }
+    }
+
+    /// Monitor tick (§5.5): settle drained transition pools, flip on
+    /// sustained TPOT violations, harvest idle prefill instances.
+    fn on_tick(&mut self, _now: Time, instances: &[SimInstance]) {
+        // 1. Settle P→D / D→P instances that drained their old work.
+        for i in 0..instances.len() {
+            let id = InstanceId(i);
+            self.pools.settle(
+                id,
+                instances[i].has_prefill_work(),
+                instances[i].has_decode_work(),
+            );
+        }
+
+        // 2. Sustained TPOT violation => move a prefill instance to decode
+        //    (condition 2 of §5.5; Insight 3: monitor real token gaps).
+        let decode_ids: Vec<InstanceId> = self
+            .pools
+            .members(Pool::Decode)
+            .into_iter()
+            .chain(self.pools.members(Pool::PrefillToDecode))
+            .collect();
+        if !decode_ids.is_empty() {
+            let violating = decode_ids
+                .iter()
+                .filter(|id| {
+                    let v = instances[id.0].avg_token_interval();
+                    !v.is_nan() && v > self.cfg.tpot_slo
+                })
+                .count();
+            if (violating as f64) >= self.cfg.tpot_violation_frac * decode_ids.len() as f64
+            {
+                self.violation_ticks += 1;
+            } else {
+                self.violation_ticks = 0;
+            }
+            if self.violation_ticks >= self.cfg.tpot_violation_ticks {
+                self.try_move_prefill_to_decode(instances);
+                self.violation_ticks = 0;
+            }
+        }
+
+        // 3. Idle prefill + busy decode => harvest the idle instance
+        //    (condition 3 of §5.5). "Busy" = any decode-capable instance
+        //    above the watermark or with parked work.
+        let decode_busy = decode_ids.iter().any(|id| {
+            let inst = &instances[id.0];
+            inst.running_tokens()
+                > (self.cfg.decode_low_watermark
+                    * self.mrt(id.0).min(inst.cost.max_kv_tokens) as f64)
+                    as u64
+        });
+        if decode_busy {
+            let idle_prefill: Vec<InstanceId> = self
+                .pools
+                .members(Pool::Prefill)
+                .into_iter()
+                .filter(|id| instances[id.0].is_idle())
+                .collect();
+            for id in idle_prefill {
+                if self.pools.prefill_capable_count() <= 1 {
+                    break;
+                }
+                self.pools.flip_to_decode(id, false);
+            }
+        }
+    }
+
+    fn pool_sizes(&self) -> Option<[usize; 4]> {
+        Some(self.pools.sizes())
+    }
+
+    fn flip_count(&self) -> u64 {
+        self.pools.flip_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::CostModel;
+
+    fn cluster(n: usize) -> Vec<SimInstance> {
+        (0..n)
+            .map(|i| SimInstance::new(InstanceId(i), CostModel::h800_llama8b()))
+            .collect()
+    }
+
+    fn policy(n: usize) -> (ArrowPolicy, Vec<SimInstance>) {
+        let insts = cluster(n);
+        let mut p = ArrowPolicy::new(ArrowConfig::new(3.0, 0.1, n), n);
+        p.init(&insts);
+        (p, insts)
+    }
+
+    fn req(id: u64, input: u32, output: u32) -> Request {
+        Request::new(id, 0.0, input, output)
+    }
+
+    #[test]
+    fn prefill_goes_to_least_loaded_prefill_instance() {
+        let (mut p, mut insts) = policy(4);
+        // Load instance 0's prefill queue.
+        insts[0].enqueue_prefill(crate::request::RequestId(9), 50_000);
+        let t = p.place_prefill(0.0, &req(1, 1000, 10), &insts);
+        assert_eq!(t, InstanceId(1), "empty prefill instance preferred");
+    }
+
+    #[test]
+    fn prefill_overflows_to_dp_pool_when_slo_violated() {
+        let (mut p, mut insts) = policy(4);
+        // Both prefill instances (0, 1) heavily backlogged.
+        for i in 0..2 {
+            for r in 0..4 {
+                insts[i].enqueue_prefill(crate::request::RequestId(100 + r), 100_000);
+            }
+        }
+        // Move instance 2 into D→P so it is prefill-capable.
+        p.pools.flip_to_prefill(InstanceId(2), true);
+        assert_eq!(p.pools.pool_of(InstanceId(2)), Pool::DecodeToPrefill);
+        let t = p.place_prefill(0.0, &req(1, 1000, 10), &insts);
+        assert_eq!(t, InstanceId(2));
+    }
+
+    #[test]
+    fn prefill_steals_decode_instance_under_burst() {
+        let (mut p, mut insts) = policy(4);
+        // Prefill pool (0,1) backlogged far beyond the 3s TTFT SLO;
+        // decode pool (2,3) idle => decode load low => Alg. 1 must flip a
+        // decode instance to prefill.
+        for i in 0..2 {
+            for r in 0..4 {
+                insts[i].enqueue_prefill(crate::request::RequestId(100 + r), 100_000);
+            }
+        }
+        let before = p.pools.sizes();
+        assert_eq!(before, [2, 2, 0, 0]);
+        let t = p.place_prefill(0.0, &req(1, 1000, 10), &insts);
+        assert!(t == InstanceId(2) || t == InstanceId(3), "stole {t}");
+        assert_eq!(p.pools.sizes()[0], 3, "prefill pool grew");
+        assert!(p.flip_count() >= 1);
+    }
+
+    #[test]
+    fn overload_guard_blocks_steal_when_decode_busy() {
+        let (mut p, mut insts) = policy(4);
+        for i in 0..2 {
+            for r in 0..4 {
+                insts[i].enqueue_prefill(crate::request::RequestId(100 + r), 100_000);
+            }
+        }
+        // Decode instances loaded above the watermark.
+        for i in 2..4 {
+            let cap = p.mrt(i).min(insts[i].cost.max_kv_tokens);
+            let load = (cap as f64 * 0.9) as u64;
+            assert!(insts[i].try_reserve_kv(load));
+            insts[i].enqueue_decode(crate::request::RequestId(200 + i as u64), load as u32, 100);
+        }
+        let t = p.place_prefill(0.0, &req(1, 1000, 10), &insts);
+        // Falls back to a prefill instance — decode priority preserved.
+        assert!(t.0 < 2, "must not steal decode under load, got {t}");
+        assert_eq!(p.pools.sizes()[1], 2);
+    }
+
+    #[test]
+    fn decode_stays_local_when_prefill_instance_flipped() {
+        let (mut p, insts) = policy(4);
+        // Instance 0 (prefill) got flipped toward decode while the
+        // request prefilled there.
+        p.pools.flip_to_decode(InstanceId(0), false);
+        let t = p.place_decode(0.0, &req(1, 1000, 10), InstanceId(0), &insts);
+        assert_eq!(t, InstanceId(0), "local handoff avoids KV transfer");
+    }
+
+    #[test]
+    fn decode_picks_min_running_tokens() {
+        let (mut p, mut insts) = policy(4);
+        assert!(insts[2].try_reserve_kv(10_000));
+        insts[2].enqueue_decode(crate::request::RequestId(50), 10_000, 100);
+        let t = p.place_decode(0.0, &req(1, 1000, 10), InstanceId(0), &insts);
+        assert_eq!(t, InstanceId(3), "less-loaded decode instance");
+    }
+
+    #[test]
+    fn decode_flips_prefill_instance_when_all_decode_overloaded() {
+        let (mut p, mut insts) = policy(4);
+        for i in 2..4 {
+            let cap = insts[i].cost.max_kv_tokens;
+            assert!(insts[i].try_reserve_kv(cap));
+            insts[i].enqueue_decode(crate::request::RequestId(60 + i as u64), cap as u32, 100);
+        }
+        let before_decode = p.pools.decode_capable_count();
+        let t = p.place_decode(0.0, &req(1, 1000, 10), InstanceId(0), &insts);
+        assert!(
+            p.pools.pool_of(t).decode_capable(),
+            "target must be decode-capable"
+        );
+        assert!(p.pools.decode_capable_count() > before_decode);
+    }
+
+    #[test]
+    fn tick_settles_drained_transition_pools() {
+        let (mut p, insts) = policy(4);
+        p.pools.flip_to_decode(InstanceId(0), true); // P→D, but no work
+        p.on_tick(1.0, &insts);
+        assert_eq!(p.pools.pool_of(InstanceId(0)), Pool::Decode);
+    }
+
+    #[test]
+    fn tick_harvests_idle_prefill_when_decode_busy() {
+        let (mut p, mut insts) = policy(4);
+        // Decode instance 2 busy above watermark.
+        let cap = p.mrt(2).min(insts[2].cost.max_kv_tokens);
+        let load = (cap as f64 * 0.9) as u64;
+        assert!(insts[2].try_reserve_kv(load));
+        insts[2].enqueue_decode(crate::request::RequestId(70), load as u32, 100);
+        // Prefill instances 0,1 idle.
+        p.on_tick(1.0, &insts);
+        let sizes = p.pools.sizes();
+        assert_eq!(sizes[0], 1, "one idle prefill harvested, one kept: {sizes:?}");
+        assert!(sizes[1] + sizes[2] == 3);
+    }
+
+    #[test]
+    fn sustained_tpot_violation_flips_prefill_to_decode() {
+        let (mut p, mut insts) = policy(4);
+        // Give decode instances a violating token-interval history.
+        for i in 2..4 {
+            assert!(insts[i].try_reserve_kv(100));
+            insts[i].enqueue_decode(crate::request::RequestId(80 + i as u64), 100, 500);
+            // Manually run slow iterations: fake by pushing intervals via
+            // plan/finish with inflated durations is complex; instead use
+            // the real loop but huge batch:
+        }
+        // Simulate: directly feed the sliding window by running iterations
+        // with manipulated times.
+        for i in 2..4 {
+            let mut now = 0.0;
+            for _ in 0..8 {
+                if let Some(plan) = insts[i].plan_iteration() {
+                    now += 0.5; // 0.5s per token >> 0.1s TPOT SLO
+                    insts[i].finish_iteration(&plan, now);
+                }
+            }
+            assert!(insts[i].avg_token_interval() > p.cfg.tpot_slo);
+        }
+        let before = p.pools.sizes();
+        p.on_tick(1.0, &insts);
+        p.on_tick(2.0, &insts);
+        let after = p.pools.sizes();
+        assert!(
+            after[1] + after[2] > before[1] + before[2],
+            "decode capacity grew: {before:?} -> {after:?}"
+        );
+    }
+
+    #[test]
+    fn guard_never_empties_capability() {
+        // Property: any sequence of placements keeps >=1 prefill-capable
+        // and >=1 decode-capable instance.
+        use crate::util::{prop, rng::Rng};
+        prop::check_with(17, 64, |rng: &mut Rng| {
+            let n = rng.index(6) + 2;
+            let (mut p, mut insts) = policy(n);
+            for step in 0..40 {
+                let r = req(step, rng.int_range(100, 60_000) as u32, 10);
+                if rng.bool(0.5) {
+                    let t = p.place_prefill(step as f64, &r, &insts);
+                    insts[t.0].enqueue_prefill(crate::request::RequestId(step), r.input_len);
+                } else {
+                    let from = InstanceId(rng.index(n));
+                    let t = p.place_decode(step as f64, &r, from, &insts);
+                    if t != from && insts[t.0].try_reserve_kv(r.input_len as u64) {
+                        insts[t.0].enqueue_decode(
+                            crate::request::RequestId(step),
+                            r.input_len,
+                            8,
+                        );
+                    }
+                }
+                p.on_tick(step as f64, &insts);
+                crate::prop_assert!(
+                    p.pools.prefill_capable_count() >= 1,
+                    "no prefill-capable instance left"
+                );
+                crate::prop_assert!(
+                    p.pools.decode_capable_count() >= 1,
+                    "no decode-capable instance left"
+                );
+            }
+            Ok(())
+        });
+    }
+}

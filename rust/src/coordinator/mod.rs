@@ -1,0 +1,10 @@
+//! The Arrow coordinator (paper §5): TTFT predictor, elastic instance
+//! pools, and the SLO-aware global scheduling policy.
+
+pub mod arrow;
+pub mod pools;
+pub mod predictor;
+
+pub use arrow::{ArrowConfig, ArrowPolicy};
+pub use pools::{Pool, Pools};
+pub use predictor::TtftPredictor;

@@ -1,0 +1,283 @@
+//! Elastic instance pools (paper §5.2, Fig. 5 V).
+//!
+//! Four pools — Prefill, Decode, P→D, D→P — where P→D holds instances
+//! scheduled to handle decode but still draining prefill work, and D→P the
+//! converse. "Flipping" an instance is a constant-time pool move with zero
+//! wait and zero restart, which is the paper's core mechanism for
+//! real-time PD-ratio adjustment.
+//!
+//! Invariant (property-tested): every instance is in exactly one pool at
+//! all times, and every move follows the Fig. 5 transition diagram.
+
+use crate::request::InstanceId;
+
+/// Pool membership of one instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pool {
+    /// Handling prefill requests.
+    Prefill,
+    /// Handling decode requests.
+    Decode,
+    /// Scheduled for decode, still draining prefill (P→D).
+    PrefillToDecode,
+    /// Scheduled for prefill, still draining decode (D→P).
+    DecodeToPrefill,
+}
+
+impl Pool {
+    /// Does this pool currently *accept new prefill* dispatches?
+    pub fn prefill_capable(self) -> bool {
+        matches!(self, Pool::Prefill | Pool::DecodeToPrefill)
+    }
+
+    /// Does this pool currently *accept new decode* dispatches?
+    pub fn decode_capable(self) -> bool {
+        matches!(self, Pool::Decode | Pool::PrefillToDecode)
+    }
+}
+
+/// Pool bookkeeping for a fixed instance set.
+#[derive(Debug, Clone)]
+pub struct Pools {
+    membership: Vec<Pool>,
+    flips: u64,
+}
+
+impl Pools {
+    /// Start with the first `n_prefill` instances in Prefill, the rest in
+    /// Decode (the static 4P/4D starting point of §7.3).
+    pub fn new(n_instances: usize, n_prefill: usize) -> Self {
+        assert!(n_instances >= 1);
+        assert!(n_prefill <= n_instances);
+        Pools {
+            membership: (0..n_instances)
+                .map(|i| if i < n_prefill { Pool::Prefill } else { Pool::Decode })
+                .collect(),
+            flips: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.membership.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.membership.is_empty()
+    }
+
+    pub fn pool_of(&self, id: InstanceId) -> Pool {
+        self.membership[id.0]
+    }
+
+    pub fn flip_count(&self) -> u64 {
+        self.flips
+    }
+
+    /// [P, D, P→D, D→P] sizes.
+    pub fn sizes(&self) -> [usize; 4] {
+        let mut s = [0usize; 4];
+        for p in &self.membership {
+            match p {
+                Pool::Prefill => s[0] += 1,
+                Pool::Decode => s[1] += 1,
+                Pool::PrefillToDecode => s[2] += 1,
+                Pool::DecodeToPrefill => s[3] += 1,
+            }
+        }
+        s
+    }
+
+    /// Instances currently in `pool`.
+    pub fn members(&self, pool: Pool) -> Vec<InstanceId> {
+        self.membership
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p == pool)
+            .map(|(i, _)| InstanceId(i))
+            .collect()
+    }
+
+    /// Count of instances that can take decode work (|D| + |P→D|) —
+    /// Alg. 3's guard term.
+    pub fn decode_capable_count(&self) -> usize {
+        self.membership
+            .iter()
+            .filter(|p| p.decode_capable())
+            .count()
+    }
+
+    /// Count of instances that can take prefill work (|P| + |D→P|).
+    pub fn prefill_capable_count(&self) -> usize {
+        self.membership
+            .iter()
+            .filter(|p| p.prefill_capable())
+            .count()
+    }
+
+    /// Flip an instance toward *prefill* duty. Transition diagram:
+    /// D → (P if drained else D→P); P→D → P (cancel a pending flip);
+    /// already-prefill pools are no-ops.
+    ///
+    /// `has_decode_work`: whether the instance still holds decode tasks.
+    pub fn flip_to_prefill(&mut self, id: InstanceId, has_decode_work: bool) {
+        let m = &mut self.membership[id.0];
+        let new = match *m {
+            Pool::Decode => {
+                if has_decode_work {
+                    Pool::DecodeToPrefill
+                } else {
+                    Pool::Prefill
+                }
+            }
+            Pool::PrefillToDecode => Pool::Prefill, // cancel pending P→D
+            other => other,
+        };
+        if new != *m {
+            *m = new;
+            self.flips += 1;
+        }
+    }
+
+    /// Flip an instance toward *decode* duty (mirror of above).
+    pub fn flip_to_decode(&mut self, id: InstanceId, has_prefill_work: bool) {
+        let m = &mut self.membership[id.0];
+        let new = match *m {
+            Pool::Prefill => {
+                if has_prefill_work {
+                    Pool::PrefillToDecode
+                } else {
+                    Pool::Decode
+                }
+            }
+            Pool::DecodeToPrefill => Pool::Decode, // cancel pending D→P
+            other => other,
+        };
+        if new != *m {
+            *m = new;
+            self.flips += 1;
+        }
+    }
+
+    /// Drain maintenance (monitor tick): a P→D instance with no prefill
+    /// work left settles into Decode; a D→P instance with no decode work
+    /// settles into Prefill — the black edges in Fig. 5.
+    pub fn settle(&mut self, id: InstanceId, has_prefill_work: bool, has_decode_work: bool) {
+        let m = &mut self.membership[id.0];
+        match *m {
+            Pool::PrefillToDecode if !has_prefill_work => *m = Pool::Decode,
+            Pool::DecodeToPrefill if !has_decode_work => *m = Pool::Prefill,
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_split() {
+        let p = Pools::new(8, 4);
+        assert_eq!(p.sizes(), [4, 4, 0, 0]);
+        assert_eq!(p.pool_of(InstanceId(0)), Pool::Prefill);
+        assert_eq!(p.pool_of(InstanceId(7)), Pool::Decode);
+    }
+
+    #[test]
+    fn flip_decode_to_prefill_drained_goes_direct() {
+        let mut p = Pools::new(2, 1);
+        p.flip_to_prefill(InstanceId(1), false);
+        assert_eq!(p.pool_of(InstanceId(1)), Pool::Prefill);
+        assert_eq!(p.flip_count(), 1);
+    }
+
+    #[test]
+    fn flip_decode_with_work_goes_via_transition_pool() {
+        let mut p = Pools::new(2, 1);
+        p.flip_to_prefill(InstanceId(1), true);
+        assert_eq!(p.pool_of(InstanceId(1)), Pool::DecodeToPrefill);
+        // D→P still accepts prefill dispatches.
+        assert!(p.pool_of(InstanceId(1)).prefill_capable());
+        // Settle once decode drains.
+        p.settle(InstanceId(1), false, false);
+        assert_eq!(p.pool_of(InstanceId(1)), Pool::Prefill);
+    }
+
+    #[test]
+    fn flip_cancellation() {
+        let mut p = Pools::new(2, 1);
+        p.flip_to_decode(InstanceId(0), true); // P → P→D
+        assert_eq!(p.pool_of(InstanceId(0)), Pool::PrefillToDecode);
+        p.flip_to_prefill(InstanceId(0), false); // cancel
+        assert_eq!(p.pool_of(InstanceId(0)), Pool::Prefill);
+    }
+
+    #[test]
+    fn settle_requires_drain() {
+        let mut p = Pools::new(2, 1);
+        p.flip_to_decode(InstanceId(0), true);
+        p.settle(InstanceId(0), true, false); // prefill not drained
+        assert_eq!(p.pool_of(InstanceId(0)), Pool::PrefillToDecode);
+        p.settle(InstanceId(0), false, true);
+        assert_eq!(p.pool_of(InstanceId(0)), Pool::Decode);
+    }
+
+    #[test]
+    fn capability_counts() {
+        let mut p = Pools::new(4, 2);
+        assert_eq!(p.prefill_capable_count(), 2);
+        assert_eq!(p.decode_capable_count(), 2);
+        p.flip_to_decode(InstanceId(0), true); // P→D counts as decode-capable
+        assert_eq!(p.decode_capable_count(), 3);
+        assert_eq!(p.prefill_capable_count(), 1);
+    }
+
+    #[test]
+    fn idempotent_flips_do_not_count() {
+        let mut p = Pools::new(2, 1);
+        p.flip_to_prefill(InstanceId(0), false); // already prefill
+        assert_eq!(p.flip_count(), 0);
+    }
+
+    #[test]
+    fn prop_membership_is_partition_and_transitions_legal() {
+        use crate::util::{prop, rng::Rng};
+        prop::check_with(41, 128, |rng: &mut Rng| {
+            let n = rng.index(8) + 2;
+            let mut pools = Pools::new(n, rng.index(n + 1));
+            for _ in 0..64 {
+                let id = InstanceId(rng.index(n));
+                let before = pools.pool_of(id);
+                match rng.index(3) {
+                    0 => pools.flip_to_prefill(id, rng.bool(0.5)),
+                    1 => pools.flip_to_decode(id, rng.bool(0.5)),
+                    _ => pools.settle(id, rng.bool(0.5), rng.bool(0.5)),
+                }
+                let after = pools.pool_of(id);
+                // Legal transitions only (Fig. 5 diagram).
+                let legal = matches!(
+                    (before, after),
+                    (x, y) if x == y
+                ) || matches!(
+                    (before, after),
+                    (Pool::Decode, Pool::Prefill)
+                        | (Pool::Decode, Pool::DecodeToPrefill)
+                        | (Pool::Prefill, Pool::Decode)
+                        | (Pool::Prefill, Pool::PrefillToDecode)
+                        | (Pool::PrefillToDecode, Pool::Prefill)
+                        | (Pool::PrefillToDecode, Pool::Decode)
+                        | (Pool::DecodeToPrefill, Pool::Decode)
+                        | (Pool::DecodeToPrefill, Pool::Prefill)
+                );
+                crate::prop_assert!(legal, "illegal {before:?} -> {after:?}");
+                // Partition: sizes sum to n.
+                let s = pools.sizes();
+                crate::prop_assert!(
+                    s.iter().sum::<usize>() == n,
+                    "pool sizes {s:?} don't partition {n}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

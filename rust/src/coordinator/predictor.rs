@@ -1,0 +1,161 @@
+//! TTFT predictor (paper Fig. 5 I, §5.3).
+//!
+//! At cluster launch the predictor "profiles each instance's prefill
+//! processing capability … and fits a quadratic curve to model the
+//! relationship between TTFT and input length". The global scheduler then
+//! predicts, for any queued/incoming request, how long its prefill will
+//! take on that instance — Insight 1's strong predictability of TTFT.
+//!
+//! The predictor deliberately *does not* read the simulator's cost model
+//! at query time: it knows only its fitted coefficients plus the public
+//! queue view, exactly like the real system's profiler.
+
+use crate::costmodel::CostModel;
+use crate::util::stats;
+
+/// Input lengths sampled during startup profiling.
+const PROFILE_LENGTHS: [u32; 6] = [128, 512, 2048, 8192, 32_768, 100_000];
+
+/// Quadratic TTFT model for one instance type.
+#[derive(Debug, Clone)]
+pub struct TtftPredictor {
+    /// prefill_seconds(len) ≈ c[0] + c[1]·len + c[2]·len².
+    c: [f64; 3],
+    /// Chunk size assumed for per-chunk overhead accounting.
+    chunk: u32,
+    /// Per-iteration overhead learned from profiling (c[0] proxy).
+    overhead: f64,
+}
+
+impl TtftPredictor {
+    /// Startup profiling: measure whole-prompt prefill latency at several
+    /// lengths on the given instance hardware (simulated by querying its
+    /// cost model — the stand-in for running real probe prompts).
+    pub fn profile(cost: &CostModel, chunk: u32) -> TtftPredictor {
+        let xs: Vec<f64> = PROFILE_LENGTHS.iter().map(|&l| l as f64).collect();
+        let ys: Vec<f64> = PROFILE_LENGTHS
+            .iter()
+            .map(|&l| {
+                let chunks = l.div_ceil(chunk) as f64;
+                cost.prefill_time(l) + (chunks - 1.0).max(0.0) * cost.iter_overhead
+            })
+            .collect();
+        let c = stats::quadratic_fit(&xs, &ys);
+        TtftPredictor {
+            c,
+            chunk,
+            overhead: cost.iter_overhead,
+        }
+    }
+
+    /// Construct directly from coefficients (tests / real-mode loading).
+    pub fn from_coefficients(c: [f64; 3], chunk: u32, overhead: f64) -> Self {
+        TtftPredictor { c, chunk, overhead }
+    }
+
+    pub fn coefficients(&self) -> [f64; 3] {
+        self.c
+    }
+
+    /// Predicted seconds to prefill a fresh `len`-token prompt.
+    pub fn prefill_seconds(&self, len: u32) -> f64 {
+        let l = len as f64;
+        (self.c[0] + self.c[1] * l + self.c[2] * l * l).max(0.0)
+    }
+
+    /// Predicted seconds to *finish* a partially prefilled prompt
+    /// (`remaining` of `input_len` tokens left). Uses the quadratic's
+    /// marginal cost over the remaining context range.
+    pub fn remaining_seconds(&self, input_len: u32, remaining: u32) -> f64 {
+        let l = input_len as f64;
+        let done = (input_len - remaining) as f64;
+        let lin = self.c[1] * remaining as f64;
+        let quad = self.c[2] * (l * l - done * done);
+        let chunks = remaining.div_ceil(self.chunk.max(1)) as f64;
+        (lin + quad + chunks * self.overhead).max(0.0)
+    }
+
+    /// Predicted prefill queueing delay of an instance, given its public
+    /// queue view `[(input_len, remaining); ..]` (Insight 1: queue state
+    /// fully determines the new request's TTFT).
+    pub fn queue_delay(&self, queue: &[(u32, u32)]) -> f64 {
+        queue
+            .iter()
+            .map(|&(l, r)| self.remaining_seconds(l, r))
+            .sum()
+    }
+
+    /// Predicted TTFT if a request of `len` tokens is appended to the
+    /// queue now (paper Eq. 1 with q1 = queue_delay).
+    pub fn predict_ttft(&self, len: u32, queue: &[(u32, u32)]) -> f64 {
+        self.queue_delay(queue) + self.prefill_seconds(len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn predictor() -> (TtftPredictor, CostModel) {
+        let cost = CostModel::h800_llama8b();
+        (TtftPredictor::profile(&cost, 2048), cost)
+    }
+
+    #[test]
+    fn fit_matches_ground_truth_within_tolerance() {
+        let (p, cost) = predictor();
+        for len in [256u32, 1024, 4096, 16_384, 65_536] {
+            let chunks = len.div_ceil(2048) as f64;
+            let truth = cost.prefill_time(len) + (chunks - 1.0).max(0.0) * cost.iter_overhead;
+            let pred = p.prefill_seconds(len);
+            let rel = (pred - truth).abs() / truth;
+            assert!(rel < 0.25, "len={len} truth={truth} pred={pred}");
+        }
+    }
+
+    #[test]
+    fn prediction_monotone_in_length() {
+        let (p, _) = predictor();
+        let mut prev = 0.0;
+        for len in [100u32, 1000, 10_000, 100_000] {
+            let t = p.prefill_seconds(len);
+            assert!(t > prev, "len={len}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn remaining_less_than_full() {
+        let (p, _) = predictor();
+        let full = p.remaining_seconds(10_000, 10_000);
+        let half = p.remaining_seconds(10_000, 5_000);
+        assert!(half < full);
+        // Second half costs more than first half (quadratic context).
+        let first_half = full - half;
+        assert!(half > first_half, "half={half} first={first_half}");
+    }
+
+    #[test]
+    fn queue_delay_additive() {
+        let (p, _) = predictor();
+        let q1 = p.queue_delay(&[(4096, 4096)]);
+        let q2 = p.queue_delay(&[(4096, 4096), (4096, 4096)]);
+        assert!((q2 - 2.0 * q1).abs() < 1e-9);
+        assert_eq!(p.queue_delay(&[]), 0.0);
+    }
+
+    #[test]
+    fn predict_ttft_includes_own_time() {
+        let (p, _) = predictor();
+        let empty = p.predict_ttft(2048, &[]);
+        assert!((empty - p.prefill_seconds(2048)).abs() < 1e-12);
+        let queued = p.predict_ttft(2048, &[(8192, 8192)]);
+        assert!(queued > empty);
+    }
+
+    #[test]
+    fn remaining_zero_is_zero() {
+        let (p, _) = predictor();
+        assert_eq!(p.remaining_seconds(5000, 0), 0.0);
+    }
+}

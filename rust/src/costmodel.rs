@@ -1,0 +1,314 @@
+//! Calibrated latency cost model for simulated instances.
+//!
+//! The paper's analysis (§3.1, §4) rests on two scaling laws that prior
+//! work established and Arrow's scheduler exploits:
+//!
+//! * prefill computation scales ~quadratically with input length
+//!   (linear compute term + quadratic attention term), and
+//! * decode iteration time scales linearly with the total number of
+//!   tokens in the batch.
+//!
+//! `CostModel` encodes exactly those laws. In simulated mode it supplies
+//! per-iteration latencies; coefficients come either from an analytic
+//! H800/Llama-8B preset (paper's testbed, DESIGN.md §3) or from fitting
+//! timings of the real PJRT executables (`calibrate_from_samples`, used by
+//! `arrow calibrate`). The quadratic TTFT fit in `coordinator::predictor`
+//! is the *scheduler's* learned view of the same curve — keeping the two
+//! separate mirrors the real system (profiler vs. ground truth).
+
+use crate::util::stats;
+
+/// Per-instance latency model (all times in seconds, lengths in tokens).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Fixed per-iteration overhead (kernel launches, scheduler step).
+    pub iter_overhead: f64,
+    /// Prefill compute seconds per prompt token (linear term).
+    pub prefill_per_token: f64,
+    /// Prefill attention seconds per (token × context-token) — the
+    /// quadratic term.
+    pub prefill_quad: f64,
+    /// Decode seconds per token resident in the batch (KV bandwidth term).
+    pub decode_per_token: f64,
+    /// Decode seconds per request in the batch (per-sequence overhead).
+    pub decode_per_req: f64,
+    /// KV transfer: fixed latency per migration.
+    pub transfer_latency: f64,
+    /// KV transfer: seconds per KV byte (1/bandwidth).
+    pub transfer_per_byte: f64,
+    /// KV cache bytes per token (model-dependent).
+    pub kv_bytes_per_token: u64,
+    /// KV capacity of the instance, in tokens.
+    pub max_kv_tokens: u64,
+    /// Max decode requests per batch.
+    pub max_batch: usize,
+}
+
+impl CostModel {
+    /// Analytic preset for the paper's testbed: one H800 GPU serving a
+    /// Llama-3.1-8B shard. Derivation in DESIGN.md §3:
+    /// compute ≈ 2·8e9 FLOPs/token at ~50% of 700 TFLOPs (bf16), KV read
+    /// at ~3.35 TB/s, 16 GB weights, ~60 GB free for KV at ~131 KB/token.
+    pub fn h800_llama8b() -> CostModel {
+        CostModel {
+            iter_overhead: 0.004,
+            prefill_per_token: 4.5e-5,
+            // Attention FLOPs per token-pair: 2 (QK^T + PV) × 2 FLOP ×
+            // d_model(4096) × 32 layers ≈ 5.2e5, over ~350 TFLOPs usable.
+            prefill_quad: 1.5e-9,
+            decode_per_token: 4.0e-8,
+            decode_per_req: 1.0e-4,
+            transfer_latency: 1.0e-3,
+            transfer_per_byte: 1.0 / 400.0e9, // NVLink 400 GB/s
+            kv_bytes_per_token: 131_072,
+            max_kv_tokens: 400_000,
+            max_batch: 256,
+        }
+    }
+
+    /// Scale the model for an instance spanning `tp` GPUs with the given
+    /// parallel efficiency (compute & bandwidth scale up; capacity too).
+    pub fn with_tensor_parallel(&self, tp: usize, efficiency: f64) -> CostModel {
+        assert!(tp >= 1 && efficiency > 0.0 && efficiency <= 1.0);
+        let speed = tp as f64 * efficiency;
+        CostModel {
+            iter_overhead: self.iter_overhead,
+            prefill_per_token: self.prefill_per_token / speed,
+            prefill_quad: self.prefill_quad / speed,
+            decode_per_token: self.decode_per_token / speed,
+            decode_per_req: self.decode_per_req,
+            transfer_latency: self.transfer_latency,
+            transfer_per_byte: self.transfer_per_byte,
+            kv_bytes_per_token: self.kv_bytes_per_token,
+            max_kv_tokens: self.max_kv_tokens * tp as u64,
+            max_batch: self.max_batch * tp,
+        }
+    }
+
+    /// Uniform slowdown (models DistServe's unmaintained engine, §7.1).
+    pub fn with_efficiency(&self, eff: f64) -> CostModel {
+        assert!(eff > 0.0 && eff <= 1.0);
+        CostModel {
+            prefill_per_token: self.prefill_per_token / eff,
+            prefill_quad: self.prefill_quad / eff,
+            decode_per_token: self.decode_per_token / eff,
+            decode_per_req: self.decode_per_req / eff,
+            ..self.clone()
+        }
+    }
+
+    // ------------------------------------------------------------ queries
+
+    /// Seconds to prefill a chunk of `chunk` tokens whose attention
+    /// context (tokens already processed + this chunk) is `ctx`.
+    pub fn prefill_chunk_time(&self, chunk: u32, ctx: u32) -> f64 {
+        self.prefill_per_token * chunk as f64
+            + self.prefill_quad * chunk as f64 * ctx as f64
+    }
+
+    /// Seconds for the *whole* prefill of an `len`-token prompt executed
+    /// in one piece: linear + quadratic/2 (sum over causal context).
+    pub fn prefill_time(&self, len: u32) -> f64 {
+        let l = len as f64;
+        self.iter_overhead + self.prefill_per_token * l + self.prefill_quad * l * l / 2.0
+    }
+
+    /// Seconds for one decode iteration over a batch holding
+    /// `batch_tokens` total KV tokens across `batch_reqs` requests.
+    pub fn decode_iter_time(&self, batch_reqs: usize, batch_tokens: u64) -> f64 {
+        self.iter_overhead
+            + self.decode_per_token * batch_tokens as f64
+            + self.decode_per_req * batch_reqs as f64
+    }
+
+    /// Mixed chunked-prefill iteration: decode batch plus a prefill chunk
+    /// (the colocated/chunked-prefill engines batch both, paper §2.1).
+    pub fn mixed_iter_time(
+        &self,
+        batch_reqs: usize,
+        batch_tokens: u64,
+        chunk: u32,
+        chunk_ctx: u32,
+    ) -> f64 {
+        self.decode_iter_time(batch_reqs, batch_tokens)
+            + self.prefill_chunk_time(chunk, chunk_ctx)
+    }
+
+    /// Seconds to migrate `kv_tokens` of KV cache between instances.
+    pub fn transfer_time(&self, kv_tokens: u64) -> f64 {
+        self.transfer_latency
+            + self.transfer_per_byte * (kv_tokens * self.kv_bytes_per_token) as f64
+    }
+
+    /// The paper's "Max Running Tokens" profiling (§5.3): the largest
+    /// total batch token count whose decode iteration still meets the
+    /// TPOT SLO, capped by KV memory.
+    pub fn max_running_tokens(&self, tpot_slo: f64) -> u64 {
+        let budget = tpot_slo - self.iter_overhead
+            - self.decode_per_req * self.max_batch as f64;
+        if budget <= 0.0 {
+            return self.max_kv_tokens.min(1);
+        }
+        let by_slo = (budget / self.decode_per_token) as u64;
+        by_slo.min(self.max_kv_tokens)
+    }
+
+    // -------------------------------------------------------- calibration
+
+    /// Fit prefill coefficients from measured (len, seconds) samples and
+    /// decode coefficients from (batch_tokens, seconds) samples — used to
+    /// calibrate the simulator against the real PJRT executables.
+    pub fn calibrate_from_samples(
+        &mut self,
+        prefill: &[(u32, f64)],
+        decode: &[(u64, f64)],
+    ) {
+        if prefill.len() >= 3 {
+            let xs: Vec<f64> = prefill.iter().map(|&(l, _)| l as f64).collect();
+            let ys: Vec<f64> = prefill.iter().map(|&(_, t)| t).collect();
+            let c = stats::quadratic_fit(&xs, &ys);
+            self.iter_overhead = c[0].max(1e-6);
+            self.prefill_per_token = c[1].max(0.0);
+            self.prefill_quad = (c[2] * 2.0).max(0.0); // prefill_time halves it
+        }
+        if decode.len() >= 2 {
+            let xs: Vec<f64> = decode.iter().map(|&(n, _)| n as f64).collect();
+            let ys: Vec<f64> = decode.iter().map(|&(_, t)| t).collect();
+            let c = stats::linear_fit(&xs, &ys);
+            self.decode_per_token = c[1].max(0.0);
+            // Keep iter_overhead from prefill fit if it was set; otherwise
+            // use the decode intercept.
+            if prefill.len() < 3 {
+                self.iter_overhead = c[0].max(1e-6);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_quadratic_growth() {
+        let m = CostModel::h800_llama8b();
+        let t1 = m.prefill_time(1_000);
+        let t10 = m.prefill_time(10_000);
+        let t100 = m.prefill_time(100_000);
+        // Long-prompt regime grows super-linearly.
+        assert!(t10 > 9.0 * t1, "t1={t1} t10={t10}");
+        assert!(t100 > 15.0 * t10, "t10={t10} t100={t100}");
+    }
+
+    #[test]
+    fn decode_linear_in_tokens() {
+        let m = CostModel::h800_llama8b();
+        let a = m.decode_iter_time(8, 10_000) - m.decode_iter_time(8, 0);
+        let b = m.decode_iter_time(8, 20_000) - m.decode_iter_time(8, 10_000);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunked_prefill_sums_to_whole() {
+        // Sum of chunk times ≈ whole-prompt time (modulo per-iteration
+        // overhead, which chunking legitimately multiplies).
+        let m = CostModel::h800_llama8b();
+        let len = 8_192u32;
+        let chunk = 512u32;
+        let mut total = 0.0;
+        let mut done = 0u32;
+        while done < len {
+            let c = chunk.min(len - done);
+            total += m.prefill_chunk_time(c, done + c);
+            done += c;
+        }
+        let whole = m.prefill_time(len) - m.iter_overhead;
+        // The chunked sum uses ctx at chunk end => slightly above the
+        // continuous integral; allow 10%.
+        assert!(
+            (total - whole).abs() / whole < 0.10,
+            "chunked={total} whole={whole}"
+        );
+    }
+
+    #[test]
+    fn tensor_parallel_speeds_up_and_scales_memory() {
+        let m = CostModel::h800_llama8b();
+        let m8 = m.with_tensor_parallel(8, 0.9);
+        assert!(m8.prefill_time(4096) < m.prefill_time(4096) / 6.0);
+        assert_eq!(m8.max_kv_tokens, m.max_kv_tokens * 8);
+        assert!(m8.decode_iter_time(1, 100_000) < m.decode_iter_time(1, 100_000));
+    }
+
+    #[test]
+    fn efficiency_slows_down() {
+        let m = CostModel::h800_llama8b();
+        let slow = m.with_efficiency(0.5);
+        assert!(slow.prefill_time(1000) > 1.8 * (m.prefill_time(1000) - m.iter_overhead));
+    }
+
+    #[test]
+    fn transfer_time_scales_with_tokens() {
+        let m = CostModel::h800_llama8b();
+        let t1 = m.transfer_time(1_000);
+        let t2 = m.transfer_time(100_000);
+        assert!(t2 > t1);
+        // 100k tokens * 131072 B = ~13 GB over 400 GB/s => ~33 ms + lat.
+        assert!((0.02..0.1).contains(&t2), "t2={t2}");
+    }
+
+    #[test]
+    fn max_running_tokens_respects_slo_and_memory() {
+        let m = CostModel::h800_llama8b();
+        let strict = m.max_running_tokens(0.032); // SLO-bound regime
+        let loose = m.max_running_tokens(0.5); // memory-bound regime
+        assert!(strict < loose, "strict={strict} loose={loose}");
+        assert!(loose <= m.max_kv_tokens);
+        // With the preset, a 0.1s TPOT budget allows a big batch.
+        assert!(m.max_running_tokens(0.1) > 100_000);
+    }
+
+    #[test]
+    fn calibration_recovers_known_coefficients() {
+        let truth = CostModel::h800_llama8b();
+        let prefill: Vec<(u32, f64)> = (1..40)
+            .map(|i| {
+                let l = i * 512;
+                (l, truth.prefill_time(l))
+            })
+            .collect();
+        let decode: Vec<(u64, f64)> = (1..40)
+            .map(|i| {
+                let n = i as u64 * 2_000;
+                (n, truth.decode_iter_time(8, n))
+            })
+            .collect();
+        let mut fit = CostModel::h800_llama8b();
+        fit.prefill_per_token = 0.0;
+        fit.prefill_quad = 0.0;
+        fit.decode_per_token = 0.0;
+        fit.calibrate_from_samples(&prefill, &decode);
+        assert!(
+            (fit.prefill_per_token - truth.prefill_per_token).abs()
+                / truth.prefill_per_token
+                < 0.05
+        );
+        assert!((fit.prefill_quad - truth.prefill_quad).abs() / truth.prefill_quad < 0.05);
+        assert!(
+            (fit.decode_per_token - truth.decode_per_token).abs()
+                / truth.decode_per_token
+                < 0.05
+        );
+    }
+
+    #[test]
+    fn mixed_iteration_adds_interference() {
+        // A decode batch sharing an iteration with a prefill chunk takes
+        // longer than either alone — the colocation interference the
+        // paper's disaggregation removes (§2.2).
+        let m = CostModel::h800_llama8b();
+        let d = m.decode_iter_time(16, 50_000);
+        let mixed = m.mixed_iter_time(16, 50_000, 2048, 2048);
+        assert!(mixed > d + 0.5 * m.prefill_chunk_time(2048, 2048));
+    }
+}

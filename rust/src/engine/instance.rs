@@ -1,0 +1,574 @@
+//! A stateless serving instance: local scheduler + KV accounting.
+//!
+//! "Stateless" in the paper's sense (§5.2): the instance has no prefill or
+//! decode *role* — it processes whatever sub-requests the global scheduler
+//! dispatched to it. The local scheduler (paper §5.4) batches decode
+//! requests first (decode-priority), then fills the remaining token budget
+//! with a chunk of the head prefill request (chunked prefill), so an
+//! instance freshly flipped into a new pool starts the new work type on
+//! the very next iteration — zero flip wait.
+//!
+//! Timing is supplied by the caller-visible [`CostModel`]; the simulator
+//! schedules an `IterComplete` event at `now + iter.duration` and feeds
+//! the completion back into [`SimInstance::finish_iteration`].
+
+use std::collections::VecDeque;
+
+use super::task::{DecodeTask, PrefillTask};
+use crate::costmodel::CostModel;
+use crate::request::{InstanceId, RequestId};
+use crate::util::stats::SlidingWindow;
+
+/// Chunked-prefill token budget per iteration (Sarathi-style default).
+pub const DEFAULT_CHUNK_TOKENS: u32 = 2048;
+
+/// Samples kept in the recent token-interval window (instance monitor).
+const INTERVAL_WINDOW: usize = 64;
+
+/// What one iteration will execute (computed by `plan_iteration`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterationPlan {
+    /// Decode requests included (all admitted running tasks).
+    pub decode_reqs: usize,
+    /// Total KV tokens across included decode tasks (after +1 growth).
+    pub decode_tokens: u64,
+    /// Prefill chunk tokens for the head prefill task (0 = none).
+    pub chunk: u32,
+    /// Attention context at the end of that chunk.
+    pub chunk_ctx: u32,
+    /// Iteration wall/simulated duration in seconds.
+    pub duration: f64,
+}
+
+/// Events an iteration completion produces, for the cluster to act on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Produced {
+    /// A decode task emitted one token (not its last).
+    Token { id: RequestId },
+    /// A decode task emitted its final token and left the instance.
+    FinalToken { id: RequestId, freed_kv: u64 },
+    /// The head prefill task finished: first token available; KV of
+    /// `kv_tokens` is resident here awaiting decode placement/migration.
+    PrefillDone { id: RequestId, kv_tokens: u32 },
+}
+
+/// One stateless instance.
+#[derive(Debug)]
+pub struct SimInstance {
+    pub id: InstanceId,
+    pub cost: CostModel,
+    /// Token budget for the prefill chunk per iteration.
+    pub chunk_tokens: u32,
+    /// Optional per-iteration latency budget (seconds). When set and the
+    /// batch mixes decode tasks with a prefill chunk, the chunk is shrunk
+    /// so the whole iteration fits the budget — an SLO-aware refinement of
+    /// Sarathi-style chunking that protects co-resident decodes' TPOT on
+    /// P→D / D→P instances. Pure-prefill iterations ignore it.
+    pub iter_time_budget: Option<f64>,
+    // --- local queues (paper Fig. 5 IV) ---
+    prefill_q: VecDeque<PrefillTask>,
+    /// Decode tasks currently in the running batch.
+    running: Vec<DecodeTask>,
+    /// Decode tasks admitted to the instance but parked (batch/memory cap).
+    decode_wait: VecDeque<DecodeTask>,
+    // --- KV accounting ---
+    /// Tokens of KV resident: decode ctx + completed prefill chunks +
+    /// parked prefill KV awaiting migration + reserved incoming transfers.
+    kv_used: u64,
+    /// KV held by finished prefills awaiting migration (subset of kv_used).
+    parked_prefill_kv: u64,
+    // --- monitor statistics (paper Fig. 5 VI) ---
+    /// Recent per-token generation intervals (seconds).
+    intervals: SlidingWindow,
+    /// Time of the last produced decode token (for interval measurement).
+    last_token_time: Option<f64>,
+    /// Whether an iteration is currently in flight.
+    pub busy: bool,
+    /// Monotone counter of iterations executed (perf/debug).
+    pub iterations: u64,
+}
+
+impl SimInstance {
+    pub fn new(id: InstanceId, cost: CostModel) -> Self {
+        SimInstance {
+            id,
+            cost,
+            chunk_tokens: DEFAULT_CHUNK_TOKENS,
+            iter_time_budget: None,
+            prefill_q: VecDeque::new(),
+            running: Vec::new(),
+            decode_wait: VecDeque::new(),
+            kv_used: 0,
+            parked_prefill_kv: 0,
+            intervals: SlidingWindow::new(INTERVAL_WINDOW),
+            last_token_time: None,
+            busy: false,
+            iterations: 0,
+        }
+    }
+
+    // ------------------------------------------------------------ queries
+
+    pub fn kv_used(&self) -> u64 {
+        self.kv_used
+    }
+
+    pub fn kv_free(&self) -> u64 {
+        self.cost.max_kv_tokens.saturating_sub(self.kv_used)
+    }
+
+    /// Total KV tokens of running + waiting decode requests — the paper's
+    /// "running tokens" decode-load metric (§5.3).
+    pub fn running_tokens(&self) -> u64 {
+        self.running.iter().map(|t| t.ctx as u64).sum::<u64>()
+            + self.decode_wait.iter().map(|t| t.ctx as u64).sum::<u64>()
+    }
+
+    pub fn decode_req_count(&self) -> usize {
+        self.running.len() + self.decode_wait.len()
+    }
+
+    pub fn prefill_req_count(&self) -> usize {
+        self.prefill_q.len()
+    }
+
+    pub fn has_prefill_work(&self) -> bool {
+        !self.prefill_q.is_empty()
+    }
+
+    pub fn has_decode_work(&self) -> bool {
+        !self.running.is_empty() || !self.decode_wait.is_empty()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        !self.has_prefill_work() && !self.has_decode_work()
+    }
+
+    /// (input_len, remaining) of each queued prefill — what the global
+    /// scheduler's TTFT predictor consumes (Insight 1).
+    pub fn prefill_queue_view(&self) -> Vec<(u32, u32)> {
+        self.prefill_q
+            .iter()
+            .map(|t| (t.input_len, t.remaining()))
+            .collect()
+    }
+
+    /// Ground-truth remaining prefill work in seconds (cost-model view;
+    /// the *scheduler* must use its fitted predictor instead).
+    pub fn prefill_backlog_seconds(&self) -> f64 {
+        let mut total = 0.0;
+        for t in &self.prefill_q {
+            let mut done = t.done;
+            while done < t.input_len {
+                let c = self.chunk_tokens.min(t.input_len - done);
+                total += self.cost.prefill_chunk_time(c, done + c) + self.cost.iter_overhead;
+                done += c;
+            }
+        }
+        total
+    }
+
+    /// Recent average token generation interval (paper §5.3/§5.5 TPOT
+    /// proxy). NaN when the window is empty.
+    pub fn avg_token_interval(&self) -> f64 {
+        self.intervals.mean()
+    }
+
+    // ------------------------------------------------------------- intake
+
+    /// Accept a prefill sub-request. Caller must have verified capacity.
+    pub fn enqueue_prefill(&mut self, id: RequestId, input_len: u32) {
+        self.prefill_q.push_back(PrefillTask::new(id, input_len));
+    }
+
+    /// Reserve KV for an incoming migration (q2 admission check).
+    /// Returns false if the instance lacks memory — caller keeps the
+    /// request in the transfer wait queue.
+    pub fn try_reserve_kv(&mut self, tokens: u64) -> bool {
+        if self.kv_free() >= tokens {
+            self.kv_used += tokens;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Release a reservation (e.g. failed request).
+    pub fn release_kv(&mut self, tokens: u64) {
+        debug_assert!(self.kv_used >= tokens, "KV underflow");
+        self.kv_used = self.kv_used.saturating_sub(tokens);
+    }
+
+    /// Accept a decode sub-request whose KV is already resident/reserved.
+    pub fn enqueue_decode(&mut self, id: RequestId, ctx: u32, remaining: u32) {
+        self.decode_wait.push_back(DecodeTask::new(id, ctx, remaining));
+    }
+
+    /// Local handoff: the prefill that ran here also decodes here
+    /// (no migration; KV simply changes accounting bucket — paper §5.3
+    /// "eliminate the overhead of KV Cache transmission").
+    pub fn adopt_local_decode(&mut self, id: RequestId, ctx: u32, remaining: u32) {
+        debug_assert!(self.parked_prefill_kv >= ctx as u64);
+        self.parked_prefill_kv -= ctx as u64;
+        self.decode_wait.push_back(DecodeTask::new(id, ctx, remaining));
+    }
+
+    /// Migration finished: drop the parked prefill KV from this (source)
+    /// instance.
+    pub fn migration_out_done(&mut self, tokens: u32) {
+        debug_assert!(self.parked_prefill_kv >= tokens as u64);
+        self.parked_prefill_kv -= tokens as u64;
+        self.release_kv(tokens as u64);
+    }
+
+    // ---------------------------------------------------------- iteration
+
+    /// Plan the next iteration. Returns None if there is no work.
+    ///
+    /// Local policy (paper §5.4): decode first — admit waiting decode
+    /// tasks while the batch-size cap and memory hold — then one chunk of
+    /// the head prefill request if budget remains.
+    pub fn plan_iteration(&mut self) -> Option<IterationPlan> {
+        let free = self.kv_free();
+
+        // Every running task must grow by one token this iteration; if
+        // memory cannot absorb that, preempt the newest tasks back to the
+        // wait queue (vLLM-style preemption under memory pressure).
+        while self.running.len() as u64 > free {
+            let t = self.running.pop().expect("running > free > 0");
+            self.decode_wait.push_front(t);
+        }
+        let mut growth = self.running.len() as u64;
+
+        // Admit waiting decode tasks while the batch cap and memory hold.
+        while !self.decode_wait.is_empty()
+            && self.running.len() < self.cost.max_batch
+            && growth + 1 <= free
+        {
+            let t = self.decode_wait.pop_front().unwrap();
+            self.running.push(t);
+            growth += 1;
+        }
+
+        let decode_reqs = self.running.len();
+        let decode_tokens: u64 = self
+            .running
+            .iter()
+            .map(|t| t.ctx as u64 + 1)
+            .sum();
+
+        // One chunk of the head prefill task with whatever memory remains.
+        let mem_budget = free - growth;
+        let (chunk, chunk_ctx) = match self.prefill_q.front() {
+            Some(t) if mem_budget > 0 => {
+                let mut c = self
+                    .chunk_tokens
+                    .min(t.remaining())
+                    .min(mem_budget.min(u32::MAX as u64) as u32);
+                // SLO-aware chunk cap: keep mixed iterations under the
+                // latency budget so decode TPOT survives the interference.
+                if decode_reqs > 0 {
+                    if let Some(budget) = self.iter_time_budget {
+                        let decode_t =
+                            self.cost.decode_iter_time(decode_reqs, decode_tokens);
+                        let spare = budget - decode_t;
+                        let per_tok = self.cost.prefill_per_token
+                            + self.cost.prefill_quad * t.done as f64;
+                        let cap = if spare <= 0.0 {
+                            64 // progress floor: never fully starve prefill
+                        } else {
+                            ((spare / per_tok.max(1e-12)) as u32).max(64)
+                        };
+                        c = c.min(cap);
+                    }
+                }
+                (c, t.done + c)
+            }
+            _ => (0, 0),
+        };
+
+        if decode_reqs == 0 && chunk == 0 {
+            return None;
+        }
+
+        let duration = if chunk > 0 {
+            self.cost
+                .mixed_iter_time(decode_reqs, decode_tokens, chunk, chunk_ctx)
+        } else {
+            self.cost.decode_iter_time(decode_reqs, decode_tokens)
+        };
+
+        // Commit KV growth now so concurrent reservations see it.
+        self.kv_used += decode_reqs as u64; // +1 token per decode req
+        self.kv_used += chunk as u64;
+
+        self.busy = true;
+        Some(IterationPlan {
+            decode_reqs,
+            decode_tokens,
+            chunk,
+            chunk_ctx,
+            duration,
+        })
+    }
+
+    /// Apply the effects of a completed iteration at time `now`.
+    pub fn finish_iteration(&mut self, plan: &IterationPlan, now: f64) -> Vec<Produced> {
+        self.busy = false;
+        self.iterations += 1;
+        let mut out = Vec::new();
+
+        // Decode: every running task emits one token.
+        if plan.decode_reqs > 0 {
+            if let Some(prev) = self.last_token_time {
+                self.intervals.push(now - prev);
+            }
+            self.last_token_time = Some(now);
+        }
+        let mut still_running = Vec::with_capacity(self.running.len());
+        for mut t in self.running.drain(..) {
+            t.ctx += 1;
+            t.remaining -= 1;
+            if t.finished() {
+                let freed = t.ctx as u64;
+                self.kv_used = self.kv_used.saturating_sub(freed);
+                out.push(Produced::FinalToken { id: t.id, freed_kv: freed });
+            } else {
+                out.push(Produced::Token { id: t.id });
+                still_running.push(t);
+            }
+        }
+        self.running = still_running;
+
+        // Prefill: head task advances by the chunk.
+        if plan.chunk > 0 {
+            let head = self.prefill_q.front_mut().expect("chunk without head");
+            head.done += plan.chunk;
+            if head.finished() {
+                let t = self.prefill_q.pop_front().unwrap();
+                self.parked_prefill_kv += t.input_len as u64;
+                out.push(Produced::PrefillDone {
+                    id: t.id,
+                    kv_tokens: t.input_len,
+                });
+            }
+        }
+        out
+    }
+
+    /// Abandon all queued work (used by failure-injection tests).
+    pub fn clear(&mut self) {
+        self.prefill_q.clear();
+        self.running.clear();
+        self.decode_wait.clear();
+        self.kv_used = 0;
+        self.parked_prefill_kv = 0;
+        self.intervals.clear();
+        self.busy = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst() -> SimInstance {
+        SimInstance::new(InstanceId(0), CostModel::h800_llama8b())
+    }
+
+    #[test]
+    fn idle_instance_plans_nothing() {
+        let mut i = inst();
+        assert!(i.plan_iteration().is_none());
+        assert!(i.is_idle());
+    }
+
+    #[test]
+    fn prefill_progresses_in_chunks_and_completes() {
+        let mut i = inst();
+        i.enqueue_prefill(RequestId(1), 5000);
+        let mut produced = Vec::new();
+        let mut now = 0.0;
+        let mut iters = 0;
+        while let Some(plan) = i.plan_iteration() {
+            assert!(plan.chunk > 0);
+            now += plan.duration;
+            produced.extend(i.finish_iteration(&plan, now));
+            iters += 1;
+            assert!(iters < 100, "no progress");
+        }
+        assert_eq!(iters, 3); // 2048 + 2048 + 904
+        assert!(matches!(
+            produced.last(),
+            Some(Produced::PrefillDone { kv_tokens: 5000, .. })
+        ));
+        // KV parked, not freed.
+        assert_eq!(i.kv_used(), 5000);
+    }
+
+    #[test]
+    fn decode_emits_tokens_until_done() {
+        let mut i = inst();
+        assert!(i.try_reserve_kv(10));
+        i.enqueue_decode(RequestId(2), 10, 3);
+        let mut now = 0.0;
+        let mut finals = 0;
+        let mut tokens = 0;
+        while let Some(plan) = i.plan_iteration() {
+            now += plan.duration;
+            for p in i.finish_iteration(&plan, now) {
+                match p {
+                    Produced::Token { .. } => tokens += 1,
+                    Produced::FinalToken { freed_kv, .. } => {
+                        finals += 1;
+                        assert_eq!(freed_kv, 13); // 10 + 3 generated
+                    }
+                    _ => panic!("unexpected prefill event"),
+                }
+            }
+        }
+        assert_eq!(tokens, 2);
+        assert_eq!(finals, 1);
+        assert_eq!(i.kv_used(), 0);
+    }
+
+    #[test]
+    fn decode_priority_over_prefill_in_mixed_batch() {
+        let mut i = inst();
+        i.enqueue_prefill(RequestId(1), 4096);
+        assert!(i.try_reserve_kv(100));
+        i.enqueue_decode(RequestId(2), 100, 5);
+        let plan = i.plan_iteration().unwrap();
+        assert_eq!(plan.decode_reqs, 1);
+        assert!(plan.chunk > 0, "chunked prefill joins the same batch");
+        // Mixed iteration slower than pure decode.
+        let pure = i.cost.decode_iter_time(1, plan.decode_tokens);
+        assert!(plan.duration > pure);
+    }
+
+    #[test]
+    fn batch_cap_parks_excess_decodes() {
+        let mut i = inst();
+        i.cost.max_batch = 2;
+        for r in 0..4 {
+            assert!(i.try_reserve_kv(10));
+            i.enqueue_decode(RequestId(r), 10, 5);
+        }
+        let plan = i.plan_iteration().unwrap();
+        assert_eq!(plan.decode_reqs, 2);
+        assert_eq!(i.decode_req_count(), 4);
+    }
+
+    #[test]
+    fn kv_reservation_rejects_over_capacity() {
+        let mut i = inst();
+        let cap = i.cost.max_kv_tokens;
+        assert!(i.try_reserve_kv(cap));
+        assert!(!i.try_reserve_kv(1));
+        i.release_kv(cap);
+        assert!(i.try_reserve_kv(1));
+    }
+
+    #[test]
+    fn local_adoption_skips_transfer() {
+        let mut i = inst();
+        i.enqueue_prefill(RequestId(1), 100);
+        let plan = i.plan_iteration().unwrap();
+        let out = i.finish_iteration(&plan, 1.0);
+        assert!(matches!(out[0], Produced::PrefillDone { .. }));
+        assert_eq!(i.kv_used(), 100);
+        i.adopt_local_decode(RequestId(1), 100, 3);
+        assert_eq!(i.kv_used(), 100); // no double counting
+        assert!(i.has_decode_work());
+    }
+
+    #[test]
+    fn migration_out_frees_kv() {
+        let mut i = inst();
+        i.enqueue_prefill(RequestId(1), 100);
+        let plan = i.plan_iteration().unwrap();
+        i.finish_iteration(&plan, 1.0);
+        i.migration_out_done(100);
+        assert_eq!(i.kv_used(), 0);
+    }
+
+    #[test]
+    fn token_intervals_tracked() {
+        let mut i = inst();
+        assert!(i.try_reserve_kv(10));
+        i.enqueue_decode(RequestId(1), 10, 4);
+        let mut now = 0.0;
+        while let Some(plan) = i.plan_iteration() {
+            now += plan.duration;
+            i.finish_iteration(&plan, now);
+        }
+        let avg = i.avg_token_interval();
+        assert!(avg > 0.0 && avg < 1.0, "avg={avg}");
+    }
+
+    #[test]
+    fn backlog_seconds_counts_all_queued() {
+        let mut i = inst();
+        i.enqueue_prefill(RequestId(1), 2048);
+        let one = i.prefill_backlog_seconds();
+        i.enqueue_prefill(RequestId(2), 2048);
+        let two = i.prefill_backlog_seconds();
+        assert!(two > 1.9 * one, "one={one} two={two}");
+    }
+
+    #[test]
+    fn prop_kv_never_exceeds_capacity_or_goes_negative() {
+        use crate::util::{prop, rng::Rng};
+        prop::check_with(77, 64, |rng: &mut Rng| {
+            let mut i = inst();
+            i.cost.max_kv_tokens = 10_000;
+            i.cost.max_batch = 8;
+            let mut now = 0.0;
+            let mut next_id = 0u64;
+            for _ in 0..rng.index(60) + 10 {
+                match rng.index(3) {
+                    0 => {
+                        let len = rng.int_range(1, 3000) as u32;
+                        if (len as u64) <= i.kv_free() {
+                            i.enqueue_prefill(RequestId(next_id), len);
+                            next_id += 1;
+                        }
+                    }
+                    1 => {
+                        let ctx = rng.int_range(1, 2000) as u64;
+                        if i.try_reserve_kv(ctx) {
+                            i.enqueue_decode(
+                                RequestId(next_id),
+                                ctx as u32,
+                                rng.int_range(1, 50) as u32,
+                            );
+                            next_id += 1;
+                        }
+                    }
+                    _ => {
+                        if let Some(plan) = i.plan_iteration() {
+                            now += plan.duration;
+                            for p in i.finish_iteration(&plan, now) {
+                                if let Produced::PrefillDone { id, kv_tokens } = p {
+                                    // Alternate local adopt / migrate out.
+                                    if rng.bool(0.5) {
+                                        i.adopt_local_decode(id, kv_tokens, 2);
+                                    } else {
+                                        i.migration_out_done(kv_tokens);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                crate::prop_assert!(
+                    i.kv_used() <= i.cost.max_kv_tokens,
+                    "kv_used {} > cap {}",
+                    i.kv_used(),
+                    i.cost.max_kv_tokens
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,11 @@
+//! Per-instance serving-engine substrate: task state, the stateless
+//! instance with its local scheduler (continuous batching + chunked
+//! prefill), and the KV-cache transfer fabric.
+
+pub mod instance;
+pub mod task;
+pub mod transfer;
+
+pub use instance::{IterationPlan, Produced, SimInstance, DEFAULT_CHUNK_TOKENS};
+pub use task::{DecodeTask, PrefillTask};
+pub use transfer::{StartedTransfer, Transfer, TransferFabric};

@@ -1,0 +1,86 @@
+//! Sub-request task state held by an instance's local scheduler.
+//!
+//! A request is split into a prefill task and a decode task (paper §5.2:
+//! "each request is split into prefill and decode sub-requests, which can
+//! be scheduled independently").
+
+use crate::request::RequestId;
+
+/// A prefill sub-request progressing chunk by chunk (chunked prefill,
+/// Sarathi-style — paper §5.4).
+#[derive(Debug, Clone)]
+pub struct PrefillTask {
+    pub id: RequestId,
+    pub input_len: u32,
+    /// Prompt tokens already prefilled.
+    pub done: u32,
+}
+
+impl PrefillTask {
+    pub fn new(id: RequestId, input_len: u32) -> Self {
+        PrefillTask {
+            id,
+            input_len,
+            done: 0,
+        }
+    }
+
+    pub fn remaining(&self) -> u32 {
+        self.input_len - self.done
+    }
+
+    pub fn finished(&self) -> bool {
+        self.done >= self.input_len
+    }
+}
+
+/// A decode sub-request resident in an instance's batch or wait queue.
+#[derive(Debug, Clone)]
+pub struct DecodeTask {
+    pub id: RequestId,
+    /// KV tokens currently held by this request (prompt + generated).
+    pub ctx: u32,
+    /// Output tokens still to produce (first token was produced by the
+    /// prefill phase).
+    pub remaining: u32,
+}
+
+impl DecodeTask {
+    pub fn new(id: RequestId, ctx: u32, remaining: u32) -> Self {
+        DecodeTask {
+            id,
+            ctx,
+            remaining,
+        }
+    }
+
+    pub fn finished(&self) -> bool {
+        self.remaining == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_progress() {
+        let mut t = PrefillTask::new(RequestId(1), 100);
+        assert_eq!(t.remaining(), 100);
+        assert!(!t.finished());
+        t.done += 60;
+        assert_eq!(t.remaining(), 40);
+        t.done += 40;
+        assert!(t.finished());
+    }
+
+    #[test]
+    fn decode_progress() {
+        let mut t = DecodeTask::new(RequestId(2), 50, 3);
+        assert!(!t.finished());
+        t.remaining -= 3;
+        t.ctx += 3;
+        assert!(t.finished());
+        assert_eq!(t.ctx, 53);
+    }
+}

@@ -1,0 +1,217 @@
+//! KV-cache migration between instances (paper Fig. 3: q2 + c).
+//!
+//! The decode instance *pulls* KV from the prefill instance once it has
+//! memory for it (paper §5.2 step e). Per-source-instance transfers are
+//! serialized FCFS (one NVLink/NIC channel per instance), which produces
+//! exactly the unpredictable q2 queueing the paper analyzes in §4.3.
+//!
+//! `TransferFabric` also models the vLLM-disaggregated baseline's limited
+//! KV transfer buffer: when `buffer_cap_tokens` is finite, transfers whose
+//! KV exceeds the free buffer wait, and requests that wait longer than
+//! `fail_timeout` fail — mirroring the buffer-overflow issue the paper had
+//! to work around in vLLM v0.7.3 (§7.1).
+
+use std::collections::VecDeque;
+
+use crate::costmodel::CostModel;
+use crate::request::{InstanceId, RequestId, Time};
+
+/// A pending KV migration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transfer {
+    pub req: RequestId,
+    pub from: InstanceId,
+    pub to: InstanceId,
+    pub kv_tokens: u32,
+    /// When the migration was requested (for q2 accounting / timeouts).
+    pub requested_at: Time,
+}
+
+/// Outcome of `poll`: transfers that can start now, with their duration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StartedTransfer {
+    pub transfer: Transfer,
+    pub completes_at: Time,
+}
+
+/// Serialized per-source transfer channels + optional shared buffer cap.
+#[derive(Debug)]
+pub struct TransferFabric {
+    /// Per-source channel busy-until times.
+    busy_until: Vec<Time>,
+    /// Waiting transfers per source (FCFS).
+    queues: Vec<VecDeque<Transfer>>,
+    /// Shared in-flight token budget (None = unlimited).
+    pub buffer_cap_tokens: Option<u64>,
+    in_flight_tokens: u64,
+    /// Requests whose transfer waited longer than this fail (None = never).
+    pub fail_timeout: Option<f64>,
+}
+
+impl TransferFabric {
+    pub fn new(n_instances: usize) -> Self {
+        TransferFabric {
+            busy_until: vec![0.0; n_instances],
+            queues: (0..n_instances).map(|_| VecDeque::new()).collect(),
+            buffer_cap_tokens: None,
+            in_flight_tokens: 0,
+            fail_timeout: None,
+        }
+    }
+
+    /// Queue a migration request.
+    pub fn request(&mut self, t: Transfer) {
+        self.queues[t.from.0].push_back(t);
+    }
+
+    /// Try to start queued transfers at time `now`. Returns started
+    /// transfers (caller schedules their completion events) and failed
+    /// request ids (timeout waiting for buffer).
+    pub fn poll(
+        &mut self,
+        now: Time,
+        cost: &CostModel,
+    ) -> (Vec<StartedTransfer>, Vec<RequestId>) {
+        let mut started = Vec::new();
+        let mut failed = Vec::new();
+        for src in 0..self.queues.len() {
+            // Channel free?
+            while let Some(head) = self.queues[src].front() {
+                if self.busy_until[src] > now {
+                    break;
+                }
+                // Buffer admission.
+                if let Some(cap) = self.buffer_cap_tokens {
+                    if self.in_flight_tokens + head.kv_tokens as u64 > cap {
+                        if let Some(to) = self.fail_timeout {
+                            if now - head.requested_at > to {
+                                let t = self.queues[src].pop_front().unwrap();
+                                failed.push(t.req);
+                                continue;
+                            }
+                        }
+                        break;
+                    }
+                }
+                let t = self.queues[src].pop_front().unwrap();
+                let dur = cost.transfer_time(t.kv_tokens as u64);
+                self.busy_until[src] = now + dur;
+                self.in_flight_tokens += t.kv_tokens as u64;
+                started.push(StartedTransfer {
+                    completes_at: now + dur,
+                    transfer: t,
+                });
+            }
+        }
+        (started, failed)
+    }
+
+    /// A transfer finished; release its buffer tokens.
+    pub fn complete(&mut self, kv_tokens: u32) {
+        self.in_flight_tokens = self.in_flight_tokens.saturating_sub(kv_tokens as u64);
+    }
+
+    /// Earliest future time at which a queued transfer could start
+    /// (drives re-poll event scheduling). None if nothing queued.
+    pub fn next_wakeup(&self) -> Option<Time> {
+        let mut t: Option<Time> = None;
+        for (src, q) in self.queues.iter().enumerate() {
+            if !q.is_empty() {
+                let cand = self.busy_until[src];
+                t = Some(t.map_or(cand, |x: f64| x.min(cand)));
+            }
+        }
+        t
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric(n: usize) -> (TransferFabric, CostModel) {
+        (TransferFabric::new(n), CostModel::h800_llama8b())
+    }
+
+    fn t(req: u64, from: usize, to: usize, kv: u32, at: f64) -> Transfer {
+        Transfer {
+            req: RequestId(req),
+            from: InstanceId(from),
+            to: InstanceId(to),
+            kv_tokens: kv,
+            requested_at: at,
+        }
+    }
+
+    #[test]
+    fn transfer_starts_immediately_when_free() {
+        let (mut f, cost) = fabric(2);
+        f.request(t(1, 0, 1, 1000, 0.0));
+        let (started, failed) = f.poll(0.0, &cost);
+        assert_eq!(started.len(), 1);
+        assert!(failed.is_empty());
+        assert!(started[0].completes_at > 0.0);
+    }
+
+    #[test]
+    fn same_source_serializes_fcfs() {
+        let (mut f, cost) = fabric(2);
+        f.request(t(1, 0, 1, 1000, 0.0));
+        f.request(t(2, 0, 1, 1000, 0.0));
+        let (started, _) = f.poll(0.0, &cost);
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].transfer.req, RequestId(1));
+        // Second starts only after the channel frees.
+        let free_at = started[0].completes_at;
+        let (none, _) = f.poll(free_at - 1e-9, &cost);
+        assert!(none.is_empty());
+        assert_eq!(f.next_wakeup(), Some(free_at));
+        f.complete(1000);
+        let (second, _) = f.poll(free_at, &cost);
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].transfer.req, RequestId(2));
+    }
+
+    #[test]
+    fn different_sources_parallel() {
+        let (mut f, cost) = fabric(3);
+        f.request(t(1, 0, 2, 1000, 0.0));
+        f.request(t(2, 1, 2, 1000, 0.0));
+        let (started, _) = f.poll(0.0, &cost);
+        assert_eq!(started.len(), 2);
+    }
+
+    #[test]
+    fn buffer_cap_blocks_and_timeout_fails() {
+        let (mut f, cost) = fabric(2);
+        f.buffer_cap_tokens = Some(1500);
+        f.fail_timeout = Some(10.0);
+        f.request(t(1, 0, 1, 1000, 0.0));
+        let (s1, _) = f.poll(0.0, &cost);
+        assert_eq!(s1.len(), 1);
+        // Second transfer (from the other source so the channel is free)
+        // exceeds the shared buffer.
+        f.request(t(2, 1, 0, 1000, 0.0));
+        let (s2, f2) = f.poll(1.0, &cost);
+        assert!(s2.is_empty() && f2.is_empty());
+        // After the timeout it fails.
+        let (s3, f3) = f.poll(12.0, &cost);
+        assert!(s3.is_empty());
+        assert_eq!(f3, vec![RequestId(2)]);
+        // Releasing the buffer lets new transfers in.
+        f.complete(1000);
+        f.request(t(3, 1, 0, 1000, 12.0));
+        let (s4, _) = f.poll(12.0, &cost);
+        assert_eq!(s4.len(), 1);
+    }
+
+    #[test]
+    fn next_wakeup_none_when_empty() {
+        let (f, _) = fabric(2);
+        assert_eq!(f.next_wakeup(), None);
+    }
+}

@@ -1,0 +1,502 @@
+//! Figure/table regeneration harness: one entry point per table and
+//! figure in the paper's evaluation (§3 Fig. 1/2/4, §7 Table 1,
+//! Fig. 7/8/9). Each emits a human-readable table to stdout and a JSON
+//! file under `out_dir` for plotting. See DESIGN.md §6 for the index and
+//! EXPERIMENTS.md for paper-vs-measured discussion.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::costmodel::CostModel;
+use crate::json::Json;
+use crate::metrics::{max_sustainable_rate, SloReport};
+use crate::scenarios::{build, System};
+use crate::trace::catalog::{self, Workload};
+use crate::trace::Trace;
+use crate::util::stats;
+use crate::util::threads::{default_workers, parallel_map};
+
+/// Shared harness options.
+#[derive(Debug, Clone)]
+pub struct FigOpts {
+    pub seed: u64,
+    /// Clip each trace to this many seconds before sweeping (keeps the
+    /// fig7/8/9 sweeps tractable; the paper replays full traces on 8×H800).
+    pub clip_seconds: f64,
+    pub gpus: usize,
+    pub out_dir: String,
+    pub workers: usize,
+    /// SLO attainment target (paper uses 90%).
+    pub target: f64,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        FigOpts {
+            seed: 1,
+            clip_seconds: 300.0,
+            gpus: 8,
+            out_dir: "results".into(),
+            workers: default_workers(),
+            target: 0.9,
+        }
+    }
+}
+
+fn write_json(opts: &FigOpts, name: &str, v: &Json) {
+    let dir = Path::new(&opts.out_dir);
+    if std::fs::create_dir_all(dir).is_ok() {
+        let path = dir.join(name);
+        if let Err(e) = std::fs::write(&path, v.encode()) {
+            eprintln!("warn: cannot write {}: {e}", path.display());
+        } else {
+            println!("  -> {}", path.display());
+        }
+    }
+}
+
+fn run_once(
+    sys: System,
+    trace: &Trace,
+    w: &Workload,
+    gpus: usize,
+    rate: f64,
+    timeline: bool,
+) -> (SloReport, crate::sim::SimResult) {
+    let t = trace.with_rate(rate);
+    let cl = build(
+        sys,
+        gpus,
+        &CostModel::h800_llama8b(),
+        w.ttft_slo,
+        w.tpot_slo,
+        timeline,
+    );
+    let res = cl.run(&t);
+    let rep = SloReport::from_records(&res.records, w.ttft_slo, w.tpot_slo, t.duration());
+    (rep, res)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1
+// ---------------------------------------------------------------------------
+
+/// Table 1: workloads and SLO settings (validates generator statistics
+/// against the published trace characteristics at the same time).
+pub fn table1(opts: &FigOpts) {
+    println!("Table 1 — workloads and SLO settings");
+    println!(
+        "{:<15} {:>9} {:>7} {:>7} | {:>10} {:>10} {:>8} {:>8}",
+        "trace", "#req", "TTFT", "TPOT", "med_in", "med_out", "io_r", "min_cv"
+    );
+    let mut rows = Vec::new();
+    for w in catalog::table1() {
+        let t = w.generate(opts.seed);
+        let s = t.stats();
+        println!(
+            "{:<15} {:>9} {:>6}s {:>6}s | {:>10.0} {:>10.0} {:>8.2} {:>8.2}",
+            w.name(),
+            t.len(),
+            w.ttft_slo,
+            w.tpot_slo,
+            s.median_input,
+            s.median_output,
+            s.io_correlation,
+            s.minute_input_cv
+        );
+        rows.push(Json::obj(vec![
+            ("trace", Json::Str(w.name().into())),
+            ("n_requests", Json::Num(t.len() as f64)),
+            ("ttft_slo", Json::Num(w.ttft_slo)),
+            ("tpot_slo", Json::Num(w.tpot_slo)),
+            ("median_input", Json::Num(s.median_input)),
+            ("median_output", Json::Num(s.median_output)),
+            ("io_correlation", Json::Num(s.io_correlation)),
+            ("minute_input_cv", Json::Num(s.minute_input_cv)),
+        ]));
+    }
+    write_json(opts, "table1.json", &Json::Arr(rows));
+}
+
+// ---------------------------------------------------------------------------
+// Figure 1 — per-minute input/output load
+// ---------------------------------------------------------------------------
+
+pub fn fig1(opts: &FigOpts) {
+    println!("Figure 1 — total request input/output length per minute");
+    let mut out = Vec::new();
+    for w in catalog::table1() {
+        let t = w.generate(opts.seed);
+        let pm = t.per_minute_load();
+        let inputs: Vec<f64> = pm.iter().map(|m| m.input_tokens as f64).collect();
+        let cv = stats::coeff_of_variation(&inputs);
+        let max = inputs.iter().cloned().fold(0.0, f64::max);
+        let min = inputs
+            .iter()
+            .cloned()
+            .filter(|&x| x > 0.0)
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "  {:<15} minutes={:<3} input cv={:.2} peak/trough={:.0}x",
+            w.name(),
+            pm.len(),
+            cv,
+            max / min.max(1.0)
+        );
+        let series: Vec<Json> = pm
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("minute", Json::Num(m.minute as f64)),
+                    ("input_tokens", Json::Num(m.input_tokens as f64)),
+                    ("output_tokens", Json::Num(m.output_tokens as f64)),
+                    ("requests", Json::Num(m.requests as f64)),
+                ])
+            })
+            .collect();
+        out.push(Json::obj(vec![
+            ("trace", Json::Str(w.name().into())),
+            ("minutes", Json::Arr(series)),
+        ]));
+    }
+    write_json(opts, "fig1.json", &Json::Arr(out));
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2 — input/output length CDFs
+// ---------------------------------------------------------------------------
+
+pub fn fig2(opts: &FigOpts) {
+    println!("Figure 2 — input and output length CDFs");
+    let probes = [1.0, 5.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0];
+    let mut out = Vec::new();
+    for w in catalog::table1() {
+        let t = w.generate(opts.seed);
+        let inputs: Vec<f64> = t.requests.iter().map(|r| r.input_len as f64).collect();
+        let outputs: Vec<f64> = t.requests.iter().map(|r| r.output_len as f64).collect();
+        let irow: Vec<f64> = probes.iter().map(|&p| stats::percentile(&inputs, p)).collect();
+        let orow: Vec<f64> = probes.iter().map(|&p| stats::percentile(&outputs, p)).collect();
+        println!("  {:<15} input  p50={:>8.0} p99={:>8.0} max={:>8.0}", w.name(), irow[4], irow[8], irow[9]);
+        println!("  {:<15} output p50={:>8.0} p99={:>8.0} max={:>8.0}", "", orow[4], orow[8], orow[9]);
+        out.push(Json::obj(vec![
+            ("trace", Json::Str(w.name().into())),
+            ("percentiles", Json::arr_f64(&probes)),
+            ("input", Json::arr_f64(&irow)),
+            ("output", Json::arr_f64(&orow)),
+        ]));
+    }
+    write_json(opts, "fig2.json", &Json::Arr(out));
+}
+
+// ---------------------------------------------------------------------------
+// Figure 4 — prefill vs decode load over time (static 4P/4D)
+// ---------------------------------------------------------------------------
+
+/// Replays the rising-load clip of Azure Conversation (paper: minutes
+/// 20–40) on a static 4P+4D minimal-load cluster and reports the number of
+/// requests being processed by prefill vs decode instances over time,
+/// showing the temporal misalignment of Insight 5.
+pub fn fig4(opts: &FigOpts) {
+    println!("Figure 4 — prefill/decode load over time (static 4P+4D)");
+    let w = catalog::by_name("azure_conv").unwrap();
+    let full = w.generate(opts.seed);
+    let clip = full.window(20.0 * 60.0, 40.0 * 60.0);
+    let (_, res) = run_once(System::MinimalLoad, &clip, &w, opts.gpus, clip.rate() * 4.0, true);
+    let half = opts.gpus / 2;
+    let mut rows = Vec::new();
+    let mut peak_p = (0.0, 0usize);
+    let mut peak_d = (0.0, 0usize);
+    for snap in &res.timeline {
+        let p: usize = snap.per_instance[..half].iter().map(|x| x.0 + x.1).sum();
+        let d: usize = snap.per_instance[half..].iter().map(|x| x.0 + x.1).sum();
+        if p > peak_p.1 {
+            peak_p = (snap.time, p);
+        }
+        if d > peak_d.1 {
+            peak_d = (snap.time, d);
+        }
+        rows.push(Json::obj(vec![
+            ("time", Json::Num(snap.time)),
+            ("prefill_requests", Json::Num(p as f64)),
+            ("decode_requests", Json::Num(d as f64)),
+        ]));
+    }
+    println!(
+        "  prefill peak {} reqs at t={:.0}s; decode peak {} reqs at t={:.0}s (lag {:+.0}s)",
+        peak_p.1,
+        peak_p.0,
+        peak_d.1,
+        peak_d.0,
+        peak_d.0 - peak_p.0
+    );
+    write_json(opts, "fig4.json", &Json::Arr(rows));
+}
+
+// ---------------------------------------------------------------------------
+// Figure 7 — end-to-end: SLO attainment / P90 TTFT / P90 TPOT vs rate
+// ---------------------------------------------------------------------------
+
+/// Rate multipliers swept per (trace, system) for the Fig. 7 curves.
+const FIG7_MULTS: [f64; 8] = [1.0, 2.0, 4.0, 8.0, 16.0, 24.0, 32.0, 48.0];
+
+/// Systems in Fig. 7 (the paper's four: Arrow + three baselines).
+const FIG7_SYSTEMS: [System; 4] = [
+    System::Arrow,
+    System::VllmColocated,
+    System::VllmDisaggregated,
+    System::DistServe,
+];
+
+pub fn fig7(opts: &FigOpts) {
+    println!(
+        "Figure 7 — SLO attainment / P90 TTFT / P90 TPOT vs request rate ({} GPUs)",
+        opts.gpus
+    );
+    let mut out = Vec::new();
+    for w in catalog::table1() {
+        let trace = w.generate(opts.seed).clip_seconds(opts.clip_seconds);
+        let base = trace.rate();
+        println!("\n  [{}] base rate {:.2} req/s, {} requests", w.name(), base, trace.len());
+        println!(
+            "  {:<13} {}",
+            "system",
+            FIG7_MULTS
+                .iter()
+                .map(|m| format!("{:>7.1}", base * m))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+
+        let jobs: Vec<(System, f64)> = FIG7_SYSTEMS
+            .iter()
+            .flat_map(|&s| FIG7_MULTS.iter().map(move |&m| (s, base * m)))
+            .collect();
+        let reports = parallel_map(jobs.clone(), opts.workers, |&(sys, rate)| {
+            run_once(sys, &trace, &w, opts.gpus, rate, false).0
+        });
+
+        let mut max_rates = Vec::new();
+        for (si, &sys) in FIG7_SYSTEMS.iter().enumerate() {
+            let slice = &reports[si * FIG7_MULTS.len()..(si + 1) * FIG7_MULTS.len()];
+            let att_row: String = slice
+                .iter()
+                .map(|r| format!("{:>7.3}", r.slo_attainment))
+                .collect::<Vec<_>>()
+                .join(" ");
+            println!("  {:<13} {}  (attainment)", sys.label(), att_row);
+            let rows: Vec<Json> = slice
+                .iter()
+                .zip(FIG7_MULTS.iter())
+                .map(|(r, m)| {
+                    Json::obj(vec![
+                        ("rate", Json::Num(base * m)),
+                        ("slo_attainment", Json::Num(r.slo_attainment)),
+                        ("p90_ttft", Json::Num(r.p90_ttft)),
+                        ("p90_tpot", Json::Num(r.p90_tpot)),
+                        ("failed", Json::Num(r.n_failed as f64)),
+                    ])
+                })
+                .collect();
+            // Max sustainable rate via bisection (headline metric).
+            let max_rate = max_sustainable_rate(
+                |rate| run_once(sys, &trace, &w, opts.gpus, rate, false).0,
+                base,
+                opts.target,
+                0.05,
+            );
+            max_rates.push((sys, max_rate));
+            out.push(Json::obj(vec![
+                ("trace", Json::Str(w.name().into())),
+                ("system", Json::Str(sys.label().into())),
+                ("sweep", Json::Arr(rows)),
+                ("max_sustainable_rate", Json::Num(max_rate)),
+            ]));
+        }
+        let arrow_rate = max_rates
+            .iter()
+            .find(|(s, _)| *s == System::Arrow)
+            .unwrap()
+            .1;
+        print!("  max rate @{:.0}% SLO:", opts.target * 100.0);
+        for (sys, r) in &max_rates {
+            print!("  {}={:.1}", sys.label(), r);
+            if *sys != System::Arrow && *r > 0.0 {
+                print!(" ({:.2}x)", arrow_rate / r);
+            }
+        }
+        println!();
+    }
+    write_json(opts, "fig7.json", &Json::Arr(out));
+}
+
+// ---------------------------------------------------------------------------
+// Figure 8 — ablation: SLO-aware vs Minimal Load vs Round Robin
+// ---------------------------------------------------------------------------
+
+const FIG8_SYSTEMS: [System; 3] = [System::Arrow, System::MinimalLoad, System::RoundRobin];
+
+pub fn fig8(opts: &FigOpts) {
+    println!("Figure 8 — scheduling-strategy ablation (SLO-aware / Minimal Load / Round Robin)");
+    let mut out = Vec::new();
+    for name in ["azure_code", "azure_conv"] {
+        let w = catalog::by_name(name).unwrap();
+        let trace = w.generate(opts.seed).clip_seconds(opts.clip_seconds);
+        let base = trace.rate();
+        println!("\n  [{}] base rate {:.2} req/s", name, base);
+        let jobs: Vec<System> = FIG8_SYSTEMS.to_vec();
+        let rates = parallel_map(jobs, opts.workers, |&sys| {
+            max_sustainable_rate(
+                |rate| run_once(sys, &trace, &w, opts.gpus, rate, false).0,
+                base,
+                opts.target,
+                0.05,
+            )
+        });
+        let ml = rates[1];
+        for (sys, r) in FIG8_SYSTEMS.iter().zip(&rates) {
+            print!("    {:<13} max rate {:.1} req/s", sys.label(), r);
+            if *sys == System::Arrow && ml > 0.0 {
+                print!("  ({:.2}x over minimal-load)", r / ml);
+            }
+            println!();
+            out.push(Json::obj(vec![
+                ("trace", Json::Str(name.into())),
+                ("system", Json::Str(sys.label().into())),
+                ("max_sustainable_rate", Json::Num(*r)),
+            ]));
+        }
+    }
+    write_json(opts, "fig8.json", &Json::Arr(out));
+}
+
+// ---------------------------------------------------------------------------
+// Figure 9 — scalability with GPU count
+// ---------------------------------------------------------------------------
+
+const FIG9_GPUS: [usize; 3] = [4, 8, 16];
+
+pub fn fig9(opts: &FigOpts) {
+    println!("Figure 9 — scalability: max sustainable rate vs GPU count (azure_code)");
+    let w = catalog::by_name("azure_code").unwrap();
+    let trace = w.generate(opts.seed).clip_seconds(opts.clip_seconds);
+    let base = trace.rate();
+    let mut out = Vec::new();
+    let jobs: Vec<(System, usize)> = [System::Arrow, System::MinimalLoad]
+        .iter()
+        .flat_map(|&s| FIG9_GPUS.iter().map(move |&g| (s, g)))
+        .collect();
+    let rates = parallel_map(jobs.clone(), opts.workers, |&(sys, gpus)| {
+        max_sustainable_rate(
+            |rate| run_once(sys, &trace, &w, gpus, rate, false).0,
+            base,
+            opts.target,
+            0.05,
+        )
+    });
+    for ((sys, gpus), r) in jobs.iter().zip(&rates) {
+        println!("    {:<13} {:>2} GPUs: max rate {:.1} req/s", sys.label(), gpus, r);
+        out.push(Json::obj(vec![
+            ("system", Json::Str(sys.label().into())),
+            ("gpus", Json::Num(*gpus as f64)),
+            ("max_sustainable_rate", Json::Num(*r)),
+        ]));
+    }
+    // Linearity check for Arrow (paper: "nearly linear improvements").
+    let arrow: Vec<f64> = jobs
+        .iter()
+        .zip(&rates)
+        .filter(|((s, _), _)| *s == System::Arrow)
+        .map(|(_, r)| *r)
+        .collect();
+    if arrow.len() == 3 && arrow[0] > 0.0 {
+        println!(
+            "    arrow scaling 4->8->16 GPUs: 1.0x -> {:.2}x -> {:.2}x",
+            arrow[1] / arrow[0],
+            arrow[2] / arrow[0]
+        );
+    }
+    write_json(opts, "fig9.json", &Json::Arr(out));
+}
+
+/// Run everything (the `figures all` subcommand).
+pub fn all(opts: &FigOpts) {
+    table1(opts);
+    fig1(opts);
+    fig2(opts);
+    fig4(opts);
+    fig7(opts);
+    fig8(opts);
+    fig9(opts);
+}
+
+/// Summarize a single replay (the `replay` subcommand).
+pub fn replay(system: System, workload: &str, rate_mult: f64, opts: &FigOpts) -> String {
+    let w = catalog::by_name(workload).unwrap_or_else(|| {
+        eprintln!("unknown workload '{workload}', using smoke");
+        catalog::by_name("smoke").unwrap()
+    });
+    let trace = w.generate(opts.seed).clip_seconds(opts.clip_seconds);
+    let rate = trace.rate() * rate_mult;
+    let t0 = std::time::Instant::now();
+    let (rep, res) = run_once(system, &trace, &w, opts.gpus, rate, false);
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{} on {} @ {:.2} req/s ({} GPUs): attainment={:.3} p90_ttft={:.3}s p90_tpot={:.4}s \
+         finished={}/{} failed={} flips={} events={} wall={:.2}s",
+        system.label(),
+        w.name(),
+        rate,
+        opts.gpus,
+        rep.slo_attainment,
+        rep.p90_ttft,
+        rep.p90_tpot,
+        rep.n_finished,
+        rep.n_requests,
+        rep.n_failed,
+        res.total_flips,
+        res.events_processed,
+        t0.elapsed().as_secs_f64()
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> FigOpts {
+        FigOpts {
+            seed: 2,
+            clip_seconds: 60.0,
+            gpus: 4,
+            out_dir: std::env::temp_dir()
+                .join("arrow_fig_test")
+                .to_string_lossy()
+                .into_owned(),
+            workers: 2,
+            target: 0.9,
+        }
+    }
+
+    #[test]
+    fn table1_and_fig12_run() {
+        let o = quick_opts();
+        table1(&o);
+        fig1(&o);
+        fig2(&o);
+        for f in ["table1.json", "fig1.json", "fig2.json"] {
+            let p = Path::new(&o.out_dir).join(f);
+            let text = std::fs::read_to_string(&p).unwrap();
+            assert!(Json::parse(&text).is_ok(), "{f} must be valid JSON");
+        }
+    }
+
+    #[test]
+    fn replay_produces_summary() {
+        let o = quick_opts();
+        let s = replay(System::MinimalLoad, "smoke", 1.0, &o);
+        assert!(s.contains("minimal-load"));
+        assert!(s.contains("attainment="));
+    }
+}

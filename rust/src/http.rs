@@ -1,0 +1,241 @@
+//! Minimal HTTP/1.1 server substrate (no axum/hyper offline).
+//!
+//! Thread-per-connection, request-line + headers + Content-Length body
+//! parsing, keep-alive off (Connection: close) for simplicity. Enough for
+//! the OpenAI-style JSON frontend in `server/`.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn body_str(&self) -> std::borrow::Cow<'_, str> {
+        String::from_utf8_lossy(&self.body)
+    }
+}
+
+/// A response under construction.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, body: &str) -> Self {
+        HttpResponse {
+            status,
+            content_type: "application/json".into(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Self {
+        HttpResponse {
+            status,
+            content_type: "text/plain".into(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    pub fn not_found() -> Self {
+        Self::json(404, "{\"error\":\"not found\"}")
+    }
+
+    fn status_text(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+
+    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            self.status_text(),
+            self.content_type,
+            self.body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+/// Parse one request from a stream. Returns None on clean EOF.
+pub fn parse_request(stream: &mut TcpStream) -> std::io::Result<Option<HttpRequest>> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let path = parts.next().unwrap_or("/").to_string();
+    if method.is_empty() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "bad request line",
+        ));
+    }
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let mut body = vec![0u8; len.min(64 << 20)]; // 64 MB cap
+    if len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(Some(HttpRequest {
+        method,
+        path,
+        headers,
+        body,
+    }))
+}
+
+/// Serve until `shutdown` flips true. `handler` runs on a per-connection
+/// thread; panics in handlers are converted to 500s.
+pub fn serve<F>(addr: &str, shutdown: Arc<AtomicBool>, handler: F) -> std::io::Result<()>
+where
+    F: Fn(&HttpRequest) -> HttpResponse + Send + Sync + 'static,
+{
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let handler = Arc::new(handler);
+    println!("http: listening on {addr}");
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                let handler = Arc::clone(&handler);
+                std::thread::spawn(move || {
+                    stream.set_nonblocking(false).ok();
+                    let resp = match parse_request(&mut stream) {
+                        Ok(Some(req)) => {
+                            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                || handler(&req),
+                            )) {
+                                Ok(r) => r,
+                                Err(_) => HttpResponse::json(
+                                    500,
+                                    "{\"error\":\"internal handler panic\"}",
+                                ),
+                            }
+                        }
+                        Ok(None) => return,
+                        Err(_) => HttpResponse::json(400, "{\"error\":\"bad request\"}"),
+                    };
+                    let _ = resp.write_to(&mut stream);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    fn start(
+        handler: impl Fn(&HttpRequest) -> HttpResponse + Send + Sync + 'static,
+    ) -> (String, Arc<AtomicBool>) {
+        // Bind on port 0 to get a free port, then serve on it.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sd = Arc::clone(&shutdown);
+        let a = addr.clone();
+        std::thread::spawn(move || serve(&a, sd, handler));
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        (addr, shutdown)
+    }
+
+    fn roundtrip(addr: &str, raw: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn get_and_post_roundtrip() {
+        let (addr, shutdown) = start(|req| match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/health") => HttpResponse::text(200, "ok"),
+            ("POST", "/echo") => {
+                HttpResponse::json(200, &format!("{{\"len\":{}}}", req.body.len()))
+            }
+            _ => HttpResponse::not_found(),
+        });
+
+        let get = roundtrip(&addr, "GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(get.starts_with("HTTP/1.1 200"), "{get}");
+        assert!(get.ends_with("ok"), "{get}");
+
+        let body = "{\"a\":1}";
+        let post = roundtrip(
+            &addr,
+            &format!(
+                "POST /echo HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+                body.len(),
+                body
+            ),
+        );
+        assert!(post.contains("\"len\":7"), "{post}");
+
+        let missing = roundtrip(&addr, "GET /nope HTTP/1.1\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+
+        shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn handler_panic_returns_500() {
+        let (addr, shutdown) = start(|_req| panic!("boom"));
+        let resp = roundtrip(&addr, "GET / HTTP/1.1\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 500"), "{resp}");
+        shutdown.store(true, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,31 @@
+//! Arrow: adaptive scheduling for Prefill–Decode disaggregated LLM
+//! inference — a three-layer (Rust + JAX + Pallas, AOT via PJRT)
+//! reproduction of the paper. See DESIGN.md for architecture notes and
+//! the paper→repo substitutions; EXPERIMENTS.md for reproduced results.
+//!
+//! Layer map:
+//! * [`coordinator`] — the paper's contribution: stateless instances,
+//!   elastic pools, SLO-aware request + instance scheduling.
+//! * [`engine`], [`costmodel`], [`sim`] — the serving substrate and the
+//!   calibrated discrete-event cluster simulator.
+//! * [`runtime`] — PJRT loader executing the AOT artifacts emitted by
+//!   `python/compile/aot.py` (L2 JAX model + L1 Pallas kernels).
+//! * [`baselines`], [`scenarios`], [`metrics`] — evaluation harness.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod costmodel;
+pub mod engine;
+pub mod json;
+pub mod metrics;
+pub mod request;
+pub mod scenarios;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+pub mod cli;
+pub mod figures;
+pub mod http;
+pub mod runtime;
+pub mod server;

@@ -1,0 +1,144 @@
+//! `arrow` — CLI for the Arrow reproduction.
+//!
+//! Subcommands:
+//!   figures <table1|fig1|fig2|fig4|fig7|fig8|fig9|all>   regenerate paper tables/figures
+//!   replay --system S --workload W --rate-mult M          one simulated run
+//!   serve --artifacts DIR [--port P] [--instances N]      real-mode HTTP serving (PJRT)
+//!   calibrate --artifacts DIR                              profile PJRT executables, fit cost model
+//!   traces [--out DIR]                                     dump synthetic traces as JSONL
+//!   info                                                   version + scenario summary
+
+use arrow::cli;
+use arrow::figures::{self, FigOpts};
+use arrow::scenarios::System;
+use arrow::trace::catalog;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: arrow <subcommand> [flags]
+
+subcommands:
+  figures <table1|fig1|fig2|fig4|fig7|fig8|fig9|all>
+          [--seed N] [--clip SECONDS] [--gpus N] [--out DIR]
+          [--workers N] [--target FRAC]
+  replay  --system <arrow|vllm|vllm-disagg|distserve|minimal-load|round-robin>
+          --workload <azure_code|azure_conv|burstgpt|mooncake_conv|smoke>
+          [--rate-mult M] [--seed N] [--clip SECONDS] [--gpus N]
+  serve   [--artifacts DIR] [--port P] [--instances N] [--ttft-slo S] [--tpot-slo S]
+  calibrate [--artifacts DIR]
+  traces  [--out DIR] [--seed N]
+  info"
+    );
+    std::process::exit(2)
+}
+
+fn fig_opts(p: &cli::ParsedArgs) -> Result<FigOpts, cli::CliError> {
+    let mut o = FigOpts::default();
+    o.seed = p.u64_or("seed", o.seed)?;
+    o.clip_seconds = p.f64_or("clip", o.clip_seconds)?;
+    o.gpus = p.usize_or("gpus", o.gpus)?;
+    o.out_dir = p.str_or("out", &o.out_dir);
+    o.workers = p.usize_or("workers", o.workers)?;
+    o.target = p.f64_or("target", o.target)?;
+    Ok(o)
+}
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        usage();
+    }
+    let p = cli::parse(&raw);
+    let sub = p.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match sub {
+        "figures" => cmd_figures(&p),
+        "replay" => cmd_replay(&p),
+        "serve" => cmd_serve(&p),
+        "calibrate" => cmd_calibrate(&p),
+        "traces" => cmd_traces(&p),
+        "info" => cmd_info(),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_figures(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
+    p.check_known(&["seed", "clip", "gpus", "out", "workers", "target"])?;
+    let opts = fig_opts(p)?;
+    let which = p.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    match which {
+        "table1" => figures::table1(&opts),
+        "fig1" => figures::fig1(&opts),
+        "fig2" => figures::fig2(&opts),
+        "fig4" => figures::fig4(&opts),
+        "fig7" => figures::fig7(&opts),
+        "fig8" => figures::fig8(&opts),
+        "fig9" => figures::fig9(&opts),
+        "all" => figures::all(&opts),
+        other => {
+            return Err(format!("unknown figure '{other}'").into());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_replay(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
+    p.check_known(&["system", "workload", "rate-mult", "seed", "clip", "gpus"])?;
+    let sys = System::by_label(&p.str_or("system", "arrow")).ok_or("unknown --system")?;
+    let workload = p.str_or("workload", "smoke");
+    let mult = p.f64_or("rate-mult", 1.0)?;
+    let opts = fig_opts(p)?;
+    print!("{}", figures::replay(sys, &workload, mult, &opts));
+    Ok(())
+}
+
+fn cmd_serve(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
+    p.check_known(&["artifacts", "port", "instances", "ttft-slo", "tpot-slo"])?;
+    let cfg = arrow::server::ServeConfig {
+        artifacts_dir: p.str_or("artifacts", "artifacts"),
+        port: p.u64_or("port", 8080)? as u16,
+        instances: p.usize_or("instances", 2)?,
+        ttft_slo: p.f64_or("ttft-slo", 2.0)?,
+        tpot_slo: p.f64_or("tpot-slo", 0.5)?,
+    };
+    arrow::server::serve(cfg)?;
+    Ok(())
+}
+
+fn cmd_calibrate(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
+    p.check_known(&["artifacts"])?;
+    let dir = p.str_or("artifacts", "artifacts");
+    let report = arrow::runtime::calibrate(&dir)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_traces(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
+    p.check_known(&["out", "seed"])?;
+    let out = p.str_or("out", "results/traces");
+    let seed = p.u64_or("seed", 1)?;
+    std::fs::create_dir_all(&out)?;
+    for w in catalog::table1() {
+        let t = w.generate(seed);
+        let path = std::path::Path::new(&out).join(format!("{}.jsonl", w.name()));
+        arrow::trace::io::save_jsonl(&t, &path)?;
+        println!("wrote {} ({} requests)", path.display(), t.len());
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), Box<dyn std::error::Error>> {
+    println!(
+        "arrow-serve {} — Arrow paper reproduction",
+        env!("CARGO_PKG_VERSION")
+    );
+    println!(
+        "systems: {}",
+        System::all().map(|s| s.label()).join(", ")
+    );
+    println!("workloads: {}", catalog::names().join(", "));
+    Ok(())
+}

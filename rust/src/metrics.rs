@@ -1,0 +1,226 @@
+//! Serving metrics: TTFT/TPOT distributions, SLO attainment, and the
+//! max-sustainable-rate search the paper's headline numbers come from.
+
+use crate::request::RequestRecord;
+use crate::util::stats;
+
+/// Aggregated metrics over one run (one trace × one system × one rate).
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    pub n_requests: usize,
+    pub n_finished: usize,
+    pub n_failed: usize,
+    /// Fraction of all requests meeting both SLOs (failed count against).
+    pub slo_attainment: f64,
+    pub ttft_attainment: f64,
+    pub tpot_attainment: f64,
+    pub p50_ttft: f64,
+    pub p90_ttft: f64,
+    pub p99_ttft: f64,
+    pub p50_tpot: f64,
+    pub p90_tpot: f64,
+    pub p99_tpot: f64,
+    /// Output tokens per second of simulated/wall time.
+    pub token_throughput: f64,
+    /// Goodput: output tokens of SLO-meeting requests per second.
+    pub goodput_tokens: f64,
+}
+
+impl SloReport {
+    pub fn from_records(
+        records: &[RequestRecord],
+        ttft_slo: f64,
+        tpot_slo: f64,
+        span_seconds: f64,
+    ) -> SloReport {
+        let n = records.len();
+        let mut ttfts = Vec::new();
+        let mut tpots = Vec::new();
+        let mut ok = 0usize;
+        let mut ttft_ok = 0usize;
+        let mut tpot_ok = 0usize;
+        let mut finished = 0usize;
+        let mut failed = 0usize;
+        let mut tokens = 0u64;
+        let mut good_tokens = 0u64;
+        for r in records {
+            if r.finished() {
+                finished += 1;
+                tokens += r.token_times.len() as u64;
+                let (a, b) = (r.ttft().unwrap(), r.tpot().unwrap());
+                ttfts.push(a);
+                tpots.push(b);
+                if a <= ttft_slo {
+                    ttft_ok += 1;
+                }
+                if b <= tpot_slo {
+                    tpot_ok += 1;
+                }
+                if a <= ttft_slo && b <= tpot_slo {
+                    ok += 1;
+                    good_tokens += r.token_times.len() as u64;
+                }
+            } else {
+                failed += 1;
+            }
+        }
+        let span = span_seconds.max(1e-9);
+        SloReport {
+            n_requests: n,
+            n_finished: finished,
+            n_failed: failed,
+            slo_attainment: ok as f64 / n.max(1) as f64,
+            ttft_attainment: ttft_ok as f64 / n.max(1) as f64,
+            tpot_attainment: tpot_ok as f64 / n.max(1) as f64,
+            p50_ttft: stats::percentile(&ttfts, 50.0),
+            p90_ttft: stats::percentile(&ttfts, 90.0),
+            p99_ttft: stats::percentile(&ttfts, 99.0),
+            p50_tpot: stats::percentile(&tpots, 50.0),
+            p90_tpot: stats::percentile(&tpots, 90.0),
+            p99_tpot: stats::percentile(&tpots, 99.0),
+            token_throughput: tokens as f64 / span,
+            goodput_tokens: good_tokens as f64 / span,
+        }
+    }
+
+    /// The paper's success criterion: ≥90% of requests meet both SLOs.
+    pub fn meets_target(&self, target: f64) -> bool {
+        self.slo_attainment >= target
+    }
+}
+
+/// Find the maximum request rate at which `eval(rate).slo_attainment >=
+/// target`, by doubling then bisection — the "maximum sustainable request
+/// rate" reported across Fig. 7/8.
+pub fn max_sustainable_rate(
+    mut eval: impl FnMut(f64) -> SloReport,
+    base_rate: f64,
+    target: f64,
+    tolerance: f64,
+) -> f64 {
+    let mut lo = 0.0f64;
+    let mut hi = base_rate.max(1e-3);
+    // Grow until failure (cap the doubling to avoid infinite loops).
+    let mut grew = 0;
+    while eval(hi).meets_target(target) {
+        lo = hi;
+        hi *= 2.0;
+        grew += 1;
+        if grew > 16 {
+            return lo; // absurdly high — report what we proved
+        }
+    }
+    if lo == 0.0 {
+        // Even the base rate fails; search below it.
+        lo = 0.0;
+    }
+    // Bisect [lo, hi].
+    while hi - lo > tolerance.max(1e-6) * hi {
+        let mid = 0.5 * (lo + hi);
+        if eval(mid).meets_target(target) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::{Request, RequestRecord, RequestState};
+
+    fn rec(arrival: f64, times: &[f64]) -> RequestRecord {
+        let req = Request::new(0, arrival, 10, times.len().max(1) as u32);
+        let mut r = RequestRecord::new(&req);
+        if !times.is_empty() {
+            r.first_token = Some(times[0]);
+            r.token_times = times.to_vec();
+            r.state = RequestState::Finished;
+        } else {
+            r.state = RequestState::Failed;
+        }
+        r
+    }
+
+    #[test]
+    fn attainment_counts_failures_against() {
+        let records = vec![
+            rec(0.0, &[0.5, 0.6, 0.7]), // ttft .5 tpot .1
+            rec(0.0, &[5.0, 5.1]),      // ttft 5 violates
+            rec(0.0, &[]),              // failed
+        ];
+        let rep = SloReport::from_records(&records, 1.0, 0.2, 10.0);
+        assert_eq!(rep.n_failed, 1);
+        assert!((rep.slo_attainment - 1.0 / 3.0).abs() < 1e-12);
+        assert!((rep.ttft_attainment - 1.0 / 3.0).abs() < 1e-12);
+        assert!((rep.tpot_attainment - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_and_goodput() {
+        let records = vec![rec(0.0, &[0.5, 0.6]), rec(0.0, &[9.0, 9.1])];
+        let rep = SloReport::from_records(&records, 1.0, 0.2, 10.0);
+        assert!((rep.token_throughput - 0.4).abs() < 1e-12); // 4 tokens/10s
+        assert!((rep.goodput_tokens - 0.2).abs() < 1e-12); // only first req
+    }
+
+    #[test]
+    fn percentiles_computed() {
+        let records: Vec<_> = (0..100)
+            .map(|i| rec(0.0, &[i as f64 / 100.0, i as f64 / 100.0 + 0.01]))
+            .collect();
+        let rep = SloReport::from_records(&records, 10.0, 10.0, 1.0);
+        assert!(rep.p90_ttft > rep.p50_ttft);
+        assert!(rep.p99_ttft > rep.p90_ttft);
+    }
+
+    #[test]
+    fn max_rate_finds_threshold() {
+        // Synthetic system: attainment = 1 while rate <= 7, else 0.
+        let eval = |rate: f64| {
+            let ok = rate <= 7.0;
+            SloReport {
+                n_requests: 1,
+                n_finished: 1,
+                n_failed: 0,
+                slo_attainment: if ok { 1.0 } else { 0.0 },
+                ttft_attainment: 1.0,
+                tpot_attainment: 1.0,
+                p50_ttft: 0.0,
+                p90_ttft: 0.0,
+                p99_ttft: 0.0,
+                p50_tpot: 0.0,
+                p90_tpot: 0.0,
+                p99_tpot: 0.0,
+                token_throughput: 0.0,
+                goodput_tokens: 0.0,
+            }
+        };
+        let r = max_sustainable_rate(eval, 1.0, 0.9, 0.01);
+        assert!((r - 7.0).abs() < 0.2, "r={r}");
+    }
+
+    #[test]
+    fn max_rate_zero_when_base_fails() {
+        let eval = |_rate: f64| SloReport {
+            n_requests: 1,
+            n_finished: 0,
+            n_failed: 1,
+            slo_attainment: 0.0,
+            ttft_attainment: 0.0,
+            tpot_attainment: 0.0,
+            p50_ttft: f64::NAN,
+            p90_ttft: f64::NAN,
+            p99_ttft: f64::NAN,
+            p50_tpot: f64::NAN,
+            p90_tpot: f64::NAN,
+            p99_tpot: f64::NAN,
+            token_throughput: 0.0,
+            goodput_tokens: 0.0,
+        };
+        let r = max_sustainable_rate(eval, 1.0, 0.9, 0.01);
+        assert!(r < 0.05, "r={r}");
+    }
+}

@@ -1,0 +1,278 @@
+//! Host-side KV cache state for one decode engine: B slots of [T, H, Dh]
+//! per layer, plus per-slot token/length bookkeeping.
+//!
+//! Slot lifecycle: `insert_prefill` scatters a prefill's `[L, S, H, Dh]`
+//! KV slab into the slot (this memcpy IS the "KV migration" of the
+//! disaggregated architecture when source ≠ target engine), `advance`
+//! applies a decode step's outputs, `release` frees the slot.
+
+/// KV + token state for a fixed-shape decode executable.
+#[derive(Debug, Clone)]
+pub struct DecodeBatchState {
+    l: usize,
+    b: usize,
+    t: usize,
+    h: usize,
+    d: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    tokens: Vec<i32>,
+    cache_len: Vec<i32>,
+    active: Vec<bool>,
+}
+
+impl DecodeBatchState {
+    pub fn new(l: usize, b: usize, t: usize, h: usize, d: usize) -> Self {
+        let n = l * b * t * h * d;
+        DecodeBatchState {
+            l,
+            b,
+            t,
+            h,
+            d,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            tokens: vec![0; b],
+            cache_len: vec![0; b],
+            active: vec![false; b],
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    pub fn capacity_per_slot(&self) -> usize {
+        self.t
+    }
+
+    pub fn k(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v(&self) -> &[f32] {
+        &self.v
+    }
+
+    pub fn k_mut(&mut self) -> &mut [f32] {
+        &mut self.k
+    }
+
+    pub fn v_mut(&mut self) -> &mut [f32] {
+        &mut self.v
+    }
+
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    pub fn cache_lens(&self) -> &[i32] {
+        &self.cache_len
+    }
+
+    pub fn is_active(&self, slot: usize) -> bool {
+        self.active[slot]
+    }
+
+    pub fn free_slot(&self) -> Option<usize> {
+        self.active.iter().position(|a| !a)
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|a| **a).count()
+    }
+
+    /// Total KV tokens cached across active slots (decode-load metric).
+    pub fn total_cached_tokens(&self) -> u64 {
+        self.cache_len.iter().map(|&c| c as u64).sum()
+    }
+
+    /// Slot length in tokens (prompt + generated so far).
+    pub fn slot_len(&self, slot: usize) -> usize {
+        self.cache_len[slot] as usize
+    }
+
+    /// Current last token of a slot.
+    pub fn slot_token(&self, slot: usize) -> i32 {
+        self.tokens[slot]
+    }
+
+    /// Scatter a prefill's KV slab `[L, S(bucket), H, Dh]` (first
+    /// `prompt_len` positions valid) into `slot`, arming it for decode.
+    pub fn insert_prefill(
+        &mut self,
+        slot: usize,
+        prompt_len: usize,
+        k: &[f32],
+        v: &[f32],
+        first_token: i32,
+        bucket: usize,
+    ) {
+        assert!(slot < self.b, "slot out of range");
+        assert!(prompt_len <= self.t, "prompt exceeds KV capacity");
+        assert_eq!(k.len(), self.l * bucket * self.h * self.d, "bad k slab");
+        assert_eq!(v.len(), k.len());
+        let row = self.h * self.d; // one position's K (or V) for one layer
+        for layer in 0..self.l {
+            let src_base = layer * bucket * row;
+            let dst_base = (layer * self.b + slot) * self.t * row;
+            let n = prompt_len * row;
+            self.k[dst_base..dst_base + n]
+                .copy_from_slice(&k[src_base..src_base + n]);
+            self.v[dst_base..dst_base + n]
+                .copy_from_slice(&v[src_base..src_base + n]);
+        }
+        self.tokens[slot] = first_token;
+        self.cache_len[slot] = prompt_len as i32;
+        self.active[slot] = true;
+    }
+
+    /// Scatter a decode step's new K/V rows (`[L, B, H, Dh]` each) into
+    /// every slot at its current `cache_len` position — the host-side
+    /// half of the rows-only decode output (runtime perf optimization;
+    /// matches the in-graph `at[i, b, pos].set(...)` semantics exactly,
+    /// including idle slots writing harmlessly at position 0).
+    pub fn scatter_rows(&mut self, k_rows: &[f32], v_rows: &[f32]) {
+        let row = self.h * self.d;
+        assert_eq!(k_rows.len(), self.l * self.b * row, "bad k_rows");
+        assert_eq!(v_rows.len(), k_rows.len());
+        for layer in 0..self.l {
+            for slot in 0..self.b {
+                let pos = self.cache_len[slot] as usize;
+                debug_assert!(pos < self.t, "KV capacity overflow");
+                let src = (layer * self.b + slot) * row;
+                let dst = (layer * self.b + slot) * self.t * row + pos * row;
+                self.k[dst..dst + row].copy_from_slice(&k_rows[src..src + row]);
+                self.v[dst..dst + row].copy_from_slice(&v_rows[src..src + row]);
+            }
+        }
+    }
+
+    /// Apply a decode step's sampled tokens: active slots grow by one.
+    /// (`scatter_rows` placed the new K/V at position `cache_len` first.)
+    pub fn advance(&mut self, next_tokens: &[i32]) {
+        assert_eq!(next_tokens.len(), self.b);
+        for slot in 0..self.b {
+            if self.active[slot] {
+                self.tokens[slot] = next_tokens[slot];
+                self.cache_len[slot] += 1;
+            }
+        }
+    }
+
+    /// Free a slot (request finished or migrated away).
+    pub fn release(&mut self, slot: usize) {
+        self.active[slot] = false;
+        self.cache_len[slot] = 0;
+        self.tokens[slot] = 0;
+    }
+
+    /// Extract a slot's KV as a compact `[L, len, H, Dh]` slab — the
+    /// outbound half of a KV migration between engines.
+    pub fn extract(&self, slot: usize) -> (Vec<f32>, Vec<f32>, usize) {
+        let len = self.cache_len[slot] as usize;
+        let row = self.h * self.d;
+        let mut k = vec![0.0f32; self.l * len * row];
+        let mut v = vec![0.0f32; self.l * len * row];
+        for layer in 0..self.l {
+            let src_base = (layer * self.b + slot) * self.t * row;
+            let dst_base = layer * len * row;
+            let n = len * row;
+            k[dst_base..dst_base + n].copy_from_slice(&self.k[src_base..src_base + n]);
+            v[dst_base..dst_base + n].copy_from_slice(&self.v[src_base..src_base + n]);
+        }
+        (k, v, len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> DecodeBatchState {
+        DecodeBatchState::new(2, 3, 8, 2, 4)
+    }
+
+    #[test]
+    fn fresh_state_inactive() {
+        let s = state();
+        assert_eq!(s.active_count(), 0);
+        assert_eq!(s.free_slot(), Some(0));
+        assert_eq!(s.total_cached_tokens(), 0);
+    }
+
+    #[test]
+    fn insert_scatters_per_layer() {
+        let mut s = state();
+        let bucket = 4;
+        let row = 2 * 4; // h*d
+        let n = 2 * bucket * row;
+        let k: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..n).map(|i| (i as f32) * 10.0).collect();
+        s.insert_prefill(1, 3, &k, &v, 42, bucket);
+        assert!(s.is_active(1));
+        assert_eq!(s.slot_len(1), 3);
+        assert_eq!(s.slot_token(1), 42);
+        // Layer 0, slot 1, position 0 must equal k[0..row].
+        let dst = (0 * 3 + 1) * 8 * row;
+        assert_eq!(&s.k()[dst..dst + row], &k[0..row]);
+        // Layer 1, slot 1, position 2.
+        let dst = (1 * 3 + 1) * 8 * row + 2 * row;
+        let src = 1 * bucket * row + 2 * row;
+        assert_eq!(&s.k()[dst..dst + row], &k[src..src + row]);
+        assert_eq!(&s.v()[dst..dst + row], &v[src..src + row]);
+    }
+
+    #[test]
+    fn advance_only_touches_active() {
+        let mut s = state();
+        let bucket = 4;
+        let n = 2 * bucket * 8;
+        s.insert_prefill(0, 2, &vec![0.0; n], &vec![0.0; n], 7, bucket);
+        s.advance(&[11, 22, 33]);
+        assert_eq!(s.slot_token(0), 11);
+        assert_eq!(s.slot_len(0), 3);
+        assert_eq!(s.slot_token(1), 0, "inactive slot untouched");
+        assert_eq!(s.slot_len(1), 0);
+    }
+
+    #[test]
+    fn release_frees_slot() {
+        let mut s = state();
+        let n = 2 * 4 * 8;
+        s.insert_prefill(0, 2, &vec![0.0; n], &vec![0.0; n], 7, 4);
+        assert_eq!(s.free_slot(), Some(1));
+        s.release(0);
+        assert_eq!(s.free_slot(), Some(0));
+        assert_eq!(s.total_cached_tokens(), 0);
+    }
+
+    #[test]
+    fn extract_roundtrips_insert() {
+        let mut s = state();
+        let bucket = 4;
+        let row = 8;
+        let n = 2 * bucket * row;
+        let k: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+        let v: Vec<f32> = (0..n).map(|i| -(i as f32)).collect();
+        s.insert_prefill(2, 3, &k, &v, 5, bucket);
+        let (ke, ve, len) = s.extract(2);
+        assert_eq!(len, 3);
+        // Extracted slab is [L, 3, H, D]; compare with source prefix
+        // layer by layer.
+        for layer in 0..2 {
+            let src = layer * bucket * row;
+            let dst = layer * 3 * row;
+            assert_eq!(&ke[dst..dst + 3 * row], &k[src..src + 3 * row]);
+            assert_eq!(&ve[dst..dst + 3 * row], &v[src..src + 3 * row]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "prompt exceeds KV capacity")]
+    fn insert_rejects_overlong_prompt() {
+        let mut s = state();
+        let n = 2 * 16 * 8;
+        s.insert_prefill(0, 16, &vec![0.0; n], &vec![0.0; n], 1, 16);
+    }
+}

@@ -1,0 +1,371 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them on the request path — python is never involved.
+//!
+//! Artifact contract (see aot.py):
+//! * `model_config.json` — hyper-params, serving shapes, artifact index.
+//! * `weights.bin` + `weights_manifest.json` — f32-LE parameters in
+//!   `param_spec` order; entry computations take them first.
+//! * `prefill_s{S}.hlo.txt` — `(params…, tokens[1,S] i32, valid_len i32)
+//!   → (first_token[1] i32, k[L,S,H,Dh] f32, v alike)`.
+//! * `decode_b{B}.hlo.txt` — `(params…, tokens[B] i32, k[L,B,T,H,Dh],
+//!   v alike, cache_len[B] i32) → (next[B] i32, k', v')`.
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod kvstate;
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::Json;
+pub use kvstate::DecodeBatchState;
+
+/// Model hyper-parameters + serving shapes loaded from model_config.json.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_batch: usize,
+    pub max_seq_len: usize,
+    pub kv_bytes_per_token: u64,
+    pub n_params: u64,
+    prefill_files: Vec<(usize, String)>,
+    decode_file: String,
+}
+
+impl ModelInfo {
+    pub fn load(dir: &Path) -> Result<ModelInfo> {
+        let path = dir.join("model_config.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let buckets: Vec<usize> = v
+            .get("prefill_buckets")
+            .as_arr()
+            .ok_or_else(|| anyhow!("missing prefill_buckets"))?
+            .iter()
+            .map(|x| x.as_u64().unwrap_or(0) as usize)
+            .collect();
+        let arts = v.get("artifacts");
+        let mut prefill_files: Vec<(usize, String)> = Vec::new();
+        if let Some(m) = arts.get("prefill").as_obj() {
+            for (k, f) in m {
+                prefill_files.push((
+                    k.parse::<usize>().context("bucket key")?,
+                    f.as_str().unwrap_or_default().to_string(),
+                ));
+            }
+        }
+        prefill_files.sort();
+        Ok(ModelInfo {
+            name: v.req_str("name")?.to_string(),
+            vocab_size: v.req_u64("vocab_size")? as usize,
+            d_model: v.req_u64("d_model")? as usize,
+            n_layers: v.req_u64("n_layers")? as usize,
+            n_heads: v.req_u64("n_heads")? as usize,
+            head_dim: v.req_u64("head_dim")? as usize,
+            prefill_buckets: buckets,
+            decode_batch: v.req_u64("decode_batch")? as usize,
+            max_seq_len: v.req_u64("max_seq_len")? as usize,
+            kv_bytes_per_token: v.req_u64("kv_bytes_per_token")?,
+            n_params: v.req_u64("n_params")?,
+            prefill_files,
+            decode_file: arts
+                .req_str("decode")
+                .map_err(|e| anyhow!("{e}"))?
+                .to_string(),
+        })
+    }
+}
+
+/// Result of a prefill execution: first output token plus the per-layer
+/// KV slabs `[L, S, H, Dh]` (only the first `valid_len` positions matter).
+pub struct PrefillOutput {
+    pub first_token: i32,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub bucket: usize,
+}
+
+/// A loaded model: compiled executables + device-resident weights.
+///
+/// Perf note (EXPERIMENTS.md §Perf-L2): weights are uploaded to the PJRT
+/// device ONCE at load and passed as buffers via `execute_b`, instead of
+/// re-marshalled as literals on every call; the decode artifact returns
+/// only the per-layer new K/V rows, which the host scatters into its
+/// batch state — together cutting per-step host↔device traffic from
+/// ~(weights + 2·full-KV) to ~(2·full-KV up + 2·rows down).
+pub struct ModelRuntime {
+    pub info: ModelInfo,
+    client: xla::PjRtClient,
+    weights: Vec<xla::PjRtBuffer>,
+    prefill_exes: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    decode_exe: xla::PjRtLoadedExecutable,
+}
+
+// The xla crate wraps raw PJRT pointers without Send markers; the CPU
+// client is thread-safe for our use (each ModelRuntime is owned by one
+// engine thread; the client itself is internally synchronized).
+unsafe impl Send for ModelRuntime {}
+
+impl ModelRuntime {
+    /// Load artifacts, upload weights, compile all executables.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ModelRuntime> {
+        let dir = dir.as_ref();
+        let info = ModelInfo::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+
+        let weights = load_weights(dir, &client)?;
+
+        let mut prefill_exes = Vec::new();
+        for (bucket, file) in &info.prefill_files {
+            let exe = compile_hlo(&client, &dir.join(file))?;
+            prefill_exes.push((*bucket, exe));
+        }
+        if prefill_exes.is_empty() {
+            bail!("no prefill artifacts in {}", dir.display());
+        }
+        let decode_exe = compile_hlo(&client, &dir.join(&info.decode_file))?;
+
+        Ok(ModelRuntime {
+            info,
+            client,
+            weights,
+            prefill_exes,
+            decode_exe,
+        })
+    }
+
+    /// Smallest bucket that fits `len` tokens.
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.prefill_exes
+            .iter()
+            .map(|&(b, _)| b)
+            .find(|&b| b >= len)
+    }
+
+    /// Run the prefill phase for a prompt; returns the first sampled
+    /// token and the KV slabs for handoff into a [`DecodeBatchState`].
+    pub fn prefill(&self, prompt: &[i32]) -> Result<PrefillOutput> {
+        let len = prompt.len();
+        let bucket = self
+            .bucket_for(len)
+            .ok_or_else(|| anyhow!("prompt of {len} tokens exceeds largest bucket"))?;
+        let exe = &self
+            .prefill_exes
+            .iter()
+            .find(|(b, _)| *b == bucket)
+            .unwrap()
+            .1;
+
+        let mut padded = vec![0i32; bucket];
+        padded[..len].copy_from_slice(prompt);
+        let tokens = self
+            .client
+            .buffer_from_host_buffer(&padded, &[1, bucket], None)?;
+        let vlen = self
+            .client
+            .buffer_from_host_buffer(&[len as i32], &[], None)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tokens);
+        args.push(&vlen);
+
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+        let (first, k, v) = result.to_tuple3()?;
+        Ok(PrefillOutput {
+            first_token: first.to_vec::<i32>()?[0],
+            k: k.to_vec::<f32>()?,
+            v: v.to_vec::<f32>()?,
+            bucket,
+        })
+    }
+
+    /// One continuous-batching decode iteration over the batch state.
+    /// Mutates `state` in place (KV row scatter + next tokens + lengths).
+    pub fn decode_step(&self, state: &mut DecodeBatchState) -> Result<Vec<i32>> {
+        let b = self.info.decode_batch;
+        let (l, t, h, d) = (
+            self.info.n_layers,
+            self.info.max_seq_len,
+            self.info.n_heads,
+            self.info.head_dim,
+        );
+        let tokens = self
+            .client
+            .buffer_from_host_buffer(state.tokens(), &[b], None)?;
+        let clen = self
+            .client
+            .buffer_from_host_buffer(state.cache_lens(), &[b], None)?;
+        let k = self
+            .client
+            .buffer_from_host_buffer(state.k(), &[l, b, t, h, d], None)?;
+        let v = self
+            .client
+            .buffer_from_host_buffer(state.v(), &[l, b, t, h, d], None)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tokens);
+        args.push(&k);
+        args.push(&v);
+        args.push(&clen);
+
+        // Output: (next[B], k_rows[L,B,H,Dh], v_rows[L,B,H,Dh]) — the new
+        // rows only; the full updated cache never crosses the device
+        // boundary (EXPERIMENTS.md §Perf-L2).
+        let result = self.decode_exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (next, k_rows, v_rows) = result.to_tuple3()?;
+        let next = next.to_vec::<i32>()?;
+        let k_rows = k_rows.to_vec::<f32>()?;
+        let v_rows = v_rows.to_vec::<f32>()?;
+        state.scatter_rows(&k_rows, &v_rows);
+        state.advance(&next);
+        Ok(next)
+    }
+
+    /// Fresh decode batch state sized for this model.
+    pub fn new_decode_state(&self) -> DecodeBatchState {
+        DecodeBatchState::new(
+            self.info.n_layers,
+            self.info.decode_batch,
+            self.info.max_seq_len,
+            self.info.n_heads,
+            self.info.head_dim,
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+}
+
+/// Load weights.bin into per-tensor device buffers following the manifest.
+fn load_weights(dir: &Path, client: &xla::PjRtClient) -> Result<Vec<xla::PjRtBuffer>> {
+    let man_path = dir.join("weights_manifest.json");
+    let man = Json::parse(
+        &std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {}", man_path.display()))?,
+    )
+    .map_err(|e| anyhow!("{}: {e}", man_path.display()))?;
+    if man.req_str("dtype").map_err(|e| anyhow!("{e}"))? != "f32le" {
+        bail!("unsupported weights dtype");
+    }
+    let blob = std::fs::read(dir.join("weights.bin"))?;
+    let total = man.req_u64("total_bytes").map_err(|e| anyhow!("{e}"))? as usize;
+    if blob.len() != total {
+        bail!("weights.bin size {} != manifest {}", blob.len(), total);
+    }
+    let mut out = Vec::new();
+    for t in man
+        .get("tensors")
+        .as_arr()
+        .ok_or_else(|| anyhow!("manifest: missing tensors"))?
+    {
+        let off = t.req_u64("offset_bytes").map_err(|e| anyhow!("{e}"))? as usize;
+        let size = t.req_u64("size_bytes").map_err(|e| anyhow!("{e}"))? as usize;
+        let dims: Vec<usize> = t
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("tensor without shape"))?
+            .iter()
+            .map(|x| x.as_u64().unwrap_or(0) as usize)
+            .collect();
+        let n = size / 4;
+        let mut vals = vec![0f32; n];
+        for (i, chunk) in blob[off..off + size].chunks_exact(4).enumerate() {
+            vals[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        // Upload once; all executions borrow the device-resident buffer.
+        out.push(client.buffer_from_host_buffer(&vals, &dims, None)?);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Calibration: time the real executables, fit the simulator cost model.
+// ---------------------------------------------------------------------------
+
+/// Profile the loaded model's prefill/decode latencies and report a cost-
+/// model fit (the `arrow calibrate` subcommand; EXPERIMENTS.md §Calib).
+pub fn calibrate(dir: &str) -> Result<String> {
+    use std::fmt::Write;
+    let rt = ModelRuntime::load(PathBuf::from(dir))?;
+    let mut s = String::new();
+    writeln!(
+        s,
+        "calibrating '{}' on {} ({} params)",
+        rt.info.name,
+        rt.platform(),
+        rt.info.n_params
+    )?;
+
+    // Prefill: one run per bucket (padded => cost is bucket-shaped).
+    let mut prefill_samples: Vec<(u32, f64)> = Vec::new();
+    for &bucket in rt.info.prefill_buckets.clone().iter() {
+        let prompt: Vec<i32> = (0..bucket as i32).map(|i| (i * 7 + 3) % 101 + 1).collect();
+        // Warm up compile caches.
+        rt.prefill(&prompt)?;
+        let reps = 3;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            rt.prefill(&prompt)?;
+        }
+        let dt = t0.elapsed().as_secs_f64() / reps as f64;
+        writeln!(s, "  prefill s={bucket:<5} {:.2} ms", dt * 1e3)?;
+        prefill_samples.push((bucket as u32, dt));
+    }
+
+    // Decode: vary active slots (batch token count).
+    let mut decode_samples: Vec<(u64, f64)> = Vec::new();
+    for active in 1..=rt.info.decode_batch {
+        let mut st = rt.new_decode_state();
+        let prompt: Vec<i32> = (1..40).collect();
+        let pre = rt.prefill(&prompt)?;
+        for slot in 0..active {
+            st.insert_prefill(slot, prompt.len(), &pre.k, &pre.v, pre.first_token, pre.bucket);
+        }
+        rt.decode_step(&mut st)?; // warmup
+        let reps = 5;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            rt.decode_step(&mut st)?;
+        }
+        let dt = t0.elapsed().as_secs_f64() / reps as f64;
+        let toks = st.total_cached_tokens();
+        writeln!(s, "  decode batch={active} tokens={toks:<6} {:.2} ms", dt * 1e3)?;
+        decode_samples.push((toks, dt));
+    }
+
+    let mut model = crate::costmodel::CostModel::h800_llama8b();
+    model.calibrate_from_samples(&prefill_samples, &decode_samples);
+    writeln!(
+        s,
+        "fitted: iter_overhead={:.3}ms prefill_per_token={:.3}us prefill_quad={:.3e} decode_per_token={:.3}ns",
+        model.iter_overhead * 1e3,
+        model.prefill_per_token * 1e6,
+        model.prefill_quad,
+        model.decode_per_token * 1e9,
+    )?;
+    Ok(s)
+}

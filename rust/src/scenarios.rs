@@ -1,0 +1,211 @@
+//! Evaluation scenario builders: one function per system in §7.1,
+//! producing a ready-to-run simulator [`Cluster`] for a GPU budget.
+//!
+//! | system            | topology                  | quirks encoded            |
+//! |-------------------|---------------------------|---------------------------|
+//! | Arrow             | n × TP=1 stateless        | elastic pools, SLO-aware  |
+//! | vLLM (colocated)  | 1 × TP=n                  | chunked prefill interfere |
+//! | vLLM-disaggregated| 1P + 1D, TP=n/2           | transfer buffer cap+fail  |
+//! | DistServe-like    | n/2 P + n/2 D, TP=1       | 0.55× engine efficiency,  |
+//! |                   |                           | low KV cap (long-ctx OOM) |
+//! | Minimal Load      | n/2 P + n/2 D, TP=1       | ablation arm (§7.3)       |
+//! | Round Robin       | n/2 P + n/2 D, TP=1       | ablation arm (§7.3)       |
+
+use crate::baselines::{ColocatedPolicy, PickRule, StaticDisaggPolicy};
+use crate::coordinator::arrow::{ArrowConfig, ArrowPolicy};
+use crate::costmodel::CostModel;
+use crate::engine::SimInstance;
+use crate::request::InstanceId;
+use crate::sim::{Cluster, SimConfig};
+
+/// Systems evaluated in Fig. 7 / Fig. 8.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum System {
+    Arrow,
+    VllmColocated,
+    VllmDisaggregated,
+    DistServe,
+    MinimalLoad,
+    RoundRobin,
+}
+
+impl System {
+    pub fn label(self) -> &'static str {
+        match self {
+            System::Arrow => "arrow",
+            System::VllmColocated => "vllm",
+            System::VllmDisaggregated => "vllm-disagg",
+            System::DistServe => "distserve",
+            System::MinimalLoad => "minimal-load",
+            System::RoundRobin => "round-robin",
+        }
+    }
+
+    pub fn all() -> [System; 6] {
+        [
+            System::Arrow,
+            System::VllmColocated,
+            System::VllmDisaggregated,
+            System::DistServe,
+            System::MinimalLoad,
+            System::RoundRobin,
+        ]
+    }
+
+    pub fn by_label(s: &str) -> Option<System> {
+        System::all().into_iter().find(|x| x.label() == s)
+    }
+}
+
+/// Build the simulation cluster for `system` with `n_gpus` GPUs under the
+/// given SLO (SLOs parameterize Arrow's scheduler and the Max-Running-
+/// Tokens profiling).
+pub fn build(
+    system: System,
+    n_gpus: usize,
+    base: &CostModel,
+    ttft_slo: f64,
+    tpot_slo: f64,
+    record_timeline: bool,
+) -> Cluster {
+    assert!(n_gpus >= 2, "scenarios need >= 2 GPUs");
+    let cfg = SimConfig {
+        record_timeline,
+        // 5 minutes of drain after the last arrival: ample for any run
+        // that can still meet a 90% SLO target, and it bounds the cost of
+        // the (many) deliberately-oversaturated sweep points.
+        drain_timeout: 300.0,
+        ..Default::default()
+    };
+    match system {
+        System::Arrow => {
+            let policy = ArrowPolicy::new(ArrowConfig::new(ttft_slo, tpot_slo, n_gpus), n_gpus);
+            let instances: Vec<SimInstance> = (0..n_gpus)
+                .map(|i| {
+                    let mut inst = SimInstance::new(InstanceId(i), base.clone());
+                    // SLO-aware mixed-iteration chunk cap: protects TPOT
+                    // of decodes co-resident with prefill on P→D / D→P
+                    // instances (engine::instance docs).
+                    inst.iter_time_budget = Some(0.8 * tpot_slo);
+                    inst
+                })
+                .collect();
+            Cluster::new(instances, Box::new(policy), cfg)
+        }
+        System::VllmColocated => {
+            // TP = n_gpus, one fat engine; high TP efficiency on NVLink.
+            // vLLM's chunked prefill uses a fixed token budget with
+            // decode priority — TPOT stays low, TTFT queues under load
+            // (exactly the behaviour Fig. 7's first row shows).
+            let cost = base.with_tensor_parallel(n_gpus, 0.9);
+            Cluster::homogeneous(1, cost, Box::new(ColocatedPolicy::new(1)), cfg)
+        }
+        System::VllmDisaggregated => {
+            // vLLM v0.7.3 experimental PD: exactly 1 prefill + 1 decode
+            // instance (TP = n/2 each), KV transfer buffer workaround:
+            // bounded buffer + reduced batch size (§7.1 footnotes).
+            let cost = base.with_tensor_parallel(n_gpus / 2, 0.88);
+            let mut instances: Vec<SimInstance> = (0..2)
+                .map(|i| SimInstance::new(InstanceId(i), cost.clone()))
+                .collect();
+            for inst in &mut instances {
+                inst.cost.max_batch = 32; // "limiting the batch size"
+            }
+            let quirks = SimConfig {
+                record_timeline,
+                drain_timeout: 300.0,
+                transfer_buffer_tokens: Some(120_000), // bounded KV buffer
+                transfer_fail_timeout: Some(120.0),
+                ..Default::default()
+            };
+            let policy =
+                StaticDisaggPolicy::new("vllm-disagg", vec![0], vec![1], PickRule::MinimalLoad);
+            Cluster::new(instances, Box::new(policy), quirks)
+        }
+        System::DistServe => {
+            // Unmaintained engine: markedly lower per-instance efficiency
+            // and a smaller usable KV pool (OOM on long context, §7.1).
+            let mut cost = base.with_efficiency(0.55);
+            cost.max_kv_tokens = 90_000;
+            let half = n_gpus / 2;
+            let policy = StaticDisaggPolicy::new(
+                "distserve",
+                (0..half).collect(),
+                (half..n_gpus).collect(),
+                PickRule::MinimalLoad,
+            );
+            Cluster::homogeneous(n_gpus, cost, Box::new(policy), cfg)
+        }
+        System::MinimalLoad => {
+            let half = n_gpus / 2;
+            let policy = StaticDisaggPolicy::new(
+                "minimal-load",
+                (0..half).collect(),
+                (half..n_gpus).collect(),
+                PickRule::MinimalLoad,
+            );
+            Cluster::homogeneous(n_gpus, base.clone(), Box::new(policy), cfg)
+        }
+        System::RoundRobin => {
+            let half = n_gpus / 2;
+            let policy = StaticDisaggPolicy::new(
+                "round-robin",
+                (0..half).collect(),
+                (half..n_gpus).collect(),
+                PickRule::RoundRobin,
+            );
+            Cluster::homogeneous(n_gpus, base.clone(), Box::new(policy), cfg)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::SloReport;
+    use crate::trace::synthetic::smoke;
+
+    fn run(system: System) -> SloReport {
+        let trace = smoke(150, 2).generate(3);
+        let cl = build(system, 8, &CostModel::h800_llama8b(), 2.0, 0.1, false);
+        let res = cl.run(&trace);
+        SloReport::from_records(&res.records, 2.0, 0.1, trace.duration())
+    }
+
+    #[test]
+    fn all_systems_complete_light_load() {
+        for sys in System::all() {
+            let rep = run(sys);
+            assert!(
+                rep.n_finished + rep.n_failed == rep.n_requests,
+                "{}: accounting",
+                sys.label()
+            );
+            assert!(
+                rep.n_finished as f64 >= 0.95 * rep.n_requests as f64,
+                "{}: finished {}/{}",
+                sys.label(),
+                rep.n_finished,
+                rep.n_requests
+            );
+        }
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for sys in System::all() {
+            assert_eq!(System::by_label(sys.label()), Some(sys));
+        }
+        assert_eq!(System::by_label("nope"), None);
+    }
+
+    #[test]
+    fn arrow_flips_under_smoke_load() {
+        let trace = smoke(300, 2).generate(5);
+        let cl = build(System::Arrow, 8, &CostModel::h800_llama8b(), 2.0, 0.1, false);
+        let res = cl.run(&trace);
+        // Light smoke load may or may not flip; the counter must at least
+        // be consistent (no panic) and requests finish.
+        assert!(res.records.iter().filter(|r| r.finished()).count() > 280);
+    }
+}

@@ -1,0 +1,316 @@
+//! A real-mode stateless engine: one OS thread owning a [`ModelRuntime`]
+//! (its own PJRT client + compiled executables) and a decode batch state.
+//!
+//! The engine accepts both prefill and decode work (stateless instances,
+//! paper §5.2) and runs a continuous-batching loop: each pass drains
+//! pending commands, serves one queued prefill, then executes one decode
+//! iteration over all active slots.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::Result;
+
+use crate::runtime::{DecodeBatchState, ModelRuntime};
+
+/// Commands from the coordinator to an engine.
+pub enum EngineCmd {
+    /// Run the prefill phase of a request.
+    Prefill { req: u64, prompt: Vec<i32> },
+    /// Adopt a prefilled request for decoding (KV slab included — this is
+    /// the migration payload when the prefill ran elsewhere).
+    StartDecode {
+        req: u64,
+        prompt_len: usize,
+        first_token: i32,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        bucket: usize,
+        remaining: usize,
+    },
+    /// Synchronous prefill used by startup profiling.
+    BlockingPrefill {
+        prompt: Vec<i32>,
+        reply: mpsc::Sender<Result<i32, String>>,
+    },
+    Shutdown,
+}
+
+/// Events from engines back to the coordinator.
+pub enum EngineEvent {
+    PrefillDone {
+        req: u64,
+        engine: usize,
+        prompt_len: usize,
+        first_token: i32,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        bucket: usize,
+    },
+    DecodeDone {
+        req: u64,
+        /// All output tokens (first token included).
+        tokens: Vec<i32>,
+    },
+    Failed {
+        req: u64,
+        error: String,
+    },
+}
+
+/// Live load metrics published by the engine (lock-free reads).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineStats {
+    pub prefill_queue: usize,
+    pub active_slots: usize,
+    pub free_slots: usize,
+    pub cached_tokens: u64,
+    pub iterations: u64,
+}
+
+#[derive(Default)]
+struct SharedStats {
+    prefill_queue: AtomicUsize,
+    active_slots: AtomicUsize,
+    free_slots: AtomicUsize,
+    cached_tokens: AtomicU64,
+    iterations: AtomicU64,
+}
+
+/// Handle to a spawned engine thread.
+pub struct EngineHandle {
+    pub id: usize,
+    tx: mpsc::Sender<EngineCmd>,
+    stats: Arc<SharedStats>,
+    buckets: Vec<usize>,
+}
+
+impl EngineHandle {
+    pub fn spawn(
+        id: usize,
+        artifacts_dir: &str,
+        events: mpsc::Sender<EngineEvent>,
+    ) -> Result<EngineHandle> {
+        let rt = ModelRuntime::load(artifacts_dir)?;
+        let buckets = rt.info.prefill_buckets.clone();
+        let (tx, rx) = mpsc::channel::<EngineCmd>();
+        let stats = Arc::new(SharedStats::default());
+        let stats_thread = Arc::clone(&stats);
+        std::thread::Builder::new()
+            .name(format!("engine-{id}"))
+            .spawn(move || engine_loop(id, rt, rx, events, stats_thread))?;
+        Ok(EngineHandle {
+            id,
+            tx,
+            stats,
+            buckets,
+        })
+    }
+
+    pub fn clone_handle(&self) -> EngineHandle {
+        EngineHandle {
+            id: self.id,
+            tx: self.tx.clone(),
+            stats: Arc::clone(&self.stats),
+            buckets: self.buckets.clone(),
+        }
+    }
+
+    pub fn send(&self, cmd: EngineCmd) -> Result<(), mpsc::SendError<EngineCmd>> {
+        self.tx.send(cmd)
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            prefill_queue: self.stats.prefill_queue.load(Ordering::Relaxed),
+            active_slots: self.stats.active_slots.load(Ordering::Relaxed),
+            free_slots: self.stats.free_slots.load(Ordering::Relaxed),
+            cached_tokens: self.stats.cached_tokens.load(Ordering::Relaxed),
+            iterations: self.stats.iterations.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn buckets(&self) -> Vec<usize> {
+        self.buckets.clone()
+    }
+
+    /// Synchronous prefill (startup profiling only).
+    pub fn blocking_prefill(&self, prompt: &[i32]) -> Result<i32, String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(EngineCmd::BlockingPrefill {
+                prompt: prompt.to_vec(),
+                reply,
+            })
+            .map_err(|e| e.to_string())?;
+        rx.recv().map_err(|e| e.to_string())?
+    }
+}
+
+/// Per-slot decode bookkeeping inside the engine loop.
+struct SlotState {
+    req: u64,
+    remaining: usize,
+    tokens: Vec<i32>,
+}
+
+fn engine_loop(
+    id: usize,
+    rt: ModelRuntime,
+    rx: mpsc::Receiver<EngineCmd>,
+    events: mpsc::Sender<EngineEvent>,
+    stats: Arc<SharedStats>,
+) {
+    let mut decode = rt.new_decode_state();
+    let mut slots: Vec<Option<SlotState>> = (0..decode.batch()).map(|_| None).collect();
+    let mut prefill_q: VecDeque<(u64, Vec<i32>)> = VecDeque::new();
+    let mut pending_decode: VecDeque<EngineCmd> = VecDeque::new();
+
+    let publish = |prefill_q: &VecDeque<(u64, Vec<i32>)>,
+                   decode: &DecodeBatchState,
+                   iters: u64| {
+        stats
+            .prefill_queue
+            .store(prefill_q.len(), Ordering::Relaxed);
+        stats
+            .active_slots
+            .store(decode.active_count(), Ordering::Relaxed);
+        stats
+            .free_slots
+            .store(decode.batch() - decode.active_count(), Ordering::Relaxed);
+        stats
+            .cached_tokens
+            .store(decode.total_cached_tokens(), Ordering::Relaxed);
+        stats.iterations.store(iters, Ordering::Relaxed);
+    };
+
+    let mut iterations = 0u64;
+    publish(&prefill_q, &decode, iterations); // initial state (all free)
+    loop {
+        // 1. Drain commands without blocking (blocking only when idle).
+        let has_work = !prefill_q.is_empty()
+            || decode.active_count() > 0
+            || !pending_decode.is_empty();
+        let cmd = if has_work {
+            rx.try_recv().ok()
+        } else {
+            rx.recv().ok()
+        };
+        match cmd {
+            Some(EngineCmd::Shutdown) | None if !has_work => return,
+            Some(EngineCmd::Shutdown) => return,
+            Some(EngineCmd::Prefill { req, prompt }) => {
+                prefill_q.push_back((req, prompt));
+            }
+            Some(cmd @ EngineCmd::StartDecode { .. }) => pending_decode.push_back(cmd),
+            Some(EngineCmd::BlockingPrefill { prompt, reply }) => {
+                let r = rt
+                    .prefill(&prompt)
+                    .map(|o| o.first_token)
+                    .map_err(|e| e.to_string());
+                let _ = reply.send(r);
+            }
+            None => {}
+        }
+
+        // 2. Admit pending decode adoptions into free slots.
+        while let Some(slot) = decode.free_slot() {
+            let cmd = match pending_decode.pop_front() {
+                Some(c) => c,
+                None => break,
+            };
+            if let EngineCmd::StartDecode {
+                req,
+                prompt_len,
+                first_token,
+                k,
+                v,
+                bucket,
+                remaining,
+            } = cmd
+            {
+                if prompt_len + remaining > decode.capacity_per_slot() {
+                    let _ = events.send(EngineEvent::Failed {
+                        req,
+                        error: format!(
+                            "request needs {} tokens > slot capacity {}",
+                            prompt_len + remaining,
+                            decode.capacity_per_slot()
+                        ),
+                    });
+                    continue;
+                }
+                decode.insert_prefill(slot, prompt_len, &k, &v, first_token, bucket);
+                slots[slot] = Some(SlotState {
+                    req,
+                    remaining,
+                    tokens: vec![first_token],
+                });
+            }
+        }
+
+        // 3. One queued prefill (whole bucket — prompts are short here).
+        if let Some((req, prompt)) = prefill_q.pop_front() {
+            match rt.prefill(&prompt) {
+                Ok(out) => {
+                    let _ = events.send(EngineEvent::PrefillDone {
+                        req,
+                        engine: id,
+                        prompt_len: prompt.len(),
+                        first_token: out.first_token,
+                        k: out.k,
+                        v: out.v,
+                        bucket: out.bucket,
+                    });
+                }
+                Err(e) => {
+                    let _ = events.send(EngineEvent::Failed {
+                        req,
+                        error: e.to_string(),
+                    });
+                }
+            }
+        }
+
+        // 4. One decode iteration over all active slots.
+        if decode.active_count() > 0 {
+            match rt.decode_step(&mut decode) {
+                Ok(next) => {
+                    iterations += 1;
+                    for slot in 0..slots.len() {
+                        let finished = if let Some(st) = slots[slot].as_mut() {
+                            st.tokens.push(next[slot]);
+                            st.remaining -= 1;
+                            st.remaining == 0
+                        } else {
+                            false
+                        };
+                        if finished {
+                            let st = slots[slot].take().unwrap();
+                            decode.release(slot);
+                            let _ = events.send(EngineEvent::DecodeDone {
+                                req: st.req,
+                                tokens: st.tokens,
+                            });
+                        }
+                    }
+                }
+                Err(e) => {
+                    // Fail everything in the batch — engine-level error.
+                    for slot in 0..slots.len() {
+                        if let Some(st) = slots[slot].take() {
+                            decode.release(slot);
+                            let _ = events.send(EngineEvent::Failed {
+                                req: st.req,
+                                error: e.to_string(),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        publish(&prefill_q, &decode, iterations);
+    }
+}

@@ -1,0 +1,636 @@
+//! Deterministic discrete-event cluster simulator.
+//!
+//! Drives a set of [`SimInstance`]s through a workload trace under a
+//! pluggable global scheduling [`Policy`] (Arrow or a baseline). Virtual
+//! time + the calibrated [`CostModel`] make hour-long 8×H800 traces
+//! tractable on CPU while exercising exactly the same policy code the
+//! real-mode server runs (DESIGN.md §7).
+//!
+//! Event flow mirrors the paper's Fig. 3 pipeline:
+//! `Arrival → (q1) prefill chunks → PrefillDone/first token → decode
+//! placement → (q2) KV fetch queue → transfer (c) → (q3) decode batch →
+//! tokens → finish`.
+
+pub mod policy;
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::costmodel::CostModel;
+use crate::engine::{IterationPlan, Produced, SimInstance, Transfer, TransferFabric};
+use crate::request::{InstanceId, Request, RequestRecord, RequestState, Time};
+use crate::trace::Trace;
+
+pub use policy::Policy;
+
+/// Interval of the instance-monitor tick (paper Fig. 5 VI).
+pub const MONITOR_PERIOD: f64 = 1.0;
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum EventKind {
+    Arrival { idx: usize },
+    IterDone { inst: usize },
+    TransferDone { req: usize, from: usize, to: usize, kv: u32 },
+    FabricPoll,
+    MonitorTick,
+}
+
+#[derive(Debug, Clone)]
+struct Event {
+    time: Time,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Total order: time, then insertion sequence (determinism).
+        self.time
+            .partial_cmp(&other.time)
+            .unwrap()
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cluster configuration & snapshots
+// ---------------------------------------------------------------------------
+
+/// Per-simulation knobs beyond instance hardware.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Give up on the run this long after the last arrival (guards
+    /// against pathological policies stalling the event loop).
+    pub drain_timeout: f64,
+    /// Record per-tick instance snapshots (Fig. 4 timelines).
+    pub record_timeline: bool,
+    /// Shared KV transfer buffer cap in tokens (vLLM-disagg quirk).
+    pub transfer_buffer_tokens: Option<u64>,
+    /// Fail requests whose KV transfer waits longer than this.
+    pub transfer_fail_timeout: Option<f64>,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            drain_timeout: 3600.0,
+            record_timeline: false,
+            transfer_buffer_tokens: None,
+            transfer_fail_timeout: None,
+        }
+    }
+}
+
+/// One monitor-tick snapshot of an instance (Fig. 4 series).
+#[derive(Debug, Clone)]
+pub struct InstantSnapshot {
+    pub time: Time,
+    /// Per-instance (prefill requests, decode requests, running tokens).
+    pub per_instance: Vec<(usize, usize, u64)>,
+    /// Policy pool sizes [P, D, P→D, D→P] if the policy exposes them.
+    pub pools: Option<[usize; 4]>,
+}
+
+/// Result of a simulation run.
+#[derive(Debug)]
+pub struct SimResult {
+    pub records: Vec<RequestRecord>,
+    pub timeline: Vec<InstantSnapshot>,
+    pub sim_time: Time,
+    pub events_processed: u64,
+    pub total_iterations: u64,
+    pub total_flips: u64,
+}
+
+// ---------------------------------------------------------------------------
+// The cluster
+// ---------------------------------------------------------------------------
+
+pub struct Cluster {
+    pub now: Time,
+    instances: Vec<SimInstance>,
+    fabric: TransferFabric,
+    policy: Option<Box<dyn Policy>>,
+    records: Vec<RequestRecord>,
+    requests: Vec<Request>,
+    events: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    /// In-flight iteration plan per instance.
+    plans: Vec<Option<IterationPlan>>,
+    /// Per-target queues of (req idx, from) waiting for target memory (q2).
+    fetch_wait: Vec<VecDeque<(usize, usize)>>,
+    done: usize,
+    timeline: Vec<InstantSnapshot>,
+    cfg: SimConfig,
+    events_processed: u64,
+    last_arrival: Time,
+}
+
+impl Cluster {
+    pub fn new(
+        instances: Vec<SimInstance>,
+        policy: Box<dyn Policy>,
+        cfg: SimConfig,
+    ) -> Self {
+        let n = instances.len();
+        assert!(n > 0, "cluster needs at least one instance");
+        let mut fabric = TransferFabric::new(n);
+        fabric.buffer_cap_tokens = cfg.transfer_buffer_tokens;
+        fabric.fail_timeout = cfg.transfer_fail_timeout;
+        Cluster {
+            now: 0.0,
+            instances,
+            fabric,
+            policy: Some(policy),
+            records: Vec::new(),
+            requests: Vec::new(),
+            events: BinaryHeap::new(),
+            seq: 0,
+            plans: (0..n).map(|_| None).collect(),
+            fetch_wait: (0..n).map(|_| VecDeque::new()).collect(),
+            done: 0,
+            timeline: Vec::new(),
+            cfg,
+            events_processed: 0,
+            last_arrival: 0.0,
+        }
+    }
+
+    /// Convenience: n identical instances with the given cost model.
+    pub fn homogeneous(n: usize, cost: CostModel, policy: Box<dyn Policy>, cfg: SimConfig) -> Self {
+        let instances = (0..n)
+            .map(|i| SimInstance::new(InstanceId(i), cost.clone()))
+            .collect();
+        Cluster::new(instances, policy, cfg)
+    }
+
+    fn push(&mut self, time: Time, kind: EventKind) {
+        self.seq += 1;
+        self.events.push(Reverse(Event {
+            time,
+            seq: self.seq,
+            kind,
+        }));
+    }
+
+    /// Run the trace to completion; consumes the cluster.
+    pub fn run(mut self, trace: &Trace) -> SimResult {
+        // Normalize ids to vector indices: traces may carry arbitrary ids
+        // (they are sorted by arrival), but the event loop indexes by id.
+        self.requests = trace
+            .requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| crate::request::Request {
+                id: crate::request::RequestId(i as u64),
+                ..r.clone()
+            })
+            .collect();
+        self.records = self.requests.iter().map(RequestRecord::new).collect();
+        self.last_arrival = trace.duration();
+
+        {
+            let mut policy = self.policy.take().unwrap();
+            policy.init(&self.instances);
+            self.policy = Some(policy);
+        }
+
+        for (idx, r) in self.requests.iter().enumerate() {
+            let t = r.arrival;
+            self.seq += 1;
+            self.events.push(Reverse(Event {
+                time: t,
+                seq: self.seq,
+                kind: EventKind::Arrival { idx },
+            }));
+        }
+        self.push(0.0, EventKind::MonitorTick);
+
+        let deadline = self.last_arrival + self.cfg.drain_timeout;
+        while let Some(Reverse(ev)) = self.events.pop() {
+            debug_assert!(ev.time >= self.now - 1e-9, "time went backwards");
+            self.now = ev.time.max(self.now);
+            self.events_processed += 1;
+            if self.now > deadline {
+                break;
+            }
+            match ev.kind {
+                EventKind::Arrival { idx } => self.on_arrival(idx),
+                EventKind::IterDone { inst } => self.on_iter_done(inst),
+                EventKind::TransferDone { req, from, to, kv } => {
+                    self.on_transfer_done(req, from, to, kv)
+                }
+                EventKind::FabricPoll => self.poll_fabric(),
+                EventKind::MonitorTick => self.on_monitor_tick(),
+            }
+            if self.done == self.records.len() {
+                break;
+            }
+        }
+
+        // Anything not finished at the deadline is a failure.
+        for rec in &mut self.records {
+            if !matches!(rec.state, RequestState::Finished | RequestState::Failed) {
+                rec.state = RequestState::Failed;
+            }
+        }
+
+        let total_iterations = self.instances.iter().map(|i| i.iterations).sum();
+        let total_flips = self
+            .policy
+            .as_ref()
+            .map(|p| p.flip_count())
+            .unwrap_or(0);
+        SimResult {
+            records: self.records,
+            timeline: self.timeline,
+            sim_time: self.now,
+            events_processed: self.events_processed,
+            total_iterations,
+            total_flips,
+        }
+    }
+
+    // ------------------------------------------------------------- events
+
+    fn on_arrival(&mut self, idx: usize) {
+        let req = self.requests[idx].clone();
+        let mut policy = self.policy.take().unwrap();
+        let target = policy.place_prefill(self.now, &req, &self.instances);
+        self.policy = Some(policy);
+
+        let inst = &mut self.instances[target.0];
+        if req.input_len as u64 + 1 > inst.cost.max_kv_tokens {
+            // Cannot ever fit (paper: DistServe OOM on long context).
+            self.records[idx].state = RequestState::Failed;
+            self.done += 1;
+            return;
+        }
+        self.records[idx].prefill_instance = Some(target);
+        self.records[idx].state = RequestState::Prefilling;
+        inst.enqueue_prefill(req.id, req.input_len);
+        self.kick(target.0);
+    }
+
+    fn on_iter_done(&mut self, i: usize) {
+        let plan = self.plans[i].take().expect("IterDone without plan");
+        let produced = self.instances[i].finish_iteration(&plan, self.now);
+        let mut freed_memory = false;
+        for p in produced {
+            match p {
+                Produced::Token { id } => {
+                    self.records[id.0 as usize].token_times.push(self.now);
+                }
+                Produced::FinalToken { id, .. } => {
+                    let rec = &mut self.records[id.0 as usize];
+                    rec.token_times.push(self.now);
+                    rec.state = RequestState::Finished;
+                    self.done += 1;
+                    freed_memory = true;
+                }
+                Produced::PrefillDone { id, kv_tokens } => {
+                    self.on_prefill_done(id.0 as usize, i, kv_tokens);
+                }
+            }
+        }
+        if freed_memory {
+            self.start_fetches(i);
+        }
+        self.kick(i);
+    }
+
+    /// First token is emitted at prefill completion (paper Fig. 6 step c);
+    /// then the decode sub-request is placed (step d).
+    fn on_prefill_done(&mut self, idx: usize, prefill_inst: usize, kv_tokens: u32) {
+        let req = self.requests[idx].clone();
+        {
+            let rec = &mut self.records[idx];
+            rec.first_token = Some(self.now);
+            rec.token_times.push(self.now);
+        }
+
+        if req.output_len <= 1 {
+            // Entire output was the first token: done, free the KV.
+            self.instances[prefill_inst].migration_out_done(kv_tokens);
+            self.records[idx].state = RequestState::Finished;
+            self.records[idx].decode_instance =
+                Some(InstanceId(prefill_inst));
+            self.done += 1;
+            self.start_fetches(prefill_inst);
+            self.kick(prefill_inst);
+            return;
+        }
+
+        let mut policy = self.policy.take().unwrap();
+        let target = policy.place_decode(
+            self.now,
+            &req,
+            InstanceId(prefill_inst),
+            &self.instances,
+        );
+        self.policy = Some(policy);
+        self.records[idx].decode_instance = Some(target);
+
+        let remaining = req.output_len - 1;
+        if target.0 == prefill_inst {
+            // Local handoff — no KV migration (paper §5.3).
+            self.instances[prefill_inst].adopt_local_decode(req.id, kv_tokens, remaining);
+            self.records[idx].state = RequestState::DecodeQueued;
+            self.kick(prefill_inst);
+        } else {
+            // Queue for the decode instance to fetch (q2).
+            self.records[idx].state = RequestState::Migrating;
+            self.fetch_wait[target.0].push_back((idx, prefill_inst));
+            self.start_fetches(target.0);
+        }
+    }
+
+    /// Admit queued fetches whose target now has memory (q2 → transfer).
+    fn start_fetches(&mut self, target: usize) {
+        let mut admitted_any = false;
+        while let Some(&(idx, from)) = self.fetch_wait[target].front() {
+            let kv = self.requests[idx].input_len;
+            if !self.instances[target].try_reserve_kv(kv as u64 + 1) {
+                break;
+            }
+            self.fetch_wait[target].pop_front();
+            self.fabric.request(Transfer {
+                req: self.requests[idx].id,
+                from: InstanceId(from),
+                to: InstanceId(target),
+                kv_tokens: kv,
+                requested_at: self.now,
+            });
+            admitted_any = true;
+        }
+        if admitted_any {
+            self.poll_fabric();
+        }
+    }
+
+    fn poll_fabric(&mut self) {
+        let cost = self.instances[0].cost.clone();
+        let (started, failed) = self.fabric.poll(self.now, &cost);
+        for s in started {
+            self.push(
+                s.completes_at,
+                EventKind::TransferDone {
+                    req: s.transfer.req.0 as usize,
+                    from: s.transfer.from.0,
+                    to: s.transfer.to.0,
+                    kv: s.transfer.kv_tokens,
+                },
+            );
+        }
+        for rid in failed {
+            let idx = rid.0 as usize;
+            if !matches!(self.records[idx].state, RequestState::Failed) {
+                self.records[idx].state = RequestState::Failed;
+                self.done += 1;
+            }
+        }
+        if let Some(t) = self.fabric.next_wakeup() {
+            if t > self.now {
+                self.push(t, EventKind::FabricPoll);
+            }
+        }
+    }
+
+    fn on_transfer_done(&mut self, idx: usize, from: usize, to: usize, kv: u32) {
+        self.fabric.complete(kv);
+        let req = self.requests[idx].clone();
+        // Source frees its parked copy.
+        self.instances[from].migration_out_done(kv);
+        // Target's reservation was made at fetch admission; release the
+        // reservation and enqueue the real decode task (same tokens).
+        self.instances[to].release_kv(kv as u64 + 1);
+        let ok = self.instances[to].try_reserve_kv(kv as u64);
+        debug_assert!(ok, "reservation accounting broken");
+        self.instances[to].enqueue_decode(req.id, kv, req.output_len - 1);
+        self.records[idx].state = RequestState::DecodeQueued;
+        // Source memory freed: it can admit fetches/prefill again.
+        self.start_fetches(from);
+        self.kick(from);
+        self.kick(to);
+        self.poll_fabric();
+    }
+
+    fn on_monitor_tick(&mut self) {
+        let mut policy = self.policy.take().unwrap();
+        policy.on_tick(self.now, &self.instances);
+        let pools = policy.pool_sizes();
+        self.policy = Some(policy);
+
+        if self.cfg.record_timeline {
+            self.timeline.push(InstantSnapshot {
+                time: self.now,
+                per_instance: self
+                    .instances
+                    .iter()
+                    .map(|i| (i.prefill_req_count(), i.decode_req_count(), i.running_tokens()))
+                    .collect(),
+                pools,
+            });
+        }
+        // Policy moves may have made work schedulable; kick everyone idle.
+        for i in 0..self.instances.len() {
+            self.kick(i);
+        }
+        if self.done < self.records.len() {
+            self.push(self.now + MONITOR_PERIOD, EventKind::MonitorTick);
+        }
+    }
+
+    /// Start the next iteration on instance `i` if it is idle and has work.
+    fn kick(&mut self, i: usize) {
+        if self.instances[i].busy {
+            return;
+        }
+        if let Some(plan) = self.instances[i].plan_iteration() {
+            let t = self.now + plan.duration;
+            self.plans[i] = Some(plan);
+            self.push(t, EventKind::IterDone { inst: i });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::policy::tests_support::{AllToOne, StaticSplit};
+    use super::*;
+    use crate::trace::synthetic::smoke;
+
+    fn small_cost() -> CostModel {
+        CostModel::h800_llama8b()
+    }
+
+    #[test]
+    fn single_instance_completes_all() {
+        let trace = smoke(50, 1).generate(3);
+        let cl = Cluster::homogeneous(
+            1,
+            small_cost(),
+            Box::new(AllToOne),
+            SimConfig::default(),
+        );
+        let res = cl.run(&trace);
+        assert_eq!(res.records.len(), trace.len());
+        assert!(res.records.iter().all(|r| r.finished()), "all finish");
+        // Tokens counted: every record has exactly output_len tokens.
+        for (rec, req) in res.records.iter().zip(&trace.requests) {
+            assert_eq!(rec.token_times.len(), req.output_len as usize);
+            assert!(rec.ttft().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn static_split_transfers_kv() {
+        let trace = smoke(50, 1).generate(4);
+        let cl = Cluster::homogeneous(
+            2,
+            small_cost(),
+            Box::new(StaticSplit { prefill: vec![0], decode: vec![1] }),
+            SimConfig::default(),
+        );
+        let res = cl.run(&trace);
+        assert!(res.records.iter().all(|r| r.finished()));
+        // Decode ran on instance 1 (except single-token outputs that
+        // finish on the prefill instance).
+        for (rec, req) in res.records.iter().zip(&trace.requests) {
+            assert_eq!(rec.prefill_instance, Some(InstanceId(0)));
+            if req.output_len > 1 {
+                assert_eq!(rec.decode_instance, Some(InstanceId(1)));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let trace = smoke(100, 2).generate(5);
+        let run = || {
+            Cluster::homogeneous(
+                2,
+                small_cost(),
+                Box::new(StaticSplit { prefill: vec![0], decode: vec![1] }),
+                SimConfig::default(),
+            )
+            .run(&trace)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.events_processed, b.events_processed);
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.token_times, y.token_times);
+        }
+    }
+
+    #[test]
+    fn token_times_monotone_per_request() {
+        let trace = smoke(80, 1).generate(6);
+        let res = Cluster::homogeneous(
+            2,
+            small_cost(),
+            Box::new(StaticSplit { prefill: vec![0], decode: vec![1] }),
+            SimConfig::default(),
+        )
+        .run(&trace);
+        for rec in &res.records {
+            assert!(rec
+                .token_times
+                .windows(2)
+                .all(|w| w[1] >= w[0] - 1e-12));
+            // First recorded token == first_token field.
+            assert_eq!(rec.token_times.first().copied(), rec.first_token);
+        }
+    }
+
+    #[test]
+    fn oversized_request_fails_cleanly() {
+        let mut trace = smoke(5, 1).generate(7);
+        trace.requests[0].input_len = 10_000_000; // > max_kv_tokens
+        let res = Cluster::homogeneous(
+            1,
+            small_cost(),
+            Box::new(AllToOne),
+            SimConfig::default(),
+        )
+        .run(&trace);
+        let failed: Vec<_> = res
+            .records
+            .iter()
+            .filter(|r| r.state == RequestState::Failed)
+            .collect();
+        assert_eq!(failed.len(), 1);
+        assert!(res.records.iter().filter(|r| r.finished()).count() == 4);
+    }
+
+    #[test]
+    fn timeline_recorded_when_enabled() {
+        let trace = smoke(50, 1).generate(8);
+        let cfg = SimConfig {
+            record_timeline: true,
+            ..Default::default()
+        };
+        let res = Cluster::homogeneous(2, small_cost(), Box::new(AllToOne), cfg).run(&trace);
+        assert!(!res.timeline.is_empty());
+        let snap = &res.timeline[0];
+        assert_eq!(snap.per_instance.len(), 2);
+    }
+
+    #[test]
+    fn transfer_buffer_timeout_fails_requests() {
+        // Tiny shared buffer + short timeout: transfers of large KV fail.
+        let mut trace = smoke(20, 1).generate(9);
+        for r in &mut trace.requests {
+            r.input_len = 5_000;
+            r.output_len = 8;
+        }
+        let cfg = SimConfig {
+            transfer_buffer_tokens: Some(1_000), // < any single KV
+            transfer_fail_timeout: Some(5.0),
+            ..Default::default()
+        };
+        let res = Cluster::homogeneous(
+            2,
+            small_cost(),
+            Box::new(StaticSplit { prefill: vec![0], decode: vec![1] }),
+            cfg,
+        )
+        .run(&trace);
+        assert!(
+            res.records.iter().any(|r| r.state == RequestState::Failed),
+            "buffer-capped transfers should fail"
+        );
+    }
+
+    #[test]
+    fn drain_timeout_bounds_runtime() {
+        // A pathological policy that sends everything to instance 0 while
+        // instance 0 has tiny memory => some requests can never run.
+        let mut cost = small_cost();
+        cost.max_kv_tokens = 10; // nothing fits
+        let trace = smoke(10, 1).generate(10);
+        let cfg = SimConfig {
+            drain_timeout: 30.0,
+            ..Default::default()
+        };
+        let res = Cluster::homogeneous(1, cost, Box::new(AllToOne), cfg).run(&trace);
+        // All marked failed, simulation terminated.
+        assert!(res.records.iter().all(|r| r.state == RequestState::Failed));
+    }
+}

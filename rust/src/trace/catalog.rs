@@ -1,0 +1,107 @@
+//! Workload catalog: Table 1 of the paper — the four evaluation traces
+//! with their request counts and SLO settings — plus lookup by name.
+
+use super::synthetic::{
+    azure_code, azure_conversation, burstgpt, mooncake_conversation, smoke,
+    WorkloadSpec,
+};
+use super::Trace;
+
+/// One Table-1 row: a workload plus its SLO targets.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub spec: WorkloadSpec,
+    /// TTFT SLO in seconds (Table 1).
+    pub ttft_slo: f64,
+    /// TPOT SLO in seconds (Table 1).
+    pub tpot_slo: f64,
+}
+
+impl Workload {
+    pub fn name(&self) -> &'static str {
+        self.spec.name
+    }
+
+    pub fn generate(&self, seed: u64) -> Trace {
+        self.spec.generate(seed)
+    }
+}
+
+/// Table 1, row by row.
+pub fn table1() -> Vec<Workload> {
+    vec![
+        Workload {
+            spec: azure_code(),
+            ttft_slo: 3.0,
+            tpot_slo: 0.1,
+        },
+        Workload {
+            spec: azure_conversation(),
+            ttft_slo: 2.0,
+            tpot_slo: 0.15,
+        },
+        Workload {
+            spec: burstgpt(),
+            ttft_slo: 0.25,
+            tpot_slo: 0.075,
+        },
+        Workload {
+            spec: mooncake_conversation(),
+            ttft_slo: 30.0,
+            tpot_slo: 0.1,
+        },
+    ]
+}
+
+/// Look a workload up by name; also accepts the `smoke` test workload.
+pub fn by_name(name: &str) -> Option<Workload> {
+    match name {
+        "smoke" => Some(Workload {
+            spec: smoke(500, 5),
+            ttft_slo: 2.0,
+            tpot_slo: 0.1,
+        }),
+        _ => table1().into_iter().find(|w| w.name() == name),
+    }
+}
+
+pub fn names() -> Vec<&'static str> {
+    let mut v: Vec<&'static str> = table1().iter().map(|w| w.name()).collect();
+    v.push("smoke");
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let t = table1();
+        assert_eq!(t.len(), 4);
+        let code = &t[0];
+        assert_eq!(code.name(), "azure_code");
+        assert_eq!(code.spec.n_requests, 8819);
+        assert_eq!(code.ttft_slo, 3.0);
+        assert_eq!(code.tpot_slo, 0.1);
+        let conv = &t[1];
+        assert_eq!(conv.spec.n_requests, 19366);
+        assert_eq!((conv.ttft_slo, conv.tpot_slo), (2.0, 0.15));
+        let bg = &t[2];
+        assert_eq!(bg.spec.n_requests, 6009);
+        assert_eq!((bg.ttft_slo, bg.tpot_slo), (0.25, 0.075));
+        let mc = &t[3];
+        assert_eq!(mc.spec.n_requests, 1756);
+        assert_eq!((mc.ttft_slo, mc.tpot_slo), (30.0, 0.1));
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("azure_code").is_some());
+        assert!(by_name("smoke").is_some());
+        assert!(by_name("nope").is_none());
+        for n in names() {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Trace persistence: JSONL (one request per line) — the same shape the
+//! public Azure/BurstGPT trace releases use (arrival, input, output), so
+//! real traces can be dropped in without code changes.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use super::Trace;
+use crate::json::Json;
+use crate::request::Request;
+
+/// Save as JSONL: `{"ts": <sec>, "input": <tokens>, "output": <tokens>}`.
+pub fn save_jsonl(trace: &Trace, path: &Path) -> std::io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for r in &trace.requests {
+        let line = Json::obj(vec![
+            ("ts", Json::Num(r.arrival)),
+            ("input", Json::Num(r.input_len as f64)),
+            ("output", Json::Num(r.output_len as f64)),
+        ]);
+        writeln!(w, "{}", line.encode())?;
+    }
+    Ok(())
+}
+
+/// Load a JSONL trace. Lines must carry `ts`, `input`, `output`; ids are
+/// assigned by line order after sorting by timestamp.
+pub fn load_jsonl(name: &str, path: &Path) -> std::io::Result<Trace> {
+    let reader = BufReader::new(File::open(path)?);
+    let mut requests = Vec::new();
+    for (i, line) in reader.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(&line).map_err(|e| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("{}:{}: {}", path.display(), i + 1, e),
+            )
+        })?;
+        let ts = v.get("ts").as_f64().ok_or_else(|| bad(path, i, "ts"))?;
+        let input = v.get("input").as_u64().ok_or_else(|| bad(path, i, "input"))?;
+        let output = v
+            .get("output")
+            .as_u64()
+            .ok_or_else(|| bad(path, i, "output"))?;
+        requests.push(Request::new(i as u64, ts, input as u32, output as u32));
+    }
+    Ok(Trace::new(name, requests))
+}
+
+fn bad(path: &Path, line: usize, field: &str) -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::InvalidData,
+        format!("{}:{}: missing field '{}'", path.display(), line + 1, field),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synthetic::smoke;
+
+    #[test]
+    fn roundtrip_jsonl() {
+        let t = smoke(100, 2).generate(1);
+        let dir = std::env::temp_dir().join("arrow_trace_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        save_jsonl(&t, &path).unwrap();
+        let back = load_jsonl("t", &path).unwrap();
+        assert_eq!(back.len(), t.len());
+        for (a, b) in t.requests.iter().zip(&back.requests) {
+            assert!((a.arrival - b.arrival).abs() < 1e-9);
+            assert_eq!(a.input_len, b.input_len);
+            assert_eq!(a.output_len, b.output_len);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_bad_lines() {
+        let dir = std::env::temp_dir().join("arrow_trace_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"ts\": 1.0}\n").unwrap();
+        assert!(load_jsonl("bad", &path).is_err());
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(load_jsonl("bad", &path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_lines_skipped() {
+        let dir = std::env::temp_dir().join("arrow_trace_io_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sparse.jsonl");
+        std::fs::write(
+            &path,
+            "{\"ts\":0.5,\"input\":10,\"output\":5}\n\n{\"ts\":1.5,\"input\":20,\"output\":2}\n",
+        )
+        .unwrap();
+        let t = load_jsonl("sparse", &path).unwrap();
+        assert_eq!(t.len(), 2);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

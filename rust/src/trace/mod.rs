@@ -1,0 +1,256 @@
+//! Workload traces: synthetic generators for the four production traces
+//! the paper evaluates on, plus load/save and rate-rescaling machinery.
+//!
+//! The real Azure / BurstGPT / Mooncake traces are not available offline;
+//! `synthetic.rs` reproduces their *published statistics* (request counts,
+//! arrival burstiness cv, length distributions, input↔output correlation
+//! — paper §3.1 and Table 1). See DESIGN.md §3 for the substitution
+//! rationale.
+
+pub mod catalog;
+pub mod io;
+pub mod synthetic;
+
+use crate::request::Request;
+
+/// A workload trace: requests sorted by arrival time.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub name: String,
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn new(name: &str, mut requests: Vec<Request>) -> Self {
+        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        Trace {
+            name: name.to_string(),
+            requests,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival).unwrap_or(0.0)
+    }
+
+    /// Mean request rate over the trace (req/s).
+    pub fn rate(&self) -> f64 {
+        let d = self.duration();
+        if d > 0.0 {
+            self.len() as f64 / d
+        } else {
+            0.0
+        }
+    }
+
+    /// Rescale to a target request rate by multiplying timestamps — the
+    /// paper's evaluation workflow (§7.1: "we multiply the timestamps by a
+    /// constant to simulate varying request rates").
+    pub fn with_rate(&self, target_rate: f64) -> Trace {
+        assert!(target_rate > 0.0);
+        let cur = self.rate();
+        assert!(cur > 0.0, "cannot rescale an instantaneous trace");
+        let k = cur / target_rate;
+        let requests = self
+            .requests
+            .iter()
+            .map(|r| Request {
+                arrival: r.arrival * k,
+                ..r.clone()
+            })
+            .collect();
+        Trace {
+            name: format!("{}@{:.2}rps", self.name, target_rate),
+            requests,
+        }
+    }
+
+    /// Clip to the first `secs` seconds (paper takes 10-minute / 1-hour
+    /// clips of Mooncake / BurstGPT).
+    pub fn clip_seconds(&self, secs: f64) -> Trace {
+        Trace {
+            name: format!("{}[0..{}s]", self.name, secs),
+            requests: self
+                .requests
+                .iter()
+                .filter(|r| r.arrival <= secs)
+                .cloned()
+                .collect(),
+        }
+    }
+
+    /// Clip to a time window [from, to) and shift arrivals to start at 0
+    /// (Fig. 4 uses the Azure Conversation minutes 20-40).
+    pub fn window(&self, from: f64, to: f64) -> Trace {
+        Trace {
+            name: format!("{}[{}..{}s]", self.name, from, to),
+            requests: self
+                .requests
+                .iter()
+                .filter(|r| r.arrival >= from && r.arrival < to)
+                .map(|r| Request {
+                    arrival: r.arrival - from,
+                    ..r.clone()
+                })
+                .collect(),
+        }
+    }
+
+    /// Take the first n requests.
+    pub fn take(&self, n: usize) -> Trace {
+        Trace {
+            name: self.name.clone(),
+            requests: self.requests.iter().take(n).cloned().collect(),
+        }
+    }
+
+    /// Per-minute total input/output token sums — the Fig. 1 series.
+    pub fn per_minute_load(&self) -> Vec<MinuteLoad> {
+        let mut out: Vec<MinuteLoad> = Vec::new();
+        for r in &self.requests {
+            let m = (r.arrival / 60.0).floor() as usize;
+            if out.len() <= m {
+                out.resize(
+                    m + 1,
+                    MinuteLoad {
+                        minute: 0,
+                        input_tokens: 0,
+                        output_tokens: 0,
+                        requests: 0,
+                    },
+                );
+            }
+            let slot = &mut out[m];
+            slot.minute = m;
+            slot.input_tokens += r.input_len as u64;
+            slot.output_tokens += r.output_len as u64;
+            slot.requests += 1;
+        }
+        for (i, s) in out.iter_mut().enumerate() {
+            s.minute = i;
+        }
+        out
+    }
+
+    /// Summary statistics used to validate generators against the paper's
+    /// published numbers (§3.1).
+    pub fn stats(&self) -> TraceStats {
+        use crate::util::stats as st;
+        let inputs: Vec<f64> = self.requests.iter().map(|r| r.input_len as f64).collect();
+        let outputs: Vec<f64> = self.requests.iter().map(|r| r.output_len as f64).collect();
+        let per_min = self.per_minute_load();
+        let min_inputs: Vec<f64> = per_min.iter().map(|m| m.input_tokens as f64).collect();
+        TraceStats {
+            n: self.len(),
+            duration_s: self.duration(),
+            mean_input: st::mean(&inputs),
+            median_input: st::percentile(&inputs, 50.0),
+            p99_input: st::percentile(&inputs, 99.0),
+            mean_output: st::mean(&outputs),
+            median_output: st::percentile(&outputs, 50.0),
+            p99_output: st::percentile(&outputs, 99.0),
+            io_correlation: st::pearson(&inputs, &outputs),
+            minute_input_cv: st::coeff_of_variation(&min_inputs),
+        }
+    }
+}
+
+/// One minute of aggregate load (Fig. 1 row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MinuteLoad {
+    pub minute: usize,
+    pub input_tokens: u64,
+    pub output_tokens: u64,
+    pub requests: u64,
+}
+
+/// Aggregate statistics of a trace (validation against §3.1 numbers).
+#[derive(Debug, Clone)]
+pub struct TraceStats {
+    pub n: usize,
+    pub duration_s: f64,
+    pub mean_input: f64,
+    pub median_input: f64,
+    pub p99_input: f64,
+    pub mean_output: f64,
+    pub median_output: f64,
+    pub p99_output: f64,
+    pub io_correlation: f64,
+    pub minute_input_cv: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> Trace {
+        Trace::new(
+            "t",
+            vec![
+                Request::new(0, 10.0, 100, 20),
+                Request::new(1, 0.0, 50, 10),
+                Request::new(2, 70.0, 200, 5),
+            ],
+        )
+    }
+
+    #[test]
+    fn constructor_sorts_by_arrival() {
+        let t = mk();
+        assert_eq!(t.requests[0].id.0, 1);
+        assert_eq!(t.requests[2].id.0, 2);
+    }
+
+    #[test]
+    fn rate_rescaling_changes_rate() {
+        let t = mk();
+        let fast = t.with_rate(t.rate() * 2.0);
+        assert!((fast.rate() - t.rate() * 2.0).abs() / t.rate() < 1e-9);
+        // Lengths untouched.
+        assert_eq!(fast.requests[0].input_len, t.requests[0].input_len);
+        // Order preserved.
+        assert!(fast.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    #[test]
+    fn window_shifts_to_zero() {
+        let t = mk();
+        let w = t.window(5.0, 60.0);
+        assert_eq!(w.len(), 1);
+        assert!((w.requests[0].arrival - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_minute_load_buckets() {
+        let t = mk();
+        let pm = t.per_minute_load();
+        assert_eq!(pm.len(), 2);
+        assert_eq!(pm[0].requests, 2);
+        assert_eq!(pm[0].input_tokens, 150);
+        assert_eq!(pm[1].requests, 1);
+        assert_eq!(pm[1].output_tokens, 5);
+    }
+
+    #[test]
+    fn clip_keeps_prefix() {
+        let t = mk();
+        assert_eq!(t.clip_seconds(10.0).len(), 2);
+        assert_eq!(t.take(1).len(), 1);
+    }
+
+    #[test]
+    fn stats_shapes() {
+        let s = mk().stats();
+        assert_eq!(s.n, 3);
+        assert!(s.mean_input > 0.0);
+        assert!(s.io_correlation.abs() <= 1.0 + 1e-12);
+    }
+}

@@ -1,0 +1,157 @@
+//! Tiny benchmark harness (substrate for the unavailable `criterion`
+//! crate), used by the `[[bench]] harness = false` targets.
+//!
+//! Method: warmup, then timed batches until `min_time` elapses; reports
+//! mean / p50 / p90 / p99 per-iteration wall time plus throughput. A
+//! `black_box` shim prevents the optimizer from deleting the measured work.
+
+use std::hint;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Prevent dead-code elimination of benchmark results.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    hint::black_box(x)
+}
+
+/// One benchmark's timing summary (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+    pub p99_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {}  p50 {}  p90 {}  p99 {}  ({:.1}/s)",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean_s),
+            fmt_dur(self.p50_s),
+            fmt_dur(self.p90_s),
+            fmt_dur(self.p99_s),
+            self.per_sec()
+        )
+    }
+}
+
+pub fn fmt_dur(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner with fixed warmup + measurement windows.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub min_time: Duration,
+    pub max_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            min_time: Duration::from_secs(1),
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            min_time: Duration::from_millis(300),
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly; each call is one measured iteration.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.min_time && (samples.len() as u64) < self.max_iters {
+            let s = Instant::now();
+            black_box(f());
+            samples.push(s.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples.len() as u64,
+            mean_s: stats::mean(&samples),
+            p50_s: stats::percentile_sorted(&samples, 50.0),
+            p90_s: stats::percentile_sorted(&samples, 90.0),
+            p99_s: stats::percentile_sorted(&samples, 99.0),
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            min_time: Duration::from_millis(20),
+            max_iters: 10_000,
+            results: Vec::new(),
+        };
+        let r = b.bench("noop-sum", || (0..100u64).sum::<u64>()).clone();
+        assert!(r.iters > 0);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p50_s <= r.p99_s);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(2.0).ends_with('s'));
+        assert!(fmt_dur(2e-3).ends_with("ms"));
+        assert!(fmt_dur(2e-6).ends_with("us"));
+        assert!(fmt_dur(2e-9).ends_with("ns"));
+    }
+}

