@@ -2,27 +2,52 @@
 //!
 //! The fig7/8/9 sweeps run hundreds of full-trace simulations; this bench
 //! gates the event-loop hot path (DESIGN.md §9 target: >= 1M events/s).
+//!
+//! Modes:
+//! * default — full measurement (5 reps per system on the clipped
+//!   azure_code workload + a full-hour scaling run), emitting
+//!   `BENCH_simulator.json` so the perf trajectory is tracked PR over PR;
+//! * `ARROW_BENCH_SMOKE=1` — CI gate: short clip, fewer reps, process
+//!   exits non-zero if the Arrow system falls below
+//!   `ARROW_BENCH_MIN_EPS` (default 1,000,000) events/s.
+//!
+//! `ARROW_BENCH_OUT` overrides the JSON output path.
 
 use std::time::Instant;
 
 use arrow::costmodel::CostModel;
+use arrow::json::Json;
 use arrow::scenarios::{build, System};
 use arrow::trace::catalog;
 use arrow::util::benchkit::fmt_dur;
 
+const DEFAULT_MIN_EPS: f64 = 1.0e6;
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 fn main() {
-    println!("== simulator event throughput ==");
+    let smoke = std::env::var("ARROW_BENCH_SMOKE").map_or(false, |v| v != "0" && !v.is_empty());
+    let min_eps = env_f64("ARROW_BENCH_MIN_EPS", DEFAULT_MIN_EPS);
+    let (clip, reps) = if smoke { (120.0, 2) } else { (300.0, 5) };
+
+    println!("== simulator event throughput{} ==", if smoke { " (smoke)" } else { "" });
     let w = catalog::by_name("azure_code").unwrap();
-    let trace = w.generate(3).clip_seconds(300.0);
+    let trace = w.generate(3).clip_seconds(clip);
     let t = trace.with_rate(trace.rate() * 8.0);
     println!(
-        "workload: azure_code clip, {} requests @ {:.1} req/s\n",
+        "workload: azure_code clip {clip}s, {} requests @ {:.1} req/s\n",
         t.len(),
         t.rate()
     );
+
+    let mut rows = Vec::new();
+    let mut arrow_eps = 0.0;
     for sys in System::all() {
-        // Repeat to stabilize.
-        let reps = 5;
         let mut events = 0u64;
         let t0 = Instant::now();
         for _ in 0..reps {
@@ -31,34 +56,90 @@ fn main() {
             events += res.events_processed;
         }
         let dt = t0.elapsed().as_secs_f64();
+        let eps = events as f64 / dt;
+        if sys == System::Arrow {
+            arrow_eps = eps;
+        }
         println!(
             "{:<14} {:>9} events in {:>9}  -> {:>10.0} events/s",
             sys.label(),
             events,
             fmt_dur(dt),
-            events as f64 / dt
+            eps
         );
+        rows.push(Json::obj(vec![
+            ("system", Json::Str(sys.label().into())),
+            ("events", Json::Num(events as f64)),
+            ("seconds", Json::Num(dt)),
+            ("events_per_sec", Json::Num(eps)),
+        ]));
     }
 
-    println!("\n== full-hour trace (scaling check) ==");
-    let full = w.generate(3);
-    let t0 = Instant::now();
-    let cl = build(
-        System::Arrow,
-        8,
-        &CostModel::h800_llama8b(),
-        w.ttft_slo,
-        w.tpot_slo,
-        false,
-    );
-    let res = cl.run(&full);
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "arrow, full azure_code hour: {} requests, {} events, {} iterations in {} ({:.0} events/s)",
-        full.len(),
-        res.events_processed,
-        res.total_iterations,
-        fmt_dur(dt),
-        res.events_processed as f64 / dt
-    );
+    // Full-hour scaling run (skipped in smoke mode: CI wants seconds).
+    let mut full_hour = Json::Null;
+    if !smoke {
+        println!("\n== full-hour trace (scaling check) ==");
+        let full = w.generate(3);
+        let t0 = Instant::now();
+        let cl = build(
+            System::Arrow,
+            8,
+            &CostModel::h800_llama8b(),
+            w.ttft_slo,
+            w.tpot_slo,
+            false,
+        );
+        let res = cl.run(&full);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "arrow, full azure_code hour: {} requests, {} events, {} iterations \
+             in {} ({:.0} events/s)",
+            full.len(),
+            res.events_processed,
+            res.total_iterations,
+            fmt_dur(dt),
+            res.events_processed as f64 / dt
+        );
+        full_hour = Json::obj(vec![
+            ("system", Json::Str("arrow".into())),
+            ("requests", Json::Num(full.len() as f64)),
+            ("events", Json::Num(res.events_processed as f64)),
+            ("iterations", Json::Num(res.total_iterations as f64)),
+            ("seconds", Json::Num(dt)),
+            (
+                "events_per_sec",
+                Json::Num(res.events_processed as f64 / dt),
+            ),
+        ]);
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("simulator".into())),
+        ("workload", Json::Str("azure_code".into())),
+        ("clip_seconds", Json::Num(clip)),
+        ("rate_multiplier", Json::Num(8.0)),
+        ("reps", Json::Num(reps as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("target_events_per_sec", Json::Num(min_eps)),
+        ("systems", Json::Arr(rows)),
+        ("full_hour", full_hour),
+    ]);
+    let path =
+        std::env::var("ARROW_BENCH_OUT").unwrap_or_else(|_| "BENCH_simulator.json".into());
+    match std::fs::write(&path, out.encode()) {
+        Ok(()) => println!("\n-> {path}"),
+        Err(e) => eprintln!("warn: cannot write {path}: {e}"),
+    }
+
+    // Only the smoke (CI) mode gates; a full measurement run must always
+    // succeed so the JSON can be regenerated on slower hardware.
+    if smoke && arrow_eps < min_eps {
+        eprintln!(
+            "FAIL: arrow event throughput {arrow_eps:.0} events/s below the {min_eps:.0} gate"
+        );
+        std::process::exit(1);
+    }
+    if smoke {
+        println!("gate OK: arrow {arrow_eps:.0} events/s >= {min_eps:.0}");
+    }
 }

@@ -127,9 +127,11 @@ impl Policy for StaticDisaggPolicy {
                     .iter()
                     .copied()
                     .min_by(|&a, &b| {
-                        let da = pred.queue_delay(&instances[a].prefill_queue_view());
-                        let db = pred.queue_delay(&instances[b].prefill_queue_view());
-                        da.partial_cmp(&db).unwrap()
+                        let da = pred.queue_delay_iter(instances[a].prefill_queue_iter());
+                        let db = pred.queue_delay_iter(instances[b].prefill_queue_iter());
+                        // total_cmp: a NaN prediction must never panic
+                        // the placement path.
+                        da.total_cmp(&db)
                     })
                     .unwrap();
                 InstanceId(id)

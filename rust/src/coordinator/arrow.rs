@@ -94,32 +94,35 @@ impl ArrowPolicy {
 
     /// Predicted prefill queueing delay of an instance (Insight 1),
     /// using that instance's own profiled curve (heterogeneous-safe).
+    /// Streams the queue view — no per-call `Vec`.
     fn prefill_delay(&self, inst: &SimInstance) -> f64 {
-        self.predictor(inst.id.0).queue_delay(&inst.prefill_queue_view())
+        self.predictor(inst.id.0)
+            .queue_delay_iter(inst.prefill_queue_iter())
     }
 
-    /// Argmin of predicted prefill delay over a pool.
+    /// Argmin of predicted prefill delay over a pool. Runs once per
+    /// arriving request — iterates the membership table directly, no
+    /// per-call member-list allocation, and uses `total_cmp` so a NaN
+    /// prediction can never panic the scheduler.
     fn min_prefill_delay(
         &self,
         pool: Pool,
         instances: &[SimInstance],
     ) -> Option<(InstanceId, f64)> {
         self.pools
-            .members(pool)
-            .into_iter()
+            .members_iter(pool)
             .map(|id| (id, self.prefill_delay(&instances[id.0])))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
     }
 
-    /// Argmin of running tokens over a pool.
+    /// Argmin of running tokens over a pool (allocation-free).
     fn min_running_tokens(
         &self,
         pool: Pool,
         instances: &[SimInstance],
     ) -> Option<(InstanceId, u64)> {
         self.pools
-            .members(pool)
-            .into_iter()
+            .members_iter(pool)
             .map(|id| (id, instances[id.0].running_tokens()))
             .min_by_key(|&(_, t)| t)
     }
@@ -127,25 +130,23 @@ impl ArrowPolicy {
     /// Is cluster-wide decode load low enough to steal an instance for
     /// prefill? (overload guard in Alg. 1, §5.5)
     fn decode_load_low(&self, instances: &[SimInstance]) -> bool {
-        let ids: Vec<InstanceId> = self
+        // Mean utilization relative to each instance's own capacity,
+        // accumulated in one allocation-free pass over D ∪ P→D.
+        let mut n = 0usize;
+        let mut util_sum = 0.0;
+        for id in self
             .pools
-            .members(Pool::Decode)
-            .into_iter()
-            .chain(self.pools.members(Pool::PrefillToDecode))
-            .collect();
-        if ids.is_empty() {
+            .members_iter(Pool::Decode)
+            .chain(self.pools.members_iter(Pool::PrefillToDecode))
+        {
+            let cap = self.mrt(id.0).min(instances[id.0].cost.max_kv_tokens) as f64;
+            util_sum += instances[id.0].running_tokens() as f64 / cap.max(1.0);
+            n += 1;
+        }
+        if n == 0 {
             return false;
         }
-        // Mean utilization relative to each instance's own capacity.
-        let mean_util = ids
-            .iter()
-            .map(|id| {
-                let cap = self.mrt(id.0).min(instances[id.0].cost.max_kv_tokens) as f64;
-                instances[id.0].running_tokens() as f64 / cap.max(1.0)
-            })
-            .sum::<f64>()
-            / ids.len() as f64;
-        mean_util < self.cfg.decode_low_watermark
+        util_sum / n as f64 < self.cfg.decode_low_watermark
     }
 
     /// Recent token interval of an instance, NaN treated as "no evidence".
@@ -324,22 +325,33 @@ impl Policy for ArrowPolicy {
 
         // 2. Sustained TPOT violation => move a prefill instance to decode
         //    (condition 2 of §5.5; Insight 3: monitor real token gaps).
-        let decode_ids: Vec<InstanceId> = self
+        //    One pass over D ∪ P→D counts members/violators and evaluates
+        //    the step-3 busy predicate without materializing the id list.
+        //    `decode_busy` is deliberately computed over the *pre-flip*
+        //    membership (the historical snapshot semantics): the instance
+        //    a violation flip moves into the decode pools this tick must
+        //    not retrigger step 3 in the same tick.
+        let mut n_decode = 0usize;
+        let mut violating = 0usize;
+        let mut decode_busy = false;
+        for id in self
             .pools
-            .members(Pool::Decode)
-            .into_iter()
-            .chain(self.pools.members(Pool::PrefillToDecode))
-            .collect();
-        if !decode_ids.is_empty() {
-            let violating = decode_ids
-                .iter()
-                .filter(|id| {
-                    let v = instances[id.0].avg_token_interval();
-                    !v.is_nan() && v > self.cfg.tpot_slo
-                })
-                .count();
-            if (violating as f64) >= self.cfg.tpot_violation_frac * decode_ids.len() as f64
-            {
+            .members_iter(Pool::Decode)
+            .chain(self.pools.members_iter(Pool::PrefillToDecode))
+        {
+            n_decode += 1;
+            let inst = &instances[id.0];
+            let v = inst.avg_token_interval();
+            if !v.is_nan() && v > self.cfg.tpot_slo {
+                violating += 1;
+            }
+            decode_busy |= inst.running_tokens()
+                > (self.cfg.decode_low_watermark
+                    * self.mrt(id.0).min(inst.cost.max_kv_tokens) as f64)
+                    as u64;
+        }
+        if n_decode > 0 {
+            if (violating as f64) >= self.cfg.tpot_violation_frac * n_decode as f64 {
                 self.violation_ticks += 1;
             } else {
                 self.violation_ticks = 0;
@@ -352,14 +364,7 @@ impl Policy for ArrowPolicy {
 
         // 3. Idle prefill + busy decode => harvest the idle instance
         //    (condition 3 of §5.5). "Busy" = any decode-capable instance
-        //    above the watermark or with parked work.
-        let decode_busy = decode_ids.iter().any(|id| {
-            let inst = &instances[id.0];
-            inst.running_tokens()
-                > (self.cfg.decode_low_watermark
-                    * self.mrt(id.0).min(inst.cost.max_kv_tokens) as f64)
-                    as u64
-        });
+        //    above the watermark or with parked work (computed above).
         if decode_busy {
             let idle_prefill: Vec<InstanceId> = self
                 .pools

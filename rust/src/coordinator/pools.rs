@@ -88,13 +88,20 @@ impl Pools {
     }
 
     /// Instances currently in `pool`.
+    ///
+    /// Allocates; prefer [`Pools::members_iter`] on scheduler hot paths
+    /// (placement decisions run once per request).
     pub fn members(&self, pool: Pool) -> Vec<InstanceId> {
+        self.members_iter(pool).collect()
+    }
+
+    /// Allocation-free iterator over the instances currently in `pool`.
+    pub fn members_iter(&self, pool: Pool) -> impl Iterator<Item = InstanceId> + '_ {
         self.membership
             .iter()
             .enumerate()
-            .filter(|(_, &p)| p == pool)
+            .filter(move |(_, &p)| p == pool)
             .map(|(i, _)| InstanceId(i))
-            .collect()
     }
 
     /// Count of instances that can take decode work (|D| + |P→D|) —

@@ -79,10 +79,15 @@ impl TtftPredictor {
     /// queue view `[(input_len, remaining); ..]` (Insight 1: queue state
     /// fully determines the new request's TTFT).
     pub fn queue_delay(&self, queue: &[(u32, u32)]) -> f64 {
-        queue
-            .iter()
-            .map(|&(l, r)| self.remaining_seconds(l, r))
-            .sum()
+        self.queue_delay_iter(queue.iter().copied())
+    }
+
+    /// Allocation-free [`TtftPredictor::queue_delay`]: consumes any
+    /// `(input_len, remaining)` stream (e.g.
+    /// [`crate::engine::SimInstance::prefill_queue_iter`]) so the
+    /// per-request placement path never materializes a queue-view `Vec`.
+    pub fn queue_delay_iter(&self, queue: impl Iterator<Item = (u32, u32)>) -> f64 {
+        queue.map(|(l, r)| self.remaining_seconds(l, r)).sum()
     }
 
     /// Predicted TTFT if a request of `len` tokens is appended to the

@@ -13,6 +13,7 @@
 //! the completion back into [`SimInstance::finish_iteration`].
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use super::task::{DecodeTask, PrefillTask};
 use crate::costmodel::CostModel;
@@ -56,7 +57,11 @@ pub enum Produced {
 #[derive(Debug)]
 pub struct SimInstance {
     pub id: InstanceId,
-    pub cost: CostModel,
+    /// Shared with the cluster and transfer fabric: homogeneous clusters
+    /// hold one `CostModel` behind n+1 refcounts instead of n+1 deep
+    /// clones. Use [`SimInstance::cost_mut`] for per-instance overrides
+    /// (copy-on-write, unshares only this instance).
+    pub cost: Arc<CostModel>,
     /// Token budget for the prefill chunk per iteration.
     pub chunk_tokens: u32,
     /// Optional per-iteration latency budget (seconds). When set and the
@@ -89,10 +94,10 @@ pub struct SimInstance {
 }
 
 impl SimInstance {
-    pub fn new(id: InstanceId, cost: CostModel) -> Self {
+    pub fn new(id: InstanceId, cost: impl Into<Arc<CostModel>>) -> Self {
         SimInstance {
             id,
-            cost,
+            cost: cost.into(),
             chunk_tokens: DEFAULT_CHUNK_TOKENS,
             iter_time_budget: None,
             prefill_q: VecDeque::new(),
@@ -105,6 +110,13 @@ impl SimInstance {
             busy: false,
             iterations: 0,
         }
+    }
+
+    /// Mutable access to this instance's cost model (copy-on-write: if
+    /// the model is shared with other instances it is cloned once, so the
+    /// override stays local to this instance).
+    pub fn cost_mut(&mut self) -> &mut CostModel {
+        Arc::make_mut(&mut self.cost)
     }
 
     // ------------------------------------------------------------ queries
@@ -146,11 +158,16 @@ impl SimInstance {
 
     /// (input_len, remaining) of each queued prefill — what the global
     /// scheduler's TTFT predictor consumes (Insight 1).
+    ///
+    /// Allocates; scheduler hot paths should use
+    /// [`SimInstance::prefill_queue_iter`] instead.
     pub fn prefill_queue_view(&self) -> Vec<(u32, u32)> {
-        self.prefill_q
-            .iter()
-            .map(|t| (t.input_len, t.remaining()))
-            .collect()
+        self.prefill_queue_iter().collect()
+    }
+
+    /// Allocation-free iterator over the queued prefills' public view.
+    pub fn prefill_queue_iter(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.prefill_q.iter().map(|t| (t.input_len, t.remaining()))
     }
 
     /// Ground-truth remaining prefill work in seconds (cost-model view;
@@ -313,10 +330,30 @@ impl SimInstance {
     }
 
     /// Apply the effects of a completed iteration at time `now`.
+    ///
+    /// Convenience wrapper over [`SimInstance::finish_iteration_into`]
+    /// that allocates a fresh buffer — tests and one-off callers only; the
+    /// simulator event loop reuses a single buffer across iterations.
     pub fn finish_iteration(&mut self, plan: &IterationPlan, now: f64) -> Vec<Produced> {
+        let mut out = Vec::new();
+        self.finish_iteration_into(plan, now, &mut out);
+        out
+    }
+
+    /// Apply the effects of a completed iteration at time `now`, appending
+    /// the produced events to `out` (cleared first). Allocation-free on
+    /// the steady state: the running batch is compacted in place
+    /// (order-preserving, so preemption order — and therefore the whole
+    /// schedule — is byte-identical to the drain-and-rebuild formulation).
+    pub fn finish_iteration_into(
+        &mut self,
+        plan: &IterationPlan,
+        now: f64,
+        out: &mut Vec<Produced>,
+    ) {
+        out.clear();
         self.busy = false;
         self.iterations += 1;
-        let mut out = Vec::new();
 
         // Decode: every running task emits one token.
         if plan.decode_reqs > 0 {
@@ -325,20 +362,20 @@ impl SimInstance {
             }
             self.last_token_time = Some(now);
         }
-        let mut still_running = Vec::with_capacity(self.running.len());
-        for mut t in self.running.drain(..) {
+        let kv_used = &mut self.kv_used;
+        self.running.retain_mut(|t| {
             t.ctx += 1;
             t.remaining -= 1;
             if t.finished() {
                 let freed = t.ctx as u64;
-                self.kv_used = self.kv_used.saturating_sub(freed);
+                *kv_used = kv_used.saturating_sub(freed);
                 out.push(Produced::FinalToken { id: t.id, freed_kv: freed });
+                false
             } else {
                 out.push(Produced::Token { id: t.id });
-                still_running.push(t);
+                true
             }
-        }
-        self.running = still_running;
+        });
 
         // Prefill: head task advances by the chunk.
         if plan.chunk > 0 {
@@ -353,7 +390,6 @@ impl SimInstance {
                 });
             }
         }
-        out
     }
 
     /// Abandon all queued work (used by failure-injection tests).
@@ -449,7 +485,7 @@ mod tests {
     #[test]
     fn batch_cap_parks_excess_decodes() {
         let mut i = inst();
-        i.cost.max_batch = 2;
+        i.cost_mut().max_batch = 2;
         for r in 0..4 {
             assert!(i.try_reserve_kv(10));
             i.enqueue_decode(RequestId(r), 10, 5);
@@ -521,8 +557,8 @@ mod tests {
         use crate::util::{prop, rng::Rng};
         prop::check_with(77, 64, |rng: &mut Rng| {
             let mut i = inst();
-            i.cost.max_kv_tokens = 10_000;
-            i.cost.max_batch = 8;
+            i.cost_mut().max_kv_tokens = 10_000;
+            i.cost_mut().max_batch = 8;
             let mut now = 0.0;
             let mut next_id = 0u64;
             for _ in 0..rng.index(60) + 10 {

@@ -12,6 +12,7 @@
 //! to work around in vLLM v0.7.3 (§7.1).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::costmodel::CostModel;
 use crate::request::{InstanceId, RequestId, Time};
@@ -37,6 +38,9 @@ pub struct StartedTransfer {
 /// Serialized per-source transfer channels + optional shared buffer cap.
 #[derive(Debug)]
 pub struct TransferFabric {
+    /// Transfer timing — shared (refcounted) with the cluster's instances
+    /// so polling never clones a cost model.
+    cost: Arc<CostModel>,
     /// Per-source channel busy-until times.
     busy_until: Vec<Time>,
     /// Waiting transfers per source (FCFS).
@@ -49,8 +53,9 @@ pub struct TransferFabric {
 }
 
 impl TransferFabric {
-    pub fn new(n_instances: usize) -> Self {
+    pub fn new(n_instances: usize, cost: Arc<CostModel>) -> Self {
         TransferFabric {
+            cost,
             busy_until: vec![0.0; n_instances],
             queues: (0..n_instances).map(|_| VecDeque::new()).collect(),
             buffer_cap_tokens: None,
@@ -67,11 +72,7 @@ impl TransferFabric {
     /// Try to start queued transfers at time `now`. Returns started
     /// transfers (caller schedules their completion events) and failed
     /// request ids (timeout waiting for buffer).
-    pub fn poll(
-        &mut self,
-        now: Time,
-        cost: &CostModel,
-    ) -> (Vec<StartedTransfer>, Vec<RequestId>) {
+    pub fn poll(&mut self, now: Time) -> (Vec<StartedTransfer>, Vec<RequestId>) {
         let mut started = Vec::new();
         let mut failed = Vec::new();
         for src in 0..self.queues.len() {
@@ -94,7 +95,7 @@ impl TransferFabric {
                     }
                 }
                 let t = self.queues[src].pop_front().unwrap();
-                let dur = cost.transfer_time(t.kv_tokens as u64);
+                let dur = self.cost.transfer_time(t.kv_tokens as u64);
                 self.busy_until[src] = now + dur;
                 self.in_flight_tokens += t.kv_tokens as u64;
                 started.push(StartedTransfer {
@@ -133,8 +134,8 @@ impl TransferFabric {
 mod tests {
     use super::*;
 
-    fn fabric(n: usize) -> (TransferFabric, CostModel) {
-        (TransferFabric::new(n), CostModel::h800_llama8b())
+    fn fabric(n: usize) -> TransferFabric {
+        TransferFabric::new(n, Arc::new(CostModel::h800_llama8b()))
     }
 
     fn t(req: u64, from: usize, to: usize, kv: u32, at: f64) -> Transfer {
@@ -149,9 +150,9 @@ mod tests {
 
     #[test]
     fn transfer_starts_immediately_when_free() {
-        let (mut f, cost) = fabric(2);
+        let mut f = fabric(2);
         f.request(t(1, 0, 1, 1000, 0.0));
-        let (started, failed) = f.poll(0.0, &cost);
+        let (started, failed) = f.poll(0.0);
         assert_eq!(started.len(), 1);
         assert!(failed.is_empty());
         assert!(started[0].completes_at > 0.0);
@@ -159,59 +160,59 @@ mod tests {
 
     #[test]
     fn same_source_serializes_fcfs() {
-        let (mut f, cost) = fabric(2);
+        let mut f = fabric(2);
         f.request(t(1, 0, 1, 1000, 0.0));
         f.request(t(2, 0, 1, 1000, 0.0));
-        let (started, _) = f.poll(0.0, &cost);
+        let (started, _) = f.poll(0.0);
         assert_eq!(started.len(), 1);
         assert_eq!(started[0].transfer.req, RequestId(1));
         // Second starts only after the channel frees.
         let free_at = started[0].completes_at;
-        let (none, _) = f.poll(free_at - 1e-9, &cost);
+        let (none, _) = f.poll(free_at - 1e-9);
         assert!(none.is_empty());
         assert_eq!(f.next_wakeup(), Some(free_at));
         f.complete(1000);
-        let (second, _) = f.poll(free_at, &cost);
+        let (second, _) = f.poll(free_at);
         assert_eq!(second.len(), 1);
         assert_eq!(second[0].transfer.req, RequestId(2));
     }
 
     #[test]
     fn different_sources_parallel() {
-        let (mut f, cost) = fabric(3);
+        let mut f = fabric(3);
         f.request(t(1, 0, 2, 1000, 0.0));
         f.request(t(2, 1, 2, 1000, 0.0));
-        let (started, _) = f.poll(0.0, &cost);
+        let (started, _) = f.poll(0.0);
         assert_eq!(started.len(), 2);
     }
 
     #[test]
     fn buffer_cap_blocks_and_timeout_fails() {
-        let (mut f, cost) = fabric(2);
+        let mut f = fabric(2);
         f.buffer_cap_tokens = Some(1500);
         f.fail_timeout = Some(10.0);
         f.request(t(1, 0, 1, 1000, 0.0));
-        let (s1, _) = f.poll(0.0, &cost);
+        let (s1, _) = f.poll(0.0);
         assert_eq!(s1.len(), 1);
         // Second transfer (from the other source so the channel is free)
         // exceeds the shared buffer.
         f.request(t(2, 1, 0, 1000, 0.0));
-        let (s2, f2) = f.poll(1.0, &cost);
+        let (s2, f2) = f.poll(1.0);
         assert!(s2.is_empty() && f2.is_empty());
         // After the timeout it fails.
-        let (s3, f3) = f.poll(12.0, &cost);
+        let (s3, f3) = f.poll(12.0);
         assert!(s3.is_empty());
         assert_eq!(f3, vec![RequestId(2)]);
         // Releasing the buffer lets new transfers in.
         f.complete(1000);
         f.request(t(3, 1, 0, 1000, 12.0));
-        let (s4, _) = f.poll(12.0, &cost);
+        let (s4, _) = f.poll(12.0);
         assert_eq!(s4.len(), 1);
     }
 
     #[test]
     fn next_wakeup_none_when_empty() {
-        let (f, _) = fabric(2);
+        let f = fabric(2);
         assert_eq!(f.next_wakeup(), None);
     }
 }

@@ -55,8 +55,12 @@ fn write_json(opts: &FigOpts, name: &str, v: &Json) {
     }
 }
 
+/// One simulation run for a sweep point. `base` is the shared hardware
+/// cost model — constructed once per figure, not once per run, so the
+/// (hundreds of) sweep jobs only pay refcount bumps inside `build`.
 fn run_once(
     sys: System,
+    base: &CostModel,
     trace: &Trace,
     w: &Workload,
     gpus: usize,
@@ -64,14 +68,7 @@ fn run_once(
     timeline: bool,
 ) -> (SloReport, crate::sim::SimResult) {
     let t = trace.with_rate(rate);
-    let cl = build(
-        sys,
-        gpus,
-        &CostModel::h800_llama8b(),
-        w.ttft_slo,
-        w.tpot_slo,
-        timeline,
-    );
+    let cl = build(sys, gpus, base, w.ttft_slo, w.tpot_slo, timeline);
     let res = cl.run(&t);
     let rep = SloReport::from_records(&res.records, w.ttft_slo, w.tpot_slo, t.duration());
     (rep, res)
@@ -201,7 +198,9 @@ pub fn fig4(opts: &FigOpts) {
     let w = catalog::by_name("azure_conv").unwrap();
     let full = w.generate(opts.seed);
     let clip = full.window(20.0 * 60.0, 40.0 * 60.0);
-    let (_, res) = run_once(System::MinimalLoad, &clip, &w, opts.gpus, clip.rate() * 4.0, true);
+    let base = CostModel::h800_llama8b();
+    let rate = clip.rate() * 4.0;
+    let (_, res) = run_once(System::MinimalLoad, &base, &clip, &w, opts.gpus, rate, true);
     let half = opts.gpus / 2;
     let mut rows = Vec::new();
     let mut peak_p = (0.0, 0usize);
@@ -253,6 +252,7 @@ pub fn fig7(opts: &FigOpts) {
         opts.gpus
     );
     let mut out = Vec::new();
+    let base_cost = CostModel::h800_llama8b();
     for w in catalog::table1() {
         let trace = w.generate(opts.seed).clip_seconds(opts.clip_seconds);
         let base = trace.rate();
@@ -272,7 +272,7 @@ pub fn fig7(opts: &FigOpts) {
             .flat_map(|&s| FIG7_MULTS.iter().map(move |&m| (s, base * m)))
             .collect();
         let reports = parallel_map(jobs.clone(), opts.workers, |&(sys, rate)| {
-            run_once(sys, &trace, &w, opts.gpus, rate, false).0
+            run_once(sys, &base_cost, &trace, &w, opts.gpus, rate, false).0
         });
 
         let mut max_rates = Vec::new();
@@ -299,7 +299,7 @@ pub fn fig7(opts: &FigOpts) {
                 .collect();
             // Max sustainable rate via bisection (headline metric).
             let max_rate = max_sustainable_rate(
-                |rate| run_once(sys, &trace, &w, opts.gpus, rate, false).0,
+                |rate| run_once(sys, &base_cost, &trace, &w, opts.gpus, rate, false).0,
                 base,
                 opts.target,
                 0.05,
@@ -338,6 +338,7 @@ const FIG8_SYSTEMS: [System; 3] = [System::Arrow, System::MinimalLoad, System::R
 pub fn fig8(opts: &FigOpts) {
     println!("Figure 8 — scheduling-strategy ablation (SLO-aware / Minimal Load / Round Robin)");
     let mut out = Vec::new();
+    let base_cost = CostModel::h800_llama8b();
     for name in ["azure_code", "azure_conv"] {
         let w = catalog::by_name(name).unwrap();
         let trace = w.generate(opts.seed).clip_seconds(opts.clip_seconds);
@@ -346,7 +347,7 @@ pub fn fig8(opts: &FigOpts) {
         let jobs: Vec<System> = FIG8_SYSTEMS.to_vec();
         let rates = parallel_map(jobs, opts.workers, |&sys| {
             max_sustainable_rate(
-                |rate| run_once(sys, &trace, &w, opts.gpus, rate, false).0,
+                |rate| run_once(sys, &base_cost, &trace, &w, opts.gpus, rate, false).0,
                 base,
                 opts.target,
                 0.05,
@@ -380,6 +381,7 @@ pub fn fig9(opts: &FigOpts) {
     let w = catalog::by_name("azure_code").unwrap();
     let trace = w.generate(opts.seed).clip_seconds(opts.clip_seconds);
     let base = trace.rate();
+    let base_cost = CostModel::h800_llama8b();
     let mut out = Vec::new();
     let jobs: Vec<(System, usize)> = [System::Arrow, System::MinimalLoad]
         .iter()
@@ -387,7 +389,7 @@ pub fn fig9(opts: &FigOpts) {
         .collect();
     let rates = parallel_map(jobs.clone(), opts.workers, |&(sys, gpus)| {
         max_sustainable_rate(
-            |rate| run_once(sys, &trace, &w, gpus, rate, false).0,
+            |rate| run_once(sys, &base_cost, &trace, &w, gpus, rate, false).0,
             base,
             opts.target,
             0.05,
@@ -438,7 +440,8 @@ pub fn replay(system: System, workload: &str, rate_mult: f64, opts: &FigOpts) ->
     let trace = w.generate(opts.seed).clip_seconds(opts.clip_seconds);
     let rate = trace.rate() * rate_mult;
     let t0 = std::time::Instant::now();
-    let (rep, res) = run_once(system, &trace, &w, opts.gpus, rate, false);
+    let base = CostModel::h800_llama8b();
+    let (rep, res) = run_once(system, &base, &trace, &w, opts.gpus, rate, false);
     let mut s = String::new();
     let _ = writeln!(
         s,

@@ -38,7 +38,11 @@ pub enum Phase {
 
 /// A request as it arrives at the frontend: timestamps and lengths only —
 /// exactly what the production traces record (§3.1).
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `Copy`: the struct is 24 bytes of plain data, and the simulator's hot
+/// path hands requests to the policy on every arrival/prefill-done event —
+/// passing by value must never allocate.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
     pub id: RequestId,
     /// Arrival time (seconds from run start).
@@ -113,7 +117,10 @@ impl RequestRecord {
             input_len: req.input_len,
             output_len: req.output_len,
             first_token: None,
-            token_times: Vec::new(),
+            // The simulator pushes exactly output_len token timestamps for
+            // a finished request; reserving up front keeps the per-token
+            // hot path free of reallocation.
+            token_times: Vec::with_capacity(req.output_len as usize),
             state: RequestState::PrefillQueued,
             prefill_instance: None,
             decode_instance: None,

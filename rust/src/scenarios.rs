@@ -11,6 +11,8 @@
 //! | Minimal Load      | n/2 P + n/2 D, TP=1       | ablation arm (§7.3)       |
 //! | Round Robin       | n/2 P + n/2 D, TP=1       | ablation arm (§7.3)       |
 
+use std::sync::Arc;
+
 use crate::baselines::{ColocatedPolicy, PickRule, StaticDisaggPolicy};
 use crate::coordinator::arrow::{ArrowConfig, ArrowPolicy};
 use crate::costmodel::CostModel;
@@ -80,9 +82,11 @@ pub fn build(
     match system {
         System::Arrow => {
             let policy = ArrowPolicy::new(ArrowConfig::new(ttft_slo, tpot_slo, n_gpus), n_gpus);
+            // One shared cost model behind n refcounts, not n deep clones.
+            let cost = Arc::new(base.clone());
             let instances: Vec<SimInstance> = (0..n_gpus)
                 .map(|i| {
-                    let mut inst = SimInstance::new(InstanceId(i), base.clone());
+                    let mut inst = SimInstance::new(InstanceId(i), Arc::clone(&cost));
                     // SLO-aware mixed-iteration chunk cap: protects TPOT
                     // of decodes co-resident with prefill on P→D / D→P
                     // instances (engine::instance docs).
@@ -104,13 +108,12 @@ pub fn build(
             // vLLM v0.7.3 experimental PD: exactly 1 prefill + 1 decode
             // instance (TP = n/2 each), KV transfer buffer workaround:
             // bounded buffer + reduced batch size (§7.1 footnotes).
-            let cost = base.with_tensor_parallel(n_gpus / 2, 0.88);
-            let mut instances: Vec<SimInstance> = (0..2)
-                .map(|i| SimInstance::new(InstanceId(i), cost.clone()))
+            let mut cost = base.with_tensor_parallel(n_gpus / 2, 0.88);
+            cost.max_batch = 32; // "limiting the batch size"
+            let cost = Arc::new(cost);
+            let instances: Vec<SimInstance> = (0..2)
+                .map(|i| SimInstance::new(InstanceId(i), Arc::clone(&cost)))
                 .collect();
-            for inst in &mut instances {
-                inst.cost.max_batch = 32; // "limiting the batch size"
-            }
             let quirks = SimConfig {
                 record_timeline,
                 drain_timeout: 300.0,

@@ -10,11 +10,41 @@
 //! `Arrival → (q1) prefill chunks → PrefillDone/first token → decode
 //! placement → (q2) KV fetch queue → transfer (c) → (q3) decode batch →
 //! tokens → finish`.
+//!
+//! # Hot-path architecture
+//!
+//! The fig7/8/9 sweeps run hundreds of full-trace simulations, so the
+//! event loop is engineered for events/s (bench target ≥ 1M events/s,
+//! gated by `benches/simulator.rs`):
+//!
+//! * **Calendar arrivals.** The trace is already sorted by arrival time,
+//!   so arrivals are consumed through a cursor (`next_arrival`) merged
+//!   against the event heap, instead of pre-pushing all N arrivals as
+//!   heap entries. The heap holds only in-flight events
+//!   (IterDone/TransferDone/FabricPoll/MonitorTick) — O(instances), not
+//!   O(trace) — which shrinks every push/pop from O(log N) to O(log I).
+//! * **Determinism via `seq`.** Events are totally ordered by
+//!   `(time, seq)` using `f64::total_cmp` (no NaN panic, total order even
+//!   for degenerate inputs). Arrivals conceptually carry lower sequence
+//!   numbers than any runtime-scheduled event, so the cursor merge breaks
+//!   time ties in favour of arrivals — byte-identical to the legacy
+//!   pre-pushed-heap schedule (see `run_reference` + the equivalence
+//!   property test).
+//! * **Zero-clone event handlers.** `Request` is `Copy`; the policy is a
+//!   plain `Box<dyn Policy>` field borrowed disjointly from the instance
+//!   table (no `Option::take` dance, no per-event `Request` clone).
+//! * **Shared cost model.** `Arc<CostModel>` is shared by the instances
+//!   and the transfer fabric — `poll_fabric` no longer deep-clones a cost
+//!   model per call, and `Cluster::homogeneous` no longer deep-clones one
+//!   per instance.
+//! * **Buffer reuse.** Iteration completions write into one reusable
+//!   `Produced` buffer instead of allocating a `Vec` per iteration.
 
 pub mod policy;
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::sync::Arc;
 
 use crate::costmodel::CostModel;
 use crate::engine::{IterationPlan, Produced, SimInstance, Transfer, TransferFabric};
@@ -32,6 +62,8 @@ pub const MONITOR_PERIOD: f64 = 1.0;
 
 #[derive(Debug, Clone, PartialEq)]
 enum EventKind {
+    /// Only used by the reference (pre-pushed) mode; the production loop
+    /// drives arrivals from the trace cursor instead.
     Arrival { idx: usize },
     IterDone { inst: usize },
     TransferDone { req: usize, from: usize, to: usize, kv: u32 },
@@ -48,7 +80,9 @@ struct Event {
 
 impl PartialEq for Event {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        // Must agree with `Ord` (which uses total_cmp): IEEE `==` would
+        // disagree on -0.0/+0.0 and NaN and break the Eq/Ord contract.
+        self.time.total_cmp(&other.time).is_eq() && self.seq == other.seq
     }
 }
 impl Eq for Event {}
@@ -60,9 +94,11 @@ impl PartialOrd for Event {
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         // Total order: time, then insertion sequence (determinism).
+        // `total_cmp` keeps this a *total* order even for degenerate
+        // traces (identical timestamps, or a NaN smuggled in by a broken
+        // generator) — `partial_cmp().unwrap()` here was a latent panic.
         self.time
-            .partial_cmp(&other.time)
-            .unwrap()
+            .total_cmp(&other.time)
             .then(self.seq.cmp(&other.seq))
     }
 }
@@ -125,15 +161,19 @@ pub struct Cluster {
     pub now: Time,
     instances: Vec<SimInstance>,
     fabric: TransferFabric,
-    policy: Option<Box<dyn Policy>>,
+    policy: Box<dyn Policy>,
     records: Vec<RequestRecord>,
     requests: Vec<Request>,
+    /// Cursor into `requests` (sorted by arrival): the calendar queue.
+    next_arrival: usize,
     events: BinaryHeap<Reverse<Event>>,
     seq: u64,
     /// In-flight iteration plan per instance.
     plans: Vec<Option<IterationPlan>>,
     /// Per-target queues of (req idx, from) waiting for target memory (q2).
     fetch_wait: Vec<VecDeque<(usize, usize)>>,
+    /// Reusable buffer for iteration-completion events.
+    produced_buf: Vec<Produced>,
     done: usize,
     timeline: Vec<InstantSnapshot>,
     cfg: SimConfig,
@@ -149,20 +189,24 @@ impl Cluster {
     ) -> Self {
         let n = instances.len();
         assert!(n > 0, "cluster needs at least one instance");
-        let mut fabric = TransferFabric::new(n);
+        // Fabric timing follows instance 0's cost model (homogeneous NIC
+        // assumption) — a refcount bump, not a deep clone.
+        let mut fabric = TransferFabric::new(n, Arc::clone(&instances[0].cost));
         fabric.buffer_cap_tokens = cfg.transfer_buffer_tokens;
         fabric.fail_timeout = cfg.transfer_fail_timeout;
         Cluster {
             now: 0.0,
             instances,
             fabric,
-            policy: Some(policy),
+            policy,
             records: Vec::new(),
             requests: Vec::new(),
+            next_arrival: 0,
             events: BinaryHeap::new(),
             seq: 0,
             plans: (0..n).map(|_| None).collect(),
             fetch_wait: (0..n).map(|_| VecDeque::new()).collect(),
+            produced_buf: Vec::new(),
             done: 0,
             timeline: Vec::new(),
             cfg,
@@ -171,10 +215,11 @@ impl Cluster {
         }
     }
 
-    /// Convenience: n identical instances with the given cost model.
+    /// Convenience: n identical instances sharing one cost model.
     pub fn homogeneous(n: usize, cost: CostModel, policy: Box<dyn Policy>, cfg: SimConfig) -> Self {
+        let cost = Arc::new(cost);
         let instances = (0..n)
-            .map(|i| SimInstance::new(InstanceId(i), cost.clone()))
+            .map(|i| SimInstance::new(InstanceId(i), Arc::clone(&cost)))
             .collect();
         Cluster::new(instances, policy, cfg)
     }
@@ -189,54 +234,86 @@ impl Cluster {
     }
 
     /// Run the trace to completion; consumes the cluster.
-    pub fn run(mut self, trace: &Trace) -> SimResult {
+    pub fn run(self, trace: &Trace) -> SimResult {
+        self.run_mode(trace, false)
+    }
+
+    /// Legacy semantics: pre-push every arrival into the event heap (the
+    /// seed implementation). Kept as the reference for the
+    /// calendar-vs-heap equivalence property test; O(N) heap, slow.
+    #[doc(hidden)]
+    pub fn run_reference(self, trace: &Trace) -> SimResult {
+        self.run_mode(trace, true)
+    }
+
+    fn run_mode(mut self, trace: &Trace, prepush_arrivals: bool) -> SimResult {
         // Normalize ids to vector indices: traces may carry arbitrary ids
         // (they are sorted by arrival), but the event loop indexes by id.
         self.requests = trace
             .requests
             .iter()
             .enumerate()
-            .map(|(i, r)| crate::request::Request {
+            .map(|(i, r)| Request {
                 id: crate::request::RequestId(i as u64),
-                ..r.clone()
+                ..*r
             })
             .collect();
         self.records = self.requests.iter().map(RequestRecord::new).collect();
         self.last_arrival = trace.duration();
 
-        {
-            let mut policy = self.policy.take().unwrap();
-            policy.init(&self.instances);
-            self.policy = Some(policy);
-        }
+        self.policy.init(&self.instances);
 
-        for (idx, r) in self.requests.iter().enumerate() {
-            let t = r.arrival;
-            self.seq += 1;
-            self.events.push(Reverse(Event {
-                time: t,
-                seq: self.seq,
-                kind: EventKind::Arrival { idx },
-            }));
+        if prepush_arrivals {
+            // Reference mode: arrivals occupy seqs 1..=N, exactly like the
+            // seed implementation, so ties resolve identically.
+            for idx in 0..self.requests.len() {
+                let t = self.requests[idx].arrival;
+                self.push(t, EventKind::Arrival { idx });
+            }
+            self.next_arrival = self.requests.len();
         }
         self.push(0.0, EventKind::MonitorTick);
 
         let deadline = self.last_arrival + self.cfg.drain_timeout;
-        while let Some(Reverse(ev)) = self.events.pop() {
-            debug_assert!(ev.time >= self.now - 1e-9, "time went backwards");
-            self.now = ev.time.max(self.now);
-            self.events_processed += 1;
-            if self.now > deadline {
-                break;
-            }
-            match ev.kind {
-                EventKind::Arrival { idx } => self.on_arrival(idx),
-                EventKind::IterDone { inst } => self.on_iter_done(inst),
-                EventKind::TransferDone { req, from, to, kv } => {
-                    self.on_transfer_done(req, from, to, kv)
+        loop {
+            // Merge the arrival calendar with the event heap. Time ties go
+            // to the arrival: in the reference ordering every arrival's
+            // seq precedes every runtime-scheduled event's seq.
+            let next_arrival_t = self.requests.get(self.next_arrival).map(|r| r.arrival);
+            let next_heap_t = self.events.peek().map(|r| r.0.time);
+            let take_arrival = match (next_arrival_t, next_heap_t) {
+                (Some(a), Some(h)) => a <= h,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+
+            if take_arrival {
+                let idx = self.next_arrival;
+                self.next_arrival += 1;
+                self.now = self.requests[idx].arrival.max(self.now);
+                self.events_processed += 1;
+                if self.now > deadline {
+                    break;
                 }
-                EventKind::FabricPoll => self.poll_fabric(),
-                EventKind::MonitorTick => self.on_monitor_tick(),
+                self.on_arrival(idx);
+            } else {
+                let Reverse(ev) = self.events.pop().unwrap();
+                debug_assert!(ev.time >= self.now - 1e-9, "time went backwards");
+                self.now = ev.time.max(self.now);
+                self.events_processed += 1;
+                if self.now > deadline {
+                    break;
+                }
+                match ev.kind {
+                    EventKind::Arrival { idx } => self.on_arrival(idx),
+                    EventKind::IterDone { inst } => self.on_iter_done(inst),
+                    EventKind::TransferDone { req, from, to, kv } => {
+                        self.on_transfer_done(req, from, to, kv)
+                    }
+                    EventKind::FabricPoll => self.poll_fabric(),
+                    EventKind::MonitorTick => self.on_monitor_tick(),
+                }
             }
             if self.done == self.records.len() {
                 break;
@@ -251,11 +328,7 @@ impl Cluster {
         }
 
         let total_iterations = self.instances.iter().map(|i| i.iterations).sum();
-        let total_flips = self
-            .policy
-            .as_ref()
-            .map(|p| p.flip_count())
-            .unwrap_or(0);
+        let total_flips = self.policy.flip_count();
         SimResult {
             records: self.records,
             timeline: self.timeline,
@@ -269,10 +342,10 @@ impl Cluster {
     // ------------------------------------------------------------- events
 
     fn on_arrival(&mut self, idx: usize) {
-        let req = self.requests[idx].clone();
-        let mut policy = self.policy.take().unwrap();
-        let target = policy.place_prefill(self.now, &req, &self.instances);
-        self.policy = Some(policy);
+        let req = self.requests[idx];
+        // Disjoint field borrows: the policy reads the instance table
+        // while being mutated itself — no take()/put-back, no clone.
+        let target = self.policy.place_prefill(self.now, &req, &self.instances);
 
         let inst = &mut self.instances[target.0];
         if req.input_len as u64 + 1 > inst.cost.max_kv_tokens {
@@ -289,9 +362,12 @@ impl Cluster {
 
     fn on_iter_done(&mut self, i: usize) {
         let plan = self.plans[i].take().expect("IterDone without plan");
-        let produced = self.instances[i].finish_iteration(&plan, self.now);
+        // Reuse one Produced buffer across iterations; it is moved out of
+        // `self` while handlers below re-borrow `self` mutably.
+        let mut produced = std::mem::take(&mut self.produced_buf);
+        self.instances[i].finish_iteration_into(&plan, self.now, &mut produced);
         let mut freed_memory = false;
-        for p in produced {
+        for p in produced.drain(..) {
             match p {
                 Produced::Token { id } => {
                     self.records[id.0 as usize].token_times.push(self.now);
@@ -308,6 +384,7 @@ impl Cluster {
                 }
             }
         }
+        self.produced_buf = produced;
         if freed_memory {
             self.start_fetches(i);
         }
@@ -317,7 +394,7 @@ impl Cluster {
     /// First token is emitted at prefill completion (paper Fig. 6 step c);
     /// then the decode sub-request is placed (step d).
     fn on_prefill_done(&mut self, idx: usize, prefill_inst: usize, kv_tokens: u32) {
-        let req = self.requests[idx].clone();
+        let req = self.requests[idx];
         {
             let rec = &mut self.records[idx];
             rec.first_token = Some(self.now);
@@ -336,14 +413,12 @@ impl Cluster {
             return;
         }
 
-        let mut policy = self.policy.take().unwrap();
-        let target = policy.place_decode(
+        let target = self.policy.place_decode(
             self.now,
             &req,
             InstanceId(prefill_inst),
             &self.instances,
         );
-        self.policy = Some(policy);
         self.records[idx].decode_instance = Some(target);
 
         let remaining = req.output_len - 1;
@@ -384,8 +459,8 @@ impl Cluster {
     }
 
     fn poll_fabric(&mut self) {
-        let cost = self.instances[0].cost.clone();
-        let (started, failed) = self.fabric.poll(self.now, &cost);
+        // The fabric owns its (shared) cost model — nothing cloned here.
+        let (started, failed) = self.fabric.poll(self.now);
         for s in started {
             self.push(
                 s.completes_at,
@@ -413,7 +488,7 @@ impl Cluster {
 
     fn on_transfer_done(&mut self, idx: usize, from: usize, to: usize, kv: u32) {
         self.fabric.complete(kv);
-        let req = self.requests[idx].clone();
+        let req = self.requests[idx];
         // Source frees its parked copy.
         self.instances[from].migration_out_done(kv);
         // Target's reservation was made at fetch admission; release the
@@ -431,12 +506,10 @@ impl Cluster {
     }
 
     fn on_monitor_tick(&mut self) {
-        let mut policy = self.policy.take().unwrap();
-        policy.on_tick(self.now, &self.instances);
-        let pools = policy.pool_sizes();
-        self.policy = Some(policy);
+        self.policy.on_tick(self.now, &self.instances);
 
         if self.cfg.record_timeline {
+            let pools = self.policy.pool_sizes();
             self.timeline.push(InstantSnapshot {
                 time: self.now,
                 per_instance: self
@@ -535,6 +608,106 @@ mod tests {
         let b = run();
         assert_eq!(a.events_processed, b.events_processed);
         for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.token_times, y.token_times);
+        }
+    }
+
+    /// The calendar-arrival (cursor) loop must reproduce the legacy
+    /// pre-pushed-heap schedule *exactly*: same event count, same
+    /// per-request token timestamps — across seeds and policies.
+    #[test]
+    fn calendar_arrivals_match_heap_reference() {
+        use crate::util::rng::Rng;
+        for seed in 3..=10u64 {
+            // Vary the workload shape with the seed so the equivalence is
+            // exercised on different burst structures.
+            let mut rng = Rng::new(seed);
+            let n = 60 + rng.index(80);
+            let trace = smoke(n, 1 + rng.index(3)).generate(seed);
+            fn mk(kind: usize) -> Box<dyn Policy> {
+                if kind == 0 {
+                    Box::new(AllToOne)
+                } else {
+                    Box::new(StaticSplit { prefill: vec![0], decode: vec![1] })
+                }
+            }
+            for policy_kind in 0..2 {
+                let cursor =
+                    Cluster::homogeneous(2, small_cost(), mk(policy_kind), SimConfig::default())
+                        .run(&trace);
+                let heap =
+                    Cluster::homogeneous(2, small_cost(), mk(policy_kind), SimConfig::default())
+                        .run_reference(&trace);
+                assert_eq!(
+                    cursor.events_processed, heap.events_processed,
+                    "seed {seed} policy {policy_kind}: event counts diverge"
+                );
+                assert_eq!(cursor.total_iterations, heap.total_iterations);
+                for (x, y) in cursor.records.iter().zip(&heap.records) {
+                    assert_eq!(
+                        x.token_times, y.token_times,
+                        "seed {seed} policy {policy_kind} req {}: schedules diverge",
+                        x.id
+                    );
+                    assert_eq!(x.state, y.state);
+                }
+            }
+        }
+    }
+
+    /// Regression for the latent `partial_cmp().unwrap()` panic: events
+    /// must stay totally ordered even for NaN / identical timestamps.
+    #[test]
+    fn event_order_is_total_even_for_degenerate_times() {
+        let e = |time: f64, seq: u64| Event {
+            time,
+            seq,
+            kind: EventKind::FabricPoll,
+        };
+        use std::cmp::Ordering;
+        // Identical time: seq breaks the tie.
+        assert_eq!(e(1.0, 1).cmp(&e(1.0, 2)), Ordering::Less);
+        // NaN orders after every real number under total_cmp — no panic.
+        assert_eq!(e(f64::NAN, 1).cmp(&e(1e300, 2)), Ordering::Greater);
+        assert_eq!(e(f64::NAN, 1).cmp(&e(f64::NAN, 1)), Ordering::Equal);
+        // -0.0 < +0.0 under total_cmp; ordering stays consistent.
+        assert_eq!(e(-0.0, 5).cmp(&e(0.0, 1)), Ordering::Less);
+    }
+
+    /// A degenerate burst — every request arriving at the same instant
+    /// (0-length burst window) — must order deterministically and finish.
+    #[test]
+    fn identical_timestamp_burst_orders_deterministically() {
+        let reqs: Vec<Request> = (0..40)
+            .map(|i| Request::new(i, if i == 0 { 0.0 } else { 5.0 }, 64, 4))
+            .collect();
+        let trace = Trace::new("burst", reqs);
+        let run = || {
+            Cluster::homogeneous(
+                2,
+                small_cost(),
+                Box::new(StaticSplit { prefill: vec![0], decode: vec![1] }),
+                SimConfig::default(),
+            )
+            .run(&trace)
+        };
+        let a = run();
+        let b = run();
+        assert!(a.records.iter().all(|r| r.finished()), "burst completes");
+        assert_eq!(a.events_processed, b.events_processed);
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.token_times, y.token_times);
+        }
+        // The cursor loop also matches the heap reference on ties.
+        let c = Cluster::homogeneous(
+            2,
+            small_cost(),
+            Box::new(StaticSplit { prefill: vec![0], decode: vec![1] }),
+            SimConfig::default(),
+        )
+        .run_reference(&trace);
+        assert_eq!(a.events_processed, c.events_processed);
+        for (x, y) in a.records.iter().zip(&c.records) {
             assert_eq!(x.token_times, y.token_times);
         }
     }

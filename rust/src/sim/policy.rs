@@ -6,6 +6,19 @@
 //! move between pools. This split is the paper's stateless-instance
 //! insight (§3.4): roles live in the scheduler's pool bookkeeping, never
 //! in the engine.
+//!
+//! # Contract with the event loop
+//!
+//! * **Determinism.** A policy must be a pure function of its own state
+//!   and the arguments it is handed — no wall clock, no ambient
+//!   randomness. The simulator's byte-identical-schedule guarantee
+//!   (ROADMAP "Performance architecture") holds only under this contract.
+//! * **Hot path.** `place_prefill`/`place_decode` run once per request;
+//!   implementations should avoid per-call allocation (see
+//!   `Pools::members_iter` / `SimInstance::prefill_queue_iter` for
+//!   allocation-free cluster queries) and must never panic on degenerate
+//!   float comparisons — use `f64::total_cmp`, not
+//!   `partial_cmp().unwrap()`.
 
 use crate::engine::SimInstance;
 use crate::request::{InstanceId, Request, Time};

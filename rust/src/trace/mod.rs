@@ -64,7 +64,7 @@ impl Trace {
             .iter()
             .map(|r| Request {
                 arrival: r.arrival * k,
-                ..r.clone()
+                ..*r
             })
             .collect();
         Trace {
@@ -82,7 +82,7 @@ impl Trace {
                 .requests
                 .iter()
                 .filter(|r| r.arrival <= secs)
-                .cloned()
+                .copied()
                 .collect(),
         }
     }
@@ -98,7 +98,7 @@ impl Trace {
                 .filter(|r| r.arrival >= from && r.arrival < to)
                 .map(|r| Request {
                     arrival: r.arrival - from,
-                    ..r.clone()
+                    ..*r
                 })
                 .collect(),
         }
@@ -108,7 +108,7 @@ impl Trace {
     pub fn take(&self, n: usize) -> Trace {
         Trace {
             name: self.name.clone(),
-            requests: self.requests.iter().take(n).cloned().collect(),
+            requests: self.requests.iter().take(n).copied().collect(),
         }
     }
 

@@ -2,7 +2,10 @@
 //!
 //! Used by the figure harness to run independent (system × rate × trace)
 //! simulations concurrently. Work-stealing via a shared atomic index keeps
-//! workers busy regardless of per-job variance.
+//! workers busy regardless of per-job variance; results are accumulated in
+//! per-worker buffers and merged once per worker — the previous
+//! per-item `Mutex<Vec<Option<R>>>` serialized every completion through
+//! one lock, which showed up once simulations got fast enough.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -28,26 +31,33 @@ where
     }
     let workers = workers.clamp(1, n);
     let next = AtomicUsize::new(0);
-    let out: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    // Each worker drains the shared index into a private (index, result)
+    // buffer and appends it to `chunks` exactly once, at exit: lock
+    // contention is O(workers), not O(items).
+    let chunks: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
 
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(&items[i])));
                 }
-                let r = f(&items[i]);
-                out.lock().unwrap()[i] = Some(r);
+                if !local.is_empty() {
+                    chunks.lock().unwrap().extend(local);
+                }
             });
         }
     });
 
-    out.into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|x| x.expect("worker missed a slot"))
-        .collect()
+    let mut pairs = chunks.into_inner().unwrap();
+    assert_eq!(pairs.len(), n, "worker missed a slot");
+    pairs.sort_unstable_by_key(|&(i, _)| i);
+    pairs.into_iter().map(|(_, r)| r).collect()
 }
 
 #[cfg(test)]
@@ -82,5 +92,22 @@ mod tests {
             x
         });
         assert_eq!(out.len(), 32);
+    }
+
+    #[test]
+    fn more_workers_than_items_is_fine() {
+        let out = parallel_map(vec![5, 6], 64, |&x| x);
+        assert_eq!(out, vec![5, 6]);
+    }
+
+    #[test]
+    fn order_preserved_under_reverse_completion() {
+        // Early items sleep longest: completion order is the reverse of
+        // the input order, which the index merge must undo.
+        let out = parallel_map((0..16u64).collect::<Vec<_>>(), 8, |&x| {
+            std::thread::sleep(std::time::Duration::from_millis(16 - x));
+            x
+        });
+        assert_eq!(out, (0..16).collect::<Vec<_>>());
     }
 }
