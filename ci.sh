@@ -26,6 +26,13 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo "== simulator bench (smoke gate) =="
     ARROW_BENCH_SMOKE=1 ARROW_BENCH_OUT=/tmp/BENCH_simulator_smoke.json \
         cargo bench --bench simulator
+
+    # Scheduler decision-latency gate: exits non-zero if any placement
+    # decision path drops below ARROW_BENCH_MIN_DPS decisions/s. Emits
+    # BENCH_scheduler.json (tracked PR over PR, like BENCH_simulator.json).
+    echo "== scheduler bench (smoke gate) =="
+    ARROW_BENCH_SMOKE=1 ARROW_BENCH_OUT=BENCH_scheduler.json \
+        cargo bench --bench scheduler
 fi
 
 echo "CI OK"

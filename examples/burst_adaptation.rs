@@ -6,6 +6,13 @@
 //! P→D flips as decode load catches up — the temporal-misalignment
 //! opportunity Fig. 4 motivates.
 //!
+//! The `ArrowPolicy` making these flips is the substrate-agnostic one
+//! from `arrow::sched` (PR 2): the simulator feeds it `SimView`
+//! snapshots here, and `arrow serve` feeds the identical object
+//! `ServerView` snapshots in production — the same pool timeline this
+//! demo prints is what the live server's `/metrics` `pools` field
+//! exposes.
+//!
 //! Run with: `cargo run --release --example burst_adaptation`
 
 use arrow::costmodel::CostModel;

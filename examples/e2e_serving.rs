@@ -4,6 +4,12 @@
 //! output determinism across the cross-engine KV handoff, and report
 //! latency/throughput. Recorded in EXPERIMENTS.md §E2E.
 //!
+//! Since PR 2 the coordinator on this path runs the *actual*
+//! `ArrowPolicy` (elastic pools + Alg. 1–4) through the shared `sched`
+//! layer — the `/metrics` scrape at the end shows the live pool sizes
+//! `[P, D, P→D, D→P]` and flip count coming from the policy's own
+//! bookkeeping, not a server-side reimplementation.
+//!
 //! Run after `make artifacts` with:
 //!   `cargo run --release --example e2e_serving`
 
@@ -147,7 +153,7 @@ fn main() {
         "greedy decoding must be deterministic"
     );
 
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    latencies.sort_by(|a, b| a.total_cmp(b));
     println!("\n=== E2E serving report ===");
     println!("requests        : {N_REQUESTS} (concurrency {CONCURRENCY}), 0 failures");
     println!("output tokens   : {tokens_out}");
@@ -159,6 +165,23 @@ fn main() {
     println!("determinism     : replay of request 0 matched token-for-token");
     let metrics = http_get(&addr, "/metrics").unwrap();
     println!("server /metrics : {metrics}");
-    println!("\nE2E OK — full stack (HTTP → coordinator → PJRT engines → KV handoff) verified.");
+
+    // The server runs the shared Arrow policy: pool sizes must partition
+    // the engine set and the latency percentiles must be populated.
+    let m = Json::parse(&metrics).unwrap();
+    let pools: Vec<u64> = m
+        .get("pools")
+        .as_arr()
+        .expect("pools [P, D, P>D, D>P] in /metrics")
+        .iter()
+        .filter_map(|x| x.as_u64())
+        .collect();
+    assert_eq!(pools.iter().sum::<u64>(), 2, "pools partition 2 engines");
+    assert!(m.get("p99_ttft_s").as_f64().is_some(), "p99 TTFT reported");
+    println!(
+        "arrow pools     : [P,D,P>D,D>P]={pools:?} flips={}",
+        m.get("flips").as_f64().unwrap_or(0.0)
+    );
+    println!("\nE2E OK — full stack (HTTP → Arrow policy → PJRT engines → KV handoff) verified.");
     std::process::exit(0);
 }

@@ -3,16 +3,32 @@
 //! The Arrow global scheduler sits on the request path of every arriving
 //! request; its placement decision must be negligible next to a ~10 ms
 //! model iteration. Target (DESIGN.md §9): well under 1 ms/decision even
-//! on a loaded 64-instance cluster.
+//! on a loaded 64-instance cluster. Decisions run through the same
+//! `ClusterView` indirection as production (`sim::SimView`), so the
+//! bench gates the view dispatch overhead too.
+//!
+//! Modes (mirrors `benches/simulator.rs`):
+//! * default — full measurement, emitting `BENCH_scheduler.json` so the
+//!   decision-latency trajectory is tracked PR over PR;
+//! * `ARROW_BENCH_SMOKE=1` — CI gate: quick windows, process exits
+//!   non-zero if any placement decision path (`place_prefill` /
+//!   `place_decode`) drops below `ARROW_BENCH_MIN_DPS` (default 10,000)
+//!   decisions/s — i.e. 100 µs/decision, 10× headroom on the 1 ms target.
+//!
+//! `ARROW_BENCH_OUT` overrides the JSON output path.
 
 use arrow::coordinator::arrow::{ArrowConfig, ArrowPolicy};
 use arrow::coordinator::predictor::TtftPredictor;
 use arrow::costmodel::CostModel;
 use arrow::engine::SimInstance;
+use arrow::json::Json;
 use arrow::request::{InstanceId, Request, RequestId};
-use arrow::sim::policy::Policy;
-use arrow::util::benchkit::{black_box, Bencher};
+use arrow::sched::Policy;
+use arrow::sim::SimView;
+use arrow::util::benchkit::{black_box, env_f64, Bencher};
 use arrow::util::rng::Rng;
+
+const DEFAULT_MIN_DPS: f64 = 10_000.0;
 
 fn loaded_cluster(n: usize, queue_depth: usize, seed: u64) -> Vec<SimInstance> {
     let mut rng = Rng::new(seed);
@@ -34,40 +50,99 @@ fn loaded_cluster(n: usize, queue_depth: usize, seed: u64) -> Vec<SimInstance> {
 }
 
 fn main() {
-    let mut b = Bencher::new();
-    println!("== scheduler decision latency (L3 hot path) ==");
+    let smoke = std::env::var("ARROW_BENCH_SMOKE").map_or(false, |v| v != "0" && !v.is_empty());
+    let min_dps = env_f64("ARROW_BENCH_MIN_DPS", DEFAULT_MIN_DPS);
+    let mut b = if smoke { Bencher::quick() } else { Bencher::new() };
+    println!(
+        "== scheduler decision latency (L3 hot path){} ==",
+        if smoke { " (smoke)" } else { "" }
+    );
 
+    let mut rows = Vec::new();
+    // Worst observed placement-decision throughput — the gated quantity.
+    let mut worst_placement_dps = f64::INFINITY;
     for &(n, depth) in &[(8usize, 4usize), (16, 8), (64, 16)] {
         let instances = loaded_cluster(n, depth, 7);
         let mut policy = ArrowPolicy::new(ArrowConfig::new(3.0, 0.1, n), n);
-        policy.init(&instances);
+        policy.init(&SimView(&instances));
         let mut rng = Rng::new(1);
         let mut id = 0u64;
-        b.bench(&format!("arrow place_prefill n={n} depth={depth}"), || {
+        let mut push_row = |name: &str, dps: f64, gated: bool| {
+            rows.push(Json::obj(vec![
+                ("decision", Json::Str(name.into())),
+                ("instances", Json::Num(n as f64)),
+                ("queue_depth", Json::Num(depth as f64)),
+                ("decisions_per_sec", Json::Num(dps)),
+                ("gated", Json::Bool(gated)),
+            ]));
+        };
+        let r = b.bench(&format!("arrow place_prefill n={n} depth={depth}"), || {
             id += 1;
             let req = Request::new(id, 0.0, rng.int_range(100, 30_000) as u32, 50);
-            black_box(policy.place_prefill(0.0, &req, &instances))
+            black_box(policy.place_prefill(0.0, &req, &SimView(&instances)))
         });
-        b.bench(&format!("arrow place_decode  n={n} depth={depth}"), || {
+        worst_placement_dps = worst_placement_dps.min(r.per_sec());
+        push_row("place_prefill", r.per_sec(), true);
+        let r = b.bench(&format!("arrow place_decode  n={n} depth={depth}"), || {
             id += 1;
             let req = Request::new(id, 0.0, 2_000, 50);
-            black_box(policy.place_decode(0.0, &req, InstanceId(0), &instances))
+            black_box(policy.place_decode(0.0, &req, InstanceId(0), &SimView(&instances)))
         });
-        b.bench(&format!("arrow on_tick       n={n} depth={depth}"), || {
-            policy.on_tick(1.0, &instances);
+        worst_placement_dps = worst_placement_dps.min(r.per_sec());
+        push_row("place_decode", r.per_sec(), true);
+        let r = b.bench(&format!("arrow on_tick       n={n} depth={depth}"), || {
+            policy.on_tick(1.0, &SimView(&instances));
         });
+        push_row("on_tick", r.per_sec(), false);
     }
 
     println!("\n== TTFT predictor ==");
     let cost = CostModel::h800_llama8b();
     let pred = TtftPredictor::profile(&cost, 2048);
     let queue: Vec<(u32, u32)> = (0..32).map(|i| (1_000 + i * 500, 800 + i * 100)).collect();
-    b.bench("predictor profile+fit", || {
+    let r = b.bench("predictor profile+fit", || {
         black_box(TtftPredictor::profile(&cost, 2048))
     });
-    b.bench("predictor queue_delay(32 queued)", || {
+    let profile_dps = r.per_sec();
+    let r = b.bench("predictor queue_delay(32 queued)", || {
         black_box(pred.queue_delay(&queue))
     });
+    let qd_dps = r.per_sec();
 
+    let out = Json::obj(vec![
+        ("bench", Json::Str("scheduler".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("target_decisions_per_sec", Json::Num(min_dps)),
+        (
+            "worst_placement_decisions_per_sec",
+            Json::Num(worst_placement_dps),
+        ),
+        ("decisions", Json::Arr(rows)),
+        (
+            "predictor",
+            Json::obj(vec![
+                ("profile_fits_per_sec", Json::Num(profile_dps)),
+                ("queue_delay_32_per_sec", Json::Num(qd_dps)),
+            ]),
+        ),
+    ]);
+    let path =
+        std::env::var("ARROW_BENCH_OUT").unwrap_or_else(|_| "BENCH_scheduler.json".into());
+    match std::fs::write(&path, out.encode()) {
+        Ok(()) => println!("\n-> {path}"),
+        Err(e) => eprintln!("warn: cannot write {path}: {e}"),
+    }
+
+    // Only the smoke (CI) mode gates; a full measurement run must always
+    // succeed so the JSON can be regenerated on slower hardware.
+    if smoke && worst_placement_dps < min_dps {
+        eprintln!(
+            "FAIL: slowest placement decision {worst_placement_dps:.0}/s below the {min_dps:.0} gate"
+        );
+        std::process::exit(1);
+    }
+    if smoke {
+        println!("gate OK: slowest placement {worst_placement_dps:.0} decisions/s >= {min_dps:.0}");
+    }
     println!("\ntarget: every decision well under 1ms — see DESIGN.md §9.");
 }

@@ -19,16 +19,9 @@ use arrow::costmodel::CostModel;
 use arrow::json::Json;
 use arrow::scenarios::{build, System};
 use arrow::trace::catalog;
-use arrow::util::benchkit::fmt_dur;
+use arrow::util::benchkit::{env_f64, fmt_dur};
 
 const DEFAULT_MIN_EPS: f64 = 1.0e6;
-
-fn env_f64(key: &str, default: f64) -> f64 {
-    std::env::var(key)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
-}
 
 fn main() {
     let smoke = std::env::var("ARROW_BENCH_SMOKE").map_or(false, |v| v != "0" && !v.is_empty());

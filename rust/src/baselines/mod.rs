@@ -1,13 +1,12 @@
 //! Baseline systems the paper compares against (§7.1) plus the ablation
 //! strategies (§7.3). All are [`Policy`] implementations over the same
-//! engine substrate; architectural differences (TP degree, static roles,
-//! transfer quirks, engine efficiency) are encoded in the cluster built by
-//! [`crate::scenarios`].
+//! substrate-agnostic [`ClusterView`] interface as Arrow; architectural
+//! differences (TP degree, static roles, transfer quirks, engine
+//! efficiency) are encoded in the cluster built by [`crate::scenarios`].
 
 use crate::coordinator::predictor::TtftPredictor;
-use crate::engine::SimInstance;
 use crate::request::{InstanceId, Request, Time};
-use crate::sim::policy::Policy;
+use crate::sched::{ClusterView, Policy, ProfileSource};
 
 // ---------------------------------------------------------------------------
 // vLLM-colocated: one fat TP=8 instance, chunked prefill, decode priority.
@@ -34,7 +33,7 @@ impl Policy for ColocatedPolicy {
         "vllm-colocated"
     }
 
-    fn place_prefill(&mut self, _: Time, _: &Request, _: &[SimInstance]) -> InstanceId {
+    fn place_prefill(&mut self, _: Time, _: &Request, _: &dyn ClusterView) -> InstanceId {
         let id = InstanceId(self.next % self.n);
         self.next += 1;
         id
@@ -45,7 +44,7 @@ impl Policy for ColocatedPolicy {
         _: Time,
         _: &Request,
         prefill_instance: InstanceId,
-        _: &[SimInstance],
+        _: &dyn ClusterView,
     ) -> InstanceId {
         prefill_instance // colocated: no migration ever
     }
@@ -105,15 +104,13 @@ impl Policy for StaticDisaggPolicy {
         self.name
     }
 
-    fn init(&mut self, instances: &[SimInstance]) {
-        let i0 = self.prefill_ids[0];
-        self.predictor = Some(TtftPredictor::profile(
-            &instances[i0].cost,
-            instances[i0].chunk_tokens,
-        ));
+    fn init(&mut self, profile: &dyn ProfileSource) {
+        // Static pools are homogeneous within a scenario: one curve,
+        // fitted for the first prefill instance, serves the whole pool.
+        self.predictor = Some(profile.fit_predictor(self.prefill_ids[0]));
     }
 
-    fn place_prefill(&mut self, _: Time, _: &Request, instances: &[SimInstance]) -> InstanceId {
+    fn place_prefill(&mut self, _: Time, _: &Request, view: &dyn ClusterView) -> InstanceId {
         match self.rule {
             PickRule::RoundRobin => {
                 let id = self.prefill_ids[self.next_p % self.prefill_ids.len()];
@@ -127,8 +124,8 @@ impl Policy for StaticDisaggPolicy {
                     .iter()
                     .copied()
                     .min_by(|&a, &b| {
-                        let da = pred.queue_delay_iter(instances[a].prefill_queue_iter());
-                        let db = pred.queue_delay_iter(instances[b].prefill_queue_iter());
+                        let da = pred.queue_delay_view(view, a);
+                        let db = pred.queue_delay_view(view, b);
                         // total_cmp: a NaN prediction must never panic
                         // the placement path.
                         da.total_cmp(&db)
@@ -144,7 +141,7 @@ impl Policy for StaticDisaggPolicy {
         _: Time,
         _: &Request,
         _prefill: InstanceId,
-        instances: &[SimInstance],
+        view: &dyn ClusterView,
     ) -> InstanceId {
         match self.rule {
             PickRule::RoundRobin => {
@@ -157,7 +154,7 @@ impl Policy for StaticDisaggPolicy {
                     .decode_ids
                     .iter()
                     .copied()
-                    .min_by_key(|&i| instances[i].running_tokens())
+                    .min_by_key(|&i| view.running_tokens(i))
                     .unwrap();
                 InstanceId(id)
             }
@@ -169,7 +166,9 @@ impl Policy for StaticDisaggPolicy {
 mod tests {
     use super::*;
     use crate::costmodel::CostModel;
+    use crate::engine::SimInstance;
     use crate::request::RequestId;
+    use crate::sim::SimView;
 
     fn insts(n: usize) -> Vec<SimInstance> {
         (0..n)
@@ -185,11 +184,11 @@ mod tests {
     fn colocated_keeps_request_on_one_instance() {
         let is = insts(2);
         let mut p = ColocatedPolicy::new(2);
-        let a = p.place_prefill(0.0, &req(0), &is);
-        let d = p.place_decode(0.0, &req(0), a, &is);
+        let a = p.place_prefill(0.0, &req(0), &SimView(&is));
+        let d = p.place_decode(0.0, &req(0), a, &SimView(&is));
         assert_eq!(a, d);
         // Round-robins across engines.
-        let b = p.place_prefill(0.0, &req(1), &is);
+        let b = p.place_prefill(0.0, &req(1), &SimView(&is));
         assert_ne!(a, b);
     }
 
@@ -197,13 +196,13 @@ mod tests {
     fn round_robin_cycles() {
         let is = insts(4);
         let mut p = StaticDisaggPolicy::new("rr", vec![0, 1], vec![2, 3], PickRule::RoundRobin);
-        p.init(&is);
-        let t1 = p.place_prefill(0.0, &req(0), &is);
-        let t2 = p.place_prefill(0.0, &req(1), &is);
-        let t3 = p.place_prefill(0.0, &req(2), &is);
+        p.init(&SimView(&is));
+        let t1 = p.place_prefill(0.0, &req(0), &SimView(&is));
+        let t2 = p.place_prefill(0.0, &req(1), &SimView(&is));
+        let t3 = p.place_prefill(0.0, &req(2), &SimView(&is));
         assert_eq!((t1.0, t2.0, t3.0), (0, 1, 0));
-        let d1 = p.place_decode(0.0, &req(0), t1, &is);
-        let d2 = p.place_decode(0.0, &req(1), t2, &is);
+        let d1 = p.place_decode(0.0, &req(0), t1, &SimView(&is));
+        let d2 = p.place_decode(0.0, &req(1), t2, &SimView(&is));
         assert_eq!((d1.0, d2.0), (2, 3));
     }
 
@@ -213,22 +212,25 @@ mod tests {
         is[0].enqueue_prefill(RequestId(9), 80_000);
         let mut p =
             StaticDisaggPolicy::new("ml", vec![0, 1], vec![2, 3], PickRule::MinimalLoad);
-        p.init(&is);
-        assert_eq!(p.place_prefill(0.0, &req(0), &is).0, 1);
+        p.init(&SimView(&is));
+        assert_eq!(p.place_prefill(0.0, &req(0), &SimView(&is)).0, 1);
         assert!(is[2].try_reserve_kv(50_000));
         is[2].enqueue_decode(RequestId(8), 50_000, 100);
-        assert_eq!(p.place_decode(0.0, &req(0), InstanceId(1), &is).0, 3);
+        assert_eq!(
+            p.place_decode(0.0, &req(0), InstanceId(1), &SimView(&is)).0,
+            3
+        );
     }
 
     #[test]
     fn static_roles_never_cross() {
         let is = insts(4);
         let mut p = StaticDisaggPolicy::new("ml", vec![0, 1], vec![2, 3], PickRule::MinimalLoad);
-        p.init(&is);
+        p.init(&SimView(&is));
         for i in 0..20 {
-            let t = p.place_prefill(0.0, &req(i), &is);
+            let t = p.place_prefill(0.0, &req(i), &SimView(&is));
             assert!(t.0 < 2);
-            let d = p.place_decode(0.0, &req(i), t, &is);
+            let d = p.place_decode(0.0, &req(i), t, &SimView(&is));
             assert!(d.0 >= 2);
         }
     }

@@ -11,12 +11,18 @@
 //!   settling, idle-prefill harvesting (§5.5),
 //! * the overload policy: decode is prioritized, D→P flips are abandoned
 //!   when decode load is high (§5.5 "Scheduling in Overload Scenario").
+//!
+//! The policy is **substrate-agnostic** (PR 2): it reads the cluster
+//! exclusively through [`ClusterView`] and profiles through
+//! [`ProfileSource`], so the identical object schedules both the
+//! discrete-event simulator (via `sim::SimView`) and the live PJRT
+//! server (via `server::view::ServerView`). It must never import
+//! `SimInstance` or any other engine type.
 
 use super::pools::{Pool, Pools};
 use super::predictor::TtftPredictor;
-use crate::engine::SimInstance;
 use crate::request::{InstanceId, Request, Time};
-use crate::sim::policy::Policy;
+use crate::sched::{ClusterView, Policy, ProfileSource};
 
 /// Tunables for the Arrow policy (defaults follow the paper's text).
 #[derive(Debug, Clone)]
@@ -94,10 +100,9 @@ impl ArrowPolicy {
 
     /// Predicted prefill queueing delay of an instance (Insight 1),
     /// using that instance's own profiled curve (heterogeneous-safe).
-    /// Streams the queue view — no per-call `Vec`.
-    fn prefill_delay(&self, inst: &SimInstance) -> f64 {
-        self.predictor(inst.id.0)
-            .queue_delay_iter(inst.prefill_queue_iter())
+    /// Streams the snapshot's queue view — no per-call `Vec`.
+    fn prefill_delay(&self, view: &dyn ClusterView, inst: usize) -> f64 {
+        self.predictor(inst).queue_delay_view(view, inst)
     }
 
     /// Argmin of predicted prefill delay over a pool. Runs once per
@@ -107,11 +112,11 @@ impl ArrowPolicy {
     fn min_prefill_delay(
         &self,
         pool: Pool,
-        instances: &[SimInstance],
+        view: &dyn ClusterView,
     ) -> Option<(InstanceId, f64)> {
         self.pools
             .members_iter(pool)
-            .map(|id| (id, self.prefill_delay(&instances[id.0])))
+            .map(|id| (id, self.prefill_delay(view, id.0)))
             .min_by(|a, b| a.1.total_cmp(&b.1))
     }
 
@@ -119,17 +124,17 @@ impl ArrowPolicy {
     fn min_running_tokens(
         &self,
         pool: Pool,
-        instances: &[SimInstance],
+        view: &dyn ClusterView,
     ) -> Option<(InstanceId, u64)> {
         self.pools
             .members_iter(pool)
-            .map(|id| (id, instances[id.0].running_tokens()))
+            .map(|id| (id, view.running_tokens(id.0)))
             .min_by_key(|&(_, t)| t)
     }
 
     /// Is cluster-wide decode load low enough to steal an instance for
     /// prefill? (overload guard in Alg. 1, §5.5)
-    fn decode_load_low(&self, instances: &[SimInstance]) -> bool {
+    fn decode_load_low(&self, view: &dyn ClusterView) -> bool {
         // Mean utilization relative to each instance's own capacity,
         // accumulated in one allocation-free pass over D ∪ P→D.
         let mut n = 0usize;
@@ -139,8 +144,8 @@ impl ArrowPolicy {
             .members_iter(Pool::Decode)
             .chain(self.pools.members_iter(Pool::PrefillToDecode))
         {
-            let cap = self.mrt(id.0).min(instances[id.0].cost.max_kv_tokens) as f64;
-            util_sum += instances[id.0].running_tokens() as f64 / cap.max(1.0);
+            let cap = self.mrt(id.0).min(view.max_kv_tokens(id.0)) as f64;
+            util_sum += view.running_tokens(id.0) as f64 / cap.max(1.0);
             n += 1;
         }
         if n == 0 {
@@ -150,8 +155,8 @@ impl ArrowPolicy {
     }
 
     /// Recent token interval of an instance, NaN treated as "no evidence".
-    fn interval_ok(&self, inst: &SimInstance) -> bool {
-        let v = inst.avg_token_interval();
+    fn interval_ok(&self, view: &dyn ClusterView, inst: usize) -> bool {
+        let v = view.avg_token_interval(inst);
         v.is_nan() || v <= self.cfg.tpot_slo
     }
 
@@ -160,32 +165,30 @@ impl ArrowPolicy {
     /// Algorithm 3: reassign a decode instance to prefill duty. Returns
     /// the flipped instance. Keeps ≥ 2 decode-capable instances' worth of
     /// service by requiring |D| + |P→D| > 1.
-    fn try_move_decode_to_prefill(&mut self, instances: &[SimInstance]) -> Option<InstanceId> {
+    fn try_move_decode_to_prefill(&mut self, view: &dyn ClusterView) -> Option<InstanceId> {
         if self.pools.decode_capable_count() <= 1 {
             return None;
         }
         // Prefer an instance that was only *scheduled* for decode (P→D);
         // else the least-loaded decode instance.
         let pick = self
-            .min_running_tokens(Pool::PrefillToDecode, instances)
-            .or_else(|| self.min_running_tokens(Pool::Decode, instances))?;
+            .min_running_tokens(Pool::PrefillToDecode, view)
+            .or_else(|| self.min_running_tokens(Pool::Decode, view))?;
         let id = pick.0;
-        self.pools
-            .flip_to_prefill(id, instances[id.0].has_decode_work());
+        self.pools.flip_to_prefill(id, view.has_decode_work(id.0));
         Some(id)
     }
 
     /// Algorithm 4: reassign a prefill instance to decode duty.
-    fn try_move_prefill_to_decode(&mut self, instances: &[SimInstance]) -> Option<InstanceId> {
+    fn try_move_prefill_to_decode(&mut self, view: &dyn ClusterView) -> Option<InstanceId> {
         if self.pools.prefill_capable_count() <= 1 {
             return None;
         }
         let pick = self
-            .min_prefill_delay(Pool::DecodeToPrefill, instances)
-            .or_else(|| self.min_prefill_delay(Pool::Prefill, instances))?;
+            .min_prefill_delay(Pool::DecodeToPrefill, view)
+            .or_else(|| self.min_prefill_delay(Pool::Prefill, view))?;
         let id = pick.0;
-        self.pools
-            .flip_to_decode(id, instances[id.0].has_prefill_work());
+        self.pools.flip_to_decode(id, view.has_prefill_work(id.0));
         Some(id)
     }
 }
@@ -195,18 +198,17 @@ impl Policy for ArrowPolicy {
         "arrow-slo-aware"
     }
 
-    fn init(&mut self, instances: &[SimInstance]) {
+    fn init(&mut self, profile: &dyn ProfileSource) {
         // Startup profiling (paper §5.3): fit one TTFT quadratic and
         // measure Max Running Tokens per instance — heterogeneous
         // instances (different TP degree / hardware, §8) get their own
-        // curves, so placement decisions stay accurate across them.
-        self.predictors = instances
-            .iter()
-            .map(|i| TtftPredictor::profile(&i.cost, i.chunk_tokens))
-            .collect();
-        self.max_running_tokens = instances
-            .iter()
-            .map(|i| i.cost.max_running_tokens(self.cfg.tpot_slo))
+        // curves, so placement decisions stay accurate across them. The
+        // substrate decides *how* to profile (cost-model queries in the
+        // simulator, timed probe prompts on the live server).
+        let n = profile.n_instances();
+        self.predictors = (0..n).map(|i| profile.fit_predictor(i)).collect();
+        self.max_running_tokens = (0..n)
+            .map(|i| profile.max_running_tokens(i, self.cfg.tpot_slo))
             .collect();
     }
 
@@ -215,20 +217,20 @@ impl Policy for ArrowPolicy {
         &mut self,
         _now: Time,
         req: &Request,
-        instances: &[SimInstance],
+        view: &dyn ClusterView,
     ) -> InstanceId {
         // "Own" prefill time is instance-dependent on heterogeneous
         // clusters; evaluate per candidate below via its own predictor.
         let own_on = |p: &ArrowPolicy, id: InstanceId| {
             p.predictor(id.0).prefill_seconds(req.input_len)
         };
-        let t1 = self.min_prefill_delay(Pool::Prefill, instances);
+        let t1 = self.min_prefill_delay(Pool::Prefill, view);
         if let Some((id, delay)) = t1 {
             if delay + own_on(self, id) <= self.cfg.ttft_slo {
                 return id;
             }
         }
-        let t2 = self.min_prefill_delay(Pool::DecodeToPrefill, instances);
+        let t2 = self.min_prefill_delay(Pool::DecodeToPrefill, view);
         if let Some((id, delay)) = t2 {
             if delay + own_on(self, id) <= self.cfg.ttft_slo {
                 return id;
@@ -246,8 +248,8 @@ impl Policy for ArrowPolicy {
         }
         // Try to grow the prefill pool — but only if decode can spare an
         // instance (overload policy: decode has priority).
-        if self.decode_load_low(instances) {
-            if let Some(t3) = self.try_move_decode_to_prefill(instances) {
+        if self.decode_load_low(view) {
+            if let Some(t3) = self.try_move_decode_to_prefill(view) {
                 return t3;
             }
         }
@@ -256,7 +258,7 @@ impl Policy for ArrowPolicy {
             .map(|(id, _)| id)
             .or_else(|| {
                 // No prefill-capable instance at all: force a flip.
-                self.try_move_decode_to_prefill(instances)
+                self.try_move_decode_to_prefill(view)
             })
             .unwrap_or(InstanceId(0))
     }
@@ -267,7 +269,7 @@ impl Policy for ArrowPolicy {
         _now: Time,
         req: &Request,
         prefill_instance: InstanceId,
-        instances: &[SimInstance],
+        view: &dyn ClusterView,
     ) -> InstanceId {
         // If the prefill instance was meanwhile reassigned toward decode,
         // keep the request local — zero KV transfer (§5.3).
@@ -276,23 +278,19 @@ impl Policy for ArrowPolicy {
         }
         // Admission counts the incoming request's own KV footprint.
         let incoming = req.input_len as u64;
-        let t1 = self.min_running_tokens(Pool::Decode, instances);
+        let t1 = self.min_running_tokens(Pool::Decode, view);
         if let Some((id, tokens)) = t1 {
-            if tokens + incoming <= self.mrt(id.0)
-                && self.interval_ok(&instances[id.0])
-            {
+            if tokens + incoming <= self.mrt(id.0) && self.interval_ok(view, id.0) {
                 return id;
             }
         }
-        let t2 = self.min_running_tokens(Pool::PrefillToDecode, instances);
+        let t2 = self.min_running_tokens(Pool::PrefillToDecode, view);
         if let Some((id, tokens)) = t2 {
-            if tokens + incoming <= self.mrt(id.0)
-                && self.interval_ok(&instances[id.0])
-            {
+            if tokens + incoming <= self.mrt(id.0) && self.interval_ok(view, id.0) {
                 return id;
             }
         }
-        if let Some(t3) = self.try_move_prefill_to_decode(instances) {
+        if let Some(t3) = self.try_move_prefill_to_decode(view) {
             return t3;
         }
         // Fallback: lesser-loaded of t1/t2 (Alg. 2's final branch).
@@ -312,15 +310,12 @@ impl Policy for ArrowPolicy {
 
     /// Monitor tick (§5.5): settle drained transition pools, flip on
     /// sustained TPOT violations, harvest idle prefill instances.
-    fn on_tick(&mut self, _now: Time, instances: &[SimInstance]) {
+    fn on_tick(&mut self, _now: Time, view: &dyn ClusterView) {
         // 1. Settle P→D / D→P instances that drained their old work.
-        for i in 0..instances.len() {
+        for i in 0..view.n_instances() {
             let id = InstanceId(i);
-            self.pools.settle(
-                id,
-                instances[i].has_prefill_work(),
-                instances[i].has_decode_work(),
-            );
+            self.pools
+                .settle(id, view.has_prefill_work(i), view.has_decode_work(i));
         }
 
         // 2. Sustained TPOT violation => move a prefill instance to decode
@@ -340,14 +335,13 @@ impl Policy for ArrowPolicy {
             .chain(self.pools.members_iter(Pool::PrefillToDecode))
         {
             n_decode += 1;
-            let inst = &instances[id.0];
-            let v = inst.avg_token_interval();
+            let v = view.avg_token_interval(id.0);
             if !v.is_nan() && v > self.cfg.tpot_slo {
                 violating += 1;
             }
-            decode_busy |= inst.running_tokens()
+            decode_busy |= view.running_tokens(id.0)
                 > (self.cfg.decode_low_watermark
-                    * self.mrt(id.0).min(inst.cost.max_kv_tokens) as f64)
+                    * self.mrt(id.0).min(view.max_kv_tokens(id.0)) as f64)
                     as u64;
         }
         if n_decode > 0 {
@@ -357,7 +351,7 @@ impl Policy for ArrowPolicy {
                 self.violation_ticks = 0;
             }
             if self.violation_ticks >= self.cfg.tpot_violation_ticks {
-                self.try_move_prefill_to_decode(instances);
+                self.try_move_prefill_to_decode(view);
                 self.violation_ticks = 0;
             }
         }
@@ -370,7 +364,7 @@ impl Policy for ArrowPolicy {
                 .pools
                 .members(Pool::Prefill)
                 .into_iter()
-                .filter(|id| instances[id.0].is_idle())
+                .filter(|id| view.is_idle(id.0))
                 .collect();
             for id in idle_prefill {
                 if self.pools.prefill_capable_count() <= 1 {
@@ -394,6 +388,8 @@ impl Policy for ArrowPolicy {
 mod tests {
     use super::*;
     use crate::costmodel::CostModel;
+    use crate::engine::SimInstance;
+    use crate::sim::SimView;
 
     fn cluster(n: usize) -> Vec<SimInstance> {
         (0..n)
@@ -404,7 +400,7 @@ mod tests {
     fn policy(n: usize) -> (ArrowPolicy, Vec<SimInstance>) {
         let insts = cluster(n);
         let mut p = ArrowPolicy::new(ArrowConfig::new(3.0, 0.1, n), n);
-        p.init(&insts);
+        p.init(&SimView(&insts));
         (p, insts)
     }
 
@@ -417,7 +413,7 @@ mod tests {
         let (mut p, mut insts) = policy(4);
         // Load instance 0's prefill queue.
         insts[0].enqueue_prefill(crate::request::RequestId(9), 50_000);
-        let t = p.place_prefill(0.0, &req(1, 1000, 10), &insts);
+        let t = p.place_prefill(0.0, &req(1, 1000, 10), &SimView(&insts));
         assert_eq!(t, InstanceId(1), "empty prefill instance preferred");
     }
 
@@ -433,7 +429,7 @@ mod tests {
         // Move instance 2 into D→P so it is prefill-capable.
         p.pools.flip_to_prefill(InstanceId(2), true);
         assert_eq!(p.pools.pool_of(InstanceId(2)), Pool::DecodeToPrefill);
-        let t = p.place_prefill(0.0, &req(1, 1000, 10), &insts);
+        let t = p.place_prefill(0.0, &req(1, 1000, 10), &SimView(&insts));
         assert_eq!(t, InstanceId(2));
     }
 
@@ -450,7 +446,7 @@ mod tests {
         }
         let before = p.pools.sizes();
         assert_eq!(before, [2, 2, 0, 0]);
-        let t = p.place_prefill(0.0, &req(1, 1000, 10), &insts);
+        let t = p.place_prefill(0.0, &req(1, 1000, 10), &SimView(&insts));
         assert!(t == InstanceId(2) || t == InstanceId(3), "stole {t}");
         assert_eq!(p.pools.sizes()[0], 3, "prefill pool grew");
         assert!(p.flip_count() >= 1);
@@ -471,7 +467,7 @@ mod tests {
             assert!(insts[i].try_reserve_kv(load));
             insts[i].enqueue_decode(crate::request::RequestId(200 + i as u64), load as u32, 100);
         }
-        let t = p.place_prefill(0.0, &req(1, 1000, 10), &insts);
+        let t = p.place_prefill(0.0, &req(1, 1000, 10), &SimView(&insts));
         // Falls back to a prefill instance — decode priority preserved.
         assert!(t.0 < 2, "must not steal decode under load, got {t}");
         assert_eq!(p.pools.sizes()[1], 2);
@@ -483,7 +479,7 @@ mod tests {
         // Instance 0 (prefill) got flipped toward decode while the
         // request prefilled there.
         p.pools.flip_to_decode(InstanceId(0), false);
-        let t = p.place_decode(0.0, &req(1, 1000, 10), InstanceId(0), &insts);
+        let t = p.place_decode(0.0, &req(1, 1000, 10), InstanceId(0), &SimView(&insts));
         assert_eq!(t, InstanceId(0), "local handoff avoids KV transfer");
     }
 
@@ -492,7 +488,7 @@ mod tests {
         let (mut p, mut insts) = policy(4);
         assert!(insts[2].try_reserve_kv(10_000));
         insts[2].enqueue_decode(crate::request::RequestId(50), 10_000, 100);
-        let t = p.place_decode(0.0, &req(1, 1000, 10), InstanceId(0), &insts);
+        let t = p.place_decode(0.0, &req(1, 1000, 10), InstanceId(0), &SimView(&insts));
         assert_eq!(t, InstanceId(3), "less-loaded decode instance");
     }
 
@@ -505,7 +501,7 @@ mod tests {
             insts[i].enqueue_decode(crate::request::RequestId(60 + i as u64), cap as u32, 100);
         }
         let before_decode = p.pools.decode_capable_count();
-        let t = p.place_decode(0.0, &req(1, 1000, 10), InstanceId(0), &insts);
+        let t = p.place_decode(0.0, &req(1, 1000, 10), InstanceId(0), &SimView(&insts));
         assert!(
             p.pools.pool_of(t).decode_capable(),
             "target must be decode-capable"
@@ -517,7 +513,7 @@ mod tests {
     fn tick_settles_drained_transition_pools() {
         let (mut p, insts) = policy(4);
         p.pools.flip_to_decode(InstanceId(0), true); // P→D, but no work
-        p.on_tick(1.0, &insts);
+        p.on_tick(1.0, &SimView(&insts));
         assert_eq!(p.pools.pool_of(InstanceId(0)), Pool::Decode);
     }
 
@@ -530,7 +526,7 @@ mod tests {
         assert!(insts[2].try_reserve_kv(load));
         insts[2].enqueue_decode(crate::request::RequestId(70), load as u32, 100);
         // Prefill instances 0,1 idle.
-        p.on_tick(1.0, &insts);
+        p.on_tick(1.0, &SimView(&insts));
         let sizes = p.pools.sizes();
         assert_eq!(sizes[0], 1, "one idle prefill harvested, one kept: {sizes:?}");
         assert!(sizes[1] + sizes[2] == 3);
@@ -543,9 +539,6 @@ mod tests {
         for i in 2..4 {
             assert!(insts[i].try_reserve_kv(100));
             insts[i].enqueue_decode(crate::request::RequestId(80 + i as u64), 100, 500);
-            // Manually run slow iterations: fake by pushing intervals via
-            // plan/finish with inflated durations is complex; instead use
-            // the real loop but huge batch:
         }
         // Simulate: directly feed the sliding window by running iterations
         // with manipulated times.
@@ -560,8 +553,8 @@ mod tests {
             assert!(insts[i].avg_token_interval() > p.cfg.tpot_slo);
         }
         let before = p.pools.sizes();
-        p.on_tick(1.0, &insts);
-        p.on_tick(2.0, &insts);
+        p.on_tick(1.0, &SimView(&insts));
+        p.on_tick(2.0, &SimView(&insts));
         let after = p.pools.sizes();
         assert!(
             after[1] + after[2] > before[1] + before[2],
@@ -580,11 +573,11 @@ mod tests {
             for step in 0..40 {
                 let r = req(step, rng.int_range(100, 60_000) as u32, 10);
                 if rng.bool(0.5) {
-                    let t = p.place_prefill(step as f64, &r, &insts);
+                    let t = p.place_prefill(step as f64, &r, &SimView(&insts));
                     insts[t.0].enqueue_prefill(crate::request::RequestId(step), r.input_len);
                 } else {
                     let from = InstanceId(rng.index(n));
-                    let t = p.place_decode(step as f64, &r, from, &insts);
+                    let t = p.place_decode(step as f64, &r, from, &SimView(&insts));
                     if t != from && insts[t.0].try_reserve_kv(r.input_len as u64) {
                         insts[t.0].enqueue_decode(
                             crate::request::RequestId(step),
@@ -593,7 +586,7 @@ mod tests {
                         );
                     }
                 }
-                p.on_tick(step as f64, &insts);
+                p.on_tick(step as f64, &SimView(&insts));
                 crate::prop_assert!(
                     p.pools.prefill_capable_count() >= 1,
                     "no prefill-capable instance left"

@@ -1,5 +1,10 @@
 //! The Arrow coordinator (paper §5): TTFT predictor, elastic instance
 //! pools, and the SLO-aware global scheduling policy.
+//!
+//! `ArrowPolicy` implements the substrate-agnostic
+//! [`crate::sched::Policy`] trait: it reads cluster load only through
+//! [`crate::sched::ClusterView`], so the identical object schedules the
+//! discrete-event simulator and the live PJRT server.
 
 pub mod arrow;
 pub mod pools;

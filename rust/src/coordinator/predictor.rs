@@ -11,6 +11,7 @@
 //! queue view, exactly like the real system's profiler.
 
 use crate::costmodel::CostModel;
+use crate::sched::ClusterView;
 use crate::util::stats;
 
 /// Input lengths sampled during startup profiling.
@@ -58,9 +59,12 @@ impl TtftPredictor {
     }
 
     /// Predicted seconds to prefill a fresh `len`-token prompt.
+    /// `clamp`, not `max(0.0)`: a NaN-poisoned fit must predict NaN
+    /// (which placement orders last via `total_cmp`), never a
+    /// too-good-to-be-true 0 seconds.
     pub fn prefill_seconds(&self, len: u32) -> f64 {
         let l = len as f64;
-        (self.c[0] + self.c[1] * l + self.c[2] * l * l).max(0.0)
+        (self.c[0] + self.c[1] * l + self.c[2] * l * l).clamp(0.0, f64::INFINITY)
     }
 
     /// Predicted seconds to *finish* a partially prefilled prompt
@@ -72,7 +76,8 @@ impl TtftPredictor {
         let lin = self.c[1] * remaining as f64;
         let quad = self.c[2] * (l * l - done * done);
         let chunks = remaining.div_ceil(self.chunk.max(1)) as f64;
-        (lin + quad + chunks * self.overhead).max(0.0)
+        // clamp (not max): NaN coefficients propagate, see prefill_seconds.
+        (lin + quad + chunks * self.overhead).clamp(0.0, f64::INFINITY)
     }
 
     /// Predicted prefill queueing delay of an instance, given its public
@@ -88,6 +93,17 @@ impl TtftPredictor {
     /// per-request placement path never materializes a queue-view `Vec`.
     pub fn queue_delay_iter(&self, queue: impl Iterator<Item = (u32, u32)>) -> f64 {
         queue.map(|(l, r)| self.remaining_seconds(l, r)).sum()
+    }
+
+    /// Predicted prefill queueing delay of instance `inst` as seen
+    /// through a substrate-agnostic [`ClusterView`] snapshot. Visits the
+    /// queue in place (internal iteration) and accumulates in the same
+    /// order as [`TtftPredictor::queue_delay_iter`], so simulator and
+    /// live-server predictions over equal queues are byte-identical.
+    pub fn queue_delay_view(&self, view: &dyn ClusterView, inst: usize) -> f64 {
+        let mut total = 0.0;
+        view.for_each_queued_prefill(inst, &mut |l, r| total += self.remaining_seconds(l, r));
+        total
     }
 
     /// Predicted TTFT if a request of `len` tokens is appended to the
@@ -156,6 +172,42 @@ mod tests {
         assert!((empty - p.prefill_seconds(2048)).abs() < 1e-12);
         let queued = p.predict_ttft(2048, &[(8192, 8192)]);
         assert!(queued > empty);
+    }
+
+    #[test]
+    fn nan_coefficients_predict_nan_not_zero() {
+        // A NaN-poisoned fit (see stats::quadratic_fit) must surface as
+        // NaN predictions — total_cmp orders them after every finite
+        // delay, steering placement away from the broken instance — and
+        // never as a "free" 0-second prediction.
+        let broken = TtftPredictor::from_coefficients([f64::NAN; 3], 2048, 0.001);
+        assert!(broken.prefill_seconds(1000).is_nan());
+        assert!(broken.remaining_seconds(1000, 500).is_nan());
+        let healthy = TtftPredictor::from_coefficients([0.0, 1e-4, 0.0], 2048, 0.001);
+        let delays = [broken.prefill_seconds(1000), healthy.prefill_seconds(1000)];
+        let best = delays
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        assert_eq!(best, 1, "NaN must lose the argmin to any finite delay");
+    }
+
+    #[test]
+    fn queue_delay_view_matches_iter_bit_for_bit() {
+        use crate::engine::SimInstance;
+        use crate::request::{InstanceId, RequestId};
+        let (p, cost) = predictor();
+        let mut inst = SimInstance::new(InstanceId(0), cost);
+        inst.enqueue_prefill(RequestId(1), 4096);
+        inst.enqueue_prefill(RequestId(2), 512);
+        inst.enqueue_prefill(RequestId(3), 30_000);
+        let insts = vec![inst];
+        let via_iter = p.queue_delay_iter(insts[0].prefill_queue_iter());
+        let via_view = p.queue_delay_view(&crate::sim::SimView(&insts), 0);
+        // Same visit order + same accumulation order => identical bits.
+        assert_eq!(via_iter.to_bits(), via_view.to_bits());
     }
 
     #[test]

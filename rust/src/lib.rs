@@ -4,6 +4,9 @@
 //! the paper→repo substitutions; EXPERIMENTS.md for reproduced results.
 //!
 //! Layer map:
+//! * [`sched`] — the substrate-agnostic scheduling core: the [`sched::Policy`]
+//!   trait and the [`sched::ClusterView`] snapshot interface every policy
+//!   consumes (the simulator and the live server implement adapters).
 //! * [`coordinator`] — the paper's contribution: stateless instances,
 //!   elastic pools, SLO-aware request + instance scheduling.
 //! * [`engine`], [`costmodel`], [`sim`] — the serving substrate and the
@@ -20,6 +23,7 @@ pub mod json;
 pub mod metrics;
 pub mod request;
 pub mod scenarios;
+pub mod sched;
 pub mod sim;
 pub mod trace;
 pub mod util;

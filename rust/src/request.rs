@@ -155,7 +155,9 @@ impl RequestRecord {
         self.token_times
             .windows(2)
             .map(|w| w[1] - w[0])
-            .max_by(|a, b| a.partial_cmp(b).unwrap())
+            // total_cmp: a NaN timestamp (broken trace/clock) must surface
+            // as a weird gap, never as a panic in the metrics layer.
+            .max_by(|a, b| a.total_cmp(b))
     }
 
     pub fn finished(&self) -> bool {

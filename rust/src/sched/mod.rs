@@ -1,0 +1,183 @@
+//! The scheduling core: one engine-agnostic brain shared by every
+//! execution substrate.
+//!
+//! The paper's contribution is the *scheduler* — SLO-aware request
+//! scheduling (Alg. 1–2), elastic pools, and instance scheduling
+//! (Alg. 3–4) over stateless instances. This module makes that brain a
+//! standalone layer: policies ([`Policy`]) read the cluster exclusively
+//! through [`ClusterView`], a read-only per-instance snapshot interface,
+//! and learn instance capabilities at startup through [`ProfileSource`].
+//! Neither trait mentions the simulator or the PJRT server, so the exact
+//! same `ArrowPolicy` object drives both:
+//!
+//! * the discrete-event simulator adapts via [`crate::sim::SimView`]
+//!   (a zero-cost borrow of the `SimInstance` table), and
+//! * the live server adapts via [`crate::server::view::ServerView`]
+//!   (coordinator queue bookkeeping + lock-free `EngineStats`).
+//!
+//! # The `ClusterView` contract
+//!
+//! * **Snapshot semantics.** All accessors describe one instant; a policy
+//!   may call them any number of times within one decision and must see
+//!   consistent values.
+//! * **No allocation.** Placement runs once per arriving request on the
+//!   simulator hot path (ROADMAP "Performance architecture"); accessors
+//!   must not allocate. Queue inspection therefore uses *internal*
+//!   iteration ([`ClusterView::for_each_queued_prefill`]) — a `&mut dyn
+//!   FnMut` visitor is dyn-compatible and allocation-free, where a
+//!   returned iterator would need a `Box`.
+//! * **NaN is "no evidence".** [`ClusterView::avg_token_interval`]
+//!   returns NaN when an instance has produced no recent tokens; policies
+//!   must treat degenerate floats with `f64::total_cmp`, never
+//!   `partial_cmp().unwrap()`.
+
+pub mod policy;
+
+pub use policy::{tests_support, Policy};
+
+use crate::coordinator::predictor::TtftPredictor;
+
+/// Read-only, substrate-agnostic snapshot of cluster load at decision
+/// time. Instances are addressed by their table index (`InstanceId.0`).
+pub trait ClusterView {
+    /// Number of instances in the cluster (fixed for a view's lifetime).
+    fn n_instances(&self) -> usize;
+
+    /// Visit `(input_len, remaining_tokens)` of every queued prefill on
+    /// `inst`, in queue order — the public queue view the TTFT predictor
+    /// consumes (Insight 1). Internal iteration keeps the trait
+    /// dyn-compatible without boxing an iterator per call.
+    fn for_each_queued_prefill(&self, inst: usize, f: &mut dyn FnMut(u32, u32));
+
+    /// Total queued prefill tokens still to process on `inst`.
+    fn queued_prefill_tokens(&self, inst: usize) -> u64 {
+        let mut total = 0u64;
+        self.for_each_queued_prefill(inst, &mut |_, remaining| total += remaining as u64);
+        total
+    }
+
+    /// Total KV tokens of running + admitted decode requests — the
+    /// paper's "running tokens" decode-load metric (§5.3).
+    fn running_tokens(&self, inst: usize) -> u64;
+
+    /// KV capacity of `inst` in tokens (memory bound for admission).
+    fn max_kv_tokens(&self, inst: usize) -> u64;
+
+    /// Recent average token generation interval on `inst` (§5.3/§5.5
+    /// TPOT proxy). NaN when there is no recent evidence.
+    fn avg_token_interval(&self, inst: usize) -> f64;
+
+    /// Does `inst` still hold prefill work (queued or in progress)?
+    fn has_prefill_work(&self, inst: usize) -> bool;
+
+    /// Does `inst` still hold decode work (running or parked)?
+    fn has_decode_work(&self, inst: usize) -> bool;
+
+    /// No work of either phase — harvest candidate (§5.5 condition 3).
+    fn is_idle(&self, inst: usize) -> bool {
+        !self.has_prefill_work(inst) && !self.has_decode_work(inst)
+    }
+}
+
+/// Startup profiling access (paper §5.3): how a policy learns each
+/// instance's prefill curve and Max Running Tokens before serving. The
+/// simulator answers from cost models; the live server answers from
+/// timed probe prompts — the policy cannot tell the difference.
+pub trait ProfileSource {
+    /// Number of instances that will be profiled.
+    fn n_instances(&self) -> usize;
+
+    /// Fit the TTFT quadratic for instance `i` (heterogeneous clusters
+    /// profile each instance separately, §8).
+    fn fit_predictor(&self, i: usize) -> TtftPredictor;
+
+    /// Profiled Max Running Tokens of instance `i`: the largest decode
+    /// batch token count that still meets `tpot_slo`, capped by memory.
+    fn max_running_tokens(&self, i: usize, tpot_slo: f64) -> u64;
+}
+
+/// Pre-measured profile table — what the live server builds from real
+/// probe timings at startup, and what cross-substrate tests use to hand
+/// two policies byte-identical starting knowledge.
+pub struct FixedProfile {
+    pub predictors: Vec<TtftPredictor>,
+    pub max_running_tokens: Vec<u64>,
+}
+
+impl ProfileSource for FixedProfile {
+    fn n_instances(&self) -> usize {
+        self.predictors.len()
+    }
+
+    fn fit_predictor(&self, i: usize) -> TtftPredictor {
+        self.predictors[i].clone()
+    }
+
+    fn max_running_tokens(&self, i: usize, _tpot_slo: f64) -> u64 {
+        self.max_running_tokens[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal hand-rolled view: checks the provided (default) methods.
+    struct TwoInstances;
+
+    impl ClusterView for TwoInstances {
+        fn n_instances(&self) -> usize {
+            2
+        }
+        fn for_each_queued_prefill(&self, inst: usize, f: &mut dyn FnMut(u32, u32)) {
+            if inst == 0 {
+                f(1000, 600);
+                f(500, 500);
+            }
+        }
+        fn running_tokens(&self, inst: usize) -> u64 {
+            if inst == 0 {
+                0
+            } else {
+                77
+            }
+        }
+        fn max_kv_tokens(&self, _inst: usize) -> u64 {
+            100
+        }
+        fn avg_token_interval(&self, _inst: usize) -> f64 {
+            f64::NAN
+        }
+        fn has_prefill_work(&self, inst: usize) -> bool {
+            inst == 0
+        }
+        fn has_decode_work(&self, inst: usize) -> bool {
+            inst == 1
+        }
+    }
+
+    #[test]
+    fn default_accessors_derive_from_primitives() {
+        let v = TwoInstances;
+        assert_eq!(v.queued_prefill_tokens(0), 1100);
+        assert_eq!(v.queued_prefill_tokens(1), 0);
+        assert!(!v.is_idle(0), "queued prefill is work");
+        assert!(!v.is_idle(1), "decode is work");
+    }
+
+    #[test]
+    fn fixed_profile_answers_per_instance() {
+        let p = FixedProfile {
+            predictors: vec![
+                TtftPredictor::from_coefficients([0.0, 1e-4, 0.0], 2048, 0.0),
+                TtftPredictor::from_coefficients([0.0, 2e-4, 0.0], 2048, 0.0),
+            ],
+            max_running_tokens: vec![10, 20],
+        };
+        assert_eq!(ProfileSource::n_instances(&p), 2);
+        assert_eq!(p.max_running_tokens(1, 0.1), 20);
+        let fast = p.fit_predictor(0).prefill_seconds(1000);
+        let slow = p.fit_predictor(1).prefill_seconds(1000);
+        assert!(slow > fast);
+    }
+}

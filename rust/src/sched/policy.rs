@@ -1,0 +1,121 @@
+//! The global-scheduling policy interface.
+//!
+//! Both Arrow ([`crate::coordinator::arrow`]) and the baselines
+//! ([`crate::baselines`]) implement [`Policy`]. The substrate (simulator
+//! event loop or live server coordinator) owns engines and timing;
+//! policies own only *decisions* — which instance prefills a request,
+//! which decodes it, and when instances move between pools. This split is
+//! the paper's stateless-instance insight (§3.4): roles live in the
+//! scheduler's pool bookkeeping, never in the engine.
+//!
+//! # Contract with the substrate
+//!
+//! * **Determinism.** A policy must be a pure function of its own state
+//!   and the arguments it is handed — no wall clock, no ambient
+//!   randomness. The simulator's byte-identical-schedule guarantee and
+//!   the cross-substrate golden test (`tests/cross_substrate.rs`) hold
+//!   only under this contract.
+//! * **Substrate-blindness.** Policies read cluster load exclusively
+//!   through [`ClusterView`] and learn instance capability exclusively
+//!   through [`ProfileSource`]; they must not downcast or otherwise
+//!   detect which substrate is calling.
+//! * **Hot path.** `place_prefill`/`place_decode` run once per request;
+//!   implementations should avoid per-call allocation (see
+//!   [`ClusterView::for_each_queued_prefill`] and
+//!   `Pools::members_iter` for allocation-free queries) and must never
+//!   panic on degenerate float comparisons — use `f64::total_cmp`, not
+//!   `partial_cmp().unwrap()`.
+
+use super::{ClusterView, ProfileSource};
+use crate::request::{InstanceId, Request, Time};
+
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Called once before serving starts (the paper's startup profiling
+    /// hook — TTFT predictor fitting + Max Running Tokens measurement).
+    fn init(&mut self, _profile: &dyn ProfileSource) {}
+
+    /// Select the instance that will run `req`'s prefill phase (Alg. 1
+    /// for Arrow; trivial for baselines).
+    fn place_prefill(&mut self, now: Time, req: &Request, view: &dyn ClusterView)
+        -> InstanceId;
+
+    /// Select the instance that will run `req`'s decode phase (Alg. 2).
+    fn place_decode(
+        &mut self,
+        now: Time,
+        req: &Request,
+        prefill_instance: InstanceId,
+        view: &dyn ClusterView,
+    ) -> InstanceId;
+
+    /// Periodic monitor tick (paper §5.5: TPOT-violation and idle-prefill
+    /// instance scheduling happen here).
+    fn on_tick(&mut self, _now: Time, _view: &dyn ClusterView) {}
+
+    /// Pool sizes [Prefill, Decode, P→D, D→P] for snapshots, if the
+    /// policy maintains elastic pools.
+    fn pool_sizes(&self) -> Option<[usize; 4]> {
+        None
+    }
+
+    /// Number of instance flips performed so far (ablation metric).
+    fn flip_count(&self) -> u64 {
+        0
+    }
+}
+
+/// Trivial policies used by simulator unit tests.
+pub mod tests_support {
+    use super::*;
+
+    /// Everything on instance 0 (colocated single instance).
+    pub struct AllToOne;
+
+    impl Policy for AllToOne {
+        fn name(&self) -> &'static str {
+            "all-to-one"
+        }
+
+        fn place_prefill(&mut self, _: Time, _: &Request, _: &dyn ClusterView) -> InstanceId {
+            InstanceId(0)
+        }
+
+        fn place_decode(
+            &mut self,
+            _: Time,
+            _: &Request,
+            _prefill: InstanceId,
+            _: &dyn ClusterView,
+        ) -> InstanceId {
+            InstanceId(0)
+        }
+    }
+
+    /// Fixed prefill/decode instance sets, round-robin within each.
+    pub struct StaticSplit {
+        pub prefill: Vec<usize>,
+        pub decode: Vec<usize>,
+    }
+
+    impl Policy for StaticSplit {
+        fn name(&self) -> &'static str {
+            "static-split"
+        }
+
+        fn place_prefill(&mut self, _: Time, req: &Request, _: &dyn ClusterView) -> InstanceId {
+            InstanceId(self.prefill[req.id.0 as usize % self.prefill.len()])
+        }
+
+        fn place_decode(
+            &mut self,
+            _: Time,
+            req: &Request,
+            _prefill: InstanceId,
+            _: &dyn ClusterView,
+        ) -> InstanceId {
+            InstanceId(self.decode[req.id.0 as usize % self.decode.len()])
+        }
+    }
+}

@@ -9,6 +9,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -59,7 +60,12 @@ pub enum EngineEvent {
     },
 }
 
-/// Live load metrics published by the engine (lock-free reads).
+/// Live load metrics published by the engine (lock-free reads). These
+/// are the raw inputs of the server's [`crate::sched::ClusterView`]
+/// adapter (`server::view::ServerView`): `cached_tokens` is the paper's
+/// "running tokens" decode-load metric, `kv_capacity_tokens` the memory
+/// bound, and `token_interval_s` the §5.3 recent-token-interval TPOT
+/// proxy (NaN until the first decode iterations happen).
 #[derive(Debug, Clone, Copy)]
 pub struct EngineStats {
     pub prefill_queue: usize,
@@ -67,15 +73,47 @@ pub struct EngineStats {
     pub free_slots: usize,
     pub cached_tokens: u64,
     pub iterations: u64,
+    /// Total KV tokens this engine can hold (slots × per-slot capacity).
+    pub kv_capacity_tokens: u64,
+    /// Recent average wall-clock gap between decode iterations (an EMA);
+    /// NaN when no decode iterations have run recently.
+    pub token_interval_s: f64,
+    /// Decode adoptions accepted but not yet in a slot (the engine-side
+    /// analog of the simulator's `decode_wait` parking queue). Counted
+    /// into scheduler-visible decode load so the handoff window cannot
+    /// make an engine look idle.
+    pub pending_decode_reqs: usize,
+    /// Prompt KV tokens across those pending adoptions.
+    pub pending_decode_tokens: u64,
 }
 
-#[derive(Default)]
 struct SharedStats {
     prefill_queue: AtomicUsize,
     active_slots: AtomicUsize,
     free_slots: AtomicUsize,
     cached_tokens: AtomicU64,
     iterations: AtomicU64,
+    kv_capacity: AtomicU64,
+    /// f64 bits of the token-interval EMA (NaN = no evidence yet).
+    token_interval_bits: AtomicU64,
+    pending_decode_reqs: AtomicUsize,
+    pending_decode_tokens: AtomicU64,
+}
+
+impl SharedStats {
+    fn new() -> Self {
+        SharedStats {
+            prefill_queue: AtomicUsize::new(0),
+            active_slots: AtomicUsize::new(0),
+            free_slots: AtomicUsize::new(0),
+            cached_tokens: AtomicU64::new(0),
+            iterations: AtomicU64::new(0),
+            kv_capacity: AtomicU64::new(0),
+            token_interval_bits: AtomicU64::new(f64::NAN.to_bits()),
+            pending_decode_reqs: AtomicUsize::new(0),
+            pending_decode_tokens: AtomicU64::new(0),
+        }
+    }
 }
 
 /// Handle to a spawned engine thread.
@@ -95,7 +133,14 @@ impl EngineHandle {
         let rt = ModelRuntime::load(artifacts_dir)?;
         let buckets = rt.info.prefill_buckets.clone();
         let (tx, rx) = mpsc::channel::<EngineCmd>();
-        let stats = Arc::new(SharedStats::default());
+        let stats = Arc::new(SharedStats::new());
+        // KV capacity is fixed by the loaded artifacts; publish it here,
+        // before the engine thread even starts, so startup profiling can
+        // never observe a zero capacity.
+        stats.kv_capacity.store(
+            (rt.info.decode_batch * rt.info.max_seq_len) as u64,
+            Ordering::Relaxed,
+        );
         let stats_thread = Arc::clone(&stats);
         std::thread::Builder::new()
             .name(format!("engine-{id}"))
@@ -128,6 +173,12 @@ impl EngineHandle {
             free_slots: self.stats.free_slots.load(Ordering::Relaxed),
             cached_tokens: self.stats.cached_tokens.load(Ordering::Relaxed),
             iterations: self.stats.iterations.load(Ordering::Relaxed),
+            kv_capacity_tokens: self.stats.kv_capacity.load(Ordering::Relaxed),
+            token_interval_s: f64::from_bits(
+                self.stats.token_interval_bits.load(Ordering::Relaxed),
+            ),
+            pending_decode_reqs: self.stats.pending_decode_reqs.load(Ordering::Relaxed),
+            pending_decode_tokens: self.stats.pending_decode_tokens.load(Ordering::Relaxed),
         }
     }
 
@@ -166,8 +217,13 @@ fn engine_loop(
     let mut slots: Vec<Option<SlotState>> = (0..decode.batch()).map(|_| None).collect();
     let mut prefill_q: VecDeque<(u64, Vec<i32>)> = VecDeque::new();
     let mut pending_decode: VecDeque<EngineCmd> = VecDeque::new();
+    // Recent token-interval EMA (paper §5.3 TPOT proxy). Idle gaps are
+    // not decode evidence: the anchor resets when the batch drains.
+    let mut last_decode_iter: Option<Instant> = None;
+    let mut interval_ema = f64::NAN;
 
     let publish = |prefill_q: &VecDeque<(u64, Vec<i32>)>,
+                   pending_decode: &VecDeque<EngineCmd>,
                    decode: &DecodeBatchState,
                    iters: u64| {
         stats
@@ -183,35 +239,55 @@ fn engine_loop(
             .cached_tokens
             .store(decode.total_cached_tokens(), Ordering::Relaxed);
         stats.iterations.store(iters, Ordering::Relaxed);
+        // Parked adoptions are decode load the slots don't show yet.
+        let mut pend_tokens = 0u64;
+        for c in pending_decode {
+            if let EngineCmd::StartDecode { prompt_len, .. } = c {
+                pend_tokens += *prompt_len as u64;
+            }
+        }
+        stats
+            .pending_decode_reqs
+            .store(pending_decode.len(), Ordering::Relaxed);
+        stats
+            .pending_decode_tokens
+            .store(pend_tokens, Ordering::Relaxed);
     };
 
     let mut iterations = 0u64;
-    publish(&prefill_q, &decode, iterations); // initial state (all free)
+    publish(&prefill_q, &pending_decode, &decode, iterations); // initial state
     loop {
-        // 1. Drain commands without blocking (blocking only when idle).
+        // 1. Drain ALL queued commands (blocking only when idle).
+        //    Draining the whole channel each pass keeps the published
+        //    pending-decode load fresh even while long prefills occupy
+        //    the loop — the scheduler must never see a stale "idle".
         let has_work = !prefill_q.is_empty()
             || decode.active_count() > 0
             || !pending_decode.is_empty();
-        let cmd = if has_work {
+        let mut cmd = if has_work {
             rx.try_recv().ok()
         } else {
             rx.recv().ok()
         };
-        match cmd {
-            Some(EngineCmd::Shutdown) | None if !has_work => return,
-            Some(EngineCmd::Shutdown) => return,
-            Some(EngineCmd::Prefill { req, prompt }) => {
-                prefill_q.push_back((req, prompt));
+        if cmd.is_none() && !has_work {
+            return; // channel closed while idle
+        }
+        while let Some(c) = cmd {
+            match c {
+                EngineCmd::Shutdown => return,
+                EngineCmd::Prefill { req, prompt } => {
+                    prefill_q.push_back((req, prompt));
+                }
+                c @ EngineCmd::StartDecode { .. } => pending_decode.push_back(c),
+                EngineCmd::BlockingPrefill { prompt, reply } => {
+                    let r = rt
+                        .prefill(&prompt)
+                        .map(|o| o.first_token)
+                        .map_err(|e| e.to_string());
+                    let _ = reply.send(r);
+                }
             }
-            Some(cmd @ EngineCmd::StartDecode { .. }) => pending_decode.push_back(cmd),
-            Some(EngineCmd::BlockingPrefill { prompt, reply }) => {
-                let r = rt
-                    .prefill(&prompt)
-                    .map(|o| o.first_token)
-                    .map_err(|e| e.to_string());
-                let _ = reply.send(r);
-            }
-            None => {}
+            cmd = rx.try_recv().ok();
         }
 
         // 2. Admit pending decode adoptions into free slots.
@@ -278,6 +354,19 @@ fn engine_loop(
             match rt.decode_step(&mut decode) {
                 Ok(next) => {
                     iterations += 1;
+                    let t_iter = Instant::now();
+                    if let Some(prev) = last_decode_iter {
+                        let gap = t_iter.duration_since(prev).as_secs_f64();
+                        interval_ema = if interval_ema.is_nan() {
+                            gap
+                        } else {
+                            0.8 * interval_ema + 0.2 * gap
+                        };
+                        stats
+                            .token_interval_bits
+                            .store(interval_ema.to_bits(), Ordering::Relaxed);
+                    }
+                    last_decode_iter = Some(t_iter);
                     for slot in 0..slots.len() {
                         let finished = if let Some(st) = slots[slot].as_mut() {
                             st.tokens.push(next[slot]);
@@ -311,6 +400,17 @@ fn engine_loop(
             }
         }
 
-        publish(&prefill_q, &decode, iterations);
+        if decode.active_count() == 0 {
+            // Batch drained: both the anchor AND the published EMA reset,
+            // so an idle engine reads as "no recent evidence" (NaN), not
+            // as a frozen snapshot of its last (possibly violating)
+            // interval that would trigger spurious TPOT flips.
+            last_decode_iter = None;
+            interval_ema = f64::NAN;
+            stats
+                .token_interval_bits
+                .store(f64::NAN.to_bits(), Ordering::Relaxed);
+        }
+        publish(&prefill_q, &pending_decode, &decode, iterations);
     }
 }

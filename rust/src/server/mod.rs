@@ -1,14 +1,24 @@
-//! Real-mode serving: N stateless PJRT engines + the Arrow-style global
-//! scheduler + an OpenAI-ish HTTP frontend. Python is never on this path —
-//! engines execute the AOT artifacts directly.
+//! Real-mode serving: N stateless PJRT engines driven by the *same*
+//! Arrow scheduling brain as the simulator, behind an OpenAI-ish HTTP
+//! frontend. Python is never on this path — engines execute the AOT
+//! artifacts directly.
 //!
-//! This is the end-to-end composition proof (DESIGN.md §7): the same
-//! stateless-instance mechanism as the simulator — engines accept both
-//! phases, prefill KV is handed off (possibly across engines: a real
-//! memcpy through the coordinator = the KV migration), decode runs under
-//! continuous batching — with wall-clock latencies reported per request.
+//! This is the end-to-end composition proof (DESIGN.md §7) and, since
+//! PR 2, the point of the whole `sched` layer: the coordinator owns a
+//! `Box<dyn Policy>` holding the identical [`ArrowPolicy`] object the
+//! simulator runs — elastic pools, Alg. 1–4, the overload policy, and a
+//! real monitor-tick thread — fed through the [`view::ServerView`]
+//! adapter (coordinator queue bookkeeping + lock-free `EngineStats`).
+//! The coordinator contains **no placement heuristic of its own**; a
+//! pool flip decided by the policy immediately changes which engine the
+//! next request is dispatched to. Prefill KV is handed off (possibly
+//! across engines: a real memcpy through the coordinator = the KV
+//! migration) and decode runs under continuous batching, with wall-clock
+//! TTFT/TPOT reported per request on `/metrics` next to the live pool
+//! sizes `[P, D, P→D, D→P]`.
 
 pub mod engine;
+pub mod view;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -17,10 +27,14 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::coordinator::arrow::{ArrowConfig, ArrowPolicy};
 use crate::coordinator::predictor::TtftPredictor;
 use crate::http::{self, HttpRequest, HttpResponse};
 use crate::json::Json;
-use engine::{EngineCmd, EngineEvent, EngineHandle, EngineStats};
+use crate::request::{InstanceId, Request};
+use crate::sched::{FixedProfile, Policy};
+use engine::{EngineCmd, EngineEvent, EngineHandle};
+use view::{EngineSnapshot, ServerView};
 
 /// `arrow serve` configuration.
 #[derive(Debug, Clone)]
@@ -40,42 +54,173 @@ struct Done {
     tokens: usize,
 }
 
+/// Everything the coordinator processes, serialized through one channel:
+/// new submissions, engine events, and monitor ticks. One consumer means
+/// the policy needs no locking and decisions are totally ordered.
+enum CoordMsg {
+    Submit {
+        req: u64,
+        prompt: Vec<i32>,
+        max_tokens: usize,
+        t0: Instant,
+    },
+    Engine(EngineEvent),
+    Tick,
+}
+
+/// Per-request coordinator bookkeeping.
+struct Inflight {
+    t0: Instant,
+    max_tokens: usize,
+    /// Wall-clock TTFT, recorded when `PrefillDone` arrives.
+    first_token_s: Option<f64>,
+}
+
+/// Scheduler state published for `/metrics` (lock-free reads from HTTP
+/// handler threads; written by the coordinator thread after every
+/// decision and tick). The four pool sizes are packed into one atomic
+/// (16 bits each) so a reader can never observe a torn mid-flip vector
+/// that fails to partition the engine set.
+pub struct SchedPublish {
+    pools_packed: AtomicU64,
+    flips: AtomicU64,
+}
+
+impl SchedPublish {
+    fn new() -> Self {
+        SchedPublish {
+            pools_packed: AtomicU64::new(0),
+            flips: AtomicU64::new(0),
+        }
+    }
+
+    fn store_pools(&self, pools: [usize; 4]) {
+        let mut packed = 0u64;
+        for (i, &p) in pools.iter().enumerate() {
+            debug_assert!(p <= u16::MAX as usize, "pool size overflows 16 bits");
+            packed |= ((p as u64) & 0xFFFF) << (16 * i);
+        }
+        self.pools_packed.store(packed, Ordering::Relaxed);
+    }
+
+    /// Current pool sizes [P, D, P→D, D→P] — one consistent snapshot.
+    pub fn pools(&self) -> [usize; 4] {
+        let packed = self.pools_packed.load(Ordering::Relaxed);
+        [
+            (packed & 0xFFFF) as usize,
+            ((packed >> 16) & 0xFFFF) as usize,
+            ((packed >> 32) & 0xFFFF) as usize,
+            ((packed >> 48) & 0xFFFF) as usize,
+        ]
+    }
+
+    pub fn flips(&self) -> u64 {
+        self.flips.load(Ordering::Relaxed)
+    }
+}
+
 struct Coordinator {
     engines: Vec<EngineHandle>,
-    events: mpsc::Receiver<EngineEvent>,
+    /// The scheduling brain — the same `ArrowPolicy` the simulator runs.
+    policy: Box<dyn Policy>,
+    /// Scheduler-side queue bookkeeping: `(req, input_len)` of every
+    /// prefill dispatched to each engine and not yet completed. This is
+    /// the q1 state of the ServerView snapshot.
+    queued: Vec<Vec<(u64, u32)>>,
     /// Per-request completion channels for HTTP handlers.
     waiters: Arc<Mutex<HashMap<u64, mpsc::Sender<(Vec<i32>, f64, f64)>>>>,
-    /// Request start times + max_tokens.
-    inflight: HashMap<u64, (Instant, usize)>,
+    inflight: HashMap<u64, Inflight>,
     done: Arc<Mutex<Vec<Done>>>,
+    sched: Arc<SchedPublish>,
+    started: Instant,
 }
 
 impl Coordinator {
-    /// Pick the prefill engine: least queued prefill work (Arrow's
-    /// minimum-load rule, using live engine stats).
-    fn pick_prefill(stats: &[EngineStats]) -> usize {
-        stats
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, s)| s.prefill_queue)
-            .map(|(i, _)| i)
-            .unwrap()
+    /// Materialize the scheduler's cluster snapshot: coordinator queue
+    /// bookkeeping + the engines' lock-free load counters.
+    fn view(&self) -> ServerView {
+        ServerView {
+            engines: self
+                .engines
+                .iter()
+                .zip(&self.queued)
+                .map(|(e, q)| {
+                    let s = e.stats();
+                    EngineSnapshot {
+                        // Chunk progress is engine-internal; until
+                        // PrefillDone, remaining == input_len.
+                        queued_prefills: q.iter().map(|&(_, l)| (l, l)).collect(),
+                        // Parked adoptions count as decode load — the
+                        // live analog of the simulator's decode_wait
+                        // queue contributing to running_tokens.
+                        running_tokens: s.cached_tokens + s.pending_decode_tokens,
+                        max_kv_tokens: s.kv_capacity_tokens,
+                        avg_token_interval: s.token_interval_s,
+                        has_decode_work: s.active_slots > 0 || s.pending_decode_reqs > 0,
+                    }
+                })
+                .collect(),
+        }
     }
 
-    /// Pick the decode engine: least cached tokens with a free slot; the
-    /// prefill engine itself wins ties (local handoff = no migration).
-    fn pick_decode(stats: &[EngineStats], prefill_engine: usize) -> usize {
-        let best = stats
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.free_slots > 0)
-            .min_by_key(|(i, s)| (s.cached_tokens, usize::from(*i != prefill_engine)))
-            .map(|(i, _)| i);
-        best.unwrap_or(prefill_engine)
+    fn now_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn publish_sched(&self) {
+        self.sched
+            .store_pools(self.policy.pool_sizes().unwrap_or([0; 4]));
+        self.sched.flips.store(self.policy.flip_count(), Ordering::Relaxed);
+    }
+
+    fn handle(&mut self, msg: CoordMsg) {
+        match msg {
+            CoordMsg::Submit {
+                req,
+                prompt,
+                max_tokens,
+                t0,
+            } => {
+                self.inflight.insert(
+                    req,
+                    Inflight {
+                        t0,
+                        max_tokens,
+                        first_token_s: None,
+                    },
+                );
+                // Arrow Alg. 1 picks the prefill engine; the coordinator
+                // only dispatches. The snapshot is materialized first so
+                // the policy call borrows nothing but itself.
+                let now = self.now_s();
+                let snapshot = self.view();
+                let r = Request::new(req, now, prompt.len() as u32, max_tokens as u32);
+                let target = self.policy.place_prefill(now, &r, &snapshot);
+                // A policy must only name real instances; clamp in
+                // release (stay serving) but fail loudly in debug.
+                debug_assert!(target.0 < self.engines.len(), "policy placed on {target}");
+                let t = target.0.min(self.engines.len() - 1);
+                self.queued[t].push((req, prompt.len() as u32));
+                if self.engines[t].send(EngineCmd::Prefill { req, prompt }).is_err() {
+                    self.queued[t].retain(|&(r2, _)| r2 != req);
+                    self.finish(req, Vec::new());
+                }
+                self.publish_sched();
+            }
+            CoordMsg::Engine(ev) => self.handle_engine(ev),
+            CoordMsg::Tick => {
+                // Monitor tick (paper §5.5): drained-pool settling,
+                // TPOT-violation flips, idle-prefill harvesting — live.
+                let now = self.now_s();
+                let snapshot = self.view();
+                self.policy.on_tick(now, &snapshot);
+                self.publish_sched();
+            }
+        }
     }
 
     /// Handle one engine event (decode placement / completion routing).
-    fn handle(&mut self, ev: EngineEvent) {
+    fn handle_engine(&mut self, ev: EngineEvent) {
         match ev {
             EngineEvent::PrefillDone {
                 req,
@@ -86,19 +231,32 @@ impl Coordinator {
                 v,
                 bucket,
             } => {
-                // Place the decode phase (Arrow Alg. 2's shape: min cached
-                // tokens with a free slot, prefer local handoff).
-                let stats: Vec<EngineStats> =
-                    self.engines.iter().map(|e| e.stats()).collect();
-                let target = Self::pick_decode(&stats, engine);
-                let max_tokens = self.inflight.get(&req).map(|x| x.1).unwrap_or(1);
+                self.queued[engine].retain(|&(r, _)| r != req);
+                let max_tokens = match self.inflight.get_mut(&req) {
+                    Some(fl) => {
+                        // First token exists now — wall-clock TTFT.
+                        fl.first_token_s = Some(fl.t0.elapsed().as_secs_f64());
+                        fl.max_tokens
+                    }
+                    None => 1,
+                };
                 if max_tokens <= 1 {
                     self.finish(req, vec![first_token]);
                     return;
                 }
+                // Arrow Alg. 2 picks the decode engine; local handoff
+                // (target == engine) avoids the cross-engine memcpy.
+                let now = self.now_s();
+                let snapshot = self.view();
+                let r = Request::new(req, now, prompt_len as u32, max_tokens as u32);
+                let target =
+                    self.policy
+                        .place_decode(now, &r, InstanceId(engine), &snapshot);
+                debug_assert!(target.0 < self.engines.len(), "policy placed on {target}");
+                let t = target.0.min(self.engines.len() - 1);
                 // KV migration: the slab moves through the coordinator (a
                 // real memcpy between engines when target != source).
-                self.engines[target]
+                if self.engines[t]
                     .send(EngineCmd::StartDecode {
                         req,
                         prompt_len,
@@ -108,28 +266,40 @@ impl Coordinator {
                         bucket,
                         remaining: max_tokens - 1,
                     })
-                    .ok();
+                    .is_err()
+                {
+                    self.finish(req, Vec::new());
+                }
+                self.publish_sched();
             }
             EngineEvent::DecodeDone { req, tokens } => self.finish(req, tokens),
             EngineEvent::Failed { req, error } => {
                 eprintln!("request {req} failed: {error}");
+                for q in &mut self.queued {
+                    q.retain(|&(r, _)| r != req);
+                }
                 self.finish(req, Vec::new());
             }
         }
     }
 
     fn finish(&mut self, req: u64, tokens: Vec<i32>) {
-        let (start, _) = match self.inflight.remove(&req) {
+        let fl = match self.inflight.remove(&req) {
             Some(x) => x,
             None => return,
         };
-        let total = start.elapsed().as_secs_f64();
-        // TTFT approximated at coordinator level by the engine-reported
-        // spans; for the summary we report total/time-per-token.
+        let total = fl.t0.elapsed().as_secs_f64();
         let n = tokens.len().max(1);
-        let tpot = if n > 1 { total / (n - 1) as f64 } else { 0.0 };
+        // Real TTFT was recorded at PrefillDone; fall back to the whole
+        // latency for requests that failed before prefill completed.
+        let ttft = fl.first_token_s.unwrap_or(total);
+        let tpot = if n > 1 {
+            (total - ttft).max(0.0) / (n - 1) as f64
+        } else {
+            0.0
+        };
         self.done.lock().unwrap().push(Done {
-            ttft_s: total - tpot * (n - 1) as f64,
+            ttft_s: ttft,
             tpot_s: tpot,
             tokens: n,
         });
@@ -156,93 +326,132 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
         )?);
         println!("  engine {i} ready");
     }
-    // Startup profiling — the paper's TTFT-predictor fit, on real timings.
-    let predictor = profile_predictor(&engines[0]);
+    // Startup profiling (paper §5.3) — real probe-prompt timings fitted
+    // into the same FixedProfile the policy would get from any substrate.
+    let profile = profile_engines(&engines);
     println!(
         "ttft predictor coefficients: {:?}",
-        predictor.coefficients()
+        profile.predictors[0].coefficients()
     );
+
+    // The scheduling brain: the identical ArrowPolicy the simulator runs.
+    let mut policy: Box<dyn Policy> = Box::new(ArrowPolicy::new(
+        ArrowConfig::new(cfg.ttft_slo, cfg.tpot_slo, cfg.instances),
+        cfg.instances,
+    ));
+    policy.init(&profile);
+    println!("scheduling policy: {}", policy.name());
 
     let waiters: Arc<Mutex<HashMap<u64, mpsc::Sender<(Vec<i32>, f64, f64)>>>> =
         Arc::new(Mutex::new(HashMap::new()));
     let done: Arc<Mutex<Vec<Done>>> = Arc::new(Mutex::new(Vec::new()));
+    let sched = Arc::new(SchedPublish::new());
     let next_id = Arc::new(AtomicU64::new(1));
 
-    let coord = Coordinator {
+    let (msg_tx, msg_rx) = mpsc::channel::<CoordMsg>();
+
+    // Bridge engine events into the coordinator's single input channel.
+    let bridge_tx = msg_tx.clone();
+    std::thread::Builder::new()
+        .name("event-bridge".into())
+        .spawn(move || {
+            while let Ok(ev) = event_rx.recv() {
+                if bridge_tx.send(CoordMsg::Engine(ev)).is_err() {
+                    return;
+                }
+            }
+        })?;
+
+    // Monitor-tick thread: the live counterpart of the simulator's
+    // MonitorTick event, same period.
+    let tick_tx = msg_tx.clone();
+    std::thread::Builder::new()
+        .name("monitor-tick".into())
+        .spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                crate::sim::MONITOR_PERIOD,
+            ));
+            if tick_tx.send(CoordMsg::Tick).is_err() {
+                return;
+            }
+        })?;
+
+    let mut coord = Coordinator {
         engines: engines.iter().map(|e| e.clone_handle()).collect(),
-        events: event_rx,
+        policy,
+        queued: (0..cfg.instances).map(|_| Vec::new()).collect(),
         waiters: Arc::clone(&waiters),
         inflight: HashMap::new(),
         done: Arc::clone(&done),
+        sched: Arc::clone(&sched),
+        started: Instant::now(),
     };
-    // Coordinator needs mutable inflight bookkeeping; submissions flow to
-    // it through a channel.
-    let (submit_tx, submit_rx) = mpsc::channel::<(u64, usize, Instant)>();
-    let engines_for_http: Vec<EngineHandle> =
-        engines.iter().map(|e| e.clone_handle()).collect();
-    std::thread::spawn(move || {
-        let mut coord = coord;
-        loop {
-            // Register new submissions, then handle one engine event.
-            while let Ok((req, max_tokens, t0)) = submit_rx.try_recv() {
-                coord.inflight.insert(req, (t0, max_tokens));
+    coord.publish_sched(); // initial pool split visible before traffic
+    std::thread::Builder::new()
+        .name("coordinator".into())
+        .spawn(move || {
+            while let Ok(msg) = msg_rx.recv() {
+                coord.handle(msg);
             }
-            match coord
-                .events
-                .recv_timeout(std::time::Duration::from_millis(20))
-            {
-                Ok(ev) => {
-                    // Re-drain in case a submission raced its own event.
-                    while let Ok((req, max_tokens, t0)) = submit_rx.try_recv() {
-                        coord.inflight.insert(req, (t0, max_tokens));
-                    }
-                    coord.handle(ev);
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
-            }
-        }
-    });
+        })?;
 
     let shutdown = Arc::new(AtomicBool::new(false));
     let addr = format!("0.0.0.0:{}", cfg.port);
+    let engines_http: Vec<EngineHandle> = engines.iter().map(|e| e.clone_handle()).collect();
     let waiters_http = Arc::clone(&waiters);
     let done_http = Arc::clone(&done);
+    let sched_http = Arc::clone(&sched);
     let cfg_http = cfg.clone();
     http::serve(&addr, shutdown, move |req| {
         route(
             req,
-            &engines_for_http,
+            &engines_http,
             &waiters_http,
             &done_http,
+            &sched_http,
             &next_id,
-            &submit_tx,
+            &msg_tx,
             &cfg_http,
         )
     })?;
     Ok(())
 }
 
-fn profile_predictor(engine: &EngineHandle) -> TtftPredictor {
-    // Time real prefills at each bucket through the engine, then fit.
+/// Time real prefills at each bucket through engine 0, fit the TTFT
+/// quadratic, and read each engine's profiled KV capacity. All engines
+/// load identical artifacts on one host, so one fitted curve serves the
+/// whole cluster (heterogeneous deployments would probe per engine, §8);
+/// Max Running Tokens uses the engine-reported memory bound.
+fn profile_engines(engines: &[EngineHandle]) -> FixedProfile {
     let mut samples: Vec<(f64, f64)> = Vec::new();
-    for bucket in engine.buckets() {
+    let mut max_bucket = 2048usize;
+    for bucket in engines[0].buckets() {
+        max_bucket = max_bucket.max(bucket);
         let prompt: Vec<i32> = (0..bucket as i32).map(|i| i % 97 + 1).collect();
         let t0 = Instant::now();
-        if engine.blocking_prefill(&prompt).is_ok() {
+        if engines[0].blocking_prefill(&prompt).is_ok() {
             samples.push((bucket as f64, t0.elapsed().as_secs_f64()));
         }
     }
-    if samples.len() >= 3 {
+    let predictor = if samples.len() >= 3 {
         let xs: Vec<f64> = samples.iter().map(|s| s.0).collect();
         let ys: Vec<f64> = samples.iter().map(|s| s.1).collect();
         TtftPredictor::from_coefficients(
             crate::util::stats::quadratic_fit(&xs, &ys),
-            2048,
+            max_bucket as u32,
             0.001,
         )
     } else {
-        TtftPredictor::from_coefficients([0.01, 1e-4, 0.0], 2048, 0.001)
+        TtftPredictor::from_coefficients([0.01, 1e-4, 0.0], max_bucket as u32, 0.001)
+    };
+    // kv_capacity_tokens is stored by EngineHandle::spawn before the
+    // engine thread starts, so it is always visible here.
+    FixedProfile {
+        predictors: engines.iter().map(|_| predictor.clone()).collect(),
+        max_running_tokens: engines
+            .iter()
+            .map(|e| e.stats().kv_capacity_tokens.max(1))
+            .collect(),
     }
 }
 
@@ -252,8 +461,9 @@ fn route(
     engines: &[EngineHandle],
     waiters: &Arc<Mutex<HashMap<u64, mpsc::Sender<(Vec<i32>, f64, f64)>>>>,
     done: &Arc<Mutex<Vec<Done>>>,
+    sched: &Arc<SchedPublish>,
     next_id: &Arc<AtomicU64>,
-    submit: &mpsc::Sender<(u64, usize, Instant)>,
+    submit: &mpsc::Sender<CoordMsg>,
     cfg: &ServeConfig,
 ) -> HttpResponse {
     match (req.method.as_str(), req.path.as_str()) {
@@ -273,26 +483,35 @@ fn route(
                         ("free_slots", Json::Num(s.free_slots as f64)),
                         ("cached_tokens", Json::Num(s.cached_tokens as f64)),
                         ("iterations", Json::Num(s.iterations as f64)),
+                        (
+                            "kv_capacity_tokens",
+                            Json::Num(s.kv_capacity_tokens as f64),
+                        ),
+                        // NaN (no evidence) encodes as JSON null.
+                        ("token_interval_s", Json::Num(s.token_interval_s)),
                     ])
                 })
                 .collect();
+            let pct = crate::util::stats::percentile;
+            // Proof the server runs Arrow: live pool sizes + flip count
+            // from the shared policy's pool bookkeeping.
+            let pools = sched.pools();
             let body = Json::obj(vec![
                 ("completed_requests", Json::Num(d.len() as f64)),
                 ("total_tokens", Json::Num(total_tokens as f64)),
-                (
-                    "p50_ttft_s",
-                    Json::Num(crate::util::stats::percentile(&ttfts, 50.0)),
-                ),
-                (
-                    "p90_ttft_s",
-                    Json::Num(crate::util::stats::percentile(&ttfts, 90.0)),
-                ),
-                (
-                    "p90_tpot_s",
-                    Json::Num(crate::util::stats::percentile(&tpots, 90.0)),
-                ),
+                ("p50_ttft_s", Json::Num(pct(&ttfts, 50.0))),
+                ("p90_ttft_s", Json::Num(pct(&ttfts, 90.0))),
+                ("p99_ttft_s", Json::Num(pct(&ttfts, 99.0))),
+                ("p50_tpot_s", Json::Num(pct(&tpots, 50.0))),
+                ("p90_tpot_s", Json::Num(pct(&tpots, 90.0))),
+                ("p99_tpot_s", Json::Num(pct(&tpots, 99.0))),
                 ("ttft_slo", Json::Num(cfg.ttft_slo)),
                 ("tpot_slo", Json::Num(cfg.tpot_slo)),
+                (
+                    "pools",
+                    Json::Arr(pools.iter().map(|&p| Json::Num(p as f64)).collect()),
+                ),
+                ("flips", Json::Num(sched.flips() as f64)),
                 ("engines", Json::Arr(stats)),
             ]);
             HttpResponse::json(200, &body.encode())
@@ -324,17 +543,19 @@ fn route(
             let id = next_id.fetch_add(1, Ordering::Relaxed);
             let (tx, rx) = mpsc::channel();
             waiters.lock().unwrap().insert(id, tx);
-            let t0 = Instant::now();
-            submit.send((id, max_tokens, t0)).ok();
-
-            // Prefill placement: least queued prefill (minimum load).
-            let stats: Vec<EngineStats> = engines.iter().map(|e| e.stats()).collect();
-            let target = Coordinator::pick_prefill(&stats);
-            if engines[target]
-                .send(EngineCmd::Prefill { req: id, prompt: tokens })
+            // All placement happens on the coordinator thread, where the
+            // policy lives; the HTTP handler only submits and waits.
+            if submit
+                .send(CoordMsg::Submit {
+                    req: id,
+                    prompt: tokens,
+                    max_tokens,
+                    t0: Instant::now(),
+                })
                 .is_err()
             {
-                return HttpResponse::json(503, "{\"error\":\"engine unavailable\"}");
+                waiters.lock().unwrap().remove(&id);
+                return HttpResponse::json(503, "{\"error\":\"coordinator unavailable\"}");
             }
 
             match rx.recv_timeout(std::time::Duration::from_secs(120)) {

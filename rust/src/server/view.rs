@@ -1,0 +1,111 @@
+//! The live server's [`ClusterView`] adapter.
+//!
+//! The global scheduler's knowledge of a live cluster has two sources
+//! (paper Fig. 5): its *own* dispatch bookkeeping — which prefills it
+//! sent where and has not yet seen complete — and the engines' lock-free
+//! load counters ([`super::engine::EngineStats`]). The coordinator
+//! materializes both into an [`EngineSnapshot`] per engine at each
+//! decision point; [`ServerView`] then exposes the exact interface the
+//! simulator's `SimView` exposes, so `ArrowPolicy` runs unmodified.
+//!
+//! Fidelity notes (vs. the simulator's omniscient view):
+//! * the coordinator does not observe chunk progress, so a queued
+//!   prefill's `remaining` equals its `input_len` until `PrefillDone`
+//!   arrives — a conservative (upper-bound) queue-delay estimate;
+//! * `running_tokens` is the engine's cached-token count plus the KV of
+//!   adoptions the engine has accepted but not yet slotted — the live
+//!   analog of the simulator's `decode_wait` parking queue. Slot
+//!   exhaustion therefore needs no special-case placement rule: a
+//!   slot-full engine parks the request (exactly like the simulator)
+//!   and its parked load steers `min_running_tokens` elsewhere;
+//! * building a snapshot allocates one `Vec` per engine. That is fine
+//!   here — live decisions sit next to millisecond model iterations —
+//!   and the no-allocation rule (ROADMAP "Scheduling core") binds the
+//!   *simulator* adapter, which stays borrow-only.
+
+use crate::sched::ClusterView;
+
+/// One engine's scheduler-visible state, materialized at decision time.
+#[derive(Debug, Clone)]
+pub struct EngineSnapshot {
+    /// `(input_len, remaining)` of every prefill dispatched to this
+    /// engine and not yet completed, in dispatch order.
+    pub queued_prefills: Vec<(u32, u32)>,
+    /// Total KV tokens resident for decode (running-tokens metric).
+    pub running_tokens: u64,
+    /// KV capacity in tokens.
+    pub max_kv_tokens: u64,
+    /// Recent token interval (NaN = no evidence).
+    pub avg_token_interval: f64,
+    /// Any decode slots active (or adoptions pending) on the engine.
+    pub has_decode_work: bool,
+}
+
+/// [`ClusterView`] over a materialized per-engine snapshot table.
+#[derive(Debug, Clone)]
+pub struct ServerView {
+    pub engines: Vec<EngineSnapshot>,
+}
+
+impl ClusterView for ServerView {
+    fn n_instances(&self) -> usize {
+        self.engines.len()
+    }
+
+    fn for_each_queued_prefill(&self, inst: usize, f: &mut dyn FnMut(u32, u32)) {
+        for &(input_len, remaining) in &self.engines[inst].queued_prefills {
+            f(input_len, remaining);
+        }
+    }
+
+    fn running_tokens(&self, inst: usize) -> u64 {
+        self.engines[inst].running_tokens
+    }
+
+    fn max_kv_tokens(&self, inst: usize) -> u64 {
+        self.engines[inst].max_kv_tokens
+    }
+
+    fn avg_token_interval(&self, inst: usize) -> f64 {
+        self.engines[inst].avg_token_interval
+    }
+
+    fn has_prefill_work(&self, inst: usize) -> bool {
+        !self.engines[inst].queued_prefills.is_empty()
+    }
+
+    fn has_decode_work(&self, inst: usize) -> bool {
+        self.engines[inst].has_decode_work
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(queued: Vec<(u32, u32)>, running: u64, decode: bool) -> EngineSnapshot {
+        EngineSnapshot {
+            queued_prefills: queued,
+            running_tokens: running,
+            max_kv_tokens: 1000,
+            avg_token_interval: f64::NAN,
+            has_decode_work: decode,
+        }
+    }
+
+    #[test]
+    fn view_reads_snapshot_table() {
+        let v = ServerView {
+            engines: vec![snap(vec![(100, 100), (50, 50)], 0, false), snap(vec![], 70, true)],
+        };
+        assert_eq!(ClusterView::n_instances(&v), 2);
+        assert_eq!(v.queued_prefill_tokens(0), 150);
+        assert!(v.has_prefill_work(0) && !v.has_decode_work(0));
+        assert!(!v.has_prefill_work(1) && v.has_decode_work(1));
+        assert_eq!(v.running_tokens(1), 70);
+        assert!(!v.is_idle(0) && !v.is_idle(1));
+        let mut order = Vec::new();
+        v.for_each_queued_prefill(0, &mut |l, r| order.push((l, r)));
+        assert_eq!(order, vec![(100, 100), (50, 50)]);
+    }
+}

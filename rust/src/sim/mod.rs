@@ -41,6 +41,7 @@
 //!   `Produced` buffer instead of allocating a `Vec` per iteration.
 
 pub mod policy;
+pub mod view;
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -52,6 +53,7 @@ use crate::request::{InstanceId, Request, RequestRecord, RequestState, Time};
 use crate::trace::Trace;
 
 pub use policy::Policy;
+pub use view::SimView;
 
 /// Interval of the instance-monitor tick (paper Fig. 5 VI).
 pub const MONITOR_PERIOD: f64 = 1.0;
@@ -261,7 +263,7 @@ impl Cluster {
         self.records = self.requests.iter().map(RequestRecord::new).collect();
         self.last_arrival = trace.duration();
 
-        self.policy.init(&self.instances);
+        self.policy.init(&SimView(&self.instances));
 
         if prepush_arrivals {
             // Reference mode: arrivals occupy seqs 1..=N, exactly like the
@@ -344,8 +346,11 @@ impl Cluster {
     fn on_arrival(&mut self, idx: usize) {
         let req = self.requests[idx];
         // Disjoint field borrows: the policy reads the instance table
-        // while being mutated itself — no take()/put-back, no clone.
-        let target = self.policy.place_prefill(self.now, &req, &self.instances);
+        // (through the zero-cost SimView adapter) while being mutated
+        // itself — no take()/put-back, no clone.
+        let target = self
+            .policy
+            .place_prefill(self.now, &req, &SimView(&self.instances));
 
         let inst = &mut self.instances[target.0];
         if req.input_len as u64 + 1 > inst.cost.max_kv_tokens {
@@ -417,7 +422,7 @@ impl Cluster {
             self.now,
             &req,
             InstanceId(prefill_inst),
-            &self.instances,
+            &SimView(&self.instances),
         );
         self.records[idx].decode_instance = Some(target);
 
@@ -506,7 +511,7 @@ impl Cluster {
     }
 
     fn on_monitor_tick(&mut self) {
-        self.policy.on_tick(self.now, &self.instances);
+        self.policy.on_tick(self.now, &SimView(&self.instances));
 
         if self.cfg.record_timeline {
             let pools = self.policy.pool_sizes();

@@ -1,119 +1,13 @@
-//! The global-scheduling policy interface.
+//! Re-export shim: the policy interface lives in [`crate::sched`] now.
 //!
-//! Both Arrow (coordinator::arrow) and the baselines implement [`Policy`].
-//! The simulator owns the engine/timing; policies own only *decisions* —
-//! which instance prefills a request, which decodes it, and when instances
-//! move between pools. This split is the paper's stateless-instance
-//! insight (§3.4): roles live in the scheduler's pool bookkeeping, never
-//! in the engine.
-//!
-//! # Contract with the event loop
-//!
-//! * **Determinism.** A policy must be a pure function of its own state
-//!   and the arguments it is handed — no wall clock, no ambient
-//!   randomness. The simulator's byte-identical-schedule guarantee
-//!   (ROADMAP "Performance architecture") holds only under this contract.
-//! * **Hot path.** `place_prefill`/`place_decode` run once per request;
-//!   implementations should avoid per-call allocation (see
-//!   `Pools::members_iter` / `SimInstance::prefill_queue_iter` for
-//!   allocation-free cluster queries) and must never panic on degenerate
-//!   float comparisons — use `f64::total_cmp`, not
-//!   `partial_cmp().unwrap()`.
+//! PR 2 moved the [`Policy`] trait out of the simulator into the
+//! substrate-agnostic scheduling core (`rust/src/sched/`), so the live
+//! PJRT server drives the exact same `ArrowPolicy` object as the
+//! simulator. Policies consume [`crate::sched::ClusterView`] snapshots
+//! instead of `&[SimInstance]`; the simulator's zero-cost adapter is
+//! [`crate::sim::SimView`]. This module keeps the historical
+//! `sim::policy::*` paths (used by tests, benches and downstream code)
+//! pointing at the new home.
 
-use crate::engine::SimInstance;
-use crate::request::{InstanceId, Request, Time};
-
-pub trait Policy: Send {
-    fn name(&self) -> &'static str;
-
-    /// Called once before the run with the final instance set (the
-    /// paper's startup profiling hook — TTFT predictor fitting).
-    fn init(&mut self, _instances: &[SimInstance]) {}
-
-    /// Select the instance that will run `req`'s prefill phase (Alg. 1
-    /// for Arrow; trivial for baselines).
-    fn place_prefill(
-        &mut self,
-        now: Time,
-        req: &Request,
-        instances: &[SimInstance],
-    ) -> InstanceId;
-
-    /// Select the instance that will run `req`'s decode phase (Alg. 2).
-    fn place_decode(
-        &mut self,
-        now: Time,
-        req: &Request,
-        prefill_instance: InstanceId,
-        instances: &[SimInstance],
-    ) -> InstanceId;
-
-    /// Periodic monitor tick (paper §5.5: TPOT-violation and idle-prefill
-    /// instance scheduling happen here).
-    fn on_tick(&mut self, _now: Time, _instances: &[SimInstance]) {}
-
-    /// Pool sizes [Prefill, Decode, P→D, D→P] for snapshots, if the
-    /// policy maintains elastic pools.
-    fn pool_sizes(&self) -> Option<[usize; 4]> {
-        None
-    }
-
-    /// Number of instance flips performed so far (ablation metric).
-    fn flip_count(&self) -> u64 {
-        0
-    }
-}
-
-/// Trivial policies used by simulator unit tests.
-pub mod tests_support {
-    use super::*;
-
-    /// Everything on instance 0 (colocated single instance).
-    pub struct AllToOne;
-
-    impl Policy for AllToOne {
-        fn name(&self) -> &'static str {
-            "all-to-one"
-        }
-
-        fn place_prefill(&mut self, _: Time, _: &Request, _: &[SimInstance]) -> InstanceId {
-            InstanceId(0)
-        }
-
-        fn place_decode(
-            &mut self,
-            _: Time,
-            _: &Request,
-            _prefill: InstanceId,
-            _: &[SimInstance],
-        ) -> InstanceId {
-            InstanceId(0)
-        }
-    }
-
-    /// Fixed prefill/decode instance sets, round-robin within each.
-    pub struct StaticSplit {
-        pub prefill: Vec<usize>,
-        pub decode: Vec<usize>,
-    }
-
-    impl Policy for StaticSplit {
-        fn name(&self) -> &'static str {
-            "static-split"
-        }
-
-        fn place_prefill(&mut self, _: Time, req: &Request, _: &[SimInstance]) -> InstanceId {
-            InstanceId(self.prefill[req.id.0 as usize % self.prefill.len()])
-        }
-
-        fn place_decode(
-            &mut self,
-            _: Time,
-            req: &Request,
-            _prefill: InstanceId,
-            _: &[SimInstance],
-        ) -> InstanceId {
-            InstanceId(self.decode[req.id.0 as usize % self.decode.len()])
-        }
-    }
-}
+pub use crate::sched::policy::tests_support;
+pub use crate::sched::{ClusterView, Policy, ProfileSource};

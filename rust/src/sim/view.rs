@@ -1,0 +1,118 @@
+//! The simulator's [`ClusterView`] adapter: a zero-cost borrow of the
+//! `SimInstance` table.
+//!
+//! `SimView` is a transparent newtype over `&[SimInstance]` — every
+//! accessor forwards to the instance's own allocation-free query
+//! (`prefill_queue_iter`, `running_tokens`, …), so routing policy calls
+//! through the view adds one virtual dispatch and nothing else. The
+//! PR-1 hot-path invariants (ROADMAP "Performance architecture": no
+//! per-event allocation, streamed queue views) are preserved verbatim.
+//!
+//! `SimView` also implements [`ProfileSource`]: startup profiling in the
+//! simulator queries each instance's cost model, standing in for the
+//! real system's timed probe prompts (paper §5.3).
+
+use crate::coordinator::predictor::TtftPredictor;
+use crate::engine::SimInstance;
+use crate::sched::{ClusterView, ProfileSource};
+
+/// Zero-cost [`ClusterView`] over the simulator's instance table.
+pub struct SimView<'a>(pub &'a [SimInstance]);
+
+impl ClusterView for SimView<'_> {
+    fn n_instances(&self) -> usize {
+        self.0.len()
+    }
+
+    fn for_each_queued_prefill(&self, inst: usize, f: &mut dyn FnMut(u32, u32)) {
+        for (input_len, remaining) in self.0[inst].prefill_queue_iter() {
+            f(input_len, remaining);
+        }
+    }
+
+    fn running_tokens(&self, inst: usize) -> u64 {
+        self.0[inst].running_tokens()
+    }
+
+    fn max_kv_tokens(&self, inst: usize) -> u64 {
+        self.0[inst].cost.max_kv_tokens
+    }
+
+    fn avg_token_interval(&self, inst: usize) -> f64 {
+        self.0[inst].avg_token_interval()
+    }
+
+    fn has_prefill_work(&self, inst: usize) -> bool {
+        self.0[inst].has_prefill_work()
+    }
+
+    fn has_decode_work(&self, inst: usize) -> bool {
+        self.0[inst].has_decode_work()
+    }
+}
+
+impl ProfileSource for SimView<'_> {
+    fn n_instances(&self) -> usize {
+        self.0.len()
+    }
+
+    fn fit_predictor(&self, i: usize) -> TtftPredictor {
+        TtftPredictor::profile(&self.0[i].cost, self.0[i].chunk_tokens)
+    }
+
+    fn max_running_tokens(&self, i: usize, tpot_slo: f64) -> u64 {
+        self.0[i].cost.max_running_tokens(tpot_slo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::CostModel;
+    use crate::request::{InstanceId, RequestId};
+
+    fn inst(i: usize) -> SimInstance {
+        SimInstance::new(InstanceId(i), CostModel::h800_llama8b())
+    }
+
+    #[test]
+    fn view_mirrors_instance_state() {
+        let mut insts = vec![inst(0), inst(1)];
+        insts[0].enqueue_prefill(RequestId(1), 4000);
+        insts[0].enqueue_prefill(RequestId(2), 600);
+        assert!(insts[1].try_reserve_kv(500));
+        insts[1].enqueue_decode(RequestId(3), 500, 10);
+
+        let v = SimView(&insts);
+        assert_eq!(ClusterView::n_instances(&v), 2);
+        assert_eq!(v.queued_prefill_tokens(0), 4600);
+        assert_eq!(v.queued_prefill_tokens(1), 0);
+        assert_eq!(v.running_tokens(1), 500);
+        assert!(v.has_prefill_work(0) && !v.has_decode_work(0));
+        assert!(!v.has_prefill_work(1) && v.has_decode_work(1));
+        assert!(!v.is_idle(0) && !v.is_idle(1));
+        assert!(v.avg_token_interval(0).is_nan(), "no tokens yet");
+        assert_eq!(v.max_kv_tokens(0), insts[0].cost.max_kv_tokens);
+
+        // Queue visit order matches the instance's own iterator.
+        let mut seen = Vec::new();
+        v.for_each_queued_prefill(0, &mut |l, r| seen.push((l, r)));
+        let direct: Vec<(u32, u32)> = insts[0].prefill_queue_iter().collect();
+        assert_eq!(seen, direct);
+    }
+
+    #[test]
+    fn profile_source_uses_each_instances_cost_model() {
+        let base = CostModel::h800_llama8b();
+        let fast = base.with_tensor_parallel(2, 0.9);
+        let insts = vec![
+            SimInstance::new(InstanceId(0), fast.clone()),
+            SimInstance::new(InstanceId(1), base.clone()),
+        ];
+        let v = SimView(&insts);
+        let t_fast = v.fit_predictor(0).prefill_seconds(20_000);
+        let t_slow = v.fit_predictor(1).prefill_seconds(20_000);
+        assert!(t_fast < t_slow, "fast instance must profile faster");
+        assert_eq!(v.max_running_tokens(1, 0.1), base.max_running_tokens(0.1));
+    }
+}

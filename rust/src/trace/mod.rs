@@ -22,7 +22,9 @@ pub struct Trace {
 
 impl Trace {
     pub fn new(name: &str, mut requests: Vec<Request>) -> Self {
-        requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        // total_cmp: a NaN arrival from a malformed trace file sorts last
+        // instead of panicking the loader.
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         Trace {
             name: name.to_string(),
             requests,

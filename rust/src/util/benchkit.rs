@@ -16,6 +16,15 @@ pub fn black_box<T>(x: T) -> T {
     hint::black_box(x)
 }
 
+/// Parse an `f64` knob from the environment (bench gate thresholds),
+/// falling back to `default` when unset or unparseable.
+pub fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 /// One benchmark's timing summary (seconds per iteration).
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -110,7 +119,9 @@ impl Bencher {
             black_box(f());
             samples.push(s.elapsed().as_secs_f64());
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): timing samples are
+        // finite in practice, but the reporter must never panic.
+        samples.sort_by(|a, b| a.total_cmp(b));
         let res = BenchResult {
             name: name.to_string(),
             iters: samples.len() as u64,

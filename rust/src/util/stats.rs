@@ -8,7 +8,9 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN samples sort to the top instead of panicking; they
+    // then only distort the percentiles they actually land on.
+    v.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&v, p)
 }
 
@@ -79,7 +81,7 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
 /// Empirical CDF points (sorted values, cumulative fraction) — Figure 2.
 pub fn ecdf(xs: &[f64]) -> Vec<(f64, f64)> {
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let n = v.len();
     v.into_iter()
         .enumerate()
@@ -127,10 +129,17 @@ fn gauss_solve3(m: &mut [[f64; 4]; 3]) -> [f64; 3] {
     for col in 0..3 {
         // Partial pivot.
         let piv = (col..3)
-            .max_by(|&a, &b| m[a][col].abs().partial_cmp(&m[b][col].abs()).unwrap())
+            .max_by(|&a, &b| m[a][col].abs().total_cmp(&m[b][col].abs()))
             .unwrap();
         m.swap(col, piv);
         let d = m[col][col];
+        if d.is_nan() {
+            // NaN-poisoned samples (e.g. a broken profiling probe):
+            // propagate NaN coefficients instead of tripping the singular
+            // assert below — predictor consumers order NaN predictions
+            // safely via total_cmp.
+            return [f64::NAN; 3];
+        }
         assert!(d.abs() > 1e-12, "singular system in quadratic_fit");
         for j in col..4 {
             m[col][j] /= d;
@@ -261,6 +270,38 @@ mod tests {
     #[test]
     fn percentile_empty_nan() {
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    /// Regression for the latent `partial_cmp().unwrap()` panics (PR-2
+    /// satellite): a NaN-bearing sample set must flow through the whole
+    /// stats layer without panicking. NaN sorts last under `total_cmp`,
+    /// so low/mid percentiles of mostly-clean data stay meaningful.
+    #[test]
+    fn nan_samples_never_panic_stats() {
+        let xs = [2.0, f64::NAN, 1.0, 3.0];
+        let p50 = percentile(&xs, 50.0);
+        assert!((p50 - 2.5).abs() < 1e-12, "NaN sorted last, p50={p50}");
+        assert!(percentile(&xs, 100.0).is_nan(), "NaN lands at the max");
+        // ecdf sorts with the same comparator — no panic, 4 points out.
+        assert_eq!(ecdf(&xs).len(), 4);
+        // quadratic_fit survives a NaN sample (result degenerates to NaN
+        // coefficients rather than panicking in the pivot search).
+        let fit_xs = [0.0, 1.0, 2.0, 3.0];
+        let fit_ys = [1.0, f64::NAN, 5.0, 7.0];
+        let c = quadratic_fit(&fit_xs, &fit_ys);
+        assert!(c.iter().all(|v| v.is_nan()), "poisoned fit: {c:?}");
+    }
+
+    /// The metrics-layer consumer of the same fix: a request record with
+    /// a NaN token timestamp reports a gap instead of panicking.
+    #[test]
+    fn nan_token_time_does_not_panic_max_gap() {
+        use crate::request::{Request, RequestRecord};
+        let req = Request::new(1, 0.0, 10, 3);
+        let mut rec = RequestRecord::new(&req);
+        rec.first_token = Some(1.0);
+        rec.token_times = vec![1.0, f64::NAN, 2.0];
+        let _ = rec.max_token_gap(); // must not panic
     }
 
     #[test]

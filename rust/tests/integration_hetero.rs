@@ -13,8 +13,8 @@ use arrow::costmodel::CostModel;
 use arrow::engine::SimInstance;
 use arrow::metrics::SloReport;
 use arrow::request::{InstanceId, Request};
-use arrow::sim::policy::Policy;
-use arrow::sim::{Cluster, SimConfig};
+use arrow::sched::{ClusterView, Policy};
+use arrow::sim::{Cluster, SimConfig, SimView};
 use arrow::trace::synthetic::smoke;
 use arrow::trace::Trace;
 
@@ -34,14 +34,14 @@ fn hetero_instances() -> Vec<SimInstance> {
 fn per_instance_predictors_reflect_speed() {
     let insts = hetero_instances();
     let mut p = ArrowPolicy::new(ArrowConfig::new(3.0, 0.1, 4), 4);
-    p.init(&insts);
+    p.init(&SimView(&insts));
     // Equal queues: the policy must place the next prefill on a FAST
     // instance, because its predicted delay is smaller.
     let mut insts = insts;
     for i in 0..4 {
         insts[i].enqueue_prefill(arrow::request::RequestId(i as u64), 20_000);
     }
-    let t = p.place_prefill(0.0, &Request::new(9, 0.0, 5_000, 10), &insts);
+    let t = p.place_prefill(0.0, &Request::new(9, 0.0, 5_000, 10), &SimView(&insts));
     assert!(t.0 % 2 == 0, "picked slow instance {t} despite equal queues");
 }
 
@@ -86,7 +86,7 @@ fn ttft_prediction_matches_realized_prefill_only() {
         fn name(&self) -> &'static str {
             "to-zero"
         }
-        fn place_prefill(&mut self, _: f64, _: &Request, _: &[SimInstance]) -> InstanceId {
+        fn place_prefill(&mut self, _: f64, _: &Request, _: &dyn ClusterView) -> InstanceId {
             InstanceId(0)
         }
         fn place_decode(
@@ -94,7 +94,7 @@ fn ttft_prediction_matches_realized_prefill_only() {
             _: f64,
             _: &Request,
             p: InstanceId,
-            _: &[SimInstance],
+            _: &dyn ClusterView,
         ) -> InstanceId {
             p
         }
@@ -133,7 +133,7 @@ fn prediction_error_grows_with_decode_interference() {
         fn name(&self) -> &'static str {
             "to-zero"
         }
-        fn place_prefill(&mut self, _: f64, _: &Request, _: &[SimInstance]) -> InstanceId {
+        fn place_prefill(&mut self, _: f64, _: &Request, _: &dyn ClusterView) -> InstanceId {
             InstanceId(0)
         }
         fn place_decode(
@@ -141,7 +141,7 @@ fn prediction_error_grows_with_decode_interference() {
             _: f64,
             _: &Request,
             p: InstanceId,
-            _: &[SimInstance],
+            _: &dyn ClusterView,
         ) -> InstanceId {
             p
         }

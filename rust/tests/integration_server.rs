@@ -90,6 +90,19 @@ fn server_end_to_end() {
     let m = Json::parse(&get(&addr, "/metrics").unwrap()).unwrap();
     assert!(m.get("completed_requests").as_f64().unwrap() >= 8.0);
     assert_eq!(m.get("engines").as_arr().unwrap().len(), 2);
+    // The server really runs Arrow: the shared policy's elastic pools
+    // partition the engine set, live.
+    let pools: Vec<u64> = m
+        .get("pools")
+        .as_arr()
+        .expect("pools in /metrics")
+        .iter()
+        .filter_map(|x| x.as_u64())
+        .collect();
+    assert_eq!(pools.len(), 4, "pool sizes [P, D, P>D, D>P]");
+    assert_eq!(pools.iter().sum::<u64>(), 2, "pools partition the engines");
+    assert!(m.get("p99_ttft_s").as_f64().is_some());
+    assert!(m.get("p99_tpot_s").as_f64().is_some());
 
     // Error paths.
     let bad = post(&addr, "/v1/completions", "{\"max_tokens\":3}").unwrap();
