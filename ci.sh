@@ -1,14 +1,24 @@
 #!/usr/bin/env bash
 # CI gate for the Arrow reproduction.
 #
-#   ./ci.sh          # fmt check, release build, tests, simulator smoke bench
-#   ./ci.sh --fast   # skip the bench gate
+#   ./ci.sh          # fmt check, builds, debug+release tests, bench gates
+#   ./ci.sh --fast   # skip the bench gates
 #
-# The bench gate runs `benches/simulator.rs` in smoke mode, which exits
-# non-zero if the Arrow system drops below 1M events/s on the clipped
-# azure_code workload (override with ARROW_BENCH_MIN_EPS).
+# The bench gates run `benches/simulator.rs` and `benches/scheduler.rs`
+# in smoke mode, which exit non-zero if the Arrow system drops below
+# 1M events/s (override: ARROW_BENCH_MIN_EPS) or any placement path
+# below 10k decisions/s (override: ARROW_BENCH_MIN_DPS).
 set -euo pipefail
 cd "$(dirname "$0")/rust"
+
+# Fail loudly — not silently — when the toolchain is absent. Authoring
+# containers without Rust previously made CI look green while nothing
+# compiled; that must be an error, never a skip.
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ERROR: no Rust toolchain on PATH (cargo not found) — CI cannot run." >&2
+    echo "       Install rustup or run inside the build image." >&2
+    exit 1
+fi
 
 echo "== cargo fmt --check =="
 # Advisory until the tree is confirmed rustfmt-clean (the seed predates
@@ -19,8 +29,23 @@ cargo fmt --check || echo "WARN: rustfmt drift — run 'cargo fmt' (non-fatal fo
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test -q =="
+echo "== cargo test -q (debug) =="
 cargo test -q
+
+# The bench gates run the release profile (lto=thin, codegen-units=1);
+# test it too so profile-specific miscompiles/overflow behavior can't
+# hide behind a debug-only test pass.
+echo "== cargo test --release -q =="
+cargo test --release -q
+
+# The golden-schedule gate only bites across commits once the recorded
+# digests are committed; the first test run self-records them (see
+# tests/golden_schedule.rs), a human must `git add` the file.
+if ! git ls-files --error-unmatch tests/golden/schedule_digests.json >/dev/null 2>&1; then
+    echo "WARN: rust/tests/golden/schedule_digests.json is not committed —" >&2
+    echo "      the cross-commit schedule-regression gate is INERT until it is." >&2
+    echo "      Commit the file recorded by this test run." >&2
+fi
 
 if [[ "${1:-}" != "--fast" ]]; then
     echo "== simulator bench (smoke gate) =="

@@ -1,24 +1,31 @@
 //! Burst adaptation demo (paper Insight 5 + §5.5): watch Arrow's elastic
-//! pools reshape in real time as a synthetic traffic spike arrives.
+//! pools reshape in real time as a synthetic traffic spike arrives —
+//! and, since PR 3, watch *elastic membership* absorb the same spike by
+//! scaling the instance set itself.
 //!
-//! Prints a per-second timeline of pool sizes [P, D, P→D, D→P] and the
-//! prefill/decode load, showing the D→P flips when the burst hits and the
-//! P→D flips as decode load catches up — the temporal-misalignment
+//! Act 1 prints a per-second timeline of pool sizes [P, D, P→D, D→P] and
+//! the prefill/decode load, showing the D→P flips when the burst hits and
+//! the P→D flips as decode load catches up — the temporal-misalignment
 //! opportunity Fig. 4 motivates.
 //!
-//! The `ArrowPolicy` making these flips is the substrate-agnostic one
+//! Act 2 replays the workload on a smaller fixed cluster vs the same
+//! cluster with spare instances joining right as the spike lands
+//! (`scenarios::spike_scale_out`): the joiners land in whichever pool
+//! Alg. 1's SLO test picks and the tail TTFT collapses.
+//!
+//! The `ArrowPolicy` making these moves is the substrate-agnostic one
 //! from `arrow::sched` (PR 2): the simulator feeds it `SimView`
 //! snapshots here, and `arrow serve` feeds the identical object
 //! `ServerView` snapshots in production — the same pool timeline this
 //! demo prints is what the live server's `/metrics` `pools` field
-//! exposes.
+//! exposes, and the same joins are what `POST /admin/scale-out` does.
 //!
 //! Run with: `cargo run --release --example burst_adaptation`
 
 use arrow::costmodel::CostModel;
 use arrow::metrics::SloReport;
 use arrow::request::Request;
-use arrow::scenarios::{build, System};
+use arrow::scenarios::{build, spike_scale_out, System};
 use arrow::trace::Trace;
 use arrow::util::rng::Rng;
 
@@ -104,4 +111,41 @@ fn main() {
     );
     assert!(res.total_flips > 0, "the burst must trigger pool flips");
     println!("note the Prefill pool growing right at the burst and shrinking after.");
+
+    // ---- Act 2: elastic membership absorbs the same spike (PR 3) ----
+    // A 4-GPU cluster takes the identical workload twice: once with fixed
+    // membership, once with 4 spare instances joining at t=20s, the
+    // moment the burst lands (what an autoscaler reacting to queue depth
+    // would do via POST /admin/scale-out on the live server).
+    println!("\n== elastic membership vs the same burst (PR 3) ==");
+    let base = CostModel::h800_llama8b();
+    let fixed = build(System::Arrow, 4, &base, ttft_slo, tpot_slo, false).run(&trace);
+    let elastic = spike_scale_out(4, 4, &base, ttft_slo, tpot_slo, 20.0).run(&trace);
+    let rep_fixed = SloReport::from_records(&fixed.records, ttft_slo, tpot_slo, trace.duration());
+    let rep_elastic =
+        SloReport::from_records(&elastic.records, ttft_slo, tpot_slo, trace.duration());
+    println!(
+        "{:<22} {:>10} {:>10} {:>10}",
+        "membership", "SLO att.", "p99 TTFT", "p90 TPOT"
+    );
+    for (name, r) in [("fixed (4 GPUs)", &rep_fixed), ("scale-out (4+4 @20s)", &rep_elastic)] {
+        println!(
+            "{:<22} {:>9.1}% {:>9.2}s {:>9.3}s",
+            name,
+            r.slo_attainment * 100.0,
+            r.p99_ttft,
+            r.p90_tpot
+        );
+    }
+    let spares_used = elastic
+        .records
+        .iter()
+        .any(|r| r.prefill_instance.is_some_and(|i| i.0 >= 4)
+            || r.decode_instance.is_some_and(|i| i.0 >= 4));
+    assert!(spares_used, "joining instances must absorb part of the spike");
+    assert!(
+        rep_elastic.p99_ttft <= rep_fixed.p99_ttft,
+        "scale-out must not worsen tail TTFT"
+    );
+    println!("\nthe joiners take the queue the fixed cluster can only backlog.");
 }

@@ -62,6 +62,7 @@ fn main() {
             instances: 2,
             ttft_slo: 2.0,
             tpot_slo: 0.5,
+            admin_token: None, // membership endpoints not exercised here
         })
         .expect("server failed — run `make artifacts` first");
     });

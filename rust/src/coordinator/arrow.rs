@@ -22,7 +22,7 @@
 use super::pools::{Pool, Pools};
 use super::predictor::TtftPredictor;
 use crate::request::{InstanceId, Request, Time};
-use crate::sched::{ClusterView, Policy, ProfileSource};
+use crate::sched::{ClusterView, MembershipEvent, Policy, ProfileSource};
 
 /// Tunables for the Arrow policy (defaults follow the paper's text).
 #[derive(Debug, Clone)]
@@ -260,7 +260,22 @@ impl Policy for ArrowPolicy {
                 // No prefill-capable instance at all: force a flip.
                 self.try_move_decode_to_prefill(view)
             })
-            .unwrap_or(InstanceId(0))
+            .or_else(|| {
+                // Flip guard refused (a lone decode member must keep
+                // serving decode): dispatch onto any member — stateless
+                // instances accept both phases, the pool label only
+                // steers placement preference.
+                self.pools.any_member()
+            })
+            .unwrap_or_else(|| {
+                // Pools empty (everything lost/draining). Last ditch:
+                // first live instance in the view, else 0 — the
+                // substrate fails the request if nothing is left.
+                (0..view.n_instances())
+                    .map(InstanceId)
+                    .find(|id| view.liveness(id.0).placeable())
+                    .unwrap_or(InstanceId(0))
+            })
     }
 
     /// Algorithm 2: SLO-aware decode scheduling.
@@ -272,8 +287,15 @@ impl Policy for ArrowPolicy {
         view: &dyn ClusterView,
     ) -> InstanceId {
         // If the prefill instance was meanwhile reassigned toward decode,
-        // keep the request local — zero KV transfer (§5.3).
-        if self.pools.pool_of(prefill_instance).decode_capable() {
+        // keep the request local — zero KV transfer (§5.3). A departed
+        // instance (drained/lost between prefill and decode placement)
+        // has no capability at all: `pool_of` is None and the request
+        // migrates to a live decode instance.
+        if self
+            .pools
+            .pool_of(prefill_instance)
+            .is_some_and(|p| p.decode_capable())
+        {
             return prefill_instance;
         }
         // Admission counts the incoming request's own KV footprint.
@@ -304,7 +326,9 @@ impl Policy for ArrowPolicy {
             }
             (Some((a, _)), None) => a,
             (None, Some((b, _))) => b,
-            (None, None) => prefill_instance,
+            // No decode-capable member and the flip guard refused: any
+            // member beats a possibly-departed prefill instance.
+            (None, None) => self.pools.any_member().unwrap_or(prefill_instance),
         }
     }
 
@@ -375,6 +399,66 @@ impl Policy for ArrowPolicy {
         }
     }
 
+    /// Elastic membership (PR 3): re-seed the pools and re-run the
+    /// Alg. 2/4 capacity logic against the new instance set. The
+    /// substrate owns work recovery; only scheduling state changes here.
+    fn on_membership(
+        &mut self,
+        _now: Time,
+        ev: MembershipEvent,
+        view: &dyn ClusterView,
+        profile: &dyn ProfileSource,
+    ) {
+        match ev {
+            MembershipEvent::InstanceJoined { id } => {
+                if self.pools.contains(id) {
+                    return; // duplicate join — membership is idempotent
+                }
+                // Profile the joiner exactly like the startup set (§5.3);
+                // late joiners may extend the table (live scale-out), and
+                // a rejoining slot may carry different hardware, so the
+                // slot's curve is always refreshed.
+                let i = id.0;
+                while self.predictors.len() <= i {
+                    let j = self.predictors.len();
+                    self.predictors.push(profile.fit_predictor(j));
+                    self.max_running_tokens
+                        .push(profile.max_running_tokens(j, self.cfg.tpot_slo));
+                }
+                self.predictors[i] = profile.fit_predictor(i);
+                self.max_running_tokens[i] = profile.max_running_tokens(i, self.cfg.tpot_slo);
+                // Re-run the Alg. 1 SLO test against the new capacity:
+                // the joiner lands in Prefill when the current prefill
+                // pool is (or is about to be) missing its TTFT SLO —
+                // exactly the condition under which Alg. 1 would steal an
+                // instance — and in Decode otherwise (decode priority,
+                // §5.5 overload rule). NaN delays (broken predictor)
+                // count as pressure, never as a free pass.
+                let best_delay = self
+                    .min_prefill_delay(Pool::Prefill, view)
+                    .or_else(|| self.min_prefill_delay(Pool::DecodeToPrefill, view));
+                let prefill_pressed = match best_delay {
+                    Some((_, delay)) => !(delay <= self.cfg.ttft_slo),
+                    None => true, // no prefill capability at all
+                };
+                let pool = if prefill_pressed { Pool::Prefill } else { Pool::Decode };
+                self.pools.join(id, pool);
+            }
+            MembershipEvent::InstanceDraining { id } | MembershipEvent::InstanceLost { id } => {
+                self.pools.remove(id);
+                // Re-run the Alg. 3/4 flip logic against the shrunk
+                // capacity: if the departed instance held the last
+                // capability of one phase, flip a survivor so both phases
+                // stay servable.
+                if self.pools.decode_capable_count() == 0 {
+                    self.try_move_prefill_to_decode(view);
+                } else if self.pools.prefill_capable_count() == 0 {
+                    self.try_move_decode_to_prefill(view);
+                }
+            }
+        }
+    }
+
     fn pool_sizes(&self) -> Option<[usize; 4]> {
         Some(self.pools.sizes())
     }
@@ -428,7 +512,7 @@ mod tests {
         }
         // Move instance 2 into D→P so it is prefill-capable.
         p.pools.flip_to_prefill(InstanceId(2), true);
-        assert_eq!(p.pools.pool_of(InstanceId(2)), Pool::DecodeToPrefill);
+        assert_eq!(p.pools.pool_of(InstanceId(2)), Some(Pool::DecodeToPrefill));
         let t = p.place_prefill(0.0, &req(1, 1000, 10), &SimView(&insts));
         assert_eq!(t, InstanceId(2));
     }
@@ -503,7 +587,7 @@ mod tests {
         let before_decode = p.pools.decode_capable_count();
         let t = p.place_decode(0.0, &req(1, 1000, 10), InstanceId(0), &SimView(&insts));
         assert!(
-            p.pools.pool_of(t).decode_capable(),
+            p.pools.pool_of(t).unwrap().decode_capable(),
             "target must be decode-capable"
         );
         assert!(p.pools.decode_capable_count() > before_decode);
@@ -514,7 +598,7 @@ mod tests {
         let (mut p, insts) = policy(4);
         p.pools.flip_to_decode(InstanceId(0), true); // P→D, but no work
         p.on_tick(1.0, &SimView(&insts));
-        assert_eq!(p.pools.pool_of(InstanceId(0)), Pool::Decode);
+        assert_eq!(p.pools.pool_of(InstanceId(0)), Some(Pool::Decode));
     }
 
     #[test]
@@ -560,6 +644,96 @@ mod tests {
             after[1] + after[2] > before[1] + before[2],
             "decode capacity grew: {before:?} -> {after:?}"
         );
+    }
+
+    #[test]
+    fn joiner_lands_in_decode_when_calm_and_prefill_when_pressed() {
+        // Calm cluster: a joiner lands in Decode (decode priority).
+        let (mut p, mut insts) = policy(5);
+        insts[4].life = crate::sched::Liveness::Dead;
+        p.on_membership(
+            0.0,
+            MembershipEvent::InstanceLost { id: InstanceId(4) },
+            &SimView(&insts),
+            &SimView(&insts),
+        );
+        assert_eq!(p.pools.member_count(), 4);
+        insts[4].life = crate::sched::Liveness::Active;
+        p.on_membership(
+            1.0,
+            MembershipEvent::InstanceJoined { id: InstanceId(4) },
+            &SimView(&insts),
+            &SimView(&insts),
+        );
+        assert_eq!(p.pools.pool_of(InstanceId(4)), Some(Pool::Decode));
+
+        // Prefill pool far past the TTFT SLO: the next joiner must land
+        // in Prefill (the Alg. 1 condition re-run against new capacity).
+        let (mut p, mut insts) = policy(5);
+        insts[4].life = crate::sched::Liveness::Dead;
+        p.on_membership(
+            0.0,
+            MembershipEvent::InstanceLost { id: InstanceId(4) },
+            &SimView(&insts),
+            &SimView(&insts),
+        );
+        for i in 0..2 {
+            for r in 0..4 {
+                insts[i].enqueue_prefill(crate::request::RequestId(100 + r), 100_000);
+            }
+        }
+        insts[4].life = crate::sched::Liveness::Active;
+        p.on_membership(
+            1.0,
+            MembershipEvent::InstanceJoined { id: InstanceId(4) },
+            &SimView(&insts),
+            &SimView(&insts),
+        );
+        assert_eq!(p.pools.pool_of(InstanceId(4)), Some(Pool::Prefill));
+    }
+
+    #[test]
+    fn losing_the_whole_decode_pool_flips_a_survivor() {
+        let (mut p, insts) = policy(4);
+        // Instances 2, 3 form the decode pool; lose both.
+        for i in [2usize, 3] {
+            p.on_membership(
+                0.0,
+                MembershipEvent::InstanceLost { id: InstanceId(i) },
+                &SimView(&insts),
+                &SimView(&insts),
+            );
+        }
+        // A prefill survivor was flipped so decode stays servable.
+        assert!(p.pools.decode_capable_count() >= 1, "{:?}", p.pools.sizes());
+        assert!(p.pools.prefill_capable_count() >= 1);
+        assert_eq!(p.pools.member_count(), 2);
+    }
+
+    #[test]
+    fn departed_instance_never_receives_a_placement() {
+        let (mut p, mut insts) = policy(4);
+        insts[1].life = crate::sched::Liveness::Draining;
+        p.on_membership(
+            0.0,
+            MembershipEvent::InstanceDraining { id: InstanceId(1) },
+            &SimView(&insts),
+            &SimView(&insts),
+        );
+        insts[3].life = crate::sched::Liveness::Dead;
+        p.on_membership(
+            0.0,
+            MembershipEvent::InstanceLost { id: InstanceId(3) },
+            &SimView(&insts),
+            &SimView(&insts),
+        );
+        for step in 0..40u64 {
+            let r = req(step, 2_000, 10);
+            let t = p.place_prefill(step as f64, &r, &SimView(&insts));
+            assert!(t != InstanceId(1) && t != InstanceId(3), "placed on departed {t}");
+            let d = p.place_decode(step as f64, &r, t, &SimView(&insts));
+            assert!(d != InstanceId(1) && d != InstanceId(3), "decoded on departed {d}");
+        }
     }
 
     #[test]

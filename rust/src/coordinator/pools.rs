@@ -6,8 +6,14 @@
 //! wait and zero restart, which is the paper's core mechanism for
 //! real-time PD-ratio adjustment.
 //!
-//! Invariant (property-tested): every instance is in exactly one pool at
-//! all times, and every move follows the Fig. 5 transition diagram.
+//! Invariant (property-tested): every *member* instance is in exactly one
+//! pool at all times, and every move follows the Fig. 5 transition
+//! diagram. Since PR 3 membership is dynamic: instances join and leave at
+//! runtime (`join` / `remove`), slots of departed instances stay in the
+//! table as non-members (ids are table indices and are never recycled),
+//! and non-members are invisible to every pool query — a lost instance
+//! can never be returned by `members_iter` and therefore never receives a
+//! placement.
 
 use crate::request::InstanceId;
 
@@ -36,10 +42,11 @@ impl Pool {
     }
 }
 
-/// Pool bookkeeping for a fixed instance set.
+/// Pool bookkeeping over a dynamic instance set. `None` = not a member
+/// (never joined, draining/left, or failed).
 #[derive(Debug, Clone)]
 pub struct Pools {
-    membership: Vec<Pool>,
+    membership: Vec<Option<Pool>>,
     flips: u64,
 }
 
@@ -51,12 +58,13 @@ impl Pools {
         assert!(n_prefill <= n_instances);
         Pools {
             membership: (0..n_instances)
-                .map(|i| if i < n_prefill { Pool::Prefill } else { Pool::Decode })
+                .map(|i| Some(if i < n_prefill { Pool::Prefill } else { Pool::Decode }))
                 .collect(),
             flips: 0,
         }
     }
 
+    /// Table size (member slots + departed slots). Ids are table indices.
     pub fn len(&self) -> usize {
         self.membership.len()
     }
@@ -65,18 +73,58 @@ impl Pools {
         self.membership.is_empty()
     }
 
-    pub fn pool_of(&self, id: InstanceId) -> Pool {
-        self.membership[id.0]
+    /// Number of instances currently in some pool.
+    pub fn member_count(&self) -> usize {
+        self.membership.iter().filter(|m| m.is_some()).count()
+    }
+
+    /// Is `id` currently a member of any pool?
+    pub fn contains(&self, id: InstanceId) -> bool {
+        self.membership.get(id.0).is_some_and(|m| m.is_some())
+    }
+
+    /// Lowest-index member of any pool — the deterministic last-resort
+    /// dispatch target when a whole capability class is missing.
+    pub fn any_member(&self) -> Option<InstanceId> {
+        self.membership.iter().position(|m| m.is_some()).map(InstanceId)
+    }
+
+    /// Pool of `id`, or `None` when the instance is not (or no longer) a
+    /// member — callers must treat departed instances as having no
+    /// capability at all.
+    pub fn pool_of(&self, id: InstanceId) -> Option<Pool> {
+        self.membership.get(id.0).copied().flatten()
+    }
+
+    /// Admit an instance into `pool`, growing the table if `id` is a new
+    /// slot (live-server scale-out appends engines). Rejoining a departed
+    /// slot reuses it. Joining an existing member is a no-op (membership
+    /// is owned by the substrate; duplicate events must not reshuffle).
+    pub fn join(&mut self, id: InstanceId, pool: Pool) {
+        if id.0 >= self.membership.len() {
+            self.membership.resize(id.0 + 1, None);
+        }
+        if self.membership[id.0].is_none() {
+            self.membership[id.0] = Some(pool);
+        }
+    }
+
+    /// Remove an instance from whatever pool holds it (drain or loss).
+    /// The slot stays in the table so ids remain stable.
+    pub fn remove(&mut self, id: InstanceId) {
+        if let Some(m) = self.membership.get_mut(id.0) {
+            *m = None;
+        }
     }
 
     pub fn flip_count(&self) -> u64 {
         self.flips
     }
 
-    /// [P, D, P→D, D→P] sizes.
+    /// [P, D, P→D, D→P] sizes over current members.
     pub fn sizes(&self) -> [usize; 4] {
         let mut s = [0usize; 4];
-        for p in &self.membership {
+        for p in self.membership.iter().flatten() {
             match p {
                 Pool::Prefill => s[0] += 1,
                 Pool::Decode => s[1] += 1,
@@ -96,11 +144,13 @@ impl Pools {
     }
 
     /// Allocation-free iterator over the instances currently in `pool`.
+    /// Non-members are skipped, so departed instances are unreachable
+    /// from every placement path.
     pub fn members_iter(&self, pool: Pool) -> impl Iterator<Item = InstanceId> + '_ {
         self.membership
             .iter()
             .enumerate()
-            .filter(move |(_, &p)| p == pool)
+            .filter(move |(_, &p)| p == Some(pool))
             .map(|(i, _)| InstanceId(i))
     }
 
@@ -109,6 +159,7 @@ impl Pools {
     pub fn decode_capable_count(&self) -> usize {
         self.membership
             .iter()
+            .flatten()
             .filter(|p| p.decode_capable())
             .count()
     }
@@ -117,18 +168,21 @@ impl Pools {
     pub fn prefill_capable_count(&self) -> usize {
         self.membership
             .iter()
+            .flatten()
             .filter(|p| p.prefill_capable())
             .count()
     }
 
     /// Flip an instance toward *prefill* duty. Transition diagram:
     /// D → (P if drained else D→P); P→D → P (cancel a pending flip);
-    /// already-prefill pools are no-ops.
+    /// already-prefill pools — and non-members — are no-ops. A flip never
+    /// changes membership (conservation is property-tested).
     ///
     /// `has_decode_work`: whether the instance still holds decode tasks.
     pub fn flip_to_prefill(&mut self, id: InstanceId, has_decode_work: bool) {
-        let m = &mut self.membership[id.0];
-        let new = match *m {
+        let Some(m) = self.membership.get_mut(id.0) else { return };
+        let Some(cur) = *m else { return };
+        let new = match cur {
             Pool::Decode => {
                 if has_decode_work {
                     Pool::DecodeToPrefill
@@ -139,16 +193,17 @@ impl Pools {
             Pool::PrefillToDecode => Pool::Prefill, // cancel pending P→D
             other => other,
         };
-        if new != *m {
-            *m = new;
+        if new != cur {
+            *m = Some(new);
             self.flips += 1;
         }
     }
 
     /// Flip an instance toward *decode* duty (mirror of above).
     pub fn flip_to_decode(&mut self, id: InstanceId, has_prefill_work: bool) {
-        let m = &mut self.membership[id.0];
-        let new = match *m {
+        let Some(m) = self.membership.get_mut(id.0) else { return };
+        let Some(cur) = *m else { return };
+        let new = match cur {
             Pool::Prefill => {
                 if has_prefill_work {
                     Pool::PrefillToDecode
@@ -159,20 +214,21 @@ impl Pools {
             Pool::DecodeToPrefill => Pool::Decode, // cancel pending D→P
             other => other,
         };
-        if new != *m {
-            *m = new;
+        if new != cur {
+            *m = Some(new);
             self.flips += 1;
         }
     }
 
     /// Drain maintenance (monitor tick): a P→D instance with no prefill
     /// work left settles into Decode; a D→P instance with no decode work
-    /// settles into Prefill — the black edges in Fig. 5.
+    /// settles into Prefill — the black edges in Fig. 5. Non-members are
+    /// no-ops.
     pub fn settle(&mut self, id: InstanceId, has_prefill_work: bool, has_decode_work: bool) {
-        let m = &mut self.membership[id.0];
+        let Some(m) = self.membership.get_mut(id.0) else { return };
         match *m {
-            Pool::PrefillToDecode if !has_prefill_work => *m = Pool::Decode,
-            Pool::DecodeToPrefill if !has_decode_work => *m = Pool::Prefill,
+            Some(Pool::PrefillToDecode) if !has_prefill_work => *m = Some(Pool::Decode),
+            Some(Pool::DecodeToPrefill) if !has_decode_work => *m = Some(Pool::Prefill),
             _ => {}
         }
     }
@@ -186,15 +242,16 @@ mod tests {
     fn initial_split() {
         let p = Pools::new(8, 4);
         assert_eq!(p.sizes(), [4, 4, 0, 0]);
-        assert_eq!(p.pool_of(InstanceId(0)), Pool::Prefill);
-        assert_eq!(p.pool_of(InstanceId(7)), Pool::Decode);
+        assert_eq!(p.pool_of(InstanceId(0)), Some(Pool::Prefill));
+        assert_eq!(p.pool_of(InstanceId(7)), Some(Pool::Decode));
+        assert_eq!(p.member_count(), 8);
     }
 
     #[test]
     fn flip_decode_to_prefill_drained_goes_direct() {
         let mut p = Pools::new(2, 1);
         p.flip_to_prefill(InstanceId(1), false);
-        assert_eq!(p.pool_of(InstanceId(1)), Pool::Prefill);
+        assert_eq!(p.pool_of(InstanceId(1)), Some(Pool::Prefill));
         assert_eq!(p.flip_count(), 1);
     }
 
@@ -202,21 +259,21 @@ mod tests {
     fn flip_decode_with_work_goes_via_transition_pool() {
         let mut p = Pools::new(2, 1);
         p.flip_to_prefill(InstanceId(1), true);
-        assert_eq!(p.pool_of(InstanceId(1)), Pool::DecodeToPrefill);
+        assert_eq!(p.pool_of(InstanceId(1)), Some(Pool::DecodeToPrefill));
         // D→P still accepts prefill dispatches.
-        assert!(p.pool_of(InstanceId(1)).prefill_capable());
+        assert!(p.pool_of(InstanceId(1)).unwrap().prefill_capable());
         // Settle once decode drains.
         p.settle(InstanceId(1), false, false);
-        assert_eq!(p.pool_of(InstanceId(1)), Pool::Prefill);
+        assert_eq!(p.pool_of(InstanceId(1)), Some(Pool::Prefill));
     }
 
     #[test]
     fn flip_cancellation() {
         let mut p = Pools::new(2, 1);
         p.flip_to_decode(InstanceId(0), true); // P → P→D
-        assert_eq!(p.pool_of(InstanceId(0)), Pool::PrefillToDecode);
+        assert_eq!(p.pool_of(InstanceId(0)), Some(Pool::PrefillToDecode));
         p.flip_to_prefill(InstanceId(0), false); // cancel
-        assert_eq!(p.pool_of(InstanceId(0)), Pool::Prefill);
+        assert_eq!(p.pool_of(InstanceId(0)), Some(Pool::Prefill));
     }
 
     #[test]
@@ -224,9 +281,45 @@ mod tests {
         let mut p = Pools::new(2, 1);
         p.flip_to_decode(InstanceId(0), true);
         p.settle(InstanceId(0), true, false); // prefill not drained
-        assert_eq!(p.pool_of(InstanceId(0)), Pool::PrefillToDecode);
+        assert_eq!(p.pool_of(InstanceId(0)), Some(Pool::PrefillToDecode));
         p.settle(InstanceId(0), false, true);
-        assert_eq!(p.pool_of(InstanceId(0)), Pool::Decode);
+        assert_eq!(p.pool_of(InstanceId(0)), Some(Pool::Decode));
+    }
+
+    #[test]
+    fn remove_hides_instance_from_every_query() {
+        let mut p = Pools::new(4, 2);
+        p.remove(InstanceId(0));
+        assert_eq!(p.pool_of(InstanceId(0)), None);
+        assert!(!p.contains(InstanceId(0)));
+        assert_eq!(p.member_count(), 3);
+        assert_eq!(p.sizes(), [1, 2, 0, 0]);
+        assert_eq!(p.prefill_capable_count(), 1);
+        assert!(p.members_iter(Pool::Prefill).all(|id| id != InstanceId(0)));
+        // Flips and settles on a non-member are no-ops and count nothing.
+        p.flip_to_decode(InstanceId(0), false);
+        p.settle(InstanceId(0), false, false);
+        assert_eq!(p.pool_of(InstanceId(0)), None);
+        assert_eq!(p.flip_count(), 0);
+        // The table keeps the slot: len is stable, ids never shift.
+        assert_eq!(p.len(), 4);
+    }
+
+    #[test]
+    fn join_rejoins_old_slot_and_grows_for_new_slots() {
+        let mut p = Pools::new(2, 1);
+        p.remove(InstanceId(1));
+        p.join(InstanceId(1), Pool::Prefill); // rejoin reuses the slot
+        assert_eq!(p.pool_of(InstanceId(1)), Some(Pool::Prefill));
+        assert_eq!(p.len(), 2);
+        p.join(InstanceId(4), Pool::Decode); // scale-out appends slots
+        assert_eq!(p.len(), 5);
+        assert_eq!(p.pool_of(InstanceId(4)), Some(Pool::Decode));
+        assert_eq!(p.pool_of(InstanceId(3)), None, "gap slots stay empty");
+        assert_eq!(p.member_count(), 3);
+        // Joining an existing member never reshuffles it.
+        p.join(InstanceId(4), Pool::Prefill);
+        assert_eq!(p.pool_of(InstanceId(4)), Some(Pool::Decode));
     }
 
     #[test]
@@ -252,37 +345,66 @@ mod tests {
         prop::check_with(41, 128, |rng: &mut Rng| {
             let n = rng.index(8) + 2;
             let mut pools = Pools::new(n, rng.index(n + 1));
+            let mut members = n;
             for _ in 0..64 {
                 let id = InstanceId(rng.index(n));
                 let before = pools.pool_of(id);
-                match rng.index(3) {
+                let was_member = before.is_some();
+                // Flips/settles (3/5 of ops) interleaved with membership
+                // churn (join/remove) so the partition invariant is
+                // exercised under elastic membership too.
+                match rng.index(5) {
                     0 => pools.flip_to_prefill(id, rng.bool(0.5)),
                     1 => pools.flip_to_decode(id, rng.bool(0.5)),
-                    _ => pools.settle(id, rng.bool(0.5), rng.bool(0.5)),
+                    2 => pools.settle(id, rng.bool(0.5), rng.bool(0.5)),
+                    3 => {
+                        pools.remove(id);
+                        if was_member {
+                            members -= 1;
+                        }
+                    }
+                    _ => {
+                        let pool = if rng.bool(0.5) { Pool::Prefill } else { Pool::Decode };
+                        pools.join(id, pool);
+                        if !was_member {
+                            members += 1;
+                        }
+                    }
                 }
                 let after = pools.pool_of(id);
-                // Legal transitions only (Fig. 5 diagram).
-                let legal = matches!(
-                    (before, after),
-                    (x, y) if x == y
-                ) || matches!(
-                    (before, after),
-                    (Pool::Decode, Pool::Prefill)
-                        | (Pool::Decode, Pool::DecodeToPrefill)
-                        | (Pool::Prefill, Pool::Decode)
-                        | (Pool::Prefill, Pool::PrefillToDecode)
-                        | (Pool::PrefillToDecode, Pool::Prefill)
-                        | (Pool::PrefillToDecode, Pool::Decode)
-                        | (Pool::DecodeToPrefill, Pool::Decode)
-                        | (Pool::DecodeToPrefill, Pool::Prefill)
-                );
+                // Legal transitions only (Fig. 5 diagram + join/leave).
+                let legal = match (before, after) {
+                    (x, y) if x == y => true,
+                    // Flips between pools (member stays a member).
+                    (Some(x), Some(y)) => matches!(
+                        (x, y),
+                        (Pool::Decode, Pool::Prefill)
+                            | (Pool::Decode, Pool::DecodeToPrefill)
+                            | (Pool::Prefill, Pool::Decode)
+                            | (Pool::Prefill, Pool::PrefillToDecode)
+                            | (Pool::PrefillToDecode, Pool::Prefill)
+                            | (Pool::PrefillToDecode, Pool::Decode)
+                            | (Pool::DecodeToPrefill, Pool::Decode)
+                            | (Pool::DecodeToPrefill, Pool::Prefill)
+                    ),
+                    // Leave from any pool; join only into P or D.
+                    (Some(_), None) => true,
+                    (None, Some(p)) => matches!(p, Pool::Prefill | Pool::Decode),
+                };
                 crate::prop_assert!(legal, "illegal {before:?} -> {after:?}");
-                // Partition: sizes sum to n.
+                // Partition: sizes sum to the live member count, table
+                // size never shrinks (ids stay stable).
                 let s = pools.sizes();
                 crate::prop_assert!(
-                    s.iter().sum::<usize>() == n,
-                    "pool sizes {s:?} don't partition {n}"
+                    s.iter().sum::<usize>() == members,
+                    "pool sizes {s:?} don't partition {members} members"
                 );
+                crate::prop_assert!(
+                    pools.member_count() == members,
+                    "member_count {} != tracked {members}",
+                    pools.member_count()
+                );
+                crate::prop_assert!(pools.len() == n, "table size changed");
             }
             Ok(())
         });

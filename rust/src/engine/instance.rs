@@ -18,6 +18,7 @@ use std::sync::Arc;
 use super::task::{DecodeTask, PrefillTask};
 use crate::costmodel::CostModel;
 use crate::request::{InstanceId, RequestId};
+use crate::sched::Liveness;
 use crate::util::stats::SlidingWindow;
 
 /// Chunked-prefill token budget per iteration (Sarathi-style default).
@@ -91,6 +92,11 @@ pub struct SimInstance {
     pub busy: bool,
     /// Monotone counter of iterations executed (perf/debug).
     pub iterations: u64,
+    /// Cluster-membership state (PR 3 elastic membership). The event
+    /// loop owns transitions; the instance itself behaves identically in
+    /// every state — "stateless" extends to liveness: a draining
+    /// instance keeps executing whatever it still holds.
+    pub life: Liveness,
 }
 
 impl SimInstance {
@@ -109,6 +115,7 @@ impl SimInstance {
             last_token_time: None,
             busy: false,
             iterations: 0,
+            life: Liveness::Active,
         }
     }
 
@@ -392,6 +399,27 @@ impl SimInstance {
         }
     }
 
+    /// A rejoining instance is a fresh process: no token-interval
+    /// evidence carries over. Without this, the gap across the downtime
+    /// would register as one huge "interval" and fake a TPOT violation
+    /// right after a graceful restart.
+    pub fn reset_monitor(&mut self) {
+        self.intervals.clear();
+        self.last_token_time = None;
+    }
+
+    /// Failure teardown (elastic membership): record every request still
+    /// resident on this instance — queued or partially prefilled, running
+    /// or parked for decode — so the cluster can re-queue them, then drop
+    /// all local state. The KV of these requests is gone with the
+    /// instance; callers restart them from scratch.
+    pub fn drain_request_ids(&mut self, out: &mut Vec<RequestId>) {
+        out.extend(self.prefill_q.iter().map(|t| t.id));
+        out.extend(self.running.iter().map(|t| t.id));
+        out.extend(self.decode_wait.iter().map(|t| t.id));
+        self.clear();
+    }
+
     /// Abandon all queued work (used by failure-injection tests).
     pub fn clear(&mut self) {
         self.prefill_q.clear();
@@ -399,7 +427,7 @@ impl SimInstance {
         self.decode_wait.clear();
         self.kv_used = 0;
         self.parked_prefill_kv = 0;
-        self.intervals.clear();
+        self.reset_monitor();
         self.busy = false;
     }
 }

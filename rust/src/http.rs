@@ -57,7 +57,9 @@ impl HttpResponse {
     fn status_text(&self) -> &'static str {
         match self.status {
             200 => "OK",
+            202 => "Accepted",
             400 => "Bad Request",
+            403 => "Forbidden",
             404 => "Not Found",
             405 => "Method Not Allowed",
             429 => "Too Many Requests",

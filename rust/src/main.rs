@@ -103,6 +103,9 @@ fn cmd_serve(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
         instances: p.usize_or("instances", 2)?,
         ttft_slo: p.f64_or("ttft-slo", 2.0)?,
         tpot_slo: p.f64_or("tpot-slo", 0.5)?,
+        // Destructive /admin/* membership endpoints stay disabled unless
+        // the operator provides a shared secret.
+        admin_token: std::env::var("ARROW_ADMIN_TOKEN").ok(),
     };
     arrow::server::serve(cfg)?;
     Ok(())

@@ -18,7 +18,7 @@ use crate::coordinator::arrow::{ArrowConfig, ArrowPolicy};
 use crate::costmodel::CostModel;
 use crate::engine::SimInstance;
 use crate::request::InstanceId;
-use crate::sim::{Cluster, SimConfig};
+use crate::sim::{Cluster, MembershipChange, SimConfig};
 
 /// Systems evaluated in Fig. 7 / Fig. 8.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -162,6 +162,113 @@ pub fn build(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Elastic-membership scenarios (PR 3): the regimes the fixed-instance
+// builders above cannot express — traffic spikes absorbed by scale-out,
+// rolling restarts, and correlated decode-node failures. All run the
+// Arrow policy (the baselines are membership-blind by design; §7.3's
+// static arms have nothing to re-seed).
+// ---------------------------------------------------------------------------
+
+/// An Arrow cluster whose instance table has `n_total` slots but only
+/// `n_live` live at t=0 — the substrate for every elastic scenario.
+/// Spare slots (`n_live..n_total`) join whenever the caller schedules it.
+pub fn arrow_elastic(
+    n_total: usize,
+    n_live: usize,
+    base: &CostModel,
+    ttft_slo: f64,
+    tpot_slo: f64,
+    record_timeline: bool,
+) -> Cluster {
+    assert!(n_live >= 2 && n_live <= n_total, "need 2 <= n_live <= n_total");
+    let cfg = SimConfig {
+        record_timeline,
+        drain_timeout: 300.0,
+        ..Default::default()
+    };
+    // Pool seed is sized to the *live* set: spares start outside the
+    // cluster and join into whichever pool the policy's Alg. 1 test
+    // picks at join time.
+    let policy = ArrowPolicy::new(ArrowConfig::new(ttft_slo, tpot_slo, n_live), n_total);
+    let cost = Arc::new(base.clone());
+    let instances: Vec<SimInstance> = (0..n_total)
+        .map(|i| {
+            let mut inst = SimInstance::new(InstanceId(i), Arc::clone(&cost));
+            inst.iter_time_budget = Some(0.8 * tpot_slo);
+            inst
+        })
+        .collect();
+    let mut cl = Cluster::new(instances, Box::new(policy), cfg);
+    if n_live < n_total {
+        cl.set_initial_live((0..n_total).map(|i| i < n_live).collect());
+    }
+    cl
+}
+
+/// Spike scale-out: `n_spare` instances join at `join_at` (the moment a
+/// traffic spike is detected) and stay for the rest of the run — the
+/// DynaServe-style elastic regime. Compare against `build(System::Arrow,
+/// n_base, ..)` on the same trace for the fixed-membership baseline.
+pub fn spike_scale_out(
+    n_base: usize,
+    n_spare: usize,
+    base: &CostModel,
+    ttft_slo: f64,
+    tpot_slo: f64,
+    join_at: f64,
+) -> Cluster {
+    let mut cl = arrow_elastic(n_base + n_spare, n_base, base, ttft_slo, tpot_slo, false);
+    for s in 0..n_spare {
+        cl.schedule_membership(join_at, MembershipChange::Join(n_base + s));
+    }
+    cl
+}
+
+/// Rolling restart: each instance in turn begins draining at
+/// `start + i*gap` and rejoins `downtime` seconds after its drain
+/// actually *completes* (`MembershipChange::Restart`) — so a slow drain
+/// is waited out, never cancelled by its own rejoin. The timeline is
+/// recorded so drills can assert the dips really happened.
+pub fn rolling_restart(
+    n: usize,
+    base: &CostModel,
+    ttft_slo: f64,
+    tpot_slo: f64,
+    start: f64,
+    gap: f64,
+    downtime: f64,
+) -> Cluster {
+    let mut cl = arrow_elastic(n, n, base, ttft_slo, tpot_slo, true);
+    for i in 0..n {
+        cl.schedule_membership(
+            start + i as f64 * gap,
+            MembershipChange::Restart { inst: i, downtime },
+        );
+    }
+    cl
+}
+
+/// Correlated decode-node failure: the last `victims` instances — the
+/// seed decode pool — fail together at `fail_at` (rack loss). The
+/// policy must re-seed pools and the event loop re-queues every lost
+/// request; the acceptance test asserts all of them still finish.
+pub fn decode_node_failure(
+    n: usize,
+    victims: usize,
+    base: &CostModel,
+    ttft_slo: f64,
+    tpot_slo: f64,
+    fail_at: f64,
+) -> Cluster {
+    assert!(victims < n, "must leave at least one survivor");
+    let mut cl = arrow_elastic(n, n, base, ttft_slo, tpot_slo, false);
+    for v in 0..victims {
+        cl.schedule_membership(fail_at, MembershipChange::Fail(n - 1 - v));
+    }
+    cl
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,5 +317,26 @@ mod tests {
         // Light smoke load may or may not flip; the counter must at least
         // be consistent (no panic) and requests finish.
         assert!(res.records.iter().filter(|r| r.finished()).count() > 280);
+    }
+
+    #[test]
+    fn elastic_builders_complete_light_load() {
+        let base = CostModel::h800_llama8b();
+        let trace = smoke(150, 2).generate(7);
+        let d = trace.duration();
+        let runs = [
+            spike_scale_out(4, 2, &base, 2.0, 0.1, 0.3 * d),
+            rolling_restart(4, &base, 2.0, 0.1, 0.2 * d, 0.2 * d, 0.05 * d),
+            decode_node_failure(4, 1, &base, 2.0, 0.1, 0.5 * d),
+        ];
+        for cl in runs {
+            let res = cl.run(&trace);
+            let rep = SloReport::from_records(&res.records, 2.0, 0.1, d);
+            assert_eq!(rep.n_finished + rep.n_failed, rep.n_requests);
+            assert_eq!(
+                rep.n_finished, rep.n_requests,
+                "membership churn must lose no request at light load"
+            );
+        }
     }
 }

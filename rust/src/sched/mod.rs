@@ -36,6 +36,65 @@ pub mod policy;
 pub use policy::{tests_support, Policy};
 
 use crate::coordinator::predictor::TtftPredictor;
+use crate::request::InstanceId;
+
+/// Cluster-membership state of one instance slot (PR 3).
+///
+/// Instance ids are table indices, so a slot is never recycled: an
+/// instance that leaves stays in the table as `Dead` and a rejoining
+/// instance reuses its old slot. `Draining` instances finish the work
+/// they already hold but must receive no new placements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Liveness {
+    /// Serving; placements allowed.
+    Active,
+    /// Leaving gracefully: finishes in-flight work, accepts nothing new.
+    Draining,
+    /// Not part of the cluster (never joined, left, or failed).
+    Dead,
+}
+
+impl Liveness {
+    /// May the scheduler place *new* work on this instance?
+    pub fn placeable(self) -> bool {
+        matches!(self, Liveness::Active)
+    }
+
+    /// Is the instance still part of the cluster (able to finish work it
+    /// already holds — Active or Draining)?
+    pub fn in_cluster(self) -> bool {
+        !matches!(self, Liveness::Dead)
+    }
+}
+
+/// A cluster-membership change, delivered to policies through
+/// [`Policy::on_membership`]. The substrate (simulator event loop or live
+/// coordinator) owns detection and work recovery; the policy owns only
+/// the scheduling consequences — re-seeding pools and re-running the
+/// Alg. 2/4 flip logic against the new capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembershipEvent {
+    /// A new (or returning) instance is live at table index `id` and
+    /// visible through the view; the accompanying [`ProfileSource`]
+    /// covers it (the substrate profiles joiners exactly like startup).
+    InstanceJoined { id: InstanceId },
+    /// The instance will leave once its in-flight work drains; it must
+    /// receive no further placements.
+    InstanceDraining { id: InstanceId },
+    /// The instance failed (or never joined): it is gone *now*; the
+    /// substrate re-queues whatever work it held.
+    InstanceLost { id: InstanceId },
+}
+
+impl MembershipEvent {
+    pub fn id(self) -> InstanceId {
+        match self {
+            MembershipEvent::InstanceJoined { id }
+            | MembershipEvent::InstanceDraining { id }
+            | MembershipEvent::InstanceLost { id } => id,
+        }
+    }
+}
 
 /// Read-only, substrate-agnostic snapshot of cluster load at decision
 /// time. Instances are addressed by their table index (`InstanceId.0`).
@@ -76,6 +135,13 @@ pub trait ClusterView {
     /// No work of either phase — harvest candidate (§5.5 condition 3).
     fn is_idle(&self, inst: usize) -> bool {
         !self.has_prefill_work(inst) && !self.has_decode_work(inst)
+    }
+
+    /// Cluster-membership state of the slot (PR 3). Defaults to `Active`
+    /// so fixed-membership views (and simple test doubles) need not
+    /// implement it; elastic substrates override.
+    fn liveness(&self, _inst: usize) -> Liveness {
+        Liveness::Active
     }
 }
 

@@ -26,7 +26,7 @@
 //!   panic on degenerate float comparisons — use `f64::total_cmp`, not
 //!   `partial_cmp().unwrap()`.
 
-use super::{ClusterView, ProfileSource};
+use super::{ClusterView, MembershipEvent, ProfileSource};
 use crate::request::{InstanceId, Request, Time};
 
 pub trait Policy: Send {
@@ -53,6 +53,22 @@ pub trait Policy: Send {
     /// Periodic monitor tick (paper §5.5: TPOT-violation and idle-prefill
     /// instance scheduling happen here).
     fn on_tick(&mut self, _now: Time, _view: &dyn ClusterView) {}
+
+    /// Cluster membership changed (PR 3: elastic membership). The view
+    /// already reflects the new state; `profile` covers every table slot
+    /// including joiners (the substrate profiles a joining instance the
+    /// same way it profiled the startup set). Policies with pool
+    /// bookkeeping re-seed it here; stateless policies can ignore the
+    /// event (default no-op) — they must then only ever be run under
+    /// fixed membership.
+    fn on_membership(
+        &mut self,
+        _now: Time,
+        _ev: MembershipEvent,
+        _view: &dyn ClusterView,
+        _profile: &dyn ProfileSource,
+    ) {
+    }
 
     /// Pool sizes [Prefill, Decode, P→D, D→P] for snapshots, if the
     /// policy maintains elastic pools.

@@ -17,8 +17,10 @@ use crate::runtime::{DecodeBatchState, ModelRuntime};
 
 /// Commands from the coordinator to an engine.
 pub enum EngineCmd {
-    /// Run the prefill phase of a request.
-    Prefill { req: u64, prompt: Vec<i32> },
+    /// Run the prefill phase of a request. The prompt is shared with the
+    /// coordinator's retained copy (failure re-dispatch) — an `Arc`
+    /// refcount, not a per-dispatch memcpy of up-to-60k-token prompts.
+    Prefill { req: u64, prompt: Arc<[i32]> },
     /// Adopt a prefilled request for decoding (KV slab included — this is
     /// the migration payload when the prefill ran elsewhere).
     StartDecode {
@@ -51,11 +53,15 @@ pub enum EngineEvent {
     },
     DecodeDone {
         req: u64,
+        /// Which engine completed the decode — lets the coordinator drop
+        /// stale events from an engine it already declared failed.
+        engine: usize,
         /// All output tokens (first token included).
         tokens: Vec<i32>,
     },
     Failed {
         req: u64,
+        engine: usize,
         error: String,
     },
 }
@@ -131,6 +137,19 @@ impl EngineHandle {
         events: mpsc::Sender<EngineEvent>,
     ) -> Result<EngineHandle> {
         let rt = ModelRuntime::load(artifacts_dir)?;
+        EngineHandle::start(id, rt, events)
+    }
+
+    /// Start the engine thread around an already-loaded runtime. Cheap —
+    /// the expensive half of [`EngineHandle::spawn`] is `ModelRuntime::
+    /// load`, which elastic scale-out runs on a helper thread so the
+    /// coordinator never stalls (the loaded runtime then registers
+    /// through the coordinator channel and gets its slot id here).
+    pub fn start(
+        id: usize,
+        rt: ModelRuntime,
+        events: mpsc::Sender<EngineEvent>,
+    ) -> Result<EngineHandle> {
         let buckets = rt.info.prefill_buckets.clone();
         let (tx, rx) = mpsc::channel::<EngineCmd>();
         let stats = Arc::new(SharedStats::new());
@@ -215,14 +234,14 @@ fn engine_loop(
 ) {
     let mut decode = rt.new_decode_state();
     let mut slots: Vec<Option<SlotState>> = (0..decode.batch()).map(|_| None).collect();
-    let mut prefill_q: VecDeque<(u64, Vec<i32>)> = VecDeque::new();
+    let mut prefill_q: VecDeque<(u64, Arc<[i32]>)> = VecDeque::new();
     let mut pending_decode: VecDeque<EngineCmd> = VecDeque::new();
     // Recent token-interval EMA (paper §5.3 TPOT proxy). Idle gaps are
     // not decode evidence: the anchor resets when the batch drains.
     let mut last_decode_iter: Option<Instant> = None;
     let mut interval_ema = f64::NAN;
 
-    let publish = |prefill_q: &VecDeque<(u64, Vec<i32>)>,
+    let publish = |prefill_q: &VecDeque<(u64, Arc<[i32]>)>,
                    pending_decode: &VecDeque<EngineCmd>,
                    decode: &DecodeBatchState,
                    iters: u64| {
@@ -309,6 +328,7 @@ fn engine_loop(
                 if prompt_len + remaining > decode.capacity_per_slot() {
                     let _ = events.send(EngineEvent::Failed {
                         req,
+                        engine: id,
                         error: format!(
                             "request needs {} tokens > slot capacity {}",
                             prompt_len + remaining,
@@ -343,6 +363,7 @@ fn engine_loop(
                 Err(e) => {
                     let _ = events.send(EngineEvent::Failed {
                         req,
+                        engine: id,
                         error: e.to_string(),
                     });
                 }
@@ -380,6 +401,7 @@ fn engine_loop(
                             decode.release(slot);
                             let _ = events.send(EngineEvent::DecodeDone {
                                 req: st.req,
+                                engine: id,
                                 tokens: st.tokens,
                             });
                         }
@@ -392,6 +414,7 @@ fn engine_loop(
                             decode.release(slot);
                             let _ = events.send(EngineEvent::Failed {
                                 req: st.req,
+                                engine: id,
                                 error: e.to_string(),
                             });
                         }

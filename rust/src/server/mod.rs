@@ -32,7 +32,7 @@ use crate::coordinator::predictor::TtftPredictor;
 use crate::http::{self, HttpRequest, HttpResponse};
 use crate::json::Json;
 use crate::request::{InstanceId, Request};
-use crate::sched::{FixedProfile, Policy};
+use crate::sched::{FixedProfile, Liveness, MembershipEvent, Policy};
 use engine::{EngineCmd, EngineEvent, EngineHandle};
 use view::{EngineSnapshot, ServerView};
 
@@ -44,6 +44,11 @@ pub struct ServeConfig {
     pub instances: usize,
     pub ttft_slo: f64,
     pub tpot_slo: f64,
+    /// Shared secret for the destructive `/admin/*` membership endpoints
+    /// (`X-Admin-Token` header). `None` disables them entirely — the
+    /// server binds 0.0.0.0, so cluster-reshaping operations must never
+    /// be an unauthenticated POST away.
+    pub admin_token: Option<String>,
 }
 
 /// Completed-request latency record for /metrics.
@@ -55,8 +60,10 @@ struct Done {
 }
 
 /// Everything the coordinator processes, serialized through one channel:
-/// new submissions, engine events, and monitor ticks. One consumer means
-/// the policy needs no locking and decisions are totally ordered.
+/// new submissions, engine events, monitor ticks, and membership changes.
+/// One consumer means the policy needs no locking and decisions are
+/// totally ordered — engine registration/deregistration is just another
+/// message in the same stream (PR 3 elastic membership).
 enum CoordMsg {
     Submit {
         req: u64,
@@ -66,12 +73,38 @@ enum CoordMsg {
     },
     Engine(EngineEvent),
     Tick,
+    Membership(MembershipCmd),
+}
+
+/// Operator-triggered membership changes (the `/admin/*` endpoints).
+enum MembershipCmd {
+    /// Scale-out: load a fresh engine's artifacts on a helper thread
+    /// (seconds of work that must not stall dispatch) …
+    Join,
+    /// … then register the loaded runtime: the only part that runs on
+    /// the coordinator thread, where the slot id is assigned.
+    Register(Box<crate::runtime::ModelRuntime>),
+    /// Retire an engine gracefully: no new placements, shutdown once its
+    /// in-flight work completes.
+    Drain { engine: usize },
+    /// Treat an engine as failed: drop it immediately and re-dispatch
+    /// everything it held (decodes restart from prefill — their KV died
+    /// with the engine).
+    Fail { engine: usize },
 }
 
 /// Per-request coordinator bookkeeping.
 struct Inflight {
     t0: Instant,
     max_tokens: usize,
+    /// The prompt is retained so work lost to an engine failure can be
+    /// re-dispatched (stateless instances: any engine can redo it).
+    /// Shared with the engine's queue entry — dispatch bumps a refcount
+    /// instead of copying a possibly-60k-token prompt.
+    prompt: Arc<[i32]>,
+    /// Which engine is decoding this request (mirror of the `decoding`
+    /// ledger entry, for O(1) removal on completion).
+    decode_engine: Option<usize>,
     /// Wall-clock TTFT, recorded when `PrefillDone` arrives.
     first_token_s: Option<f64>,
 }
@@ -84,6 +117,10 @@ struct Inflight {
 pub struct SchedPublish {
     pools_packed: AtomicU64,
     flips: AtomicU64,
+    /// Per-engine liveness codes (0 = active, 1 = draining, 2 = dead),
+    /// refreshed after every membership transition. Mutex is fine: only
+    /// `/metrics` reads it, and membership changes are rare.
+    states: Mutex<Vec<u8>>,
 }
 
 impl SchedPublish {
@@ -91,7 +128,13 @@ impl SchedPublish {
         SchedPublish {
             pools_packed: AtomicU64::new(0),
             flips: AtomicU64::new(0),
+            states: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Liveness code per engine slot (0 active, 1 draining, 2 dead).
+    pub fn engine_states(&self) -> Vec<u8> {
+        self.states.lock().unwrap().clone()
     }
 
     fn store_pools(&self, pools: [usize; 4]) {
@@ -127,6 +170,26 @@ struct Coordinator {
     /// prefill dispatched to each engine and not yet completed. This is
     /// the q1 state of the ServerView snapshot.
     queued: Vec<Vec<(u64, u32)>>,
+    /// Requests currently decoding on each engine — the failure-recovery
+    /// ledger (their KV dies with the engine, so they restart from
+    /// prefill on re-dispatch).
+    decoding: Vec<Vec<u64>>,
+    /// Membership state per engine slot; slots never shrink, ids stay
+    /// stable (the sched-layer contract).
+    life: Vec<Liveness>,
+    /// Startup profile, extended as engines join (joiners on this host
+    /// load identical artifacts, so they inherit the fitted curve and
+    /// report their own KV capacity).
+    profile: FixedProfile,
+    /// Engine handles shared with the HTTP layer so `/metrics` can read
+    /// stats of engines that joined after boot.
+    registry: Arc<Mutex<Vec<EngineHandle>>>,
+    /// Where joiners load their artifacts from + how engines call home.
+    artifacts_dir: String,
+    event_tx: mpsc::Sender<EngineEvent>,
+    /// Self-sender: lets helper threads (artifact loaders) feed results
+    /// back into the single coordinator channel.
+    msg_tx: mpsc::Sender<CoordMsg>,
     /// Per-request completion channels for HTTP handlers.
     waiters: Arc<Mutex<HashMap<u64, mpsc::Sender<(Vec<i32>, f64, f64)>>>>,
     inflight: HashMap<u64, Inflight>,
@@ -144,7 +207,8 @@ impl Coordinator {
                 .engines
                 .iter()
                 .zip(&self.queued)
-                .map(|(e, q)| {
+                .zip(&self.life)
+                .map(|((e, q), &liveness)| {
                     let s = e.stats();
                     EngineSnapshot {
                         // Chunk progress is engine-internal; until
@@ -157,6 +221,7 @@ impl Coordinator {
                         max_kv_tokens: s.kv_capacity_tokens,
                         avg_token_interval: s.token_interval_s,
                         has_decode_work: s.active_slots > 0 || s.pending_decode_reqs > 0,
+                        liveness,
                     }
                 })
                 .collect(),
@@ -173,6 +238,21 @@ impl Coordinator {
         self.sched.flips.store(self.policy.flip_count(), Ordering::Relaxed);
     }
 
+    /// Publish the membership table for `/metrics`. Only membership
+    /// transitions call this — liveness never changes on the per-request
+    /// path, so the lock + rebuild stays off it.
+    fn publish_membership(&self) {
+        *self.sched.states.lock().unwrap() = self
+            .life
+            .iter()
+            .map(|l| match l {
+                Liveness::Active => 0u8,
+                Liveness::Draining => 1,
+                Liveness::Dead => 2,
+            })
+            .collect();
+    }
+
     fn handle(&mut self, msg: CoordMsg) {
         match msg {
             CoordMsg::Submit {
@@ -186,25 +266,12 @@ impl Coordinator {
                     Inflight {
                         t0,
                         max_tokens,
+                        prompt: prompt.into(),
+                        decode_engine: None,
                         first_token_s: None,
                     },
                 );
-                // Arrow Alg. 1 picks the prefill engine; the coordinator
-                // only dispatches. The snapshot is materialized first so
-                // the policy call borrows nothing but itself.
-                let now = self.now_s();
-                let snapshot = self.view();
-                let r = Request::new(req, now, prompt.len() as u32, max_tokens as u32);
-                let target = self.policy.place_prefill(now, &r, &snapshot);
-                // A policy must only name real instances; clamp in
-                // release (stay serving) but fail loudly in debug.
-                debug_assert!(target.0 < self.engines.len(), "policy placed on {target}");
-                let t = target.0.min(self.engines.len() - 1);
-                self.queued[t].push((req, prompt.len() as u32));
-                if self.engines[t].send(EngineCmd::Prefill { req, prompt }).is_err() {
-                    self.queued[t].retain(|&(r2, _)| r2 != req);
-                    self.finish(req, Vec::new());
-                }
+                self.dispatch_prefill(req);
                 self.publish_sched();
             }
             CoordMsg::Engine(ev) => self.handle_engine(ev),
@@ -214,8 +281,186 @@ impl Coordinator {
                 let now = self.now_s();
                 let snapshot = self.view();
                 self.policy.on_tick(now, &snapshot);
+                // Draining engines that emptied out shut down here.
+                for i in 0..self.engines.len() {
+                    self.maybe_finish_drain(i);
+                }
                 self.publish_sched();
             }
+            CoordMsg::Membership(cmd) => self.handle_membership(cmd),
+        }
+    }
+
+    /// Place (or re-place) the prefill phase of `req` from its retained
+    /// prompt. Arrow Alg. 1 picks the engine; the coordinator only
+    /// dispatches. The snapshot is materialized first so the policy call
+    /// borrows nothing but itself.
+    fn dispatch_prefill(&mut self, req: u64) {
+        let Some(fl) = self.inflight.get_mut(&req) else { return };
+        // A re-dispatch restarts the request wholesale: its first token
+        // will be re-emitted, so wall-clock TTFT re-records too, and any
+        // previous decode binding is void (the ledger entry was drained
+        // by the failure handler).
+        fl.first_token_s = None;
+        fl.decode_engine = None;
+        let prompt = Arc::clone(&fl.prompt);
+        let max_tokens = fl.max_tokens;
+        let now = self.now_s();
+        let snapshot = self.view();
+        let r = Request::new(req, now, prompt.len() as u32, max_tokens as u32);
+        let target = self.policy.place_prefill(now, &r, &snapshot);
+        // A policy must only name real instances; clamp in
+        // release (stay serving) but fail loudly in debug.
+        debug_assert!(target.0 < self.engines.len(), "policy placed on {target}");
+        let t = target.0.min(self.engines.len() - 1);
+        if self.life[t] == Liveness::Dead {
+            // The policy only names a departed slot when nothing
+            // placeable remains (every engine failed/drained). Fail fast:
+            // queueing behind a dead engine's Shutdown would strand the
+            // client for the full timeout and leak the inflight entry.
+            // (A Draining slot, by contrast, is still running and may
+            // legitimately serve as the last resort — its drain simply
+            // completes later.)
+            self.finish(req, Vec::new());
+            return;
+        }
+        self.queued[t].push((req, prompt.len() as u32));
+        if self.engines[t].send(EngineCmd::Prefill { req, prompt }).is_err() {
+            self.queued[t].retain(|&(r2, _)| r2 != req);
+            self.finish(req, Vec::new());
+        }
+    }
+
+    /// Membership transition (PR 3): registration/deregistration flow
+    /// through the same single-channel coordinator as every placement, so
+    /// the policy's pool re-seeding is totally ordered with decisions.
+    fn handle_membership(&mut self, cmd: MembershipCmd) {
+        match cmd {
+            MembershipCmd::Join => {
+                // Loading AOT artifacts takes seconds; on the coordinator
+                // thread that would freeze every placement and completion
+                // for the duration — the availability dip scale-out is
+                // supposed to prevent. A helper thread does the load and
+                // the runtime comes back as `Register` through the same
+                // channel, totally ordered like everything else.
+                let dir = self.artifacts_dir.clone();
+                let back = self.msg_tx.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("engine-loader".into())
+                    .spawn(move || match crate::runtime::ModelRuntime::load(&dir) {
+                        Ok(rt) => {
+                            let _ = back
+                                .send(CoordMsg::Membership(MembershipCmd::Register(Box::new(rt))));
+                        }
+                        Err(e) => eprintln!("scale-out failed: {e}"),
+                    });
+                if let Err(e) = spawned {
+                    eprintln!("scale-out failed: cannot spawn loader: {e}");
+                }
+            }
+            MembershipCmd::Register(rt) => {
+                let id = self.engines.len();
+                let handle = match EngineHandle::start(id, *rt, self.event_tx.clone()) {
+                    Ok(h) => h,
+                    Err(e) => {
+                        eprintln!("scale-out failed: {e}");
+                        return;
+                    }
+                };
+                // Register the slot everywhere before the policy learns
+                // of it, so the view it sees already covers the joiner.
+                self.registry.lock().unwrap().push(handle.clone_handle());
+                self.engines.push(handle);
+                self.queued.push(Vec::new());
+                self.decoding.push(Vec::new());
+                self.life.push(Liveness::Active);
+                // Startup-equivalent profiling: identical artifacts on
+                // this host, so the joiner inherits the fitted curve and
+                // contributes its own reported KV capacity.
+                let predictor = self.profile.predictors[0].clone();
+                self.profile.predictors.push(predictor);
+                self.profile
+                    .max_running_tokens
+                    .push(self.engines[id].stats().kv_capacity_tokens.max(1));
+                let now = self.now_s();
+                let snapshot = self.view();
+                self.policy.on_membership(
+                    now,
+                    MembershipEvent::InstanceJoined { id: InstanceId(id) },
+                    &snapshot,
+                    &self.profile,
+                );
+                println!("engine {id} joined ({} total)", self.engines.len());
+                self.publish_sched();
+                self.publish_membership();
+            }
+            MembershipCmd::Drain { engine } => {
+                if engine >= self.engines.len() || self.life[engine] != Liveness::Active {
+                    return;
+                }
+                self.life[engine] = Liveness::Draining;
+                let now = self.now_s();
+                let snapshot = self.view();
+                self.policy.on_membership(
+                    now,
+                    MembershipEvent::InstanceDraining { id: InstanceId(engine) },
+                    &snapshot,
+                    &self.profile,
+                );
+                println!("engine {engine} draining");
+                self.publish_membership();
+                self.maybe_finish_drain(engine);
+                self.publish_sched();
+            }
+            MembershipCmd::Fail { engine } => {
+                if engine >= self.engines.len() || self.life[engine] == Liveness::Dead {
+                    return;
+                }
+                self.life[engine] = Liveness::Dead;
+                let _ = self.engines[engine].send(EngineCmd::Shutdown);
+                let now = self.now_s();
+                let snapshot = self.view();
+                self.policy.on_membership(
+                    now,
+                    MembershipEvent::InstanceLost { id: InstanceId(engine) },
+                    &snapshot,
+                    &self.profile,
+                );
+                // Re-dispatch everything the engine held: queued prefills
+                // restart verbatim; decodes restart from prefill (their
+                // KV died with the engine). Stateless instances make this
+                // a pure re-placement — no session state to rebuild.
+                let queued: Vec<u64> = self.queued[engine].drain(..).map(|(r, _)| r).collect();
+                let decoding: Vec<u64> = std::mem::take(&mut self.decoding[engine]);
+                let n = queued.len() + decoding.len();
+                for req in queued.into_iter().chain(decoding) {
+                    self.dispatch_prefill(req);
+                }
+                println!("engine {engine} failed; re-dispatched {n} request(s)");
+                self.publish_sched();
+                self.publish_membership();
+            }
+        }
+    }
+
+    /// A draining engine with nothing left anywhere — coordinator queues
+    /// or engine-side slots — shuts down and leaves the table as Dead.
+    fn maybe_finish_drain(&mut self, i: usize) {
+        if self.life[i] != Liveness::Draining {
+            return;
+        }
+        let s = self.engines[i].stats();
+        if self.queued[i].is_empty()
+            && self.decoding[i].is_empty()
+            && s.prefill_queue == 0
+            && s.active_slots == 0
+            && s.pending_decode_reqs == 0
+        {
+            self.life[i] = Liveness::Dead;
+            let _ = self.engines[i].send(EngineCmd::Shutdown);
+            println!("engine {i} drained and left the cluster");
+            self.publish_sched();
+            self.publish_membership();
         }
     }
 
@@ -231,6 +476,11 @@ impl Coordinator {
                 v,
                 bucket,
             } => {
+                if self.life.get(engine).copied() == Some(Liveness::Dead) {
+                    // A failed engine's parting words: the request was
+                    // already re-dispatched elsewhere — ignore.
+                    return;
+                }
                 self.queued[engine].retain(|&(r, _)| r != req);
                 let max_tokens = match self.inflight.get_mut(&req) {
                     Some(fl) => {
@@ -254,8 +504,19 @@ impl Coordinator {
                         .place_decode(now, &r, InstanceId(engine), &snapshot);
                 debug_assert!(target.0 < self.engines.len(), "policy placed on {target}");
                 let t = target.0.min(self.engines.len() - 1);
+                if self.life[t] == Liveness::Dead {
+                    // Nothing placeable is left (see dispatch_prefill);
+                    // fail fast rather than strand the request behind a
+                    // dead engine's Shutdown.
+                    self.finish(req, Vec::new());
+                    return;
+                }
                 // KV migration: the slab moves through the coordinator (a
                 // real memcpy between engines when target != source).
+                self.decoding[t].push(req);
+                if let Some(fl) = self.inflight.get_mut(&req) {
+                    fl.decode_engine = Some(t);
+                }
                 if self.engines[t]
                     .send(EngineCmd::StartDecode {
                         req,
@@ -272,12 +533,23 @@ impl Coordinator {
                 }
                 self.publish_sched();
             }
-            EngineEvent::DecodeDone { req, tokens } => self.finish(req, tokens),
-            EngineEvent::Failed { req, error } => {
-                eprintln!("request {req} failed: {error}");
-                for q in &mut self.queued {
-                    q.retain(|&(r, _)| r != req);
+            EngineEvent::DecodeDone { req, engine, tokens } => {
+                if self.life.get(engine).copied() == Some(Liveness::Dead) {
+                    // Parting words of a failed engine: the request was
+                    // already re-dispatched — let the retry finish it.
+                    return;
                 }
+                self.finish(req, tokens)
+            }
+            EngineEvent::Failed { req, engine, error } => {
+                if self.life.get(engine).copied() == Some(Liveness::Dead) {
+                    // Expected fallout of the declared failure (e.g. the
+                    // engine failing its whole batch on shutdown); the
+                    // re-dispatch already covers these requests.
+                    return;
+                }
+                eprintln!("request {req} failed: {error}");
+                self.queued[engine].retain(|&(r, _)| r != req);
                 self.finish(req, Vec::new());
             }
         }
@@ -288,6 +560,10 @@ impl Coordinator {
             Some(x) => x,
             None => return,
         };
+        // Whatever ends a request clears its decode-ledger entry.
+        if let Some(e) = fl.decode_engine {
+            self.decoding[e].retain(|&r| r != req);
+        }
         let total = fl.t0.elapsed().as_secs_f64();
         let n = tokens.len().max(1);
         // Real TTFT was recorded at PrefillDone; fall back to the whole
@@ -347,6 +623,10 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
     let done: Arc<Mutex<Vec<Done>>> = Arc::new(Mutex::new(Vec::new()));
     let sched = Arc::new(SchedPublish::new());
     let next_id = Arc::new(AtomicU64::new(1));
+    // Engine handles shared with /metrics; grows on scale-out.
+    let registry: Arc<Mutex<Vec<EngineHandle>>> = Arc::new(Mutex::new(
+        engines.iter().map(|e| e.clone_handle()).collect(),
+    ));
 
     let (msg_tx, msg_rx) = mpsc::channel::<CoordMsg>();
 
@@ -380,6 +660,13 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
         engines: engines.iter().map(|e| e.clone_handle()).collect(),
         policy,
         queued: (0..cfg.instances).map(|_| Vec::new()).collect(),
+        decoding: (0..cfg.instances).map(|_| Vec::new()).collect(),
+        life: vec![Liveness::Active; cfg.instances],
+        profile,
+        registry: Arc::clone(&registry),
+        artifacts_dir: cfg.artifacts_dir.clone(),
+        event_tx,
+        msg_tx: msg_tx.clone(),
         waiters: Arc::clone(&waiters),
         inflight: HashMap::new(),
         done: Arc::clone(&done),
@@ -387,6 +674,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
         started: Instant::now(),
     };
     coord.publish_sched(); // initial pool split visible before traffic
+    coord.publish_membership(); // …and the initial membership table
     std::thread::Builder::new()
         .name("coordinator".into())
         .spawn(move || {
@@ -397,7 +685,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
 
     let shutdown = Arc::new(AtomicBool::new(false));
     let addr = format!("0.0.0.0:{}", cfg.port);
-    let engines_http: Vec<EngineHandle> = engines.iter().map(|e| e.clone_handle()).collect();
+    let registry_http = Arc::clone(&registry);
     let waiters_http = Arc::clone(&waiters);
     let done_http = Arc::clone(&done);
     let sched_http = Arc::clone(&sched);
@@ -405,7 +693,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
     http::serve(&addr, shutdown, move |req| {
         route(
             req,
-            &engines_http,
+            &registry_http,
             &waiters_http,
             &done_http,
             &sched_http,
@@ -458,7 +746,7 @@ fn profile_engines(engines: &[EngineHandle]) -> FixedProfile {
 #[allow(clippy::too_many_arguments)]
 fn route(
     req: &HttpRequest,
-    engines: &[EngineHandle],
+    registry: &Arc<Mutex<Vec<EngineHandle>>>,
     waiters: &Arc<Mutex<HashMap<u64, mpsc::Sender<(Vec<i32>, f64, f64)>>>>,
     done: &Arc<Mutex<Vec<Done>>>,
     sched: &Arc<SchedPublish>,
@@ -473,6 +761,12 @@ fn route(
             let ttfts: Vec<f64> = d.iter().map(|x| x.ttft_s).collect();
             let tpots: Vec<f64> = d.iter().map(|x| x.tpot_s).collect();
             let total_tokens: usize = d.iter().map(|x| x.tokens).sum();
+            let engines: Vec<EngineHandle> = registry
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|e| e.clone_handle())
+                .collect();
             let stats: Vec<Json> = engines
                 .iter()
                 .map(|e| {
@@ -494,8 +788,11 @@ fn route(
                 .collect();
             let pct = crate::util::stats::percentile;
             // Proof the server runs Arrow: live pool sizes + flip count
-            // from the shared policy's pool bookkeeping.
+            // from the shared policy's pool bookkeeping — and, since
+            // PR 3, the membership table (instance count + drain state).
             let pools = sched.pools();
+            let states = sched.engine_states();
+            let live = states.iter().filter(|&&s| s != 2).count();
             let body = Json::obj(vec![
                 ("completed_requests", Json::Num(d.len() as f64)),
                 ("total_tokens", Json::Num(total_tokens as f64)),
@@ -512,9 +809,75 @@ fn route(
                     Json::Arr(pools.iter().map(|&p| Json::Num(p as f64)).collect()),
                 ),
                 ("flips", Json::Num(sched.flips() as f64)),
+                ("instances", Json::Num(states.len() as f64)),
+                ("live_instances", Json::Num(live as f64)),
+                (
+                    "engine_states",
+                    Json::Arr(
+                        states
+                            .iter()
+                            .map(|&s| {
+                                Json::Str(
+                                    match s {
+                                        0 => "active",
+                                        1 => "draining",
+                                        _ => "dead",
+                                    }
+                                    .into(),
+                                )
+                            })
+                            .collect(),
+                    ),
+                ),
                 ("engines", Json::Arr(stats)),
             ]);
             HttpResponse::json(200, &body.encode())
+        }
+        // ------------------------------------------------ admin (PR 3)
+        // Elastic membership: operators scale the engine set at runtime.
+        // All three commands serialize into the coordinator channel, so
+        // the pool re-seed is totally ordered with placements. These are
+        // the server's first *destructive* endpoints and the bind is
+        // 0.0.0.0 — they require the configured shared secret.
+        ("POST", "/admin/scale-out") | ("POST", "/admin/drain") | ("POST", "/admin/fail") => {
+            let authorized = match &cfg.admin_token {
+                Some(tok) => req
+                    .headers
+                    .get("x-admin-token")
+                    .is_some_and(|v| v == tok),
+                None => false,
+            };
+            if !authorized {
+                return HttpResponse::json(
+                    403,
+                    "{\"error\":\"admin endpoints require X-Admin-Token (set \
+                     admin_token / ARROW_ADMIN_TOKEN to enable)\"}",
+                );
+            }
+            let cmd = if req.path == "/admin/scale-out" {
+                MembershipCmd::Join
+            } else {
+                let engine = Json::parse(&req.body_str())
+                    .ok()
+                    .and_then(|b| b.get("engine").as_u64());
+                let Some(engine) = engine else {
+                    return HttpResponse::json(400, "{\"error\":\"missing 'engine' index\"}");
+                };
+                if req.path == "/admin/drain" {
+                    MembershipCmd::Drain { engine: engine as usize }
+                } else {
+                    MembershipCmd::Fail { engine: engine as usize }
+                }
+            };
+            let accepted = if req.path == "/admin/scale-out" {
+                "{\"status\":\"joining\"}"
+            } else {
+                "{\"status\":\"accepted\"}"
+            };
+            match submit.send(CoordMsg::Membership(cmd)) {
+                Ok(()) => HttpResponse::json(202, accepted),
+                Err(_) => HttpResponse::json(503, "{\"error\":\"coordinator unavailable\"}"),
+            }
         }
         ("POST", "/v1/completions") => {
             let body = match Json::parse(&req.body_str()) {

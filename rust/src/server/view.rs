@@ -23,7 +23,7 @@
 //!   and the no-allocation rule (ROADMAP "Scheduling core") binds the
 //!   *simulator* adapter, which stays borrow-only.
 
-use crate::sched::ClusterView;
+use crate::sched::{ClusterView, Liveness};
 
 /// One engine's scheduler-visible state, materialized at decision time.
 #[derive(Debug, Clone)]
@@ -39,6 +39,9 @@ pub struct EngineSnapshot {
     pub avg_token_interval: f64,
     /// Any decode slots active (or adoptions pending) on the engine.
     pub has_decode_work: bool,
+    /// Cluster-membership state (PR 3): the coordinator's life table,
+    /// snapshotted alongside the load counters.
+    pub liveness: Liveness,
 }
 
 /// [`ClusterView`] over a materialized per-engine snapshot table.
@@ -77,6 +80,49 @@ impl ClusterView for ServerView {
     fn has_decode_work(&self, inst: usize) -> bool {
         self.engines[inst].has_decode_work
     }
+
+    fn liveness(&self, inst: usize) -> Liveness {
+        self.engines[inst].liveness
+    }
+}
+
+/// Conformance helper: materialize the exact state [`crate::sim::SimView`]
+/// exposes over a `SimInstance` table into the server's snapshot form —
+/// the "identical snapshot" premise of every cross-substrate test
+/// (`tests/cross_substrate.rs`, `tests/prop_pools.rs`). Lives next to
+/// [`EngineSnapshot`] so growing the snapshot (as PR 3 did with
+/// `liveness`) updates every consumer in one place.
+pub fn mirror_sim_instances(insts: &[crate::engine::SimInstance]) -> ServerView {
+    ServerView {
+        engines: insts
+            .iter()
+            .map(|i| EngineSnapshot {
+                queued_prefills: i.prefill_queue_iter().collect(),
+                running_tokens: i.running_tokens(),
+                max_kv_tokens: i.cost.max_kv_tokens,
+                avg_token_interval: i.avg_token_interval(),
+                has_decode_work: i.has_decode_work(),
+                liveness: i.life,
+            })
+            .collect(),
+    }
+}
+
+/// Conformance helper: the startup profile a live coordinator would hand
+/// its policy, frozen from the same knowledge `sim::SimView` profiles —
+/// so sim-side and server-side policies start byte-identical.
+pub fn profile_sim_instances(
+    insts: &[crate::engine::SimInstance],
+    tpot_slo: f64,
+) -> crate::sched::FixedProfile {
+    use crate::sched::ProfileSource;
+    let v = crate::sim::SimView(insts);
+    crate::sched::FixedProfile {
+        predictors: (0..insts.len()).map(|i| v.fit_predictor(i)).collect(),
+        max_running_tokens: (0..insts.len())
+            .map(|i| ProfileSource::max_running_tokens(&v, i, tpot_slo))
+            .collect(),
+    }
 }
 
 #[cfg(test)]
@@ -90,6 +136,7 @@ mod tests {
             max_kv_tokens: 1000,
             avg_token_interval: f64::NAN,
             has_decode_work: decode,
+            liveness: Liveness::Active,
         }
     }
 
@@ -107,5 +154,19 @@ mod tests {
         let mut order = Vec::new();
         v.for_each_queued_prefill(0, &mut |l, r| order.push((l, r)));
         assert_eq!(order, vec![(100, 100), (50, 50)]);
+    }
+
+    #[test]
+    fn liveness_surfaces_through_the_view() {
+        let mut draining = snap(vec![], 10, true);
+        draining.liveness = Liveness::Draining;
+        let mut dead = snap(vec![], 0, false);
+        dead.liveness = Liveness::Dead;
+        let v = ServerView {
+            engines: vec![snap(vec![], 0, false), draining, dead],
+        };
+        assert!(v.liveness(0).placeable() && v.liveness(0).in_cluster());
+        assert!(!v.liveness(1).placeable() && v.liveness(1).in_cluster());
+        assert!(!v.liveness(2).placeable() && !v.liveness(2).in_cluster());
     }
 }

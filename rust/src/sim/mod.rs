@@ -49,7 +49,8 @@ use std::sync::Arc;
 
 use crate::costmodel::CostModel;
 use crate::engine::{IterationPlan, Produced, SimInstance, Transfer, TransferFabric};
-use crate::request::{InstanceId, Request, RequestRecord, RequestState, Time};
+use crate::request::{InstanceId, Request, RequestId, RequestRecord, RequestState, Time};
+use crate::sched::{Liveness, MembershipEvent};
 use crate::trace::Trace;
 
 pub use policy::Policy;
@@ -62,15 +63,47 @@ pub const MONITOR_PERIOD: f64 = 1.0;
 // Events
 // ---------------------------------------------------------------------------
 
+/// A scheduled cluster-membership change (PR 3 elastic membership).
+/// Instances are table slots: `Join` brings a slot to life (first join or
+/// rejoin after drain/failure), `Drain` retires it gracefully once its
+/// in-flight work finishes, `Fail` kills it immediately — the event loop
+/// re-queues everything it held. `Restart` is the rolling-upgrade
+/// primitive: a drain whose rejoin fires `downtime` after the drain
+/// *completes* — unlike a fixed-time Drain+Join pair, a slow drain can
+/// never be silently cancelled by its own rejoin.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MembershipChange {
+    Join(usize),
+    Drain(usize),
+    Fail(usize),
+    Restart { inst: usize, downtime: f64 },
+}
+
+impl MembershipChange {
+    pub fn instance(self) -> usize {
+        match self {
+            MembershipChange::Join(i)
+            | MembershipChange::Drain(i)
+            | MembershipChange::Fail(i) => i,
+            MembershipChange::Restart { inst, .. } => inst,
+        }
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 enum EventKind {
     /// Only used by the reference (pre-pushed) mode; the production loop
     /// drives arrivals from the trace cursor instead.
     Arrival { idx: usize },
-    IterDone { inst: usize },
+    /// `epoch` guards against completions from a previous life of the
+    /// instance: a failure bumps the epoch, so an IterDone scheduled
+    /// before the crash is ignored when it fires (the work it carried was
+    /// already re-queued).
+    IterDone { inst: usize, epoch: u64 },
     TransferDone { req: usize, from: usize, to: usize, kv: u32 },
     FabricPoll,
     MonitorTick,
+    Membership(MembershipChange),
 }
 
 #[derive(Debug, Clone)]
@@ -142,6 +175,8 @@ pub struct InstantSnapshot {
     pub per_instance: Vec<(usize, usize, u64)>,
     /// Policy pool sizes [P, D, P→D, D→P] if the policy exposes them.
     pub pools: Option<[usize; 4]>,
+    /// Instances currently in the cluster (Active + Draining).
+    pub live: usize,
 }
 
 /// Result of a simulation run.
@@ -172,6 +207,23 @@ pub struct Cluster {
     seq: u64,
     /// In-flight iteration plan per instance.
     plans: Vec<Option<IterationPlan>>,
+    /// Per-instance life epoch: bumped on failure so completions from a
+    /// previous life are recognizably stale.
+    epochs: Vec<u64>,
+    /// Pending rejoin delays of `Restart` drains: when slot `i` finishes
+    /// draining, a Join fires `restart_after[i]` seconds later.
+    restart_after: Vec<Option<f64>>,
+    /// (source epoch, target epoch) captured when a fetch was admitted;
+    /// a mismatch at TransferDone means that endpoint failed (and
+    /// possibly rejoined) mid-transfer — its parked KV / reservation no
+    /// longer exists, even if the slot is Active again.
+    fetch_epoch: Vec<(u64, u64)>,
+    /// Instances that start outside the cluster (join later); None means
+    /// everyone is live at t=0 (the fixed-membership default).
+    initial_live: Option<Vec<bool>>,
+    /// Scheduled membership changes, pushed into the event heap at run
+    /// start (identically in cursor and reference modes).
+    membership_schedule: Vec<(Time, MembershipChange)>,
     /// Per-target queues of (req idx, from) waiting for target memory (q2).
     fetch_wait: Vec<VecDeque<(usize, usize)>>,
     /// Reusable buffer for iteration-completion events.
@@ -207,6 +259,11 @@ impl Cluster {
             events: BinaryHeap::new(),
             seq: 0,
             plans: (0..n).map(|_| None).collect(),
+            epochs: vec![0; n],
+            restart_after: vec![None; n],
+            fetch_epoch: Vec::new(),
+            initial_live: None,
+            membership_schedule: Vec::new(),
             fetch_wait: (0..n).map(|_| VecDeque::new()).collect(),
             produced_buf: Vec::new(),
             done: 0,
@@ -235,6 +292,22 @@ impl Cluster {
         }));
     }
 
+    /// Mark which instances are live at t=0 (the rest join later via the
+    /// membership schedule). Must cover the whole table.
+    pub fn set_initial_live(&mut self, live: Vec<bool>) {
+        assert_eq!(live.len(), self.instances.len(), "initial_live must cover the table");
+        assert!(live.iter().any(|&l| l), "at least one instance must start live");
+        self.initial_live = Some(live);
+    }
+
+    /// Schedule a membership change at simulated time `at`. Same-time
+    /// changes fire in schedule order; ties with an arrival resolve to
+    /// the arrival first (the same rule every runtime event follows).
+    pub fn schedule_membership(&mut self, at: Time, change: MembershipChange) {
+        assert!(change.instance() < self.instances.len(), "unknown instance");
+        self.membership_schedule.push((at, change));
+    }
+
     /// Run the trace to completion; consumes the cluster.
     pub fn run(self, trace: &Trace) -> SimResult {
         self.run_mode(trace, false)
@@ -261,6 +334,7 @@ impl Cluster {
             })
             .collect();
         self.records = self.requests.iter().map(RequestRecord::new).collect();
+        self.fetch_epoch = vec![(0, 0); self.requests.len()];
         self.last_arrival = trace.duration();
 
         self.policy.init(&SimView(&self.instances));
@@ -273,6 +347,26 @@ impl Cluster {
                 self.push(t, EventKind::Arrival { idx });
             }
             self.next_arrival = self.requests.len();
+        }
+        // Elastic membership: instances configured to join later start
+        // outside the cluster, expressed as InstanceLost notifications
+        // before any placement — the policy's pools then cover exactly
+        // the live set. The scheduled changes enter the heap here, before
+        // the first MonitorTick, so their sequence numbers (and therefore
+        // all tie-breaks) are identical in cursor and reference modes.
+        if let Some(live) = self.initial_live.take() {
+            for (i, &is_live) in live.iter().enumerate() {
+                if !is_live {
+                    self.instances[i].life = Liveness::Dead;
+                    self.notify_membership(MembershipEvent::InstanceLost {
+                        id: InstanceId(i),
+                    });
+                }
+            }
+        }
+        let schedule = std::mem::take(&mut self.membership_schedule);
+        for (t, change) in schedule {
+            self.push(t, EventKind::Membership(change));
         }
         self.push(0.0, EventKind::MonitorTick);
 
@@ -309,12 +403,13 @@ impl Cluster {
                 }
                 match ev.kind {
                     EventKind::Arrival { idx } => self.on_arrival(idx),
-                    EventKind::IterDone { inst } => self.on_iter_done(inst),
+                    EventKind::IterDone { inst, epoch } => self.on_iter_done(inst, epoch),
                     EventKind::TransferDone { req, from, to, kv } => {
                         self.on_transfer_done(req, from, to, kv)
                     }
                     EventKind::FabricPoll => self.poll_fabric(),
                     EventKind::MonitorTick => self.on_monitor_tick(),
+                    EventKind::Membership(change) => self.on_membership_change(change),
                 }
             }
             if self.done == self.records.len() {
@@ -353,6 +448,17 @@ impl Cluster {
             .place_prefill(self.now, &req, &SimView(&self.instances));
 
         let inst = &mut self.instances[target.0];
+        if !inst.life.in_cluster() {
+            // The policy only names a departed slot when nothing
+            // placeable remains (its last-ditch fallback). Fail the
+            // request now instead of parking it on a corpse: a stranded
+            // queue entry would sit out the whole drain timeout, and a
+            // later rejoin of the slot must never execute work placed
+            // while it was dead.
+            self.records[idx].state = RequestState::Failed;
+            self.done += 1;
+            return;
+        }
         if req.input_len as u64 + 1 > inst.cost.max_kv_tokens {
             // Cannot ever fit (paper: DistServe OOM on long context).
             self.records[idx].state = RequestState::Failed;
@@ -365,7 +471,13 @@ impl Cluster {
         self.kick(target.0);
     }
 
-    fn on_iter_done(&mut self, i: usize) {
+    fn on_iter_done(&mut self, i: usize, epoch: u64) {
+        if epoch != self.epochs[i] {
+            // Completion from a previous life of the instance: it failed
+            // after this event was scheduled, and everything the
+            // iteration carried was already re-queued.
+            return;
+        }
         let plan = self.plans[i].take().expect("IterDone without plan");
         // Reuse one Produced buffer across iterations; it is moved out of
         // `self` while handlers below re-borrow `self` mutably.
@@ -394,6 +506,7 @@ impl Cluster {
             self.start_fetches(i);
         }
         self.kick(i);
+        self.maybe_finish_drain(i);
     }
 
     /// First token is emitted at prefill completion (paper Fig. 6 step c);
@@ -449,6 +562,7 @@ impl Cluster {
                 break;
             }
             self.fetch_wait[target].pop_front();
+            self.fetch_epoch[idx] = (self.epochs[from], self.epochs[target]);
             self.fabric.request(Transfer {
                 req: self.requests[idx].id,
                 from: InstanceId(from),
@@ -493,6 +607,35 @@ impl Cluster {
 
     fn on_transfer_done(&mut self, idx: usize, from: usize, to: usize, kv: u32) {
         self.fabric.complete(kv);
+        // Both endpoints must have lived through the whole copy: a
+        // failure wipes parked KV and reservations, and a rejoined slot
+        // is a *fresh* instance that never held this transfer's state —
+        // liveness alone can't tell, the admission-time epochs can.
+        let (src_epoch, dst_epoch) = self.fetch_epoch[idx];
+        let from_ok =
+            self.instances[from].life.in_cluster() && src_epoch == self.epochs[from];
+        let to_ok = self.instances[to].life.in_cluster() && dst_epoch == self.epochs[to];
+        if !from_ok {
+            // Source failed mid-copy: the KV never fully arrived. Release
+            // the target's reservation (if it still exists) and restart
+            // the request from scratch on live capacity.
+            if to_ok {
+                self.instances[to].release_kv(kv as u64 + 1);
+                self.start_fetches(to);
+                self.kick(to);
+            }
+            self.restart_request(idx);
+            self.poll_fabric();
+            return;
+        }
+        if !to_ok {
+            // Target failed while the copy was in flight (its reservation
+            // vanished with its state), but the source still parks the
+            // KV: only the decode placement needs redoing.
+            self.replace_decode(idx, from);
+            self.poll_fabric();
+            return;
+        }
         let req = self.requests[idx];
         // Source frees its parked copy.
         self.instances[from].migration_out_done(kv);
@@ -507,7 +650,184 @@ impl Cluster {
         self.start_fetches(from);
         self.kick(from);
         self.kick(to);
+        self.maybe_finish_drain(from);
         self.poll_fabric();
+    }
+
+    // -------------------------------------------------- membership (PR 3)
+
+    /// Forward a membership event to the policy (pools re-seed + flip
+    /// re-run happen inside the policy; the view already shows the new
+    /// state and doubles as the profile source for joiners).
+    fn notify_membership(&mut self, ev: MembershipEvent) {
+        self.policy.on_membership(
+            self.now,
+            ev,
+            &SimView(&self.instances),
+            &SimView(&self.instances),
+        );
+    }
+
+    fn on_membership_change(&mut self, change: MembershipChange) {
+        match change {
+            MembershipChange::Join(i) => {
+                if self.instances[i].life == Liveness::Active {
+                    return; // duplicate join
+                }
+                // A rejoin supersedes any armed restart-drill rejoin: a
+                // later plain Drain must retire the slot for good, not
+                // inherit a stale auto-rejoin.
+                self.restart_after[i] = None;
+                if self.instances[i].life == Liveness::Dead {
+                    // A dead slot rejoins as a fresh process: stale
+                    // monitor evidence (the idle gap across its downtime)
+                    // must not read as a giant token interval. A
+                    // Draining→Active rejoin keeps its state — it never
+                    // stopped running.
+                    self.instances[i].reset_monitor();
+                }
+                self.instances[i].life = Liveness::Active;
+                self.notify_membership(MembershipEvent::InstanceJoined {
+                    id: InstanceId(i),
+                });
+                self.kick(i);
+            }
+            MembershipChange::Drain(i) => self.begin_drain(i),
+            MembershipChange::Restart { inst, downtime } => {
+                if self.instances[inst].life != Liveness::Active {
+                    return;
+                }
+                // Rolling-upgrade drill: an ordinary drain whose rejoin
+                // is armed by drain *completion* (see maybe_finish_drain)
+                // — a slow drain is waited out, never cancelled.
+                self.restart_after[inst] = Some(downtime);
+                self.begin_drain(inst);
+            }
+            MembershipChange::Fail(i) => self.on_instance_fail(i),
+        }
+    }
+
+    fn begin_drain(&mut self, i: usize) {
+        if self.instances[i].life != Liveness::Active {
+            return;
+        }
+        self.instances[i].life = Liveness::Draining;
+        self.notify_membership(MembershipEvent::InstanceDraining { id: InstanceId(i) });
+        // An idle instance drains instantly.
+        self.maybe_finish_drain(i);
+    }
+
+    /// Immediate instance loss: the policy drops it from its pools, and
+    /// every request it held (or whose parked KV it held) is re-queued —
+    /// prefill restarts from scratch, decode-in-waiting re-places. All
+    /// recovery runs through the policy at `self.now`, so reference and
+    /// cursor modes stay byte-identical.
+    fn on_instance_fail(&mut self, i: usize) {
+        if !self.instances[i].life.in_cluster() {
+            return; // already gone
+        }
+        self.instances[i].life = Liveness::Dead;
+        // Scheduling first: re-placements below must see the shrunk pool.
+        self.notify_membership(MembershipEvent::InstanceLost { id: InstanceId(i) });
+        // In-flight completions of the dead instance are now stale, and a
+        // pending restart-drill rejoin is moot — the crash superseded it.
+        self.epochs[i] += 1;
+        self.plans[i] = None;
+        self.restart_after[i] = None;
+        // 1. Work resident on the dead instance: prefill progress and
+        //    decode KV are lost — those requests restart from scratch.
+        let mut lost: Vec<RequestId> = Vec::new();
+        self.instances[i].drain_request_ids(&mut lost);
+        // 2. Requests elsewhere waiting to fetch KV *out of* the dead
+        //    instance: their parked KV is gone — restart too.
+        let mut lost_sources: Vec<usize> = Vec::new();
+        for t in 0..self.fetch_wait.len() {
+            self.fetch_wait[t].retain(|&(idx, from)| {
+                if from == i {
+                    lost_sources.push(idx);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        // 3. Requests queued to fetch *into* the dead instance still park
+        //    their KV on a live source: only the decode placement redoes.
+        let waiting: Vec<(usize, usize)> = self.fetch_wait[i].drain(..).collect();
+        for id in lost {
+            self.restart_request(id.0 as usize);
+        }
+        for idx in lost_sources {
+            self.restart_request(idx);
+        }
+        for (idx, from) in waiting {
+            self.replace_decode(idx, from);
+        }
+    }
+
+    /// A draining instance with nothing left — no queued/running work, no
+    /// parked or reserved KV, no inbound fetches — leaves the cluster.
+    /// If the drain was a `Restart`, the rejoin arms here, off the actual
+    /// completion time.
+    fn maybe_finish_drain(&mut self, i: usize) {
+        if self.instances[i].life == Liveness::Draining
+            && self.instances[i].is_idle()
+            && self.instances[i].kv_used() == 0
+            && self.fetch_wait[i].is_empty()
+        {
+            self.instances[i].life = Liveness::Dead;
+            if let Some(downtime) = self.restart_after[i].take() {
+                self.push(
+                    self.now + downtime,
+                    EventKind::Membership(MembershipChange::Join(i)),
+                );
+            }
+        }
+    }
+
+    /// Re-queue a request from scratch (its prefill progress and/or KV
+    /// was lost with a failed instance). Token bookkeeping resets so a
+    /// finished record still holds exactly `output_len` token times.
+    fn restart_request(&mut self, idx: usize) {
+        let rec = &mut self.records[idx];
+        if matches!(rec.state, RequestState::Finished | RequestState::Failed) {
+            return;
+        }
+        rec.first_token = None;
+        rec.token_times.clear();
+        rec.prefill_instance = None;
+        rec.decode_instance = None;
+        rec.state = RequestState::PrefillQueued;
+        self.on_arrival(idx);
+    }
+
+    /// Re-place the decode phase of request `idx`, whose first token is
+    /// out and whose KV sits parked on live instance `from` (the decode
+    /// target it was originally bound for is gone).
+    fn replace_decode(&mut self, idx: usize, from: usize) {
+        if !self.instances[from].life.in_cluster() {
+            // Source died too (correlated failure): full restart.
+            self.restart_request(idx);
+            return;
+        }
+        let req = self.requests[idx];
+        let target = self.policy.place_decode(
+            self.now,
+            &req,
+            InstanceId(from),
+            &SimView(&self.instances),
+        );
+        self.records[idx].decode_instance = Some(target);
+        if target.0 == from {
+            // The KV is parked right here — local adoption.
+            self.instances[from].adopt_local_decode(req.id, req.input_len, req.output_len - 1);
+            self.records[idx].state = RequestState::DecodeQueued;
+            self.kick(from);
+        } else {
+            self.records[idx].state = RequestState::Migrating;
+            self.fetch_wait[target.0].push_back((idx, from));
+            self.start_fetches(target.0);
+        }
     }
 
     fn on_monitor_tick(&mut self) {
@@ -523,11 +843,18 @@ impl Cluster {
                     .map(|i| (i.prefill_req_count(), i.decode_req_count(), i.running_tokens()))
                     .collect(),
                 pools,
+                live: self
+                    .instances
+                    .iter()
+                    .filter(|i| i.life.in_cluster())
+                    .count(),
             });
         }
         // Policy moves may have made work schedulable; kick everyone idle.
+        // The sweep also settles drains that finished between events.
         for i in 0..self.instances.len() {
             self.kick(i);
+            self.maybe_finish_drain(i);
         }
         if self.done < self.records.len() {
             self.push(self.now + MONITOR_PERIOD, EventKind::MonitorTick);
@@ -536,13 +863,19 @@ impl Cluster {
 
     /// Start the next iteration on instance `i` if it is idle and has work.
     fn kick(&mut self, i: usize) {
-        if self.instances[i].busy {
+        if self.instances[i].busy || !self.instances[i].life.in_cluster() {
             return;
         }
         if let Some(plan) = self.instances[i].plan_iteration() {
             let t = self.now + plan.duration;
             self.plans[i] = Some(plan);
-            self.push(t, EventKind::IterDone { inst: i });
+            self.push(
+                t,
+                EventKind::IterDone {
+                    inst: i,
+                    epoch: self.epochs[i],
+                },
+            );
         }
     }
 }
@@ -794,6 +1127,128 @@ mod tests {
             res.records.iter().any(|r| r.state == RequestState::Failed),
             "buffer-capped transfers should fail"
         );
+    }
+
+    fn arrow_cluster(n_total: usize, n_live: usize) -> Cluster {
+        use crate::coordinator::arrow::{ArrowConfig, ArrowPolicy};
+        let policy = ArrowPolicy::new(ArrowConfig::new(3.0, 0.1, n_live), n_total);
+        Cluster::homogeneous(n_total, small_cost(), Box::new(policy), SimConfig::default())
+    }
+
+    #[test]
+    fn failed_instance_work_is_requeued_and_finishes() {
+        let trace = smoke(120, 2).generate(11);
+        let t_fail = trace.duration() * 0.4;
+        let mut cl = arrow_cluster(4, 4);
+        // Kill the last instance (initial decode pool) mid-trace.
+        cl.schedule_membership(t_fail, MembershipChange::Fail(3));
+        let res = cl.run(&trace);
+        assert!(
+            res.records.iter().all(|r| r.finished()),
+            "all requests must finish after the failure (re-queued work completes)"
+        );
+        // The dead instance never received post-failure work: anything
+        // recorded against it completed before the failure (restarted
+        // requests overwrite their placement fields).
+        for rec in &res.records {
+            if rec.decode_instance == Some(InstanceId(3)) {
+                let last = *rec.token_times.last().unwrap();
+                assert!(last <= t_fail + 1e-9, "decode on dead instance at {last}");
+            }
+            if rec.prefill_instance == Some(InstanceId(3)) {
+                let ft = rec.first_token.unwrap();
+                assert!(ft <= t_fail + 1e-9, "prefill on dead instance at {ft}");
+            }
+            assert_eq!(rec.token_times.len(), rec.output_len as usize);
+        }
+    }
+
+    #[test]
+    fn drained_instance_gets_no_new_work_and_leaves() {
+        let trace = smoke(100, 2).generate(12);
+        let t_drain = trace.duration() * 0.3;
+        let mut cl = arrow_cluster(4, 4);
+        cl.schedule_membership(t_drain, MembershipChange::Drain(0));
+        let res = cl.run(&trace);
+        assert!(res.records.iter().all(|r| r.finished()), "drain loses no work");
+        // Prefill placement happens at arrival; no failures occur, so a
+        // request prefilled on the draining instance must have arrived
+        // before the drain began.
+        for rec in res
+            .records
+            .iter()
+            .filter(|r| r.prefill_instance == Some(InstanceId(0)))
+        {
+            assert!(
+                rec.arrival <= t_drain + 1e-9,
+                "req {} placed on draining instance (arrived {})",
+                rec.id,
+                rec.arrival
+            );
+        }
+    }
+
+    #[test]
+    fn late_joiner_takes_work() {
+        let trace = smoke(150, 2).generate(13);
+        let t_join = trace.duration() * 0.2;
+        let mut cl = arrow_cluster(3, 2);
+        cl.set_initial_live(vec![true, true, false]);
+        cl.schedule_membership(t_join, MembershipChange::Join(2));
+        let res = cl.run(&trace);
+        assert!(res.records.iter().all(|r| r.finished()));
+        let used_joiner = res.records.iter().any(|r| {
+            r.prefill_instance == Some(InstanceId(2)) || r.decode_instance == Some(InstanceId(2))
+        });
+        assert!(used_joiner, "the joined instance must receive work");
+        // And nothing touched it before it joined.
+        for rec in &res.records {
+            if rec.prefill_instance == Some(InstanceId(2)) {
+                assert!(rec.first_token.unwrap() >= t_join - 1e-9);
+            }
+        }
+    }
+
+    /// Cursor and heap-reference modes must stay byte-identical under a
+    /// full membership schedule (join + drain + failure).
+    #[test]
+    fn membership_schedule_matches_heap_reference() {
+        use crate::coordinator::arrow::{ArrowConfig, ArrowPolicy};
+        for seed in 3..=6u64 {
+            let trace = smoke(80, 2).generate(seed);
+            let d = trace.duration();
+            let mk = || {
+                let policy = ArrowPolicy::new(ArrowConfig::new(3.0, 0.1, 4), 5);
+                let mut cl = Cluster::homogeneous(
+                    5,
+                    small_cost(),
+                    Box::new(policy),
+                    SimConfig::default(),
+                );
+                cl.set_initial_live(vec![true, true, true, true, false]);
+                cl.schedule_membership(0.3 * d, MembershipChange::Join(4));
+                cl.schedule_membership(0.5 * d, MembershipChange::Drain(0));
+                cl.schedule_membership(0.7 * d, MembershipChange::Fail(3));
+                cl
+            };
+            let cursor = mk().run(&trace);
+            let heap = mk().run_reference(&trace);
+            assert_eq!(
+                cursor.events_processed, heap.events_processed,
+                "seed {seed}: event counts diverge under membership"
+            );
+            assert_eq!(cursor.total_iterations, heap.total_iterations);
+            for (x, y) in cursor.records.iter().zip(&heap.records) {
+                assert_eq!(
+                    x.token_times, y.token_times,
+                    "seed {seed} req {}: membership schedules diverge",
+                    x.id
+                );
+                assert_eq!(x.state, y.state);
+                assert_eq!(x.prefill_instance, y.prefill_instance);
+                assert_eq!(x.decode_instance, y.decode_instance);
+            }
+        }
     }
 
     #[test]

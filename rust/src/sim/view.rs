@@ -14,7 +14,7 @@
 
 use crate::coordinator::predictor::TtftPredictor;
 use crate::engine::SimInstance;
-use crate::sched::{ClusterView, ProfileSource};
+use crate::sched::{ClusterView, Liveness, ProfileSource};
 
 /// Zero-cost [`ClusterView`] over the simulator's instance table.
 pub struct SimView<'a>(pub &'a [SimInstance]);
@@ -48,6 +48,10 @@ impl ClusterView for SimView<'_> {
 
     fn has_decode_work(&self, inst: usize) -> bool {
         self.0[inst].has_decode_work()
+    }
+
+    fn liveness(&self, inst: usize) -> Liveness {
+        self.0[inst].life
     }
 }
 

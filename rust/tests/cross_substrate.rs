@@ -5,33 +5,23 @@
 //! (`server::view::ServerView`, a materialized per-engine snapshot) must
 //! produce byte-identical Arrow placements, pool states, and flip
 //! decisions — the property that lets sim-validated policies ship to
-//! serving unchanged.
+//! serving unchanged. Since PR 3 the sequence also churns cluster
+//! membership (joins / drains / losses), so the adapters stay
+//! bit-for-bit identical through elastic regimes too.
 
 use arrow::coordinator::arrow::{ArrowConfig, ArrowPolicy};
 use arrow::costmodel::CostModel;
 use arrow::engine::SimInstance;
 use arrow::request::{InstanceId, Request, RequestId};
-use arrow::sched::Policy;
-use arrow::server::view::{EngineSnapshot, ServerView};
+use arrow::sched::{Liveness, MembershipEvent, Policy};
+// The snapshot/profile materializers live next to `EngineSnapshot`
+// itself, so snapshot-shape changes update every conformance test at
+// once.
+use arrow::server::view::{
+    mirror_sim_instances as snapshot, profile_sim_instances as fixed_profile,
+};
 use arrow::sim::SimView;
 use arrow::util::rng::Rng;
-
-/// Materialize the exact state `SimView` exposes into the server's
-/// snapshot form — the "identical snapshot" premise of the test.
-fn snapshot(insts: &[SimInstance]) -> ServerView {
-    ServerView {
-        engines: insts
-            .iter()
-            .map(|i| EngineSnapshot {
-                queued_prefills: i.prefill_queue_iter().collect(),
-                running_tokens: i.running_tokens(),
-                max_kv_tokens: i.cost.max_kv_tokens,
-                avg_token_interval: i.avg_token_interval(),
-                has_decode_work: i.has_decode_work(),
-            })
-            .collect(),
-    }
-}
 
 fn cluster(n: usize) -> Vec<SimInstance> {
     (0..n)
@@ -50,10 +40,13 @@ fn arrow_decisions_identical_across_adapters() {
     // *adapters* is what is under test here).
     sim_policy.init(&SimView(&insts));
     srv_policy.init(&SimView(&insts));
+    let profile = fixed_profile(&insts, 0.1);
 
     let mut rng = Rng::new(42);
-    for step in 0..200u64 {
-        match rng.index(3) {
+    let mut joins = 0u32;
+    let mut departures = 0u32;
+    for step in 0..240u64 {
+        match rng.index(4) {
             0 => {
                 // Prefill placement (Alg. 1, may flip via Alg. 3).
                 let r = Request::new(step, step as f64, rng.int_range(100, 60_000) as u32, 16);
@@ -61,24 +54,75 @@ fn arrow_decisions_identical_across_adapters() {
                 let a = sim_policy.place_prefill(step as f64, &r, &SimView(&insts));
                 let b = srv_policy.place_prefill(step as f64, &r, &snap);
                 assert_eq!(a, b, "step {step}: prefill placement diverged");
+                assert!(insts[a.0].life.placeable(), "step {step}: placed on departed");
                 insts[a.0].enqueue_prefill(RequestId(step), r.input_len);
             }
             1 => {
-                // Decode placement (Alg. 2, may flip via Alg. 4).
+                // Decode placement (Alg. 2, may flip via Alg. 4). The
+                // prefill side of a decode placement is always an
+                // in-cluster instance.
+                let live: Vec<usize> = (0..n)
+                    .filter(|&i| insts[i].life.in_cluster())
+                    .collect();
+                let from = InstanceId(live[rng.index(live.len())]);
                 let r = Request::new(step, step as f64, rng.int_range(100, 20_000) as u32, 16);
-                let from = InstanceId(rng.index(n));
                 let snap = snapshot(&insts);
                 let a = sim_policy.place_decode(step as f64, &r, from, &SimView(&insts));
                 let b = srv_policy.place_decode(step as f64, &r, from, &snap);
                 assert_eq!(a, b, "step {step}: decode placement diverged");
+                assert!(insts[a.0].life.placeable(), "step {step}: decoded on departed");
                 if a != from && insts[a.0].try_reserve_kv(r.input_len as u64) {
                     insts[a.0].enqueue_decode(RequestId(step), r.input_len, 8);
+                }
+            }
+            2 => {
+                // Membership churn (PR 3): drain/lose an instance (never
+                // below 3 members) or rejoin a dead slot — mirrored to
+                // both adapters, like every other event.
+                let dead: Vec<usize> =
+                    (0..n).filter(|&i| insts[i].life == Liveness::Dead).collect();
+                let active: Vec<usize> = (0..n)
+                    .filter(|&i| insts[i].life == Liveness::Active)
+                    .collect();
+                let ev = if !dead.is_empty() && rng.bool(0.5) {
+                    let i = dead[rng.index(dead.len())];
+                    insts[i].life = Liveness::Active;
+                    joins += 1;
+                    Some(MembershipEvent::InstanceJoined { id: InstanceId(i) })
+                } else if active.len() > 3 {
+                    let i = active[rng.index(active.len())];
+                    departures += 1;
+                    if rng.bool(0.5) {
+                        insts[i].life = Liveness::Dead;
+                        // The substrate re-queues what the instance held.
+                        let mut scrap = Vec::new();
+                        insts[i].drain_request_ids(&mut scrap);
+                        Some(MembershipEvent::InstanceLost { id: InstanceId(i) })
+                    } else {
+                        insts[i].life = Liveness::Draining;
+                        Some(MembershipEvent::InstanceDraining { id: InstanceId(i) })
+                    }
+                } else {
+                    None
+                };
+                if let Some(ev) = ev {
+                    let snap = snapshot(&insts);
+                    sim_policy.on_membership(
+                        step as f64,
+                        ev,
+                        &SimView(&insts),
+                        &SimView(&insts),
+                    );
+                    srv_policy.on_membership(step as f64, ev, &snap, &profile);
                 }
             }
             _ => {
                 // Engine progress (evolves queues, KV, and the token-
                 // interval windows the TPOT monitor reads), then a tick.
                 for i in 0..n {
+                    if !insts[i].life.in_cluster() {
+                        continue;
+                    }
                     if let Some(plan) = insts[i].plan_iteration() {
                         let now = step as f64 + 0.01 * (i + 1) as f64;
                         insts[i].finish_iteration(&plan, now);
@@ -104,6 +148,11 @@ fn arrow_decisions_identical_across_adapters() {
     assert!(
         sim_policy.flip_count() > 0,
         "golden sequence never flipped an instance — test got weaker"
+    );
+    assert!(
+        joins > 0 && departures > 0,
+        "golden sequence never churned membership — test got weaker \
+         (joins={joins} departures={departures})"
     );
 }
 

@@ -1,0 +1,128 @@
+//! Golden-schedule regression (PR 3 satellite).
+//!
+//! The complete placement schedule — `(req, prefill instance, decode
+//! instance, every token timestamp)` — of the clipped azure_code trace is
+//! hashed into one digest per system. The digest must be:
+//!
+//! * **byte-stable across runs** in the same build (determinism),
+//! * **identical between the calendar-cursor loop and the pre-pushed
+//!   heap reference** (`Cluster::run_reference`), membership events
+//!   included — the PR-1 equivalence contract extended to PR 3, and
+//! * **stable across commits**, via the recorded golden file
+//!   `tests/golden/schedule_digests.json`. The file is written on first
+//!   run (or under `ARROW_BLESS=1`) and enforced afterwards, so an
+//!   unintended scheduling change fails loudly in CI.
+
+use arrow::costmodel::CostModel;
+use arrow::json::Json;
+use arrow::scenarios::{build, decode_node_failure, spike_scale_out, System};
+use arrow::sim::SimResult;
+use arrow::trace::{catalog, Trace};
+
+/// FNV-1a over the full schedule, bit-exact (token times hashed as f64
+/// bits, so even a 1-ulp drift is caught).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+    fn eat(&mut self, x: u64) {
+        self.0 ^= x;
+        self.0 = self.0.wrapping_mul(0x100000001b3);
+    }
+}
+
+fn digest(res: &SimResult) -> u64 {
+    let mut h = Fnv::new();
+    for rec in &res.records {
+        h.eat(rec.id.0);
+        h.eat(rec.prefill_instance.map_or(u64::MAX, |i| i.0 as u64));
+        h.eat(rec.decode_instance.map_or(u64::MAX, |i| i.0 as u64));
+        h.eat(rec.token_times.len() as u64);
+        for &t in &rec.token_times {
+            h.eat(t.to_bits());
+        }
+    }
+    h.eat(res.events_processed);
+    h.eat(res.total_iterations);
+    h.eat(res.total_flips);
+    h.0
+}
+
+fn workload() -> (Trace, f64, f64) {
+    let w = catalog::by_name("azure_code").unwrap();
+    let trace = w.generate(3).clip_seconds(60.0);
+    let t = trace.with_rate(trace.rate() * 4.0);
+    (t, w.ttft_slo, w.tpot_slo)
+}
+
+#[test]
+fn schedule_digests_stable_across_runs_modes_and_commits() {
+    let (trace, ttft, tpot) = workload();
+    let base = CostModel::h800_llama8b();
+    let d = trace.duration();
+
+    // Each case: run twice (in-build stability), then against the heap
+    // reference (cursor/heap equivalence) — Arrow + both §7.3 baseline
+    // arms, plus the elastic scenarios so membership events are
+    // digest-covered too.
+    let mut entries: Vec<(&'static str, String)> = Vec::new();
+    let mut check = |label: &'static str, mk: &dyn Fn() -> arrow::sim::Cluster| {
+        let a = digest(&mk().run(&trace));
+        let b = digest(&mk().run(&trace));
+        assert_eq!(a, b, "{label}: schedule digest not byte-stable across runs");
+        let r = digest(&mk().run_reference(&trace));
+        assert_eq!(
+            a, r,
+            "{label}: cursor and heap-reference schedules diverge (membership \
+             events must sequence identically in both modes)"
+        );
+        entries.push((label, format!("{a:016x}")));
+    };
+    check("arrow", &|| build(System::Arrow, 8, &base, ttft, tpot, false));
+    check("minimal-load", &|| {
+        build(System::MinimalLoad, 8, &base, ttft, tpot, false)
+    });
+    check("round-robin", &|| {
+        build(System::RoundRobin, 8, &base, ttft, tpot, false)
+    });
+    check("arrow+decode-failure", &|| {
+        decode_node_failure(8, 1, &base, ttft, tpot, 0.5 * d)
+    });
+    check("arrow+spike-scale-out", &|| {
+        spike_scale_out(6, 2, &base, ttft, tpot, 0.25 * d)
+    });
+
+    // Cross-commit regression: enforce (or record) the golden file.
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/golden/schedule_digests.json"
+    );
+    let bless = std::env::var("ARROW_BLESS").map_or(false, |v| v != "0" && !v.is_empty());
+    match std::fs::read_to_string(path) {
+        Ok(text) if !bless => {
+            let g = Json::parse(&text).expect("golden digest file parses");
+            for (label, hex) in &entries {
+                assert_eq!(
+                    g.get(label).as_str(),
+                    Some(hex.as_str()),
+                    "{label}: schedule digest drifted from the recorded golden. \
+                     If the scheduling change is intentional, re-record with \
+                     ARROW_BLESS=1 cargo test --test golden_schedule"
+                );
+            }
+        }
+        _ => {
+            let body = Json::obj(
+                entries
+                    .iter()
+                    .map(|(l, h)| (*l, Json::Str(h.clone())))
+                    .collect(),
+            );
+            std::fs::create_dir_all(std::path::Path::new(path).parent().unwrap()).ok();
+            std::fs::write(path, body.encode()).expect("record golden digests");
+            eprintln!("recorded golden schedule digests -> {path}");
+        }
+    }
+}

@@ -28,6 +28,19 @@ fn post(addr: &str, path: &str, body: &str) -> Option<String> {
     )
 }
 
+const ADMIN_TOKEN: &str = "test-admin-token";
+
+fn post_admin(addr: &str, path: &str, body: &str) -> Option<String> {
+    http(
+        addr,
+        format!(
+            "POST {path} HTTP/1.1\r\nHost: x\r\nX-Admin-Token: {ADMIN_TOKEN}\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
 fn get(addr: &str, path: &str) -> Option<String> {
     http(addr, format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n"))
 }
@@ -47,6 +60,7 @@ fn server_end_to_end() {
             instances: 2,
             ttft_slo: 2.0,
             tpot_slo: 0.5,
+            admin_token: Some(ADMIN_TOKEN.into()),
         })
         .unwrap();
     });
@@ -104,9 +118,54 @@ fn server_end_to_end() {
     assert!(m.get("p99_ttft_s").as_f64().is_some());
     assert!(m.get("p99_tpot_s").as_f64().is_some());
 
+    // Elastic membership (PR 3): the admin plane scales the engine set
+    // at runtime through the same coordinator channel as placements.
+    // Destructive endpoints demand the shared secret — an unauthenticated
+    // caller is refused before any command reaches the coordinator.
+    assert_eq!(m.get("live_instances").as_f64(), Some(2.0));
+    let denied = post(&addr, "/admin/fail", "{\"engine\":0}").unwrap();
+    assert!(denied.contains("X-Admin-Token"), "unauthenticated admin must 403: {denied}");
+    let r = post_admin(&addr, "/admin/scale-out", "{}").unwrap();
+    assert!(r.contains("joining"), "{r}");
+    let t0 = Instant::now();
+    loop {
+        let m = Json::parse(&get(&addr, "/metrics").unwrap()).unwrap();
+        if m.get("instances").as_f64() == Some(3.0)
+            && m.get("live_instances").as_f64() == Some(3.0)
+        {
+            assert_eq!(m.get("engines").as_arr().unwrap().len(), 3);
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(120), "joiner never registered");
+        std::thread::sleep(Duration::from_millis(250));
+    }
+
+    // Drain engine 0: no new placements, shutdown once idle, state
+    // visible in /metrics.
+    let r = post_admin(&addr, "/admin/drain", "{\"engine\":0}").unwrap();
+    assert!(r.contains("accepted"), "{r}");
+    let t0 = Instant::now();
+    loop {
+        let m = Json::parse(&get(&addr, "/metrics").unwrap()).unwrap();
+        let states = m.get("engine_states").as_arr().expect("engine_states");
+        if states[0].as_str() == Some("dead") {
+            assert_eq!(m.get("live_instances").as_f64(), Some(2.0));
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(120), "drain never completed");
+        std::thread::sleep(Duration::from_millis(250));
+    }
+
+    // The shrunk-but-rebalanced cluster still serves correctly.
+    let r = post(&addr, "/v1/completions", b).unwrap();
+    let toks = Json::parse(&r).unwrap().get("tokens").encode();
+    assert!(toks.starts_with("[1362,1879,164,1296"), "post-drain oracle: {toks}");
+
     // Error paths.
     let bad = post(&addr, "/v1/completions", "{\"max_tokens\":3}").unwrap();
     assert!(bad.contains("error"));
     let nf = get(&addr, "/nope").unwrap();
     assert!(nf.contains("not found"));
+    let bad = post_admin(&addr, "/admin/drain", "{}").unwrap();
+    assert!(bad.contains("error"), "{bad}");
 }

@@ -1,0 +1,157 @@
+//! Elastic-membership integration tests (PR 3 tentpole acceptance).
+//!
+//! The two acceptance criteria from the issue, plus the rolling-restart
+//! drill:
+//!
+//! * a scenario that loses a decode instance mid-burst completes **all**
+//!   requests — re-queued work finishes, no panic;
+//! * the spike-scale-out scenario shows **strictly better p99 TTFT**
+//!   than the fixed-membership run in the same sweep.
+
+use arrow::costmodel::CostModel;
+use arrow::metrics::SloReport;
+use arrow::request::Request;
+use arrow::scenarios::{build, decode_node_failure, rolling_restart, spike_scale_out, System};
+use arrow::trace::Trace;
+use arrow::util::rng::Rng;
+
+const TTFT_SLO: f64 = 3.0;
+const TPOT_SLO: f64 = 0.1;
+
+/// Calm baseline traffic with a hard prefill-heavy burst at t = 20..30s —
+/// the temporal-misalignment spike of Fig. 4, cranked until a small fixed
+/// cluster backlogs badly.
+fn burst_trace(seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut reqs = Vec::new();
+    let mut id = 0u64;
+    for s in 0..120 {
+        let t = s as f64;
+        for _ in 0..2 {
+            reqs.push(Request::new(
+                id,
+                t + rng.f64(),
+                rng.int_range(500, 3_000) as u32,
+                rng.int_range(50, 200) as u32,
+            ));
+            id += 1;
+        }
+        if (20..30).contains(&s) {
+            for _ in 0..25 {
+                reqs.push(Request::new(
+                    id,
+                    t + rng.f64(),
+                    rng.int_range(8_000, 40_000) as u32,
+                    rng.int_range(20, 120) as u32,
+                ));
+                id += 1;
+            }
+        }
+    }
+    Trace::new("membership-burst", reqs)
+}
+
+#[test]
+fn losing_a_decode_instance_mid_burst_completes_all_requests() {
+    let trace = burst_trace(3);
+    // Kill one seed-decode instance right at the burst peak: its running
+    // decodes lose their KV, its queued work evaporates — everything must
+    // be re-queued onto the survivors and still finish.
+    let cl = decode_node_failure(6, 1, &CostModel::h800_llama8b(), TTFT_SLO, TPOT_SLO, 25.0);
+    let res = cl.run(&trace);
+    let rep = SloReport::from_records(&res.records, TTFT_SLO, TPOT_SLO, trace.duration());
+    assert_eq!(rep.n_failed, 0, "no request may be dropped by the failure");
+    assert_eq!(rep.n_finished, rep.n_requests, "re-queued work must finish");
+    // Token conservation survives the restart path: finished requests
+    // emitted exactly output_len tokens despite mid-decode retries.
+    for rec in &res.records {
+        assert_eq!(rec.token_times.len(), rec.output_len as usize, "req {}", rec.id);
+    }
+    // The dead instance (table slot 5) did no post-mortem work.
+    for rec in &res.records {
+        if rec.decode_instance.map_or(false, |i| i.0 == 5) {
+            assert!(*rec.token_times.last().unwrap() <= 25.0 + 1e-9);
+        }
+    }
+}
+
+#[test]
+fn correlated_decode_failure_still_completes() {
+    // Two of six instances die together (rack loss) — harsher than the
+    // acceptance minimum but the same invariant: nothing is lost.
+    let trace = burst_trace(11);
+    let cl = decode_node_failure(6, 2, &CostModel::h800_llama8b(), TTFT_SLO, TPOT_SLO, 26.0);
+    let res = cl.run(&trace);
+    assert!(
+        res.records.iter().all(|r| r.finished()),
+        "correlated failure must not lose requests"
+    );
+}
+
+#[test]
+fn spike_scale_out_strictly_beats_fixed_membership_p99_ttft() {
+    let trace = burst_trace(7);
+    let base = CostModel::h800_llama8b();
+    let d = trace.duration();
+    // Same sweep, two membership regimes: a fixed 4-GPU cluster vs the
+    // same 4 GPUs plus 4 spares joining as the spike lands.
+    let fixed = build(System::Arrow, 4, &base, TTFT_SLO, TPOT_SLO, false).run(&trace);
+    let elastic = spike_scale_out(4, 4, &base, TTFT_SLO, TPOT_SLO, 20.0).run(&trace);
+    let rep_fixed = SloReport::from_records(&fixed.records, TTFT_SLO, TPOT_SLO, d);
+    let rep_elastic = SloReport::from_records(&elastic.records, TTFT_SLO, TPOT_SLO, d);
+
+    assert_eq!(
+        rep_elastic.n_finished, rep_elastic.n_requests,
+        "elastic run completes everything"
+    );
+    assert!(
+        rep_elastic.p99_ttft < rep_fixed.p99_ttft,
+        "scale-out must strictly improve p99 TTFT: elastic {} vs fixed {}",
+        rep_elastic.p99_ttft,
+        rep_fixed.p99_ttft
+    );
+    assert!(
+        rep_elastic.slo_attainment >= rep_fixed.slo_attainment,
+        "scale-out must not reduce SLO attainment: {} vs {}",
+        rep_elastic.slo_attainment,
+        rep_fixed.slo_attainment
+    );
+    // The joiners really absorbed part of the spike.
+    let spares_used = elastic.records.iter().any(|r| {
+        r.prefill_instance.map_or(false, |i| i.0 >= 4)
+            || r.decode_instance.map_or(false, |i| i.0 >= 4)
+    });
+    assert!(spares_used, "spare instances never received work");
+}
+
+#[test]
+fn rolling_restart_loses_nothing_and_really_restarts() {
+    let trace = burst_trace(5);
+    // Drain each of 6 instances in turn (drain at 10+15i, rejoin 5 s
+    // after each drain completes).
+    let cl = rolling_restart(
+        6,
+        &CostModel::h800_llama8b(),
+        TTFT_SLO,
+        TPOT_SLO,
+        10.0,
+        15.0,
+        5.0,
+    );
+    let res = cl.run(&trace);
+    assert!(
+        res.records.iter().all(|r| r.finished()),
+        "a rolling restart is graceful: every request must finish"
+    );
+    // The drill must actually take instances down and bring them back —
+    // a silently-cancelled drain would leave the live count flat at 6.
+    let first_dip = res
+        .timeline
+        .iter()
+        .position(|s| s.live < 6)
+        .expect("no instance ever left the cluster — the restarts never happened");
+    assert!(
+        res.timeline[first_dip..].iter().any(|s| s.live == 6),
+        "the cluster never recovered to full strength after a restart"
+    );
+}

@@ -1,0 +1,184 @@
+//! Membership conformance property test (PR 3 satellite).
+//!
+//! Across randomized interleavings of placements, monitor ticks, engine
+//! progress, and membership churn (join / drain / failure), the Arrow
+//! policy must maintain:
+//!
+//! 1. **Live partition** — every live (Active) instance is in exactly
+//!    one pool: the pool sizes sum to the live count after every op.
+//! 2. **Flip conservation** — flips move instances *between* pools,
+//!    never in or out of membership.
+//! 3. **No dead placements** — a lost or draining instance never
+//!    receives a prefill or decode placement.
+//!
+//! The whole sequence runs in lockstep through BOTH adapters — the
+//! simulator's `SimView` (borrow of the instance table) and a scripted
+//! `server::view::ServerView` (materialized snapshots, exactly what the
+//! live coordinator builds) — and every placement, pool state, and flip
+//! count must agree bit-for-bit, extending the PR-2 cross-substrate
+//! contract to elastic membership.
+
+use arrow::coordinator::arrow::{ArrowConfig, ArrowPolicy};
+use arrow::costmodel::CostModel;
+use arrow::engine::SimInstance;
+use arrow::prop_assert;
+use arrow::request::{InstanceId, Request, RequestId};
+use arrow::sched::{Liveness, MembershipEvent, Policy};
+// Shared conformance materializers (see server::view): one definition of
+// "the identical snapshot" for every cross-substrate test.
+use arrow::server::view::{
+    mirror_sim_instances as snapshot, profile_sim_instances as fixed_profile,
+};
+use arrow::sim::SimView;
+use arrow::util::{prop, rng::Rng};
+
+fn pick(rng: &mut Rng, insts: &[SimInstance], want: Liveness) -> Option<usize> {
+    let c: Vec<usize> = insts
+        .iter()
+        .enumerate()
+        .filter(|(_, i)| i.life == want)
+        .map(|(i, _)| i)
+        .collect();
+    if c.is_empty() {
+        None
+    } else {
+        Some(c[rng.index(c.len())])
+    }
+}
+
+#[test]
+fn prop_live_partition_flip_conservation_no_dead_placements() {
+    prop::check_with(97, 48, |rng: &mut Rng| {
+        let n = rng.index(5) + 3; // 3..=7 instances
+        let mut insts: Vec<SimInstance> = (0..n)
+            .map(|i| SimInstance::new(InstanceId(i), CostModel::h800_llama8b()))
+            .collect();
+        let mut sim_p = ArrowPolicy::new(ArrowConfig::new(2.0, 0.1, n), n);
+        let mut srv_p = ArrowPolicy::new(ArrowConfig::new(2.0, 0.1, n), n);
+        sim_p.init(&SimView(&insts));
+        srv_p.init(&SimView(&insts));
+        let profile = fixed_profile(&insts, 0.1);
+        // Number of Active (= pool-member) instances we expect.
+        let mut live = n;
+
+        for step in 0..80u64 {
+            let now = step as f64;
+            match rng.index(6) {
+                0 | 1 => {
+                    // Prefill placement (Alg. 1, may flip via Alg. 3).
+                    let r =
+                        Request::new(step, now, rng.int_range(100, 60_000) as u32, 16);
+                    let snap = snapshot(&insts);
+                    let a = sim_p.place_prefill(now, &r, &SimView(&insts));
+                    let b = srv_p.place_prefill(now, &r, &snap);
+                    prop_assert!(a == b, "step {step}: prefill diverged {a} vs {b}");
+                    prop_assert!(
+                        insts[a.0].life.placeable(),
+                        "step {step}: prefill placed on departed {a}"
+                    );
+                    insts[a.0].enqueue_prefill(RequestId(step), r.input_len);
+                }
+                2 => {
+                    // Decode placement (Alg. 2, may flip via Alg. 4). The
+                    // substrate only asks on behalf of an in-cluster
+                    // prefill instance (Active, or Draining finishing
+                    // its last prefills).
+                    let from = pick(rng, &insts, Liveness::Active)
+                        .or_else(|| pick(rng, &insts, Liveness::Draining));
+                    if let Some(from) = from {
+                        let r = Request::new(
+                            step,
+                            now,
+                            rng.int_range(100, 20_000) as u32,
+                            16,
+                        );
+                        let snap = snapshot(&insts);
+                        let a = sim_p.place_decode(
+                            now,
+                            &r,
+                            InstanceId(from),
+                            &SimView(&insts),
+                        );
+                        let b = srv_p.place_decode(now, &r, InstanceId(from), &snap);
+                        prop_assert!(a == b, "step {step}: decode diverged {a} vs {b}");
+                        prop_assert!(
+                            insts[a.0].life.placeable(),
+                            "step {step}: decode placed on departed {a}"
+                        );
+                        if a.0 != from && insts[a.0].try_reserve_kv(r.input_len as u64) {
+                            insts[a.0].enqueue_decode(RequestId(step), r.input_len, 8);
+                        }
+                    }
+                }
+                3 => {
+                    // Engine progress + monitor tick (settling, TPOT
+                    // flips, harvesting).
+                    for i in 0..n {
+                        if !insts[i].life.in_cluster() {
+                            continue;
+                        }
+                        if let Some(plan) = insts[i].plan_iteration() {
+                            let t = now + 0.01 * (i + 1) as f64;
+                            insts[i].finish_iteration(&plan, t);
+                        }
+                    }
+                    let snap = snapshot(&insts);
+                    sim_p.on_tick(now, &SimView(&insts));
+                    srv_p.on_tick(now, &snap);
+                }
+                4 => {
+                    // Drain or fail an Active instance — but never below
+                    // two members (a real deployment keeps quorum; the
+                    // degenerate 1-member cluster is covered by unit
+                    // tests).
+                    if live > 2 {
+                        if let Some(i) = pick(rng, &insts, Liveness::Active) {
+                            let id = InstanceId(i);
+                            let ev = if rng.bool(0.5) {
+                                insts[i].life = Liveness::Dead;
+                                // The substrate re-queues lost work.
+                                let mut scrap = Vec::new();
+                                insts[i].drain_request_ids(&mut scrap);
+                                MembershipEvent::InstanceLost { id }
+                            } else {
+                                insts[i].life = Liveness::Draining;
+                                MembershipEvent::InstanceDraining { id }
+                            };
+                            let snap = snapshot(&insts);
+                            sim_p.on_membership(now, ev, &SimView(&insts), &SimView(&insts));
+                            srv_p.on_membership(now, ev, &snap, &profile);
+                            live -= 1;
+                        }
+                    }
+                }
+                _ => {
+                    // Rejoin a dead slot.
+                    if let Some(i) = pick(rng, &insts, Liveness::Dead) {
+                        insts[i].life = Liveness::Active;
+                        let ev = MembershipEvent::InstanceJoined { id: InstanceId(i) };
+                        let snap = snapshot(&insts);
+                        sim_p.on_membership(now, ev, &SimView(&insts), &SimView(&insts));
+                        srv_p.on_membership(now, ev, &snap, &profile);
+                        live += 1;
+                    }
+                }
+            }
+
+            // Invariants, after every single operation:
+            let sizes = sim_p.pool_sizes().expect("arrow exposes pools");
+            prop_assert!(
+                sizes.iter().sum::<usize>() == live,
+                "step {step}: pools {sizes:?} don't partition {live} live instances"
+            );
+            prop_assert!(
+                sim_p.pool_sizes() == srv_p.pool_sizes(),
+                "step {step}: pool states diverged across adapters"
+            );
+            prop_assert!(
+                sim_p.flip_count() == srv_p.flip_count(),
+                "step {step}: flip counts diverged across adapters"
+            );
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,149 @@
+//! Offline in-tree substitute for the `anyhow` crate (PR 3 seed-test
+//! triage).
+//!
+//! The repo is a zero-external-dependency build (DESIGN: every substrate
+//! — rand, proptest, serde, HTTP — is vendored or re-implemented), but
+//! the seed's server/runtime layers were written against `anyhow`,
+//! leaving the whole crate unbuildable offline. This shim implements the
+//! small API subset those layers use — `Error`, `Result`, `anyhow!`,
+//! `bail!`, and the `Context` extension trait — with the same `?`
+//! ergonomics (any `std::error::Error` converts into [`Error`]).
+//!
+//! If a real dependency tree ever becomes available, deleting
+//! `[dependencies.anyhow]`'s `path` key in ../../Cargo.toml swaps the
+//! genuine crate back in with no source changes.
+
+use std::fmt;
+
+/// A boxed, context-chained error: a message plus the chain of contexts
+/// wrapped around it (outermost first), rendered `ctx: ...: cause`.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    /// Wrap another layer of context around this error.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow renders Debug as the display chain; error reporting at
+        // the top of main uses {:?}.
+        write!(f, "{self}")
+    }
+}
+
+// `?` conversion from any std error. Mirrors anyhow: `Error` itself does
+// NOT implement `std::error::Error`, which is what keeps this blanket
+// impl coherent next to the reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!("...")` — format a new [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => { $crate::Error::msg(format!($($t)*)) }
+}
+
+/// `bail!("...")` — return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow!($($t)*)) }
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/3f9a")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e: Result<()> = std::fs::read("/nope/3f9a")
+            .map(|_| ())
+            .with_context(|| format!("reading {}", "/nope/3f9a"));
+        let msg = format!("{}", e.unwrap_err());
+        assert!(msg.starts_with("reading /nope/3f9a: "), "{msg}");
+    }
+
+    #[test]
+    fn bail_and_anyhow_format() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero is not allowed (got {x})");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(
+            format!("{}", f(0).unwrap_err()),
+            "zero is not allowed (got 0)"
+        );
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+}
