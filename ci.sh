@@ -4,10 +4,17 @@
 #   ./ci.sh          # fmt check, builds, debug+release tests, bench gates
 #   ./ci.sh --fast   # skip the bench gates
 #
-# The bench gates run `benches/simulator.rs` and `benches/scheduler.rs`
-# in smoke mode, which exit non-zero if the Arrow system drops below
-# 1M events/s (override: ARROW_BENCH_MIN_EPS) or any placement path
-# below 10k decisions/s (override: ARROW_BENCH_MIN_DPS).
+# The bench gates run `benches/simulator.rs`, `benches/scheduler.rs`,
+# and `benches/scale.rs` in smoke mode, which exit non-zero if the Arrow
+# system drops below 1M events/s (override: ARROW_BENCH_MIN_EPS), any
+# placement path below 10k decisions/s (override: ARROW_BENCH_MIN_DPS),
+# quiescent placement decisions/s at 256 instances falls below 0.5x the
+# 4-instance rate (override: ARROW_BENCH_MIN_FLATNESS), or churned
+# placement at 256 instances below 50k/s (ARROW_BENCH_MIN_CHURN_DPS).
+# Each fresh BENCH_*.json is then diffed against the committed baseline
+# with `benchdiff` (PR 4): >20% regression on the headline metric fails
+# CI; placeholder or mode-mismatched baselines skip with a warning
+# (ROADMAP open item).
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -48,16 +55,36 @@ if ! git ls-files --error-unmatch tests/golden/schedule_digests.json >/dev/null 
 fi
 
 if [[ "${1:-}" != "--fast" ]]; then
+    # Smoke outputs go to a per-run temp dir: never clobbers the
+    # committed BENCH_*.json baselines the diff below reads, and never
+    # races another ci.sh run on a shared host.
+    smoke_dir="$(mktemp -d "${TMPDIR:-/tmp}/arrow-bench-smoke.XXXXXX")"
+    trap 'rm -rf "$smoke_dir"' EXIT
+
     echo "== simulator bench (smoke gate) =="
-    ARROW_BENCH_SMOKE=1 ARROW_BENCH_OUT=/tmp/BENCH_simulator_smoke.json \
+    ARROW_BENCH_SMOKE=1 ARROW_BENCH_OUT="$smoke_dir/BENCH_simulator.json" \
         cargo bench --bench simulator
 
     # Scheduler decision-latency gate: exits non-zero if any placement
-    # decision path drops below ARROW_BENCH_MIN_DPS decisions/s. Emits
-    # BENCH_scheduler.json (tracked PR over PR, like BENCH_simulator.json).
+    # decision path drops below ARROW_BENCH_MIN_DPS decisions/s.
     echo "== scheduler bench (smoke gate) =="
-    ARROW_BENCH_SMOKE=1 ARROW_BENCH_OUT=BENCH_scheduler.json \
+    ARROW_BENCH_SMOKE=1 ARROW_BENCH_OUT="$smoke_dir/BENCH_scheduler.json" \
         cargo bench --bench scheduler
+
+    # Scale gate (PR 4): quiescent placement decisions/s must stay flat
+    # (ARROW_BENCH_MIN_FLATNESS, default 0.5x) from 4 -> 256 instances,
+    # churned placement above ARROW_BENCH_MIN_CHURN_DPS at 256.
+    echo "== scale bench (smoke gate) =="
+    ARROW_BENCH_SMOKE=1 ARROW_BENCH_OUT="$smoke_dir/BENCH_scale.json" \
+        cargo bench --bench scale
+
+    # Regression diff against the committed baselines (>20% drop on the
+    # headline metric fails; placeholder/missing baselines warn + skip).
+    echo "== bench baseline comparison =="
+    for fam in simulator scheduler scale; do
+        cargo run --release -q --bin benchdiff -- \
+            "BENCH_${fam}.json" "$smoke_dir/BENCH_${fam}.json"
+    done
 fi
 
 echo "CI OK"

@@ -3,6 +3,15 @@
 //! render quick ASCII load timelines (Fig. 1's shape at terminal scale).
 //!
 //! Run with: `cargo run --release --example workload_explorer`
+//!
+//! Large-cluster mode (PR 4): `--instances N` skips the trace tour and
+//! instead drives `scenarios::large_cluster(N)` through a deep-queue
+//! burst — the O(1)-placement scale path, demoable without the bench
+//! harness:
+//!
+//! ```text
+//! cargo run --release --example workload_explorer -- --instances 64
+//! ```
 
 use arrow::trace::catalog;
 
@@ -15,7 +24,75 @@ fn sparkline(values: &[f64]) -> String {
         .collect()
 }
 
+/// `--instances N`: run a deep-queue burst through an N-instance Arrow
+/// cluster and report how the scheduler held up at scale.
+fn large_cluster_tour(n: usize) {
+    use arrow::costmodel::CostModel;
+    use arrow::metrics::SloReport;
+    use arrow::scenarios;
+    use std::time::Instant;
+
+    let (ttft_slo, tpot_slo) = (5.0, 0.1);
+    let per_instance = 8;
+    let trace = scenarios::deep_queue_burst(n, per_instance, 10.0, 1);
+    println!(
+        "large-cluster mode: {n} instances, {} requests arriving in a 10s burst \
+         (~{per_instance} queued behind every instance)\n",
+        trace.len()
+    );
+    let cl = scenarios::large_cluster(n, &CostModel::h800_llama8b(), ttft_slo, tpot_slo);
+    let t0 = Instant::now();
+    let res = cl.run(&trace);
+    let wall = t0.elapsed().as_secs_f64();
+    let rep = SloReport::from_records(&res.records, ttft_slo, tpot_slo, trace.duration());
+
+    println!(
+        "drained in {:.2}s simulated time ({wall:.2}s wall, {:.0} events/s)",
+        res.sim_time,
+        res.events_processed as f64 / wall.max(1e-9)
+    );
+    println!(
+        "finished {}/{} requests, {} pool flips, {} iterations",
+        rep.n_finished,
+        rep.n_requests,
+        res.total_flips,
+        res.total_iterations
+    );
+    println!(
+        "TTFT p50/p90/p99: {:.2}/{:.2}/{:.2}s   TPOT p50/p99: {:.0}/{:.0}ms",
+        rep.p50_ttft,
+        rep.p90_ttft,
+        rep.p99_ttft,
+        rep.p50_tpot * 1e3,
+        rep.p99_tpot * 1e3
+    );
+    println!(
+        "SLO attainment: {:.1}% (TTFT {:.1}%, TPOT {:.1}%)",
+        rep.slo_attainment * 100.0,
+        rep.ttft_attainment * 100.0,
+        rep.tpot_attainment * 100.0
+    );
+    println!(
+        "\nplacement stayed O(1) per candidate throughout — sweep the cluster size \
+         with `cargo bench --bench scale` (emits BENCH_scale.json)."
+    );
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if let Some(pos) = args.iter().position(|a| a == "--instances") {
+        let n = args
+            .get(pos + 1)
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 8)
+            .unwrap_or_else(|| {
+                eprintln!("usage: workload_explorer --instances N   (N >= 8, e.g. 64 or 256)");
+                std::process::exit(2);
+            });
+        large_cluster_tour(n);
+        return;
+    }
+
     println!("paper-published statistics vs synthetic surrogates (seed 1):\n");
     println!(
         "{:<15} {:>7} {:>9} {:>9} {:>7} {:>7}  paper says",

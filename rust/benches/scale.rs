@@ -1,0 +1,243 @@
+//! Scale-sweep bench (PR 4): placement decisions/s as the cluster grows.
+//!
+//! The PR-4 tentpole makes a placement decision O(1) per candidate (no
+//! queue walk — moment-based delay) and near-independent of cluster size
+//! (keyed argmin index + change-epoch refresh skip). This bench proves
+//! it: the same loaded-cluster microbench as `benches/scheduler.rs`,
+//! swept over 4 → 256 instances, plus an end-to-end deep-queue-burst run
+//! through `scenarios::large_cluster`.
+//!
+//! Two regimes are measured per cluster size, so the gate exercises both
+//! halves of the PR-4 design rather than only the cached fast path:
+//! * **quiescent** — `Epoched` view with a constant clock (nothing
+//!   changed since the last decision): placement is a pure argmin-index
+//!   read. This is the path whose cost must be ~independent of cluster
+//!   size, so the 4 → 256 *flatness* gate runs here.
+//! * **churned** — the view's epoch advances every decision (the
+//!   steady-state of a busy simulator, and the live server's permanent
+//!   `EPOCH_UNKNOWN` regime): every placement re-runs the index-refresh
+//!   verify scan over the per-instance O(1) aggregates. This is where a
+//!   regression that re-introduces queue walks would show, so the
+//!   *absolute floor* gate runs here.
+//!
+//! Modes (mirrors the other benches):
+//! * default — full measurement, emitting `BENCH_scale.json`;
+//! * `ARROW_BENCH_SMOKE=1` — CI gate, exits non-zero if
+//!   * quiescent decisions/s at 256 instances <
+//!     `ARROW_BENCH_MIN_FLATNESS` (default 0.5) × the 4-instance rate,
+//!     for either placement path — the "flat at scale" criterion — or
+//!   * either churned placement path at 256 instances drops below
+//!     `ARROW_BENCH_MIN_CHURN_DPS` (default 50,000) decisions/s —
+//!     ≤ 20 µs/decision even when every decision re-verifies all 256
+//!     instances' aggregates (the pre-PR-4 walk, O(members × depth),
+//!     sat near ~80 µs on this workload and fails this floor).
+//!
+//! `ARROW_BENCH_OUT` overrides the JSON output path.
+
+use std::time::Instant;
+
+use arrow::coordinator::arrow::{ArrowConfig, ArrowPolicy};
+use arrow::costmodel::CostModel;
+use arrow::engine::SimInstance;
+use arrow::json::Json;
+use arrow::request::{InstanceId, Request, RequestId};
+use arrow::scenarios;
+use arrow::sched::{Epoched, Policy};
+use arrow::sim::SimView;
+use arrow::util::benchkit::{black_box, env_f64, fmt_dur, Bencher};
+use arrow::util::rng::Rng;
+
+const DEFAULT_MIN_CHURN_DPS: f64 = 50_000.0;
+const DEFAULT_MIN_FLATNESS: f64 = 0.5;
+const SWEEP: [usize; 4] = [4, 16, 64, 256];
+const QUEUE_DEPTH: usize = 32;
+
+/// Deep queues on every instance + moderate decode residency: the state
+/// a large cluster is in mid-burst, when placement cost matters most.
+fn loaded_cluster(n: usize, depth: usize, seed: u64) -> Vec<SimInstance> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let mut inst = SimInstance::new(InstanceId(i), CostModel::h800_llama8b());
+            for q in 0..depth {
+                inst.enqueue_prefill(
+                    RequestId((i * depth + q) as u64),
+                    rng.int_range(200, 20_000) as u32,
+                );
+            }
+            let kv = rng.int_range(2_000, 20_000) as u64;
+            assert!(inst.try_reserve_kv(kv));
+            inst.enqueue_decode(RequestId(900_000 + i as u64), kv as u32, 100);
+            inst
+        })
+        .collect()
+}
+
+fn main() {
+    let smoke = std::env::var("ARROW_BENCH_SMOKE").map_or(false, |v| v != "0" && !v.is_empty());
+    let min_churn_dps = env_f64("ARROW_BENCH_MIN_CHURN_DPS", DEFAULT_MIN_CHURN_DPS);
+    let min_flatness = env_f64("ARROW_BENCH_MIN_FLATNESS", DEFAULT_MIN_FLATNESS);
+    let mut b = if smoke { Bencher::quick() } else { Bencher::new() };
+    println!(
+        "== placement decisions/s vs cluster size (PR 4 scale gate){} ==",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let mut rows = Vec::new();
+    let mut quiescent = [Vec::new(), Vec::new()]; // [prefill, decode] per n
+    let mut churned = [Vec::new(), Vec::new()];
+    for &n in &SWEEP {
+        let instances = loaded_cluster(n, QUEUE_DEPTH, 7);
+        // Generous SLOs keep Alg. 1/2 on their first-branch argmin: the
+        // sweep measures the *indexed placement path*, not flip churn.
+        let mut policy = ArrowPolicy::new(ArrowConfig::new(1e9, 1.0, n), n);
+        policy.init(&SimView(&instances));
+        let mut rng = Rng::new(1);
+        let mut id = 0u64;
+        // Quiescent: constant clock — refresh is an O(1) skip, placement
+        // is the pure index read whose flatness the gate asserts.
+        let r = b.bench(&format!("quiescent place_prefill n={n:>3}"), || {
+            id += 1;
+            let req = Request::new(id, 0.0, rng.int_range(100, 30_000) as u32, 50);
+            black_box(policy.place_prefill(0.0, &req, &Epoched(SimView(&instances), 1)))
+        });
+        quiescent[0].push(r.per_sec());
+        let r = b.bench(&format!("quiescent place_decode  n={n:>3}"), || {
+            id += 1;
+            let req = Request::new(id, 0.0, 2_000, 50);
+            black_box(policy.place_decode(
+                0.0,
+                &req,
+                InstanceId(0),
+                &Epoched(SimView(&instances), 1),
+            ))
+        });
+        quiescent[1].push(r.per_sec());
+        // Churned: a fresh epoch per decision forces the verify scan
+        // over every instance's O(1) aggregates — the busy-simulator /
+        // live-server steady state, where a reintroduced queue walk
+        // would immediately show up.
+        let mut epoch = 1u64;
+        let r = b.bench(&format!("churned   place_prefill n={n:>3}"), || {
+            id += 1;
+            epoch += 1;
+            let req = Request::new(id, 0.0, rng.int_range(100, 30_000) as u32, 50);
+            black_box(policy.place_prefill(0.0, &req, &Epoched(SimView(&instances), epoch)))
+        });
+        churned[0].push(r.per_sec());
+        let r = b.bench(&format!("churned   place_decode  n={n:>3}"), || {
+            id += 1;
+            epoch += 1;
+            let req = Request::new(id, 0.0, 2_000, 50);
+            black_box(policy.place_decode(
+                0.0,
+                &req,
+                InstanceId(0),
+                &Epoched(SimView(&instances), epoch),
+            ))
+        });
+        churned[1].push(r.per_sec());
+        let last = |v: &[Vec<f64>; 2], k: usize| v[k][v[k].len() - 1];
+        rows.push(Json::obj(vec![
+            ("instances", Json::Num(n as f64)),
+            ("queue_depth", Json::Num(QUEUE_DEPTH as f64)),
+            ("quiescent_place_prefill_per_sec", Json::Num(last(&quiescent, 0))),
+            ("quiescent_place_decode_per_sec", Json::Num(last(&quiescent, 1))),
+            ("churned_place_prefill_per_sec", Json::Num(last(&churned, 0))),
+            ("churned_place_decode_per_sec", Json::Num(last(&churned, 1))),
+        ]));
+    }
+
+    // The gated quantities: quiescent flatness 4 -> 256, and the churned
+    // absolute floor at the largest size.
+    let flatness_prefill = quiescent[0][SWEEP.len() - 1] / quiescent[0][0];
+    let flatness_decode = quiescent[1][SWEEP.len() - 1] / quiescent[1][0];
+    let churn_floor = churned[0][SWEEP.len() - 1].min(churned[1][SWEEP.len() - 1]);
+    let min_measured = quiescent
+        .iter()
+        .chain(churned.iter())
+        .flatten()
+        .fold(f64::INFINITY, |a, &b| a.min(b));
+    println!(
+        "\nquiescent flatness 4 -> 256: place_prefill {flatness_prefill:.2}x, \
+         place_decode {flatness_decode:.2}x (gate >= {min_flatness}); \
+         churned floor at 256: {churn_floor:.0}/s (gate >= {min_churn_dps:.0})"
+    );
+
+    // End-to-end proof at scale: a large Arrow cluster draining a
+    // deep-queue burst through the full event loop (informational — the
+    // simulator gate lives in benches/simulator.rs).
+    let (e2e_n, per_inst) = if smoke { (64, 4) } else { (256, 8) };
+    let trace = scenarios::deep_queue_burst(e2e_n, per_inst, 10.0, 3);
+    let cl = scenarios::large_cluster(e2e_n, &CostModel::h800_llama8b(), 5.0, 0.1);
+    let t0 = Instant::now();
+    let res = cl.run(&trace);
+    let dt = t0.elapsed().as_secs_f64();
+    let finished = res.records.iter().filter(|r| r.finished()).count();
+    println!(
+        "e2e large_cluster({e2e_n}): {} reqs ({finished} finished), {} events in {} \
+         ({:.0} events/s)",
+        trace.len(),
+        res.events_processed,
+        fmt_dur(dt),
+        res.events_processed as f64 / dt
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("scale".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("queue_depth", Json::Num(QUEUE_DEPTH as f64)),
+        ("target_churned_decisions_per_sec", Json::Num(min_churn_dps)),
+        ("target_flatness", Json::Num(min_flatness)),
+        ("sweep", Json::Arr(rows)),
+        ("flatness_place_prefill", Json::Num(flatness_prefill)),
+        ("flatness_place_decode", Json::Num(flatness_decode)),
+        ("churned_floor_decisions_per_sec", Json::Num(churn_floor)),
+        ("min_decisions_per_sec", Json::Num(min_measured)),
+        (
+            "e2e",
+            Json::obj(vec![
+                ("instances", Json::Num(e2e_n as f64)),
+                ("requests", Json::Num(trace.len() as f64)),
+                ("finished", Json::Num(finished as f64)),
+                ("events", Json::Num(res.events_processed as f64)),
+                ("seconds", Json::Num(dt)),
+                (
+                    "events_per_sec",
+                    Json::Num(res.events_processed as f64 / dt),
+                ),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("ARROW_BENCH_OUT").unwrap_or_else(|_| "BENCH_scale.json".into());
+    match std::fs::write(&path, out.encode()) {
+        Ok(()) => println!("\n-> {path}"),
+        Err(e) => eprintln!("warn: cannot write {path}: {e}"),
+    }
+
+    if smoke {
+        let mut failed = false;
+        if flatness_prefill < min_flatness || flatness_decode < min_flatness {
+            eprintln!(
+                "FAIL: quiescent decisions/s not flat at scale (prefill \
+                 {flatness_prefill:.2}x, decode {flatness_decode:.2}x < {min_flatness}x \
+                 from 4 -> 256 instances)"
+            );
+            failed = true;
+        }
+        if churn_floor < min_churn_dps {
+            eprintln!(
+                "FAIL: churned placement at 256 instances {churn_floor:.0}/s below the \
+                 {min_churn_dps:.0} floor (a queue walk crept back into the refresh path?)"
+            );
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        println!(
+            "gate OK: quiescent flatness >= {min_flatness}x and churned placement at 256 \
+             instances >= {min_churn_dps:.0} decisions/s"
+        );
+    }
+}

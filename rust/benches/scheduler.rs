@@ -76,6 +76,11 @@ fn main() {
                 ("gated", Json::Bool(gated)),
             ]));
         };
+        // A bare SimView reports EPOCH_UNKNOWN, so every decision runs
+        // the PR-4 index-refresh verify scan — the same work a live
+        // placement does between engine events. This keeps the 10k gate
+        // on the refresh path, not just the cached-index fast path
+        // (benches/scale.rs measures both regimes explicitly).
         let r = b.bench(&format!("arrow place_prefill n={n} depth={depth}"), || {
             id += 1;
             let req = Request::new(id, 0.0, rng.int_range(100, 30_000) as u32, 50);

@@ -124,8 +124,10 @@ impl Policy for StaticDisaggPolicy {
                     .iter()
                     .copied()
                     .min_by(|&a, &b| {
-                        let da = pred.queue_delay_view(view, a);
-                        let db = pred.queue_delay_view(view, b);
+                        // O(1) per candidate (PR 4): price the queue from
+                        // its maintained moments, never by walking it.
+                        let da = pred.queue_delay_moments(&view.prefill_queue_moments(a));
+                        let db = pred.queue_delay_moments(&view.prefill_queue_moments(b));
                         // total_cmp: a NaN prediction must never panic
                         // the placement path.
                         da.total_cmp(&db)

@@ -1,0 +1,148 @@
+//! Bench-baseline comparator (PR 4 satellite): `ci.sh` emits fresh
+//! `BENCH_*.json` files in smoke mode and runs
+//!
+//! ```text
+//! benchdiff <committed-baseline.json> <fresh.json> [max-regression]
+//! ```
+//!
+//! per bench. Exit codes:
+//! * `0` — no baseline / placeholder baseline (warns; the gate is INERT
+//!   until a measured baseline is committed — ROADMAP open item), or the
+//!   fresh headline metric is within `max-regression` (default 0.20,
+//!   i.e. fresh >= 0.8 × baseline);
+//! * `1` — measurable regression beyond the threshold, or an unreadable
+//!   fresh file (CI wiring bug — fail loudly, never silently skip).
+//!
+//! The headline metric per bench family:
+//! * `simulator` — arrow events/s (from `systems[]`),
+//! * `scheduler` — `worst_placement_decisions_per_sec`,
+//! * `scale` — `min_decisions_per_sec`.
+
+use arrow::json::Json;
+
+/// Headline (label, value) of a bench JSON; `None` when the document is
+/// a schema placeholder (no measured number in it).
+fn headline(doc: &Json) -> Option<(String, f64)> {
+    let metric = match doc.get("bench").as_str() {
+        Some("simulator") => doc
+            .get("systems")
+            .as_arr()
+            .and_then(|rows| {
+                rows.iter()
+                    .find(|r| r.get("system").as_str() == Some("arrow"))
+            })
+            .and_then(|r| r.get("events_per_sec").as_f64())
+            .map(|v| ("arrow events/s".to_string(), v)),
+        Some("scheduler") => doc
+            .get("worst_placement_decisions_per_sec")
+            .as_f64()
+            .map(|v| ("worst placement decisions/s".to_string(), v)),
+        Some("scale") => doc
+            .get("min_decisions_per_sec")
+            .as_f64()
+            .map(|v| ("min placement decisions/s".to_string(), v)),
+        other => {
+            eprintln!("benchdiff: unknown bench family {other:?}");
+            None
+        }
+    };
+    metric.filter(|(_, v)| v.is_finite() && *v > 0.0)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() < 3 {
+        eprintln!("usage: benchdiff <baseline.json> <fresh.json> [max-regression]");
+        std::process::exit(1);
+    }
+    let max_regress: f64 = args
+        .get(3)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.20);
+
+    let baseline_raw = match std::fs::read_to_string(&args[1]) {
+        Ok(s) => s,
+        Err(e) => {
+            println!(
+                "benchdiff WARN: no committed baseline at {} ({e}) — regression gate \
+                 skipped. Commit a measured BENCH file to arm it.",
+                args[1]
+            );
+            return;
+        }
+    };
+    let fresh_raw = match std::fs::read_to_string(&args[2]) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("benchdiff FAIL: fresh bench output {} unreadable: {e}", args[2]);
+            std::process::exit(1);
+        }
+    };
+    let (baseline, fresh) = match (Json::parse(&baseline_raw), Json::parse(&fresh_raw)) {
+        (Ok(b), Ok(f)) => (b, f),
+        (Err(e), _) => {
+            println!(
+                "benchdiff WARN: baseline {} is not valid JSON ({e}) — gate skipped.",
+                args[1]
+            );
+            return;
+        }
+        (_, Err(e)) => {
+            eprintln!("benchdiff FAIL: fresh output {} is not valid JSON: {e}", args[2]);
+            std::process::exit(1);
+        }
+    };
+
+    // Smoke mode (Bencher::quick: short warmup/measure windows) and full
+    // mode are systematically different measurement regimes; diffing one
+    // against the other would turn window bias into false alarms (or
+    // mask real regressions). Only like-for-like comparisons arm the
+    // gate — ci.sh runs smoke mode, so commit smoke-mode baselines
+    // (or a full-mode baseline plus full-mode CI) to enable it.
+    let (base_smoke, fresh_smoke) = (
+        baseline.get("smoke").as_bool().unwrap_or(false),
+        fresh.get("smoke").as_bool().unwrap_or(false),
+    );
+    if base_smoke != fresh_smoke {
+        println!(
+            "benchdiff WARN: {} was measured with smoke={base_smoke} but {} with \
+             smoke={fresh_smoke} — regimes differ, regression gate skipped. \
+             Regenerate the baseline in the mode CI runs (smoke).",
+            args[1], args[2]
+        );
+        return;
+    }
+
+    let Some((label, base_v)) = headline(&baseline) else {
+        println!(
+            "benchdiff WARN: {} is a placeholder (no measured headline metric) — \
+             regression gate skipped until a measured baseline is committed \
+             (ROADMAP open item).",
+            args[1]
+        );
+        return;
+    };
+    let Some((_, fresh_v)) = headline(&fresh) else {
+        eprintln!(
+            "benchdiff FAIL: fresh output {} carries no measured headline metric",
+            args[2]
+        );
+        std::process::exit(1);
+    };
+
+    let floor = (1.0 - max_regress) * base_v;
+    if fresh_v < floor {
+        eprintln!(
+            "benchdiff FAIL: {label} regressed {:.1}%: {fresh_v:.0} < {floor:.0} \
+             (baseline {base_v:.0}, allowed -{:.0}%)",
+            100.0 * (1.0 - fresh_v / base_v),
+            100.0 * max_regress
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "benchdiff OK: {label} {fresh_v:.0} vs baseline {base_v:.0} \
+         ({:+.1}%, floor {floor:.0})",
+        100.0 * (fresh_v / base_v - 1.0)
+    );
+}

@@ -22,7 +22,10 @@
 use super::pools::{Pool, Pools};
 use super::predictor::TtftPredictor;
 use crate::request::{InstanceId, Request, Time};
-use crate::sched::{ClusterView, MembershipEvent, Policy, ProfileSource};
+use crate::sched::{
+    f64_from_key_bits, f64_key_bits, ClusterView, MembershipEvent, Policy,
+    PrefillQueueMoments, ProfileSource, EPOCH_UNKNOWN,
+};
 
 /// Tunables for the Arrow policy (defaults follow the paper's text).
 #[derive(Debug, Clone)]
@@ -69,6 +72,17 @@ pub struct ArrowPolicy {
     max_running_tokens: Vec<u64>,
     /// Consecutive ticks with cluster-wide TPOT violation.
     violation_ticks: u32,
+    // --- argmin-index refresh cache (PR 4) ---
+    /// `ClusterView::change_epoch` at the last index refresh;
+    /// `EPOCH_UNKNOWN` = cannot prove freshness, verify per slot.
+    cache_epoch: u64,
+    /// `Pools::structure_version` at the last refresh (flips/membership
+    /// drop index entries, so a mismatch forces a rebuild pass).
+    cache_structure: u64,
+    /// Aggregates each cached key was computed from — the per-slot
+    /// freshness check when the epoch can't vouch for the whole view.
+    seen_moments: Vec<PrefillQueueMoments>,
+    seen_tokens: Vec<u64>,
 }
 
 impl ArrowPolicy {
@@ -80,6 +94,10 @@ impl ArrowPolicy {
             predictors: Vec::new(),
             max_running_tokens: Vec::new(),
             violation_ticks: 0,
+            cache_epoch: EPOCH_UNKNOWN,
+            cache_structure: u64::MAX,
+            seen_moments: Vec::new(),
+            seen_tokens: Vec::new(),
         }
     }
 
@@ -98,38 +116,105 @@ impl ArrowPolicy {
 
     // ------------------------------------------------------ load queries
 
-    /// Predicted prefill queueing delay of an instance (Insight 1),
-    /// using that instance's own profiled curve (heterogeneous-safe).
-    /// Streams the snapshot's queue view — no per-call `Vec`.
-    fn prefill_delay(&self, view: &dyn ClusterView, inst: usize) -> f64 {
-        self.predictor(inst).queue_delay_view(view, inst)
+    /// Bring the pools' keyed argmin index up to date with the view
+    /// (PR 4). Three cost tiers, cheapest first:
+    ///
+    /// 1. **O(1) skip** — the substrate's [`ClusterView::change_epoch`]
+    ///    matches the last refresh and no pool transition happened: every
+    ///    cached key is provably current.
+    /// 2. **Verify scan** — compare each member's O(1) aggregates
+    ///    (moments / running tokens) against the values its key was
+    ///    computed from; only changed slots are re-keyed (O(log n) each).
+    /// 3. **Re-key** — O(1) per slot via
+    ///    [`TtftPredictor::queue_delay_moments`]; the old queue *walk*
+    ///    survives as a debug-mode oracle.
+    ///
+    /// Placement therefore never walks a queue, and on a quiescent view
+    /// it never even touches the per-instance aggregates.
+    fn refresh_index(&mut self, view: &dyn ClusterView) {
+        let epoch = view.change_epoch();
+        if epoch != EPOCH_UNKNOWN
+            && epoch == self.cache_epoch
+            && self.pools.structure_version() == self.cache_structure
+        {
+            return;
+        }
+        let n = self.pools.len();
+        if self.seen_moments.len() < n {
+            self.seen_moments.resize(n, PrefillQueueMoments::default());
+            self.seen_tokens.resize(n, 0);
+        }
+        for i in 0..n {
+            let id = InstanceId(i);
+            let Some(pool) = self.pools.pool_of(id) else { continue };
+            if pool.prefill_capable() {
+                // P / D→P are keyed by predicted prefill delay.
+                let m = view.prefill_queue_moments(i);
+                if self.pools.key_of(id).is_none() || m != self.seen_moments[i] {
+                    let pred = self.predictors.get(i).expect("policy not initialized");
+                    let delay = pred.queue_delay_moments(&m);
+                    #[cfg(debug_assertions)]
+                    {
+                        // Debug-mode oracle: the O(1) moments path must
+                        // agree with the full queue walk it replaced. The
+                        // walk clamps each task's prediction at 0 while
+                        // the moments path clamps only the total, so a
+                        // degenerate fit with a negative coefficient can
+                        // legitimately price below the walk — equality is
+                        // asserted only for well-formed (non-negative)
+                        // fits; otherwise the moments total must merely
+                        // never exceed the per-task-clamped walk.
+                        let walk = pred.queue_delay_view(view, i);
+                        let c = pred.coefficients();
+                        let tol = 1e-6 * walk.abs().max(1.0);
+                        let ok = if delay.is_nan() || walk.is_nan() {
+                            delay.is_nan() && walk.is_nan()
+                        } else if c[1] >= 0.0 && c[2] >= 0.0 && pred.overhead_s() >= 0.0 {
+                            (delay - walk).abs() <= tol
+                        } else {
+                            delay <= walk + tol
+                        };
+                        debug_assert!(ok, "inst {i}: moments delay {delay} != walk {walk}");
+                    }
+                    self.pools.set_key(id, f64_key_bits(delay));
+                    self.seen_moments[i] = m;
+                }
+            } else {
+                // D / P→D are keyed by running tokens (already integers).
+                let t = view.running_tokens(i);
+                if self.pools.key_of(id).is_none() || t != self.seen_tokens[i] {
+                    self.pools.set_key(id, t);
+                    self.seen_tokens[i] = t;
+                }
+            }
+        }
+        self.cache_epoch = epoch;
+        self.cache_structure = self.pools.structure_version();
     }
 
-    /// Argmin of predicted prefill delay over a pool. Runs once per
-    /// arriving request — iterates the membership table directly, no
-    /// per-call member-list allocation, and uses `total_cmp` so a NaN
-    /// prediction can never panic the scheduler.
+    /// Argmin of predicted prefill delay over a pool: an O(log n) read of
+    /// the keyed index (ties to the lowest id, NaN delays ordered last —
+    /// byte-identical semantics to the member scan this replaced). Runs
+    /// once per arriving request.
     fn min_prefill_delay(
-        &self,
+        &mut self,
         pool: Pool,
         view: &dyn ClusterView,
     ) -> Option<(InstanceId, f64)> {
+        self.refresh_index(view);
         self.pools
-            .members_iter(pool)
-            .map(|id| (id, self.prefill_delay(view, id.0)))
-            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .min_keyed(pool)
+            .map(|(id, bits)| (id, f64_from_key_bits(bits)))
     }
 
-    /// Argmin of running tokens over a pool (allocation-free).
+    /// Argmin of running tokens over a pool (indexed, O(log n)).
     fn min_running_tokens(
-        &self,
+        &mut self,
         pool: Pool,
         view: &dyn ClusterView,
     ) -> Option<(InstanceId, u64)> {
-        self.pools
-            .members_iter(pool)
-            .map(|id| (id, view.running_tokens(id.0)))
-            .min_by_key(|&(_, t)| t)
+        self.refresh_index(view);
+        self.pools.min_keyed(pool)
     }
 
     /// Is cluster-wide decode load low enough to steal an instance for
@@ -210,6 +295,10 @@ impl Policy for ArrowPolicy {
         self.max_running_tokens = (0..n)
             .map(|i| profile.max_running_tokens(i, self.cfg.tpot_slo))
             .collect();
+        // New curves invalidate every cached delay key: rebuild the
+        // argmin index from scratch on the next decision.
+        self.pools.reset_keys();
+        self.cache_epoch = EPOCH_UNKNOWN;
     }
 
     /// Algorithm 1: SLO-aware prefill scheduling.
@@ -734,6 +823,90 @@ mod tests {
             let d = p.place_decode(step as f64, &r, t, &SimView(&insts));
             assert!(d != InstanceId(1) && d != InstanceId(3), "decoded on departed {d}");
         }
+    }
+
+    #[test]
+    fn indexed_argmin_matches_walk_argmin_under_churn() {
+        // PR 4: placements read the keyed argmin index instead of
+        // scanning members. Under arbitrary queue/decode churn the index
+        // must keep answering exactly what a fresh walk-based scan would
+        // (delays within fp tolerance, running tokens exactly).
+        use crate::request::RequestId;
+        use crate::util::{prop, rng::Rng};
+        prop::check_with(59, 48, |rng: &mut Rng| {
+            let n = rng.index(6) + 2;
+            let insts = cluster(n);
+            // Generous SLOs: Alg. 1/2 always return their first-branch
+            // argmin, so the chosen instance IS the index's answer.
+            let mut p = ArrowPolicy::new(ArrowConfig::new(1e9, 1e9, n), n);
+            p.init(&SimView(&insts));
+            let mut insts = insts;
+            let mut next = 1000u64;
+            for step in 0..40u64 {
+                // Churn: enqueue prefill work, park decode work, or run
+                // an iteration somewhere.
+                match rng.index(3) {
+                    0 => {
+                        let i = rng.index(n);
+                        insts[i].enqueue_prefill(
+                            RequestId(next),
+                            rng.int_range(100, 30_000) as u32,
+                        );
+                        next += 1;
+                    }
+                    1 => {
+                        let i = rng.index(n);
+                        let ctx = rng.int_range(50, 2_000) as u64;
+                        if insts[i].try_reserve_kv(ctx) {
+                            insts[i].enqueue_decode(RequestId(next), ctx as u32, 4);
+                            next += 1;
+                        }
+                    }
+                    _ => {
+                        let i = rng.index(n);
+                        if let Some(plan) = insts[i].plan_iteration() {
+                            insts[i].finish_iteration(&plan, step as f64);
+                        }
+                    }
+                }
+                // Prefill: chosen delay must be minimal over the P pool
+                // (walk-computed, so this also cross-checks moments).
+                let t = p.place_prefill(step as f64, &req(step, 500, 8), &SimView(&insts));
+                let delay_of = |i: usize| {
+                    TtftPredictor::profile(&insts[i].cost, insts[i].chunk_tokens)
+                        .queue_delay_iter(insts[i].prefill_queue_iter())
+                };
+                let best = p
+                    .pools()
+                    .members_iter(Pool::Prefill)
+                    .map(|id| delay_of(id.0))
+                    .min_by(|a, b| a.total_cmp(b))
+                    .unwrap();
+                crate::prop_assert!(
+                    delay_of(t.0) <= best + 1e-9 * best.max(1.0),
+                    "step {step}: placed {t} at delay {} but pool min is {best}",
+                    delay_of(t.0)
+                );
+                // Decode: running tokens are integers — exact argmin.
+                let d = p.place_decode(step as f64, &req(step, 200, 8), t, &SimView(&insts));
+                if p.pools().pool_of(d) == Some(Pool::Decode)
+                    && p.pools().pool_of(t).map(|pl| !pl.decode_capable()).unwrap_or(true)
+                {
+                    let min_tokens = p
+                        .pools()
+                        .members_iter(Pool::Decode)
+                        .map(|id| insts[id.0].running_tokens())
+                        .min()
+                        .unwrap();
+                    crate::prop_assert!(
+                        insts[d.0].running_tokens() == min_tokens,
+                        "step {step}: decode placed {d} with {} tokens, min {min_tokens}",
+                        insts[d.0].running_tokens()
+                    );
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

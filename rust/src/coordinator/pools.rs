@@ -15,6 +15,8 @@
 //! can never be returned by `members_iter` and therefore never receives a
 //! placement.
 
+use std::collections::BTreeSet;
+
 use crate::request::InstanceId;
 
 /// Pool membership of one instance.
@@ -42,12 +44,43 @@ impl Pool {
     }
 }
 
+impl Pool {
+    fn idx(self) -> usize {
+        match self {
+            Pool::Prefill => 0,
+            Pool::Decode => 1,
+            Pool::PrefillToDecode => 2,
+            Pool::DecodeToPrefill => 3,
+        }
+    }
+}
+
 /// Pool bookkeeping over a dynamic instance set. `None` = not a member
 /// (never joined, draining/left, or failed).
+///
+/// # Keyed argmin index (PR 4)
+///
+/// Each pool carries an ordered index over caller-supplied `u64` keys
+/// (predicted prefill delay as total-order bits for P / D→P, running
+/// tokens for D / P→D), so `min_prefill_delay` / `min_running_tokens`
+/// are an O(log n) first-element read instead of a full member scan.
+/// Division of labor: `Pools` owns the *structure* — every membership or
+/// pool transition drops the moved slot's key and bumps
+/// [`Pools::structure_version`] — while the policy owns the *values*,
+/// re-keying slots whose underlying aggregates changed (see
+/// `ArrowPolicy::refresh_index`). Ties break toward the lowest id,
+/// exactly like the `min_by`-over-`members_iter` scan this replaces.
 #[derive(Debug, Clone)]
 pub struct Pools {
     membership: Vec<Option<Pool>>,
     flips: u64,
+    /// Cached key bits per slot; `None` = not indexed (needs re-keying).
+    keys: Vec<Option<u64>>,
+    /// `(key_bits, id)` per pool, ascending — argmin is the first entry.
+    index: [BTreeSet<(u64, usize)>; 4],
+    /// Bumped on every membership/pool transition; policies compare it to
+    /// detect that index entries were dropped and a refresh pass is due.
+    structure: u64,
 }
 
 impl Pools {
@@ -61,7 +94,84 @@ impl Pools {
                 .map(|i| Some(if i < n_prefill { Pool::Prefill } else { Pool::Decode }))
                 .collect(),
             flips: 0,
+            keys: vec![None; n_instances],
+            index: Default::default(),
+            structure: 0,
         }
+    }
+
+    // ---------------------------------------------- keyed argmin index
+
+    /// See the type-level docs: bumped on every structural change.
+    pub fn structure_version(&self) -> u64 {
+        self.structure
+    }
+
+    /// Drop `id`'s index entry (if any). Must run *before* the slot's
+    /// pool changes — the entry lives in the old pool's set.
+    fn invalidate_key(&mut self, id: usize) {
+        let Some(slot) = self.keys.get_mut(id) else { return };
+        if let Some(k) = slot.take() {
+            let pool = self.membership[id].expect("keyed slot must be a member");
+            let removed = self.index[pool.idx()].remove(&(k, id));
+            debug_assert!(removed, "index entry missing for keyed slot {id}");
+        }
+    }
+
+    /// Record a structural transition of `id`: its key (computed against
+    /// the old pool/value) is dropped and the structure version bumps.
+    fn structural_change(&mut self, id: usize) {
+        self.invalidate_key(id);
+        self.structure += 1;
+    }
+
+    /// (Re-)key a current member. The caller computed `key_bits` from
+    /// the pool's metric (delay bits or running tokens); replacing an
+    /// unchanged key is a no-op.
+    pub fn set_key(&mut self, id: InstanceId, key_bits: u64) {
+        let Some(pool) = self.pool_of(id) else {
+            debug_assert!(false, "set_key on non-member {id}");
+            return;
+        };
+        if self.keys.len() <= id.0 {
+            self.keys.resize(id.0 + 1, None);
+        }
+        if self.keys[id.0] == Some(key_bits) {
+            return;
+        }
+        if let Some(old) = self.keys[id.0].take() {
+            self.index[pool.idx()].remove(&(old, id.0));
+        }
+        self.index[pool.idx()].insert((key_bits, id.0));
+        self.keys[id.0] = Some(key_bits);
+    }
+
+    /// Cached key of a slot, `None` when it needs re-keying.
+    pub fn key_of(&self, id: InstanceId) -> Option<u64> {
+        self.keys.get(id.0).copied().flatten()
+    }
+
+    /// Argmin over `pool` by cached key, ties to the lowest id — O(log n).
+    /// Only complete after the policy's refresh pass: every member of the
+    /// queried pool must currently hold a key.
+    pub fn min_keyed(&self, pool: Pool) -> Option<(InstanceId, u64)> {
+        debug_assert!(
+            self.index[pool.idx()].len() == self.members_iter(pool).count(),
+            "argmin index incomplete for {pool:?} — refresh_index not run?"
+        );
+        self.index[pool.idx()]
+            .iter()
+            .next()
+            .map(|&(k, i)| (InstanceId(i), k))
+    }
+
+    /// Drop every key (e.g. after re-profiling changed what keys mean)
+    /// and force the next refresh pass to rebuild the index.
+    pub fn reset_keys(&mut self) {
+        for ids in 0..self.keys.len() {
+            self.invalidate_key(ids);
+        }
+        self.structure += 1;
     }
 
     /// Table size (member slots + departed slots). Ids are table indices.
@@ -103,17 +213,21 @@ impl Pools {
     pub fn join(&mut self, id: InstanceId, pool: Pool) {
         if id.0 >= self.membership.len() {
             self.membership.resize(id.0 + 1, None);
+            self.keys.resize(id.0 + 1, None);
         }
         if self.membership[id.0].is_none() {
+            debug_assert!(self.keys[id.0].is_none(), "non-member held a key");
             self.membership[id.0] = Some(pool);
+            self.structure += 1;
         }
     }
 
     /// Remove an instance from whatever pool holds it (drain or loss).
     /// The slot stays in the table so ids remain stable.
     pub fn remove(&mut self, id: InstanceId) {
-        if let Some(m) = self.membership.get_mut(id.0) {
-            *m = None;
+        if self.pool_of(id).is_some() {
+            self.structural_change(id.0);
+            self.membership[id.0] = None;
         }
     }
 
@@ -180,8 +294,7 @@ impl Pools {
     ///
     /// `has_decode_work`: whether the instance still holds decode tasks.
     pub fn flip_to_prefill(&mut self, id: InstanceId, has_decode_work: bool) {
-        let Some(m) = self.membership.get_mut(id.0) else { return };
-        let Some(cur) = *m else { return };
+        let Some(cur) = self.pool_of(id) else { return };
         let new = match cur {
             Pool::Decode => {
                 if has_decode_work {
@@ -194,15 +307,15 @@ impl Pools {
             other => other,
         };
         if new != cur {
-            *m = Some(new);
+            self.structural_change(id.0);
+            self.membership[id.0] = Some(new);
             self.flips += 1;
         }
     }
 
     /// Flip an instance toward *decode* duty (mirror of above).
     pub fn flip_to_decode(&mut self, id: InstanceId, has_prefill_work: bool) {
-        let Some(m) = self.membership.get_mut(id.0) else { return };
-        let Some(cur) = *m else { return };
+        let Some(cur) = self.pool_of(id) else { return };
         let new = match cur {
             Pool::Prefill => {
                 if has_prefill_work {
@@ -215,7 +328,8 @@ impl Pools {
             other => other,
         };
         if new != cur {
-            *m = Some(new);
+            self.structural_change(id.0);
+            self.membership[id.0] = Some(new);
             self.flips += 1;
         }
     }
@@ -225,12 +339,13 @@ impl Pools {
     /// settles into Prefill — the black edges in Fig. 5. Non-members are
     /// no-ops.
     pub fn settle(&mut self, id: InstanceId, has_prefill_work: bool, has_decode_work: bool) {
-        let Some(m) = self.membership.get_mut(id.0) else { return };
-        match *m {
-            Some(Pool::PrefillToDecode) if !has_prefill_work => *m = Some(Pool::Decode),
-            Some(Pool::DecodeToPrefill) if !has_decode_work => *m = Some(Pool::Prefill),
-            _ => {}
-        }
+        let new = match self.pool_of(id) {
+            Some(Pool::PrefillToDecode) if !has_prefill_work => Pool::Decode,
+            Some(Pool::DecodeToPrefill) if !has_decode_work => Pool::Prefill,
+            _ => return,
+        };
+        self.structural_change(id.0);
+        self.membership[id.0] = Some(new);
     }
 }
 
@@ -337,6 +452,65 @@ mod tests {
         let mut p = Pools::new(2, 1);
         p.flip_to_prefill(InstanceId(0), false); // already prefill
         assert_eq!(p.flip_count(), 0);
+    }
+
+    #[test]
+    fn keyed_index_tracks_min_and_ties_to_lowest_id() {
+        let mut p = Pools::new(4, 4); // all Prefill
+        assert_eq!(p.min_keyed(Pool::Decode), None, "empty pool has no min");
+        p.set_key(InstanceId(0), 30);
+        p.set_key(InstanceId(1), 10);
+        p.set_key(InstanceId(2), 10);
+        p.set_key(InstanceId(3), 20);
+        assert_eq!(p.min_keyed(Pool::Prefill), Some((InstanceId(1), 10)));
+        // Re-keying moves the entry; equal keys tie to the lowest id.
+        p.set_key(InstanceId(1), 40);
+        assert_eq!(p.min_keyed(Pool::Prefill), Some((InstanceId(2), 10)));
+        p.set_key(InstanceId(1), 10);
+        assert_eq!(p.min_keyed(Pool::Prefill), Some((InstanceId(1), 10)));
+    }
+
+    #[test]
+    fn structural_changes_drop_keys_and_bump_version() {
+        let mut p = Pools::new(4, 2);
+        for i in 0..4 {
+            p.set_key(InstanceId(i), i as u64);
+        }
+        let v0 = p.structure_version();
+        // A flip drops only the moved slot's key…
+        p.flip_to_decode(InstanceId(0), true); // P -> P→D
+        assert!(p.structure_version() > v0);
+        assert_eq!(p.key_of(InstanceId(0)), None);
+        assert_eq!(p.key_of(InstanceId(1)), Some(1));
+        assert_eq!(p.min_keyed(Pool::Prefill), Some((InstanceId(1), 1)));
+        // …as do settle, remove and (re)join.
+        p.settle(InstanceId(0), false, false); // P→D -> D
+        assert_eq!(p.key_of(InstanceId(0)), None);
+        p.set_key(InstanceId(0), 7);
+        p.remove(InstanceId(0));
+        assert_eq!(p.key_of(InstanceId(0)), None);
+        p.join(InstanceId(0), Pool::Decode);
+        assert_eq!(p.key_of(InstanceId(0)), None);
+        // Value updates alone do NOT bump the structure version.
+        let v1 = p.structure_version();
+        p.set_key(InstanceId(0), 9);
+        assert_eq!(p.structure_version(), v1);
+        // reset_keys clears everything for a full rebuild.
+        p.reset_keys();
+        assert!(p.structure_version() > v1);
+        for i in 0..4 {
+            assert_eq!(p.key_of(InstanceId(i)), None);
+        }
+    }
+
+    #[test]
+    fn join_grows_key_table_with_membership() {
+        let mut p = Pools::new(2, 1);
+        p.join(InstanceId(5), Pool::Decode); // scale-out appends slots
+        p.set_key(InstanceId(1), 8);
+        p.set_key(InstanceId(5), 3);
+        assert_eq!(p.min_keyed(Pool::Decode), Some((InstanceId(5), 3)));
+        assert_eq!(p.key_of(InstanceId(3)), None, "gap slots stay unkeyed");
     }
 
     #[test]

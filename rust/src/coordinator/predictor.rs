@@ -11,7 +11,7 @@
 //! queue view, exactly like the real system's profiler.
 
 use crate::costmodel::CostModel;
-use crate::sched::ClusterView;
+use crate::sched::{ClusterView, PrefillQueueMoments};
 use crate::util::stats;
 
 /// Input lengths sampled during startup profiling.
@@ -56,6 +56,18 @@ impl TtftPredictor {
 
     pub fn coefficients(&self) -> [f64; 3] {
         self.c
+    }
+
+    /// Chunk size this predictor prices per-iteration overhead with. A
+    /// view's [`PrefillQueueMoments::sum_chunks`] must be computed with
+    /// the same chunk for the O(1) path to agree with the walk.
+    pub fn chunk_tokens(&self) -> u32 {
+        self.chunk
+    }
+
+    /// Per-iteration overhead (seconds) this predictor prices chunks at.
+    pub fn overhead_s(&self) -> f64 {
+        self.overhead
     }
 
     /// Predicted seconds to prefill a fresh `len`-token prompt.
@@ -104,6 +116,34 @@ impl TtftPredictor {
         let mut total = 0.0;
         view.for_each_queued_prefill(inst, &mut |l, r| total += self.remaining_seconds(l, r));
         total
+    }
+
+    /// O(1) queue delay from incrementally maintained aggregates (PR 4
+    /// tentpole) — the hot-path replacement for the per-member queue walk
+    /// of [`TtftPredictor::queue_delay_view`]:
+    ///
+    /// ```text
+    /// Σ remaining_seconds(len, rem)
+    ///   = c1·Σrem + c2·Σ(len² − done²) + overhead·Σ⌈rem/chunk⌉
+    /// ```
+    ///
+    /// Because the moments are exact integers, the result is a
+    /// deterministic function of queue *content* (independent of update
+    /// history and of substrate), which is what keeps cross-substrate
+    /// placements byte-identical. It differs from the walk only in f64
+    /// summation order (≤ ~1e-12 relative; property-tested at 1e-9) and
+    /// in clamping the total instead of each task — the walk stays
+    /// available as the debug-mode oracle. NaN coefficients yield NaN
+    /// (never a free 0 s) exactly like the walk, and an empty queue is
+    /// 0 s even under a NaN-poisoned fit.
+    pub fn queue_delay_moments(&self, m: &PrefillQueueMoments) -> f64 {
+        if m.count == 0 {
+            return 0.0;
+        }
+        (self.c[1] * m.sum_remaining as f64
+            + self.c[2] * m.sum_sq_span as f64
+            + m.sum_chunks as f64 * self.overhead)
+            .clamp(0.0, f64::INFINITY)
     }
 
     /// Predicted TTFT if a request of `len` tokens is appended to the
@@ -214,5 +254,57 @@ mod tests {
     fn remaining_zero_is_zero() {
         let (p, _) = predictor();
         assert_eq!(p.remaining_seconds(5000, 0), 0.0);
+    }
+
+    #[test]
+    fn moments_match_walk_within_tolerance() {
+        let (p, _) = predictor();
+        let queue = [(4096u32, 4096u32), (512, 512), (30_000, 30_000), (9_000, 3_500)];
+        let walk = p.queue_delay_iter(queue.iter().copied());
+        let mut m = PrefillQueueMoments::default();
+        for &(l, r) in &queue {
+            m.add_task(l, r, p.chunk_tokens());
+        }
+        let fast = p.queue_delay_moments(&m);
+        let rel = (fast - walk).abs() / walk.max(1e-12);
+        assert!(rel < 1e-9, "walk={walk} moments={fast} rel={rel}");
+    }
+
+    #[test]
+    fn moments_empty_queue_is_zero_even_with_nan_fit() {
+        let broken = TtftPredictor::from_coefficients([f64::NAN; 3], 2048, 0.001);
+        assert_eq!(broken.queue_delay_moments(&PrefillQueueMoments::default()), 0.0);
+        let mut m = PrefillQueueMoments::default();
+        m.add_task(1000, 1000, 2048);
+        assert!(
+            broken.queue_delay_moments(&m).is_nan(),
+            "a poisoned fit must price a non-empty queue as NaN"
+        );
+    }
+
+    #[test]
+    fn moments_deterministic_across_substrate_histories() {
+        // Two different maintenance histories reaching the same queue
+        // content must produce bit-identical predictions — the PR-4
+        // cross-substrate contract ("identical moment updates").
+        let (p, _) = predictor();
+        let chunk = p.chunk_tokens();
+        // History A: enqueue three, head advances twice.
+        let mut a = PrefillQueueMoments::default();
+        a.add_task(6000, 6000, chunk);
+        a.add_task(800, 800, chunk);
+        a.add_task(10_000, 10_000, chunk);
+        a.advance_head(6000, 6000, 3952, chunk);
+        a.advance_head(6000, 3952, 1904, chunk);
+        // History B: mirror rebuilt from the public (len, remaining) view.
+        let mut b = PrefillQueueMoments::default();
+        for (l, r) in [(6000u32, 1904u32), (800, 800), (10_000, 10_000)] {
+            b.add_task(l, r, chunk);
+        }
+        assert_eq!(a, b);
+        assert_eq!(
+            p.queue_delay_moments(&a).to_bits(),
+            p.queue_delay_moments(&b).to_bits()
+        );
     }
 }

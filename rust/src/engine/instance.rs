@@ -18,11 +18,13 @@ use std::sync::Arc;
 use super::task::{DecodeTask, PrefillTask};
 use crate::costmodel::CostModel;
 use crate::request::{InstanceId, RequestId};
-use crate::sched::Liveness;
+use crate::sched::{Liveness, PrefillQueueMoments};
 use crate::util::stats::SlidingWindow;
 
-/// Chunked-prefill token budget per iteration (Sarathi-style default).
-pub const DEFAULT_CHUNK_TOKENS: u32 = 2048;
+/// Chunked-prefill token budget per iteration (Sarathi-style default;
+/// canonical value lives in the sched layer, which defines the default
+/// view contract).
+pub const DEFAULT_CHUNK_TOKENS: u32 = crate::sched::DEFAULT_CHUNK_TOKENS;
 
 /// Samples kept in the recent token-interval window (instance monitor).
 const INTERVAL_WINDOW: usize = 64;
@@ -83,6 +85,16 @@ pub struct SimInstance {
     kv_used: u64,
     /// KV held by finished prefills awaiting migration (subset of kv_used).
     parked_prefill_kv: u64,
+    // --- O(1) scheduler aggregates (PR 4: updated at event time, never
+    // recomputed on the placement path) ---
+    /// Prefill-queue moments, maintained on enqueue / chunk advance /
+    /// completion. `chunk_tokens` must therefore be fixed before the
+    /// first enqueue — the aggregates (and the fitted predictor) price
+    /// iterations with it.
+    prefill_moments: PrefillQueueMoments,
+    /// Σ ctx over running + waiting decode tasks (the paper's "running
+    /// tokens" metric, §5.3), maintained on enqueue/adopt/token/finish.
+    running_tokens_agg: u64,
     // --- monitor statistics (paper Fig. 5 VI) ---
     /// Recent per-token generation intervals (seconds).
     intervals: SlidingWindow,
@@ -111,6 +123,8 @@ impl SimInstance {
             decode_wait: VecDeque::new(),
             kv_used: 0,
             parked_prefill_kv: 0,
+            prefill_moments: PrefillQueueMoments::default(),
+            running_tokens_agg: 0,
             intervals: SlidingWindow::new(INTERVAL_WINDOW),
             last_token_time: None,
             busy: false,
@@ -137,10 +151,34 @@ impl SimInstance {
     }
 
     /// Total KV tokens of running + waiting decode requests — the paper's
-    /// "running tokens" decode-load metric (§5.3).
+    /// "running tokens" decode-load metric (§5.3). O(1): the aggregate is
+    /// maintained at enqueue/adopt/token/finish time; the full fold stays
+    /// as the debug-mode oracle.
     pub fn running_tokens(&self) -> u64 {
-        self.running.iter().map(|t| t.ctx as u64).sum::<u64>()
-            + self.decode_wait.iter().map(|t| t.ctx as u64).sum::<u64>()
+        debug_assert_eq!(
+            self.running_tokens_agg,
+            self.running.iter().map(|t| t.ctx as u64).sum::<u64>()
+                + self.decode_wait.iter().map(|t| t.ctx as u64).sum::<u64>(),
+            "running-tokens aggregate drifted from the task lists"
+        );
+        self.running_tokens_agg
+    }
+
+    /// O(1) prefill-queue moments (PR 4), maintained at event time. The
+    /// walk-derived oracle guards the aggregate in debug builds.
+    pub fn prefill_queue_moments(&self) -> PrefillQueueMoments {
+        #[cfg(debug_assertions)]
+        {
+            let mut oracle = PrefillQueueMoments::default();
+            for (l, r) in self.prefill_queue_iter() {
+                oracle.add_task(l, r, self.chunk_tokens);
+            }
+            debug_assert_eq!(
+                self.prefill_moments, oracle,
+                "prefill moments drifted from the queue"
+            );
+        }
+        self.prefill_moments
     }
 
     pub fn decode_req_count(&self) -> usize {
@@ -202,6 +240,8 @@ impl SimInstance {
 
     /// Accept a prefill sub-request. Caller must have verified capacity.
     pub fn enqueue_prefill(&mut self, id: RequestId, input_len: u32) {
+        self.prefill_moments
+            .add_task(input_len, input_len, self.chunk_tokens);
         self.prefill_q.push_back(PrefillTask::new(id, input_len));
     }
 
@@ -225,6 +265,7 @@ impl SimInstance {
 
     /// Accept a decode sub-request whose KV is already resident/reserved.
     pub fn enqueue_decode(&mut self, id: RequestId, ctx: u32, remaining: u32) {
+        self.running_tokens_agg += ctx as u64;
         self.decode_wait.push_back(DecodeTask::new(id, ctx, remaining));
     }
 
@@ -234,6 +275,7 @@ impl SimInstance {
     pub fn adopt_local_decode(&mut self, id: RequestId, ctx: u32, remaining: u32) {
         debug_assert!(self.parked_prefill_kv >= ctx as u64);
         self.parked_prefill_kv -= ctx as u64;
+        self.running_tokens_agg += ctx as u64;
         self.decode_wait.push_back(DecodeTask::new(id, ctx, remaining));
     }
 
@@ -370,12 +412,15 @@ impl SimInstance {
             self.last_token_time = Some(now);
         }
         let kv_used = &mut self.kv_used;
+        let running_tokens_agg = &mut self.running_tokens_agg;
         self.running.retain_mut(|t| {
             t.ctx += 1;
+            *running_tokens_agg += 1;
             t.remaining -= 1;
             if t.finished() {
                 let freed = t.ctx as u64;
                 *kv_used = kv_used.saturating_sub(freed);
+                *running_tokens_agg -= freed;
                 out.push(Produced::FinalToken { id: t.id, freed_kv: freed });
                 false
             } else {
@@ -384,12 +429,21 @@ impl SimInstance {
             }
         });
 
-        // Prefill: head task advances by the chunk.
+        // Prefill: head task advances by the chunk (moments updated in
+        // lockstep — the O(1) aggregates never drift from the queue).
         if plan.chunk > 0 {
+            let chunk_tokens = self.chunk_tokens;
             let head = self.prefill_q.front_mut().expect("chunk without head");
+            let input_len = head.input_len;
+            let old_remaining = head.remaining();
             head.done += plan.chunk;
-            if head.finished() {
+            let new_remaining = head.remaining();
+            let finished = head.finished();
+            self.prefill_moments
+                .advance_head(input_len, old_remaining, new_remaining, chunk_tokens);
+            if finished {
                 let t = self.prefill_q.pop_front().unwrap();
+                self.prefill_moments.pop_finished_head();
                 self.parked_prefill_kv += t.input_len as u64;
                 out.push(Produced::PrefillDone {
                     id: t.id,
@@ -427,6 +481,8 @@ impl SimInstance {
         self.decode_wait.clear();
         self.kv_used = 0;
         self.parked_prefill_kv = 0;
+        self.prefill_moments = PrefillQueueMoments::default();
+        self.running_tokens_agg = 0;
         self.reset_monitor();
         self.busy = false;
     }
@@ -578,6 +634,39 @@ mod tests {
         i.enqueue_prefill(RequestId(2), 2048);
         let two = i.prefill_backlog_seconds();
         assert!(two > 1.9 * one, "one={one} two={two}");
+    }
+
+    #[test]
+    fn aggregates_track_queue_and_decode_state() {
+        // The debug-mode oracles inside running_tokens() /
+        // prefill_queue_moments() make these calls self-checking; this
+        // test drives every mutation path through them.
+        let mut i = inst();
+        i.enqueue_prefill(RequestId(1), 5000);
+        i.enqueue_prefill(RequestId(2), 300);
+        assert!(i.try_reserve_kv(120));
+        i.enqueue_decode(RequestId(3), 100, 3);
+        assert_eq!(i.running_tokens(), 100);
+        let m = i.prefill_queue_moments();
+        assert_eq!((m.count, m.sum_remaining), (2, 5300));
+        let mut now = 0.0;
+        while let Some(plan) = i.plan_iteration() {
+            now += plan.duration;
+            for p in i.finish_iteration(&plan, now) {
+                if let Produced::PrefillDone { id, kv_tokens } = p {
+                    i.migration_out_done(kv_tokens);
+                    let _ = id;
+                }
+            }
+            // Oracles re-verified after every iteration.
+            let _ = i.running_tokens();
+            let _ = i.prefill_queue_moments();
+        }
+        assert_eq!(i.prefill_queue_moments(), crate::sched::PrefillQueueMoments::default());
+        assert_eq!(i.running_tokens(), 0);
+        i.enqueue_prefill(RequestId(9), 777);
+        i.clear();
+        assert_eq!(i.prefill_queue_moments(), crate::sched::PrefillQueueMoments::default());
     }
 
     #[test]

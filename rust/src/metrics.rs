@@ -65,6 +65,12 @@ impl SloReport {
             }
         }
         let span = span_seconds.max(1e-9);
+        // One sort per metric vector, then interpolate each percentile
+        // over the sorted data — `stats::percentile` would clone + sort
+        // per call (6 sorts per summary, and rate sweeps build thousands
+        // of summaries). Same comparator (total_cmp), same numbers.
+        ttfts.sort_by(|a, b| a.total_cmp(b));
+        tpots.sort_by(|a, b| a.total_cmp(b));
         SloReport {
             n_requests: n,
             n_finished: finished,
@@ -72,12 +78,12 @@ impl SloReport {
             slo_attainment: ok as f64 / n.max(1) as f64,
             ttft_attainment: ttft_ok as f64 / n.max(1) as f64,
             tpot_attainment: tpot_ok as f64 / n.max(1) as f64,
-            p50_ttft: stats::percentile(&ttfts, 50.0),
-            p90_ttft: stats::percentile(&ttfts, 90.0),
-            p99_ttft: stats::percentile(&ttfts, 99.0),
-            p50_tpot: stats::percentile(&tpots, 50.0),
-            p90_tpot: stats::percentile(&tpots, 90.0),
-            p99_tpot: stats::percentile(&tpots, 99.0),
+            p50_ttft: stats::percentile_sorted(&ttfts, 50.0),
+            p90_ttft: stats::percentile_sorted(&ttfts, 90.0),
+            p99_ttft: stats::percentile_sorted(&ttfts, 99.0),
+            p50_tpot: stats::percentile_sorted(&tpots, 50.0),
+            p90_tpot: stats::percentile_sorted(&tpots, 90.0),
+            p99_tpot: stats::percentile_sorted(&tpots, 99.0),
             token_throughput: tokens as f64 / span,
             goodput_tokens: good_tokens as f64 / span,
         }
@@ -174,6 +180,33 @@ mod tests {
         let rep = SloReport::from_records(&records, 10.0, 10.0, 1.0);
         assert!(rep.p90_ttft > rep.p50_ttft);
         assert!(rep.p99_ttft > rep.p90_ttft);
+    }
+
+    #[test]
+    fn sort_once_percentiles_match_per_call_sorting() {
+        // Regression for the PR-4 satellite: SloReport sorts each metric
+        // vector once and interpolates with percentile_sorted; the
+        // numbers must be identical to the old clone-and-sort-per-
+        // percentile stats::percentile path.
+        let records: Vec<_> = (0..137)
+            .map(|i| {
+                let t0 = ((i * 37) % 100) as f64 / 50.0 + 0.01;
+                rec(0.0, &[t0, t0 + 0.03, t0 + 0.09])
+            })
+            .collect();
+        let rep = SloReport::from_records(&records, 1.0, 0.2, 10.0);
+        let ttfts: Vec<f64> = records.iter().map(|r| r.ttft().unwrap()).collect();
+        let tpots: Vec<f64> = records.iter().map(|r| r.tpot().unwrap()).collect();
+        for (got, want) in [
+            (rep.p50_ttft, crate::util::stats::percentile(&ttfts, 50.0)),
+            (rep.p90_ttft, crate::util::stats::percentile(&ttfts, 90.0)),
+            (rep.p99_ttft, crate::util::stats::percentile(&ttfts, 99.0)),
+            (rep.p50_tpot, crate::util::stats::percentile(&tpots, 50.0)),
+            (rep.p90_tpot, crate::util::stats::percentile(&tpots, 90.0)),
+            (rep.p99_tpot, crate::util::stats::percentile(&tpots, 99.0)),
+        ] {
+            assert_eq!(got.to_bits(), want.to_bits(), "{got} != {want}");
+        }
     }
 
     #[test]

@@ -269,6 +269,71 @@ pub fn decode_node_failure(
     cl
 }
 
+// ---------------------------------------------------------------------------
+// Large-cluster scenarios (PR 4): the scale regime the ROADMAP north-star
+// ("heavy traffic from millions of users") needs — 64/256 stateless
+// TP=1 instances behind one Arrow scheduler, driven by deep-queue burst
+// traces that put tens of requests behind every instance. These builders
+// exist so the O(1)-placement fast path is exercised end-to-end (and
+// demoable via `workload_explorer --instances N`), not just in the
+// `benches/scale.rs` micro gate.
+// ---------------------------------------------------------------------------
+
+/// An Arrow cluster at large scale: `n` stateless TP=1 instances (64 and
+/// 256 are the reference points of the scale sweep), one shared cost
+/// model behind refcounts, SLO-aware chunking enabled — the same shape
+/// `build(System::Arrow, ..)` produces, with a scale guard and a shorter
+/// drain timeout so oversaturated sweep points stay cheap.
+pub fn large_cluster(
+    n_instances: usize,
+    base: &CostModel,
+    ttft_slo: f64,
+    tpot_slo: f64,
+) -> Cluster {
+    assert!(n_instances >= 8, "large_cluster is for >= 8 instances");
+    let cfg = SimConfig {
+        record_timeline: false,
+        drain_timeout: 120.0,
+        ..Default::default()
+    };
+    let policy =
+        ArrowPolicy::new(ArrowConfig::new(ttft_slo, tpot_slo, n_instances), n_instances);
+    let cost = Arc::new(base.clone());
+    let instances: Vec<SimInstance> = (0..n_instances)
+        .map(|i| {
+            let mut inst = SimInstance::new(InstanceId(i), Arc::clone(&cost));
+            inst.iter_time_budget = Some(0.8 * tpot_slo);
+            inst
+        })
+        .collect();
+    Cluster::new(instances, Box::new(policy), cfg)
+}
+
+/// Deterministic deep-queue burst trace for large clusters:
+/// `per_instance × n_instances` requests arrive inside a `window`-second
+/// burst, so every instance ends up with a deep prefill backlog — the
+/// regime where the pre-PR-4 scheduler cost was
+/// O(members × queue depth) per placement.
+pub fn deep_queue_burst(
+    n_instances: usize,
+    per_instance: usize,
+    window_s: f64,
+    seed: u64,
+) -> crate::trace::Trace {
+    use crate::request::Request;
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0x5ca1e);
+    let n = n_instances * per_instance;
+    assert!(n > 0);
+    let mut requests = Vec::with_capacity(n);
+    for i in 0..n {
+        let arrival = window_s * (i as f64 / n as f64);
+        let input = rng.int_range(200, 16_000) as u32;
+        let output = rng.int_range(4, 48) as u32;
+        requests.push(Request::new(i as u64, arrival, input, output));
+    }
+    crate::trace::Trace::new("deep_queue_burst", requests)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,6 +382,32 @@ mod tests {
         // Light smoke load may or may not flip; the counter must at least
         // be consistent (no panic) and requests finish.
         assert!(res.records.iter().filter(|r| r.finished()).count() > 280);
+    }
+
+    #[test]
+    fn large_cluster_completes_deep_queue_burst() {
+        // 16 instances × 6 queued requests each: small enough for a unit
+        // test, deep enough that every placement runs against loaded
+        // queues (the debug-mode moment oracles verify the O(1) path on
+        // every decision of this run).
+        let base = CostModel::h800_llama8b();
+        let trace = deep_queue_burst(16, 6, 5.0, 3);
+        assert_eq!(trace.len(), 96);
+        let res = large_cluster(16, &base, 5.0, 0.1).run(&trace);
+        let finished = res.records.iter().filter(|r| r.finished()).count();
+        assert_eq!(finished, trace.len(), "burst must fully drain");
+    }
+
+    #[test]
+    fn deep_queue_burst_is_deterministic_and_bursty() {
+        let a = deep_queue_burst(8, 4, 10.0, 7);
+        let b = deep_queue_burst(8, 4, 10.0, 7);
+        assert_eq!(a.requests, b.requests);
+        assert!(a.requests.iter().all(|r| r.arrival <= 10.0));
+        assert!(
+            a.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "arrivals sorted"
+        );
     }
 
     #[test]

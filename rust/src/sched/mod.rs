@@ -30,6 +30,12 @@
 //!   returns NaN when an instance has produced no recent tokens; policies
 //!   must treat degenerate floats with `f64::total_cmp`, never
 //!   `partial_cmp().unwrap()`.
+//! * **O(1) load aggregates (PR 4).** Queue-delay inputs are exposed as
+//!   incrementally maintained integer moments
+//!   ([`ClusterView::prefill_queue_moments`]) so placement never walks a
+//!   queue, and [`ClusterView::change_epoch`] lets policies skip even the
+//!   per-instance freshness check when the substrate proves nothing
+//!   changed. See ROADMAP "Scale architecture (PR 4)".
 
 pub mod policy;
 
@@ -37,6 +43,139 @@ pub use policy::{tests_support, Policy};
 
 use crate::coordinator::predictor::TtftPredictor;
 use crate::request::InstanceId;
+
+/// Chunked-prefill token budget assumed by default views and engines
+/// (Sarathi-style; the canonical value [`crate::engine::instance`]
+/// re-exports).
+pub const DEFAULT_CHUNK_TOKENS: u32 = 2048;
+
+/// Sentinel returned by [`ClusterView::change_epoch`] when the view
+/// cannot prove anything about change history: consumers must fall back
+/// to verifying per-instance aggregates. Any real epoch must be
+/// `!= EPOCH_UNKNOWN`.
+pub const EPOCH_UNKNOWN: u64 = u64::MAX;
+
+/// Incrementally maintained aggregates ("moments") of one instance's
+/// prefill queue — everything the fitted TTFT quadratic
+/// `c0 + c1·len + c2·len²` needs to price the queue's total remaining
+/// delay in O(1) (PR 4 tentpole):
+///
+/// ```text
+/// Σ_tasks remaining_seconds(len, rem)
+///   = c1·Σrem + c2·Σ(len² − done²) + overhead·Σ⌈rem/chunk⌉
+/// ```
+///
+/// All fields are exact integers, so the aggregates are
+/// **path-independent**: maintaining them incrementally through any
+/// interleaving of [`PrefillQueueMoments::add_task`] /
+/// [`PrefillQueueMoments::advance_head`] / task completion yields
+/// *bit-identical* values to deriving them from a queue walk — the
+/// cross-substrate conformance contract (`tests/prop_predictor.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PrefillQueueMoments {
+    /// Number of queued (incl. in-progress head) prefill tasks.
+    pub count: u64,
+    /// Σ remaining tokens over queued tasks.
+    pub sum_remaining: u64,
+    /// Σ (input_len² − done²) over queued tasks (done = len − remaining).
+    /// u128: a single 4-billion-token prompt already saturates u64.
+    pub sum_sq_span: u128,
+    /// Σ ⌈remaining / chunk⌉ — chunk iterations still to run, priced at
+    /// the profiled per-iteration overhead.
+    pub sum_chunks: u64,
+}
+
+impl PrefillQueueMoments {
+    fn chunks_of(remaining: u32, chunk: u32) -> u64 {
+        (remaining as u64).div_ceil(chunk.max(1) as u64)
+    }
+
+    fn sq_span_of(input_len: u32, remaining: u32) -> u128 {
+        debug_assert!(remaining <= input_len);
+        let l = input_len as u128;
+        let d = (input_len - remaining) as u128;
+        l * l - d * d
+    }
+
+    /// Account a queued task `(input_len, remaining)`. Fresh enqueues
+    /// have `remaining == input_len`; mirrors rebuilding from a queue
+    /// view may add partially-done heads directly.
+    pub fn add_task(&mut self, input_len: u32, remaining: u32, chunk: u32) {
+        self.count += 1;
+        self.sum_remaining += remaining as u64;
+        self.sum_sq_span += Self::sq_span_of(input_len, remaining);
+        self.sum_chunks += Self::chunks_of(remaining, chunk);
+    }
+
+    /// Remove a queued task (dequeue before completion — e.g. the
+    /// server's PrefillDone, which observes no chunk progress).
+    pub fn remove_task(&mut self, input_len: u32, remaining: u32, chunk: u32) {
+        debug_assert!(self.count >= 1);
+        self.count -= 1;
+        self.sum_remaining -= remaining as u64;
+        self.sum_sq_span -= Self::sq_span_of(input_len, remaining);
+        self.sum_chunks -= Self::chunks_of(remaining, chunk);
+    }
+
+    /// The head task advanced from `old_remaining` to `new_remaining`
+    /// (one chunked-prefill iteration). When the head *finishes*
+    /// (`new_remaining == 0`) its residual contribution is zero, so the
+    /// subsequent pop only decrements `count`.
+    pub fn advance_head(
+        &mut self,
+        input_len: u32,
+        old_remaining: u32,
+        new_remaining: u32,
+        chunk: u32,
+    ) {
+        debug_assert!(new_remaining <= old_remaining);
+        self.sum_remaining -= (old_remaining - new_remaining) as u64;
+        self.sum_sq_span -=
+            Self::sq_span_of(input_len, old_remaining) - Self::sq_span_of(input_len, new_remaining);
+        self.sum_chunks -= Self::chunks_of(old_remaining, chunk) - Self::chunks_of(new_remaining, chunk);
+    }
+
+    /// A finished head (remaining 0) leaves the queue: only the task
+    /// count changes — every other contribution already telescoped to 0
+    /// through [`PrefillQueueMoments::advance_head`].
+    pub fn pop_finished_head(&mut self) {
+        debug_assert!(self.count >= 1);
+        self.count -= 1;
+    }
+
+    /// Derive moments from a queue view — the walk-based oracle the
+    /// incremental path is conformance-tested against.
+    pub fn derive_walk<V: ClusterView + ?Sized>(view: &V, inst: usize) -> PrefillQueueMoments {
+        let chunk = view.prefill_chunk_tokens(inst);
+        let mut m = PrefillQueueMoments::default();
+        view.for_each_queued_prefill(inst, &mut |l, r| m.add_task(l, r, chunk));
+        m
+    }
+}
+
+/// Map a float to `u64` key bits whose unsigned order equals
+/// `f64::total_cmp` order (the classic IEEE total-order twist). Lets the
+/// pool argmin index ([`crate::coordinator::pools::Pools`]) store
+/// predicted delays in an integer-ordered set: NaN sorts after every
+/// finite delay, `-0.0` before `+0.0` — exactly like the scan it
+/// replaces.
+pub fn f64_key_bits(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+/// Inverse of [`f64_key_bits`].
+pub fn f64_from_key_bits(k: u64) -> f64 {
+    if k >> 63 == 1 {
+        f64::from_bits(k ^ (1 << 63))
+    } else {
+        f64::from_bits(!k)
+    }
+}
 
 /// Cluster-membership state of one instance slot (PR 3).
 ///
@@ -115,6 +254,33 @@ pub trait ClusterView {
         total
     }
 
+    /// O(1) prefill-queue aggregates of `inst` (PR 4): what
+    /// [`TtftPredictor::queue_delay_moments`] consumes instead of walking
+    /// the queue. Substrates maintain these incrementally at event time;
+    /// the default derives them by walking (correct for simple test
+    /// doubles, never used on a hot path).
+    fn prefill_queue_moments(&self, inst: usize) -> PrefillQueueMoments {
+        PrefillQueueMoments::derive_walk(self, inst)
+    }
+
+    /// Chunked-prefill budget of `inst` — the `chunk` the moments'
+    /// `sum_chunks` is computed with. Must equal the chunk the
+    /// instance's fitted [`TtftPredictor`] assumes.
+    fn prefill_chunk_tokens(&self, _inst: usize) -> u32 {
+        DEFAULT_CHUNK_TOKENS
+    }
+
+    /// Monotone change counter over *all* scheduler-visible load state
+    /// (queues and decode tokens) of every instance in this view. Two
+    /// equal non-[`EPOCH_UNKNOWN`] values from the same substrate prove
+    /// nothing changed in between, letting policies skip index refresh
+    /// entirely (O(1) placement). The default — and any view that cannot
+    /// make that promise — returns [`EPOCH_UNKNOWN`], which forces the
+    /// (cheap, aggregate-compare) per-instance freshness check.
+    fn change_epoch(&self) -> u64 {
+        EPOCH_UNKNOWN
+    }
+
     /// Total KV tokens of running + admitted decode requests — the
     /// paper's "running tokens" decode-load metric (§5.3).
     fn running_tokens(&self, inst: usize) -> u64;
@@ -142,6 +308,56 @@ pub trait ClusterView {
     /// implement it; elastic substrates override.
     fn liveness(&self, _inst: usize) -> Liveness {
         Liveness::Active
+    }
+}
+
+/// A [`ClusterView`] plus a substrate-supplied change epoch: the event
+/// loop wraps its raw view (`Epoched(SimView(&insts), clock)`) so
+/// policies can prove "nothing changed since my last decision" in O(1).
+/// Every accessor forwards verbatim — including the O(1) moment
+/// overrides, which a default-method re-derivation would silently
+/// de-optimize.
+pub struct Epoched<V>(pub V, pub u64);
+
+impl<V: ClusterView> ClusterView for Epoched<V> {
+    fn n_instances(&self) -> usize {
+        self.0.n_instances()
+    }
+    fn for_each_queued_prefill(&self, inst: usize, f: &mut dyn FnMut(u32, u32)) {
+        self.0.for_each_queued_prefill(inst, f)
+    }
+    fn queued_prefill_tokens(&self, inst: usize) -> u64 {
+        self.0.queued_prefill_tokens(inst)
+    }
+    fn prefill_queue_moments(&self, inst: usize) -> PrefillQueueMoments {
+        self.0.prefill_queue_moments(inst)
+    }
+    fn prefill_chunk_tokens(&self, inst: usize) -> u32 {
+        self.0.prefill_chunk_tokens(inst)
+    }
+    fn change_epoch(&self) -> u64 {
+        self.1
+    }
+    fn running_tokens(&self, inst: usize) -> u64 {
+        self.0.running_tokens(inst)
+    }
+    fn max_kv_tokens(&self, inst: usize) -> u64 {
+        self.0.max_kv_tokens(inst)
+    }
+    fn avg_token_interval(&self, inst: usize) -> f64 {
+        self.0.avg_token_interval(inst)
+    }
+    fn has_prefill_work(&self, inst: usize) -> bool {
+        self.0.has_prefill_work(inst)
+    }
+    fn has_decode_work(&self, inst: usize) -> bool {
+        self.0.has_decode_work(inst)
+    }
+    fn is_idle(&self, inst: usize) -> bool {
+        self.0.is_idle(inst)
+    }
+    fn liveness(&self, inst: usize) -> Liveness {
+        self.0.liveness(inst)
     }
 }
 
@@ -229,6 +445,86 @@ mod tests {
         assert_eq!(v.queued_prefill_tokens(1), 0);
         assert!(!v.is_idle(0), "queued prefill is work");
         assert!(!v.is_idle(1), "decode is work");
+        // Moment defaults derive from the queue walk with the default
+        // chunk, and an unannotated view cannot promise change history.
+        let m = v.prefill_queue_moments(0);
+        assert_eq!(m.count, 2);
+        assert_eq!(m.sum_remaining, 1100);
+        assert_eq!(
+            m.sum_sq_span,
+            (1000u128 * 1000 - 400 * 400) + 500 * 500
+        );
+        assert_eq!(m.sum_chunks, 1 + 1);
+        assert_eq!(v.prefill_queue_moments(1), PrefillQueueMoments::default());
+        assert_eq!(v.change_epoch(), EPOCH_UNKNOWN);
+    }
+
+    #[test]
+    fn moments_updates_are_path_independent() {
+        // Incremental maintenance through enqueue/advance/pop must land
+        // on the exact integers a fresh walk derives — the conformance
+        // contract both substrates' bookkeeping relies on.
+        let chunk = 2048;
+        let mut inc = PrefillQueueMoments::default();
+        inc.add_task(5000, 5000, chunk); // fresh enqueue
+        inc.add_task(300, 300, chunk);
+        inc.advance_head(5000, 5000, 2952, chunk); // one 2048 chunk
+        inc.advance_head(5000, 2952, 904, chunk);
+        let mut walk = PrefillQueueMoments::default();
+        walk.add_task(5000, 904, chunk); // rebuilt from (len, remaining)
+        walk.add_task(300, 300, chunk);
+        assert_eq!(inc, walk);
+        // Head finishes: residual contributions telescope to zero.
+        inc.advance_head(5000, 904, 0, chunk);
+        inc.pop_finished_head();
+        let mut rest = PrefillQueueMoments::default();
+        rest.add_task(300, 300, chunk);
+        assert_eq!(inc, rest);
+        // Server-style dequeue (no observed progress) is the inverse of
+        // the fresh add.
+        inc.remove_task(300, 300, chunk);
+        assert_eq!(inc, PrefillQueueMoments::default());
+    }
+
+    #[test]
+    fn key_bits_preserve_total_cmp_order_and_roundtrip() {
+        let xs = [
+            f64::NEG_INFINITY,
+            -1.5,
+            -0.0,
+            0.0,
+            1e-300,
+            3.25,
+            f64::INFINITY,
+            f64::NAN,
+        ];
+        for w in xs.windows(2) {
+            assert!(
+                f64_key_bits(w[0]) < f64_key_bits(w[1]),
+                "{} !< {}",
+                w[0],
+                w[1]
+            );
+        }
+        for &x in &xs {
+            let back = f64_from_key_bits(f64_key_bits(x));
+            assert_eq!(back.to_bits(), x.to_bits(), "roundtrip of {x}");
+        }
+    }
+
+    #[test]
+    fn epoched_forwards_everything_and_reports_its_epoch() {
+        let v = Epoched(TwoInstances, 42);
+        assert_eq!(v.change_epoch(), 42);
+        assert_eq!(ClusterView::n_instances(&v), 2);
+        assert_eq!(v.queued_prefill_tokens(0), 1100);
+        assert_eq!(
+            v.prefill_queue_moments(0),
+            TwoInstances.prefill_queue_moments(0)
+        );
+        assert_eq!(v.running_tokens(1), 77);
+        assert!(v.avg_token_interval(0).is_nan());
+        assert!(v.liveness(0).placeable());
     }
 
     #[test]

@@ -32,7 +32,9 @@ use crate::coordinator::predictor::TtftPredictor;
 use crate::http::{self, HttpRequest, HttpResponse};
 use crate::json::Json;
 use crate::request::{InstanceId, Request};
-use crate::sched::{FixedProfile, Liveness, MembershipEvent, Policy};
+use crate::sched::{
+    FixedProfile, Liveness, MembershipEvent, Policy, PrefillQueueMoments, EPOCH_UNKNOWN,
+};
 use engine::{EngineCmd, EngineEvent, EngineHandle};
 use view::{EngineSnapshot, ServerView};
 
@@ -170,6 +172,14 @@ struct Coordinator {
     /// prefill dispatched to each engine and not yet completed. This is
     /// the q1 state of the ServerView snapshot.
     queued: Vec<Vec<(u64, u32)>>,
+    /// O(1) aggregates of `queued` (PR 4), maintained incrementally at
+    /// dispatch / completion / failure — never recomputed per decision.
+    /// Uses the same `PrefillQueueMoments` update rules as `SimInstance`,
+    /// so equal queues key placements bit-identically on both substrates.
+    moments: Vec<PrefillQueueMoments>,
+    /// Chunk each engine's fitted predictor prices overhead with (fixed
+    /// at profiling time; `moments` must be maintained with it).
+    chunks: Vec<u32>,
     /// Requests currently decoding on each engine — the failure-recovery
     /// ledger (their KV dies with the engine, so they restart from
     /// prefill on re-dispatch).
@@ -196,24 +206,45 @@ struct Coordinator {
     done: Arc<Mutex<Vec<Done>>>,
     sched: Arc<SchedPublish>,
     started: Instant,
+    /// Monotone stamp handed to each materialized snapshot. Engine load
+    /// counters advance asynchronously, so an epoch may never be *reused
+    /// across* snapshots — but within one decision the policy reads one
+    /// frozen snapshot several times, and a unique per-snapshot stamp
+    /// soundly collapses those repeat index-verify scans into the O(1)
+    /// skip (`ArrowPolicy::refresh_index`).
+    snapshot_epoch: u64,
 }
 
 impl Coordinator {
     /// Materialize the scheduler's cluster snapshot: coordinator queue
-    /// bookkeeping + the engines' lock-free load counters.
-    fn view(&self) -> ServerView {
+    /// bookkeeping + the engines' lock-free load counters. Each snapshot
+    /// gets a fresh change epoch (see `snapshot_epoch`).
+    fn view(&mut self) -> ServerView {
+        self.snapshot_epoch += 1;
+        debug_assert!(self.snapshot_epoch != EPOCH_UNKNOWN);
         ServerView {
             engines: self
                 .engines
                 .iter()
-                .zip(&self.queued)
+                .zip(self.queued.iter().zip(&self.moments).zip(&self.chunks))
                 .zip(&self.life)
-                .map(|((e, q), &liveness)| {
+                .map(|((e, ((q, &moments), &chunk_tokens)), &liveness)| {
                     let s = e.stats();
                     EngineSnapshot {
                         // Chunk progress is engine-internal; until
-                        // PrefillDone, remaining == input_len.
-                        queued_prefills: q.iter().map(|&(_, l)| (l, l)).collect(),
+                        // PrefillDone, remaining == input_len. Release
+                        // builds skip the clone entirely: placement reads
+                        // only the O(1) moments, and the queue walk
+                        // exists solely as the debug-mode oracle — the
+                        // one per-engine Vec per decision was the last
+                        // O(members × depth) term on the live path.
+                        queued_prefills: if cfg!(debug_assertions) {
+                            q.iter().map(|&(_, l)| (l, l)).collect()
+                        } else {
+                            Vec::new()
+                        },
+                        moments,
+                        chunk_tokens,
                         // Parked adoptions count as decode load — the
                         // live analog of the simulator's decode_wait
                         // queue contributing to running_tokens.
@@ -225,6 +256,17 @@ impl Coordinator {
                     }
                 })
                 .collect(),
+            change_epoch: self.snapshot_epoch,
+        }
+    }
+
+    /// Remove a request from an engine's dispatch queue, keeping the
+    /// O(1) aggregates in lockstep. The coordinator observes no chunk
+    /// progress, so the removed task's `remaining` equals its length.
+    fn unqueue_prefill(&mut self, engine: usize, req: u64) {
+        if let Some(pos) = self.queued[engine].iter().position(|&(r, _)| r == req) {
+            let (_, len) = self.queued[engine].remove(pos);
+            self.moments[engine].remove_task(len, len, self.chunks[engine]);
         }
     }
 
@@ -324,9 +366,11 @@ impl Coordinator {
             self.finish(req, Vec::new());
             return;
         }
-        self.queued[t].push((req, prompt.len() as u32));
+        let len = prompt.len() as u32;
+        self.queued[t].push((req, len));
+        self.moments[t].add_task(len, len, self.chunks[t]);
         if self.engines[t].send(EngineCmd::Prefill { req, prompt }).is_err() {
-            self.queued[t].retain(|&(r2, _)| r2 != req);
+            self.unqueue_prefill(t, req);
             self.finish(req, Vec::new());
         }
     }
@@ -372,12 +416,14 @@ impl Coordinator {
                 self.registry.lock().unwrap().push(handle.clone_handle());
                 self.engines.push(handle);
                 self.queued.push(Vec::new());
+                self.moments.push(PrefillQueueMoments::default());
                 self.decoding.push(Vec::new());
                 self.life.push(Liveness::Active);
                 // Startup-equivalent profiling: identical artifacts on
                 // this host, so the joiner inherits the fitted curve and
                 // contributes its own reported KV capacity.
                 let predictor = self.profile.predictors[0].clone();
+                self.chunks.push(predictor.chunk_tokens());
                 self.profile.predictors.push(predictor);
                 self.profile
                     .max_running_tokens
@@ -431,6 +477,7 @@ impl Coordinator {
                 // KV died with the engine). Stateless instances make this
                 // a pure re-placement — no session state to rebuild.
                 let queued: Vec<u64> = self.queued[engine].drain(..).map(|(r, _)| r).collect();
+                self.moments[engine] = PrefillQueueMoments::default();
                 let decoding: Vec<u64> = std::mem::take(&mut self.decoding[engine]);
                 let n = queued.len() + decoding.len();
                 for req in queued.into_iter().chain(decoding) {
@@ -481,7 +528,7 @@ impl Coordinator {
                     // already re-dispatched elsewhere — ignore.
                     return;
                 }
-                self.queued[engine].retain(|&(r, _)| r != req);
+                self.unqueue_prefill(engine, req);
                 let max_tokens = match self.inflight.get_mut(&req) {
                     Some(fl) => {
                         // First token exists now — wall-clock TTFT.
@@ -549,7 +596,7 @@ impl Coordinator {
                     return;
                 }
                 eprintln!("request {req} failed: {error}");
-                self.queued[engine].retain(|&(r, _)| r != req);
+                self.unqueue_prefill(engine, req);
                 self.finish(req, Vec::new());
             }
         }
@@ -660,6 +707,12 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
         engines: engines.iter().map(|e| e.clone_handle()).collect(),
         policy,
         queued: (0..cfg.instances).map(|_| Vec::new()).collect(),
+        moments: vec![PrefillQueueMoments::default(); cfg.instances],
+        chunks: profile
+            .predictors
+            .iter()
+            .map(|p| p.chunk_tokens())
+            .collect(),
         decoding: (0..cfg.instances).map(|_| Vec::new()).collect(),
         life: vec![Liveness::Active; cfg.instances],
         profile,
@@ -672,6 +725,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
         done: Arc::clone(&done),
         sched: Arc::clone(&sched),
         started: Instant::now(),
+        snapshot_epoch: 0,
     };
     coord.publish_sched(); // initial pool split visible before traffic
     coord.publish_membership(); // …and the initial membership table

@@ -23,14 +23,27 @@
 //!   and the no-allocation rule (ROADMAP "Scheduling core") binds the
 //!   *simulator* adapter, which stays borrow-only.
 
-use crate::sched::{ClusterView, Liveness};
+use crate::sched::{ClusterView, Liveness, PrefillQueueMoments, EPOCH_UNKNOWN};
 
 /// One engine's scheduler-visible state, materialized at decision time.
 #[derive(Debug, Clone)]
 pub struct EngineSnapshot {
     /// `(input_len, remaining)` of every prefill dispatched to this
-    /// engine and not yet completed, in dispatch order.
+    /// engine and not yet completed, in dispatch order. Feeds the
+    /// queue-walk view (`for_each_queued_prefill`) — which since PR 4
+    /// only the debug-mode moments oracle and conformance tests consume.
+    /// The live coordinator therefore fills it **in debug builds only**
+    /// (release snapshots leave it empty and carry just the O(1)
+    /// `moments`); the conformance mirrors always populate it.
     pub queued_prefills: Vec<(u32, u32)>,
+    /// O(1) aggregates of `queued_prefills` (PR 4): the coordinator
+    /// maintains them incrementally at dispatch / PrefillDone / failure
+    /// time with the exact update rules the simulator uses, so equal
+    /// queues produce bit-identical placement keys on both substrates.
+    pub moments: PrefillQueueMoments,
+    /// Chunk the engine's fitted predictor (and therefore `moments`)
+    /// prices per-iteration overhead with.
+    pub chunk_tokens: u32,
     /// Total KV tokens resident for decode (running-tokens metric).
     pub running_tokens: u64,
     /// KV capacity in tokens.
@@ -48,6 +61,15 @@ pub struct EngineSnapshot {
 #[derive(Debug, Clone)]
 pub struct ServerView {
     pub engines: Vec<EngineSnapshot>,
+    /// Change epoch forwarded to policies. Engine load counters advance
+    /// asynchronously in engine threads, so the live coordinator can
+    /// never claim two *different* snapshots are change-free — it stamps
+    /// each materialized snapshot with a fresh monotone value instead,
+    /// which still collapses the several policy reads *within* one
+    /// decision into the O(1) skip path. Conformance mirrors report
+    /// [`EPOCH_UNKNOWN`] (always verify); scripted tests may supply real
+    /// epochs to exercise the fast path.
+    pub change_epoch: u64,
 }
 
 impl ClusterView for ServerView {
@@ -56,9 +78,33 @@ impl ClusterView for ServerView {
     }
 
     fn for_each_queued_prefill(&self, inst: usize, f: &mut dyn FnMut(u32, u32)) {
-        for &(input_len, remaining) in &self.engines[inst].queued_prefills {
+        let e = &self.engines[inst];
+        // Live release snapshots carry only the O(1) moments (the queue
+        // list is materialized for the debug oracle and conformance
+        // mirrors). A walk against an unmaterialized queue must fail
+        // loudly — silently pricing every queue as empty would pile all
+        // prefills onto one engine. Walks are off the release placement
+        // path, so this guard costs nothing where it matters.
+        assert!(
+            e.queued_prefills.len() as u64 == e.moments.count,
+            "queue walk on a snapshot without materialized queues — live release \
+             snapshots carry only moments; use prefill_queue_moments()"
+        );
+        for &(input_len, remaining) in &e.queued_prefills {
             f(input_len, remaining);
         }
+    }
+
+    fn prefill_queue_moments(&self, inst: usize) -> PrefillQueueMoments {
+        self.engines[inst].moments
+    }
+
+    fn prefill_chunk_tokens(&self, inst: usize) -> u32 {
+        self.engines[inst].chunk_tokens
+    }
+
+    fn change_epoch(&self) -> u64 {
+        self.change_epoch
     }
 
     fn running_tokens(&self, inst: usize) -> u64 {
@@ -74,7 +120,9 @@ impl ClusterView for ServerView {
     }
 
     fn has_prefill_work(&self, inst: usize) -> bool {
-        !self.engines[inst].queued_prefills.is_empty()
+        // From the moments, not the queue list: the live coordinator
+        // only materializes `queued_prefills` in debug builds.
+        self.engines[inst].moments.count > 0
     }
 
     fn has_decode_work(&self, inst: usize) -> bool {
@@ -98,6 +146,12 @@ pub fn mirror_sim_instances(insts: &[crate::engine::SimInstance]) -> ServerView 
             .iter()
             .map(|i| EngineSnapshot {
                 queued_prefills: i.prefill_queue_iter().collect(),
+                // The instance's incrementally maintained aggregates are
+                // copied verbatim — integer moments are path-independent,
+                // so a coordinator rebuilding them from the queue view
+                // lands on the same bits (tests/prop_predictor.rs).
+                moments: i.prefill_queue_moments(),
+                chunk_tokens: i.chunk_tokens,
                 running_tokens: i.running_tokens(),
                 max_kv_tokens: i.cost.max_kv_tokens,
                 avg_token_interval: i.avg_token_interval(),
@@ -105,6 +159,7 @@ pub fn mirror_sim_instances(insts: &[crate::engine::SimInstance]) -> ServerView 
                 liveness: i.life,
             })
             .collect(),
+        change_epoch: EPOCH_UNKNOWN,
     }
 }
 
@@ -130,8 +185,15 @@ mod tests {
     use super::*;
 
     fn snap(queued: Vec<(u32, u32)>, running: u64, decode: bool) -> EngineSnapshot {
+        let chunk = crate::sched::DEFAULT_CHUNK_TOKENS;
+        let mut moments = PrefillQueueMoments::default();
+        for &(l, r) in &queued {
+            moments.add_task(l, r, chunk);
+        }
         EngineSnapshot {
             queued_prefills: queued,
+            moments,
+            chunk_tokens: chunk,
             running_tokens: running,
             max_kv_tokens: 1000,
             avg_token_interval: f64::NAN,
@@ -144,6 +206,7 @@ mod tests {
     fn view_reads_snapshot_table() {
         let v = ServerView {
             engines: vec![snap(vec![(100, 100), (50, 50)], 0, false), snap(vec![], 70, true)],
+            change_epoch: EPOCH_UNKNOWN,
         };
         assert_eq!(ClusterView::n_instances(&v), 2);
         assert_eq!(v.queued_prefill_tokens(0), 150);
@@ -154,6 +217,13 @@ mod tests {
         let mut order = Vec::new();
         v.for_each_queued_prefill(0, &mut |l, r| order.push((l, r)));
         assert_eq!(order, vec![(100, 100), (50, 50)]);
+        // The snapshot's maintained moments are what the view serves, and
+        // they agree with the walk-derived oracle.
+        assert_eq!(
+            v.prefill_queue_moments(0),
+            PrefillQueueMoments::derive_walk(&v, 0)
+        );
+        assert_eq!(v.change_epoch(), EPOCH_UNKNOWN);
     }
 
     #[test]
@@ -164,6 +234,7 @@ mod tests {
         dead.liveness = Liveness::Dead;
         let v = ServerView {
             engines: vec![snap(vec![], 0, false), draining, dead],
+            change_epoch: EPOCH_UNKNOWN,
         };
         assert!(v.liveness(0).placeable() && v.liveness(0).in_cluster());
         assert!(!v.liveness(1).placeable() && v.liveness(1).in_cluster());

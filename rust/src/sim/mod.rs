@@ -50,7 +50,7 @@ use std::sync::Arc;
 use crate::costmodel::CostModel;
 use crate::engine::{IterationPlan, Produced, SimInstance, Transfer, TransferFabric};
 use crate::request::{InstanceId, Request, RequestId, RequestRecord, RequestState, Time};
-use crate::sched::{Liveness, MembershipEvent};
+use crate::sched::{Epoched, Liveness, MembershipEvent};
 use crate::trace::Trace;
 
 pub use policy::Policy;
@@ -228,6 +228,12 @@ pub struct Cluster {
     fetch_wait: Vec<VecDeque<(usize, usize)>>,
     /// Reusable buffer for iteration-completion events.
     produced_buf: Vec<Produced>,
+    /// Mutation clock (PR 4): bumped whenever any instance's
+    /// scheduler-visible load state (prefill queue, decode tokens)
+    /// changes. Policy calls receive it through `sched::Epoched`, so a
+    /// policy whose last decision saw the same clock value can skip its
+    /// argmin-index refresh entirely.
+    clock: u64,
     done: usize,
     timeline: Vec<InstantSnapshot>,
     cfg: SimConfig,
@@ -266,6 +272,7 @@ impl Cluster {
             membership_schedule: Vec::new(),
             fetch_wait: (0..n).map(|_| VecDeque::new()).collect(),
             produced_buf: Vec::new(),
+            clock: 0,
             done: 0,
             timeline: Vec::new(),
             cfg,
@@ -291,6 +298,21 @@ impl Cluster {
             kind,
         }));
     }
+
+    /// Record that instance load state changed. Call sites are exactly
+    /// the mutations a placement key can depend on (enqueue, adopt,
+    /// iteration completion, failure teardown); a missed bump would let a
+    /// policy act on a stale argmin index, so when in doubt, bump — a
+    /// spurious bump only costs one aggregate-compare scan.
+    fn touch(&mut self) {
+        self.clock += 1;
+    }
+
+    // Policy-facing views are built inline as
+    // `Epoched(SimView(&self.instances), self.clock)` at each call site:
+    // a helper method would borrow the whole `Cluster` and collide with
+    // the `&mut self.policy` receiver (the disjoint-field-borrow pattern
+    // from PR 1).
 
     /// Mark which instances are live at t=0 (the rest join later via the
     /// membership schedule). Must cover the whole table.
@@ -443,9 +465,11 @@ impl Cluster {
         // Disjoint field borrows: the policy reads the instance table
         // (through the zero-cost SimView adapter) while being mutated
         // itself — no take()/put-back, no clone.
-        let target = self
-            .policy
-            .place_prefill(self.now, &req, &SimView(&self.instances));
+        let target = self.policy.place_prefill(
+            self.now,
+            &req,
+            &Epoched(SimView(&self.instances), self.clock),
+        );
 
         let inst = &mut self.instances[target.0];
         if !inst.life.in_cluster() {
@@ -468,6 +492,7 @@ impl Cluster {
         self.records[idx].prefill_instance = Some(target);
         self.records[idx].state = RequestState::Prefilling;
         inst.enqueue_prefill(req.id, req.input_len);
+        self.touch();
         self.kick(target.0);
     }
 
@@ -483,6 +508,7 @@ impl Cluster {
         // `self` while handlers below re-borrow `self` mutably.
         let mut produced = std::mem::take(&mut self.produced_buf);
         self.instances[i].finish_iteration_into(&plan, self.now, &mut produced);
+        self.touch();
         let mut freed_memory = false;
         for p in produced.drain(..) {
             match p {
@@ -535,7 +561,7 @@ impl Cluster {
             self.now,
             &req,
             InstanceId(prefill_inst),
-            &SimView(&self.instances),
+            &Epoched(SimView(&self.instances), self.clock),
         );
         self.records[idx].decode_instance = Some(target);
 
@@ -543,6 +569,7 @@ impl Cluster {
         if target.0 == prefill_inst {
             // Local handoff — no KV migration (paper §5.3).
             self.instances[prefill_inst].adopt_local_decode(req.id, kv_tokens, remaining);
+            self.touch();
             self.records[idx].state = RequestState::DecodeQueued;
             self.kick(prefill_inst);
         } else {
@@ -645,6 +672,7 @@ impl Cluster {
         let ok = self.instances[to].try_reserve_kv(kv as u64);
         debug_assert!(ok, "reservation accounting broken");
         self.instances[to].enqueue_decode(req.id, kv, req.output_len - 1);
+        self.touch();
         self.records[idx].state = RequestState::DecodeQueued;
         // Source memory freed: it can admit fetches/prefill again.
         self.start_fetches(from);
@@ -663,7 +691,7 @@ impl Cluster {
         self.policy.on_membership(
             self.now,
             ev,
-            &SimView(&self.instances),
+            &Epoched(SimView(&self.instances), self.clock),
             &SimView(&self.instances),
         );
     }
@@ -738,6 +766,7 @@ impl Cluster {
         //    decode KV are lost — those requests restart from scratch.
         let mut lost: Vec<RequestId> = Vec::new();
         self.instances[i].drain_request_ids(&mut lost);
+        self.touch();
         // 2. Requests elsewhere waiting to fetch KV *out of* the dead
         //    instance: their parked KV is gone — restart too.
         let mut lost_sources: Vec<usize> = Vec::new();
@@ -815,12 +844,13 @@ impl Cluster {
             self.now,
             &req,
             InstanceId(from),
-            &SimView(&self.instances),
+            &Epoched(SimView(&self.instances), self.clock),
         );
         self.records[idx].decode_instance = Some(target);
         if target.0 == from {
             // The KV is parked right here — local adoption.
             self.instances[from].adopt_local_decode(req.id, req.input_len, req.output_len - 1);
+            self.touch();
             self.records[idx].state = RequestState::DecodeQueued;
             self.kick(from);
         } else {
@@ -831,7 +861,8 @@ impl Cluster {
     }
 
     fn on_monitor_tick(&mut self) {
-        self.policy.on_tick(self.now, &SimView(&self.instances));
+        self.policy
+            .on_tick(self.now, &Epoched(SimView(&self.instances), self.clock));
 
         if self.cfg.record_timeline {
             let pools = self.policy.pool_sizes();

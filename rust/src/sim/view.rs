@@ -14,7 +14,7 @@
 
 use crate::coordinator::predictor::TtftPredictor;
 use crate::engine::SimInstance;
-use crate::sched::{ClusterView, Liveness, ProfileSource};
+use crate::sched::{ClusterView, Liveness, PrefillQueueMoments, ProfileSource};
 
 /// Zero-cost [`ClusterView`] over the simulator's instance table.
 pub struct SimView<'a>(pub &'a [SimInstance]);
@@ -29,6 +29,21 @@ impl ClusterView for SimView<'_> {
             f(input_len, remaining);
         }
     }
+
+    fn prefill_queue_moments(&self, inst: usize) -> PrefillQueueMoments {
+        // O(1): the instance maintains the aggregates at event time
+        // (PR 4); the trait's walk-derived default must never run here.
+        self.0[inst].prefill_queue_moments()
+    }
+
+    fn prefill_chunk_tokens(&self, inst: usize) -> u32 {
+        self.0[inst].chunk_tokens
+    }
+
+    // change_epoch: deliberately the default (EPOCH_UNKNOWN). A bare
+    // borrow of the instance table can't prove change history; the event
+    // loop wraps SimView in `sched::Epoched` with its mutation clock to
+    // unlock the O(1) no-change fast path.
 
     fn running_tokens(&self, inst: usize) -> u64 {
         self.0[inst].running_tokens()
@@ -103,6 +118,15 @@ mod tests {
         v.for_each_queued_prefill(0, &mut |l, r| seen.push((l, r)));
         let direct: Vec<(u32, u32)> = insts[0].prefill_queue_iter().collect();
         assert_eq!(seen, direct);
+
+        // The O(1) moment override equals the walk-derived oracle, and
+        // the chunk the moments price with is the instance's own.
+        assert_eq!(
+            v.prefill_queue_moments(0),
+            PrefillQueueMoments::derive_walk(&v, 0)
+        );
+        assert_eq!(v.prefill_chunk_tokens(0), insts[0].chunk_tokens);
+        assert_eq!(v.change_epoch(), crate::sched::EPOCH_UNKNOWN);
     }
 
     #[test]

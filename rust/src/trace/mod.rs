@@ -146,20 +146,28 @@ impl Trace {
     /// published numbers (§3.1).
     pub fn stats(&self) -> TraceStats {
         use crate::util::stats as st;
-        let inputs: Vec<f64> = self.requests.iter().map(|r| r.input_len as f64).collect();
-        let outputs: Vec<f64> = self.requests.iter().map(|r| r.output_len as f64).collect();
+        let mut inputs: Vec<f64> = self.requests.iter().map(|r| r.input_len as f64).collect();
+        let mut outputs: Vec<f64> =
+            self.requests.iter().map(|r| r.output_len as f64).collect();
         let per_min = self.per_minute_load();
         let min_inputs: Vec<f64> = per_min.iter().map(|m| m.input_tokens as f64).collect();
+        // Order-dependent statistics first (pearson needs the pairing,
+        // mean is order-blind), then selection-based percentiles reorder
+        // the same buffers in place — no clone-and-full-sort per
+        // percentile (this runs once per generated trace in the sweeps).
+        let io_correlation = st::pearson(&inputs, &outputs);
+        let mean_input = st::mean(&inputs);
+        let mean_output = st::mean(&outputs);
         TraceStats {
             n: self.len(),
             duration_s: self.duration(),
-            mean_input: st::mean(&inputs),
-            median_input: st::percentile(&inputs, 50.0),
-            p99_input: st::percentile(&inputs, 99.0),
-            mean_output: st::mean(&outputs),
-            median_output: st::percentile(&outputs, 50.0),
-            p99_output: st::percentile(&outputs, 99.0),
-            io_correlation: st::pearson(&inputs, &outputs),
+            mean_input,
+            median_input: st::percentile_in_place(&mut inputs, 50.0),
+            p99_input: st::percentile_in_place(&mut inputs, 99.0),
+            mean_output,
+            median_output: st::percentile_in_place(&mut outputs, 50.0),
+            p99_output: st::percentile_in_place(&mut outputs, 99.0),
+            io_correlation,
             minute_input_cv: st::coeff_of_variation(&min_inputs),
         }
     }

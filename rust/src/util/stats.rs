@@ -30,6 +30,38 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Non-allocating percentile via selection instead of a full sort:
+/// `select_nth_unstable_by` partitions around the lower interpolation
+/// rank in O(n), then the upper neighbour (when the rank is fractional)
+/// is the minimum of the upper partition. Same convention as
+/// [`percentile`] — linear interpolation, `total_cmp` order, so NaN
+/// samples rank last and never panic. Reorders `xs` (callers on the hot
+/// path own scratch buffers anyway); returns NaN on empty input.
+pub fn percentile_in_place(xs: &mut [f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let n = xs.len();
+    if n == 1 {
+        return xs[0];
+    }
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let frac = rank - lo as f64;
+    let (_, lo_v, upper) = xs.select_nth_unstable_by(lo, f64::total_cmp);
+    let lo_v = *lo_v;
+    if frac == 0.0 {
+        return lo_v;
+    }
+    // rank < n-1 here, so the upper partition is non-empty.
+    let hi_v = upper
+        .iter()
+        .copied()
+        .min_by(|a, b| a.total_cmp(b))
+        .expect("fractional rank implies a non-empty upper partition");
+    lo_v * (1.0 - frac) + hi_v * frac
+}
+
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -307,6 +339,42 @@ mod tests {
     #[test]
     fn percentile_single() {
         assert_eq!(percentile(&[7.0], 90.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_in_place_matches_sort_based() {
+        let mut r = crate::util::rng::Rng::new(9);
+        for n in [1usize, 2, 3, 7, 64, 501] {
+            let xs: Vec<f64> = (0..n).map(|_| r.normal() * 10.0).collect();
+            for p in [0.0, 12.5, 50.0, 90.0, 99.0, 100.0] {
+                let mut scratch = xs.clone();
+                let got = percentile_in_place(&mut scratch, p);
+                let want = percentile(&xs, p);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "n={n} p={p}: {got} != {want}"
+                );
+            }
+        }
+        assert!(percentile_in_place(&mut [], 50.0).is_nan());
+        assert_eq!(percentile_in_place(&mut [7.0], 90.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_in_place_nan_convention_matches_total_cmp() {
+        // NaN ranks last (total_cmp), exactly like the sorting path: mid
+        // percentiles of mostly-clean data stay meaningful, the max is
+        // poisoned.
+        let xs = [2.0, f64::NAN, 1.0, 3.0];
+        let mut scratch = xs;
+        let p50 = percentile_in_place(&mut scratch, 50.0);
+        assert!((p50 - 2.5).abs() < 1e-12, "p50={p50}");
+        let mut scratch = xs;
+        assert!(percentile_in_place(&mut scratch, 100.0).is_nan());
+        // All-NaN input: every percentile is NaN, never a panic.
+        let mut all_nan = [f64::NAN; 3];
+        assert!(percentile_in_place(&mut all_nan, 50.0).is_nan());
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! Moments-vs-walk conformance property test (PR 4 tentpole lock).
+//!
+//! The placement hot path prices queue delay from incrementally
+//! maintained integer moments (`PrefillQueueMoments`) instead of walking
+//! the queue. This property test drives arbitrary interleavings of
+//! enqueue / chunked progress / completion / membership churn and
+//! asserts, after every op and in lockstep through BOTH adapters
+//! (`sim::SimView` over the live instance table, and a scripted
+//! `server::view::ServerView` maintained with the coordinator's update
+//! rules):
+//!
+//! 1. **Exact aggregates** — the incrementally maintained moments equal
+//!    the walk-derived moments bit-for-bit (integer path independence).
+//! 2. **Delay equivalence** — `queue_delay_moments` equals the
+//!    `queue_delay_view` walk within 1e-9 relative.
+//! 3. **Cross-substrate identity** — the scripted coordinator's
+//!    *independently maintained* moments price bit-identically to the
+//!    sim's (both served through a real `ServerView` snapshot), so the
+//!    two substrates key placements identically despite never sharing
+//!    state.
+
+use arrow::coordinator::predictor::TtftPredictor;
+use arrow::costmodel::CostModel;
+use arrow::engine::{Produced, SimInstance};
+use arrow::prop_assert;
+use arrow::request::{InstanceId, RequestId};
+use arrow::sched::{ClusterView, Liveness, PrefillQueueMoments, EPOCH_UNKNOWN};
+use arrow::server::view::{EngineSnapshot, ServerView};
+use arrow::sim::SimView;
+use arrow::util::{prop, rng::Rng};
+
+/// A scripted coordinator: maintains per-instance moments with the same
+/// incremental rules the live server uses (add on dispatch, advance on
+/// observed chunk progress, pop on completion, reset on failure) —
+/// *without* ever walking the queue.
+struct ScriptedCoordinator {
+    moments: Vec<PrefillQueueMoments>,
+    /// (input_len, remaining) ledger, only consulted to know the head's
+    /// remaining at advance time (the live analog: PrefillDone events).
+    ledger: Vec<Vec<(u32, u32)>>,
+    chunk: u32,
+}
+
+impl ScriptedCoordinator {
+    fn new(n: usize, chunk: u32) -> Self {
+        ScriptedCoordinator {
+            moments: vec![PrefillQueueMoments::default(); n],
+            ledger: vec![Vec::new(); n],
+            chunk,
+        }
+    }
+
+    fn dispatch(&mut self, i: usize, len: u32) {
+        self.moments[i].add_task(len, len, self.chunk);
+        self.ledger[i].push((len, len));
+    }
+
+    fn advance_head(&mut self, i: usize, chunk: u32) {
+        let (len, rem) = self.ledger[i][0];
+        let new_rem = rem - chunk.min(rem);
+        self.moments[i].advance_head(len, rem, new_rem, self.chunk);
+        self.ledger[i][0].1 = new_rem;
+    }
+
+    fn pop_head(&mut self, i: usize) {
+        let (_, rem) = self.ledger[i].remove(0);
+        assert_eq!(rem, 0, "head popped before it finished");
+        self.moments[i].pop_finished_head();
+    }
+
+    fn fail(&mut self, i: usize) {
+        self.moments[i] = PrefillQueueMoments::default();
+        self.ledger[i].clear();
+    }
+
+    /// Materialize the live-server snapshot this coordinator would build
+    /// — its OWN moments, never copied from the sim side, so the
+    /// cross-substrate comparison exercises an independent update
+    /// history.
+    fn view(&self) -> ServerView {
+        ServerView {
+            engines: (0..self.moments.len())
+                .map(|i| EngineSnapshot {
+                    queued_prefills: self.ledger[i].clone(),
+                    moments: self.moments[i],
+                    chunk_tokens: self.chunk,
+                    running_tokens: 0,
+                    max_kv_tokens: u64::MAX,
+                    avg_token_interval: f64::NAN,
+                    has_decode_work: false,
+                    liveness: Liveness::Active,
+                })
+                .collect(),
+            change_epoch: EPOCH_UNKNOWN,
+        }
+    }
+}
+
+/// The production coordinator's actual rule set is different from the
+/// sim's: it never observes chunk progress — only `add_task` at
+/// dispatch, `remove_task(len, len)` at PrefillDone/Failed (from any
+/// queue position), and a full reset on engine failure. Drive exactly
+/// those ops under churn and assert the moments always equal a fresh
+/// derivation from the ledger (and price within tolerance of the walk).
+#[test]
+fn prop_server_dequeue_rules_keep_moments_exact() {
+    prop::check_with(173, 64, |rng: &mut Rng| {
+        let cost = CostModel::h800_llama8b();
+        let chunk = 2048u32;
+        let pred = TtftPredictor::profile(&cost, chunk);
+        let mut moments = PrefillQueueMoments::default();
+        let mut ledger: Vec<(u32, u32)> = Vec::new();
+        for step in 0..80u64 {
+            match rng.index(5) {
+                0 | 1 | 2 => {
+                    let len = rng.int_range(64, 50_000) as u32;
+                    moments.add_task(len, len, chunk);
+                    ledger.push((len, len));
+                }
+                3 if !ledger.is_empty() => {
+                    // PrefillDone / Failed can complete ANY dispatched
+                    // request, not just the head (engines finish out of
+                    // coordinator-queue order under continuous batching).
+                    let pos = rng.index(ledger.len());
+                    let (len, rem) = ledger.remove(pos);
+                    moments.remove_task(len, rem, chunk);
+                }
+                4 => {
+                    // Engine failure: the whole queue re-dispatches.
+                    moments = PrefillQueueMoments::default();
+                    ledger.clear();
+                }
+                _ => {}
+            }
+            let mut derived = PrefillQueueMoments::default();
+            for &(l, r) in &ledger {
+                derived.add_task(l, r, chunk);
+            }
+            prop_assert!(
+                moments == derived,
+                "step {step}: maintained {moments:?} != derived {derived:?}"
+            );
+            let via_moments = pred.queue_delay_moments(&moments);
+            let via_walk = pred.queue_delay_iter(ledger.iter().copied());
+            let tol = 1e-9 * via_walk.abs().max(1.0);
+            prop_assert!(
+                (via_moments - via_walk).abs() <= tol,
+                "step {step}: {via_moments} vs walk {via_walk}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_incremental_moments_equal_walk_under_churn() {
+    prop::check_with(131, 48, |rng: &mut Rng| {
+        let n = rng.index(4) + 2; // 2..=5 instances
+        let cost = CostModel::h800_llama8b();
+        let mut insts: Vec<SimInstance> = (0..n)
+            .map(|i| SimInstance::new(InstanceId(i), cost.clone()))
+            .collect();
+        let chunk = insts[0].chunk_tokens;
+        let preds: Vec<TtftPredictor> = insts
+            .iter()
+            .map(|i| TtftPredictor::profile(&i.cost, i.chunk_tokens))
+            .collect();
+        let mut coord = ScriptedCoordinator::new(n, chunk);
+        let mut next = 0u64;
+
+        for step in 0..60u64 {
+            let i = rng.index(n);
+            match rng.index(4) {
+                0 | 1 => {
+                    // Enqueue a prefill on both substrates.
+                    let len = rng.int_range(64, 40_000) as u32;
+                    insts[i].enqueue_prefill(RequestId(next), len);
+                    coord.dispatch(i, len);
+                    next += 1;
+                }
+                2 => {
+                    // One engine iteration: the sim advances its head
+                    // chunk; the scripted coordinator applies the same
+                    // observed progress (chunk size + completion event).
+                    if let Some(plan) = insts[i].plan_iteration() {
+                        if plan.chunk > 0 {
+                            coord.advance_head(i, plan.chunk);
+                        }
+                        for p in insts[i].finish_iteration(&plan, step as f64) {
+                            if let Produced::PrefillDone { kv_tokens, .. } = p {
+                                coord.pop_head(i);
+                                insts[i].migration_out_done(kv_tokens);
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    // Membership churn: the instance fails and loses its
+                    // queue on both substrates.
+                    let mut scrap = Vec::new();
+                    insts[i].drain_request_ids(&mut scrap);
+                    coord.fail(i);
+                }
+            }
+
+            // 1. Incremental == walk-derived, exactly, on every slot.
+            let sim_view = SimView(&insts);
+            for j in 0..n {
+                let inc = sim_view.prefill_queue_moments(j);
+                let walk = PrefillQueueMoments::derive_walk(&sim_view, j);
+                prop_assert!(
+                    inc == walk,
+                    "step {step} inst {j}: sim moments {inc:?} != walk {walk:?}"
+                );
+                prop_assert!(
+                    coord.moments[j] == walk,
+                    "step {step} inst {j}: scripted moments {:?} != walk {walk:?}",
+                    coord.moments[j]
+                );
+            }
+
+            // 2./3. Delay equivalence, and cross-substrate bit identity
+            // against the coordinator's INDEPENDENT bookkeeping served
+            // through a real ServerView snapshot.
+            let srv_view = coord.view();
+            for j in 0..n {
+                let via_walk = preds[j].queue_delay_view(&sim_view, j);
+                let via_moments = preds[j].queue_delay_moments(&sim_view.prefill_queue_moments(j));
+                let tol = 1e-9 * via_walk.abs().max(1.0);
+                prop_assert!(
+                    (via_moments - via_walk).abs() <= tol,
+                    "step {step} inst {j}: moments {via_moments} vs walk {via_walk}"
+                );
+                let via_server =
+                    preds[j].queue_delay_moments(&srv_view.prefill_queue_moments(j));
+                prop_assert!(
+                    via_server.to_bits() == via_moments.to_bits(),
+                    "step {step} inst {j}: substrates disagree ({via_server} vs {via_moments})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
