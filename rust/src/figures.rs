@@ -420,6 +420,34 @@ pub fn fig9(opts: &FigOpts) {
     write_json(opts, "fig9.json", &Json::Arr(out));
 }
 
+// ---------------------------------------------------------------------------
+// Paper-claims conformance (PR 5) — the `arrow claims` subcommand
+// ---------------------------------------------------------------------------
+
+/// Run the paper-claims conformance sweep under the normalized cost
+/// model, print the verdict table, and write `claims.json` next to the
+/// figure outputs. Returns whether every claim held — the CLI exits
+/// non-zero otherwise, which is how ci.sh gates it.
+pub fn claims(opts: &FigOpts, smoke: bool) -> bool {
+    let mut cfg = if smoke {
+        crate::harness::ClaimsConfig::smoke()
+    } else {
+        crate::harness::ClaimsConfig::full()
+    };
+    cfg.seed = opts.seed;
+    cfg.gpus = opts.gpus;
+    cfg.workers = opts.workers;
+    cfg.target = opts.target;
+    if !smoke {
+        // Smoke keeps its own (capped) clip; full follows --clip.
+        cfg.clip_seconds = opts.clip_seconds;
+    }
+    let report = crate::harness::run_claims(&cfg);
+    print!("{}", report.summary());
+    write_json(opts, "claims.json", &report.to_json());
+    report.all_hold()
+}
+
 /// Run everything (the `figures all` subcommand).
 pub fn all(opts: &FigOpts) {
     table1(opts);

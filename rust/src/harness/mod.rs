@@ -1,0 +1,670 @@
+//! Paper-claims conformance harness (PR 5).
+//!
+//! Arrow's headline result — up to 2.55× higher sustainable request rates
+//! than static Prefill–Decode splits under fluctuating input/output
+//! lengths — is a claim about the *scheduler*, not about one GPU. This
+//! module makes it machine-checkable on every commit: it sweeps all six
+//! evaluated systems across the Table-1 workloads under the dimensionless
+//! [`CostModel::normalized`] preset, measures per-system sweeps and
+//! maximum sustainable rates ([`crate::metrics::max_sustainable_rate`]),
+//! and condenses the paper's qualitative orderings into [`ClaimVerdict`]s
+//! with explicit tolerance bands:
+//!
+//! * **max-rate ordering** — Arrow sustains at least what every static
+//!   split sustains, per workload;
+//! * **goodput ordering at the stress point** — at the first swept rate
+//!   where the best static split misses the attainment target, Arrow's
+//!   goodput is at least each split's (the burst/imbalance regime where
+//!   adaptivity is supposed to pay);
+//! * **degradation shapes** (burst workload) — the colocated system's
+//!   P90 TTFT inflates under load while its decode-prioritized TPOT stays
+//!   inside the SLO, and Arrow's disaggregated TPOT stays inside the SLO
+//!   even past saturation (§7.2's observation).
+//!
+//! `tests/claims.rs` asserts the verdicts; `arrow claims` emits the full
+//! machine-readable report (same JSON conventions as the `BENCH_*.json`
+//! emitters: one self-describing object, deterministic key order) and
+//! exits non-zero when a claim fails, which is how ci.sh gates it.
+//!
+//! Everything here is deterministic: fixed seed, fixed grid, simulator
+//! runs that are byte-stable across machines. The normalized cost model
+//! is the contract that keeps it so — claims must never depend on
+//! hardware calibration (ROADMAP "Paper-claims conformance").
+
+use crate::costmodel::CostModel;
+use crate::json::Json;
+use crate::metrics::{max_sustainable_rate, SloReport};
+use crate::scenarios::{build, System};
+use crate::trace::catalog::{self, Workload};
+use crate::trace::Trace;
+use crate::util::threads::{default_workers, parallel_map};
+
+/// The §7.1/§7.3 baselines that disaggregate with *fixed* roles — the
+/// systems the paper's "vs static PD disaggregation" claims range over.
+/// The colocated system is deliberately not here: it appears in the
+/// degradation-shape claims instead (its TP=n engine is a different
+/// resource envelope, not a static split of the same one).
+pub const STATIC_SPLITS: [System; 4] = [
+    System::VllmDisaggregated,
+    System::DistServe,
+    System::MinimalLoad,
+    System::RoundRobin,
+];
+
+/// `ARROW_CLAIMS_SMOKE` (the ci.sh knob): truthy when set to anything
+/// but "0"/empty.
+pub fn smoke_env() -> bool {
+    std::env::var("ARROW_CLAIMS_SMOKE").map_or(false, |v| v != "0" && !v.is_empty())
+}
+
+/// Sweep parameters for one conformance run.
+#[derive(Debug, Clone)]
+pub struct ClaimsConfig {
+    pub seed: u64,
+    /// Clip each trace to this many seconds before sweeping.
+    pub clip_seconds: f64,
+    pub gpus: usize,
+    /// Rate multipliers (of the clipped trace's base rate) swept per
+    /// (workload, system). Must be sorted ascending: stress detection
+    /// walks it front to back.
+    pub rate_mults: Vec<f64>,
+    /// SLO attainment target (the paper's 90%).
+    pub target: f64,
+    /// Ordering tolerance band: Arrow may fall short of a baseline by
+    /// this fraction before a claim is called failed (absorbs simulator
+    /// discretization, not scheduling regressions).
+    pub tolerance: f64,
+    /// Relative tolerance of the max-sustainable-rate bisection; its
+    /// quantization error widens the max-rate claim band additively.
+    pub rate_search_tolerance: f64,
+    pub workers: usize,
+    pub smoke: bool,
+}
+
+impl ClaimsConfig {
+    /// The full grid `arrow claims` runs by default.
+    pub fn full() -> ClaimsConfig {
+        ClaimsConfig {
+            seed: 42,
+            clip_seconds: 300.0,
+            gpus: 8,
+            rate_mults: vec![1.0, 2.0, 4.0, 8.0, 12.0, 16.0, 24.0, 32.0],
+            target: 0.9,
+            tolerance: 0.05,
+            rate_search_tolerance: 0.05,
+            workers: default_workers(),
+            smoke: false,
+        }
+    }
+
+    /// CI-budget variant (`ARROW_CLAIMS_SMOKE=1`): short clips, coarse
+    /// rate grid, loose bisection — the same claims, evaluated inside the
+    /// existing bench-gate time budget.
+    ///
+    /// The 120s clip + x32 top multiplier are chosen together so the
+    /// stress point is found through *sustained* saturation: at x32 the
+    /// static splits are ~2x over capacity on azure_code's average rate
+    /// alone, so the smoke gate does not depend on whether the clip
+    /// happens to contain burst minutes (a 60s clip left the orderings
+    /// trivially true on calm clips). The burst-sensitive versions of the
+    /// same claims run on the 300s clip in `tests/claims.rs` and the full
+    /// grid.
+    pub fn smoke() -> ClaimsConfig {
+        ClaimsConfig {
+            clip_seconds: 120.0,
+            rate_mults: vec![2.0, 8.0, 32.0],
+            rate_search_tolerance: 0.2,
+            smoke: true,
+            ..ClaimsConfig::full()
+        }
+    }
+
+    /// Full or smoke, per the `ARROW_CLAIMS_SMOKE` environment knob.
+    pub fn from_env() -> ClaimsConfig {
+        if smoke_env() {
+            ClaimsConfig::smoke()
+        } else {
+            ClaimsConfig::full()
+        }
+    }
+
+    /// Claim band for max-rate orderings: the ordering tolerance widened
+    /// by the bisection's own quantization.
+    fn rate_band(&self) -> f64 {
+        (1.0 - self.tolerance - self.rate_search_tolerance).max(0.0)
+    }
+}
+
+/// One (rate multiplier, simulated run) sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub rate_mult: f64,
+    /// Absolute request rate (req/s) this point ran at.
+    pub rate: f64,
+    pub report: SloReport,
+}
+
+/// One system's measurements on one workload.
+#[derive(Debug, Clone)]
+pub struct SystemOutcome {
+    pub system: System,
+    pub sweep: Vec<SweepPoint>,
+    /// Maximum request rate sustaining the attainment target (req/s).
+    pub max_sustainable: f64,
+}
+
+impl SystemOutcome {
+    /// Sweep report at multiplier `m` (must be on the configured grid).
+    pub fn at_mult(&self, m: f64) -> &SloReport {
+        &self
+            .sweep
+            .iter()
+            .find(|p| p.rate_mult == m)
+            .unwrap_or_else(|| panic!("rate multiplier {m} not on the sweep grid"))
+            .report
+    }
+}
+
+/// All six systems' measurements on one Table-1 workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadOutcome {
+    pub workload: String,
+    pub ttft_slo: f64,
+    pub tpot_slo: f64,
+    /// Base request rate of the clipped trace (req/s).
+    pub base_rate: f64,
+    pub n_requests: usize,
+    pub systems: Vec<SystemOutcome>,
+    /// The claims stress point: the first swept multiplier at which the
+    /// *best* static split misses the attainment target — i.e. the
+    /// lightest overload regime, where adaptive scheduling is supposed to
+    /// separate from static splits. Falls back to the last multiplier
+    /// when every split sustains the whole grid.
+    pub stress_mult: f64,
+}
+
+impl WorkloadOutcome {
+    pub fn system(&self, s: System) -> &SystemOutcome {
+        self.systems
+            .iter()
+            .find(|o| o.system == s)
+            .unwrap_or_else(|| panic!("system {} not swept", s.label()))
+    }
+}
+
+/// One paper claim, evaluated: `holds` iff `measured >= bound`.
+#[derive(Debug, Clone)]
+pub struct ClaimVerdict {
+    pub workload: String,
+    pub claim: String,
+    pub holds: bool,
+    pub measured: f64,
+    pub bound: f64,
+    pub detail: String,
+}
+
+/// The full conformance report: measurements plus verdicts.
+#[derive(Debug, Clone)]
+pub struct ClaimsReport {
+    pub cfg: ClaimsConfig,
+    /// Which cost model the sweep ran under (always "normalized": claims
+    /// are scheduler properties, never calibration properties).
+    pub cost_model: &'static str,
+    pub outcomes: Vec<WorkloadOutcome>,
+    pub verdicts: Vec<ClaimVerdict>,
+}
+
+impl ClaimsReport {
+    pub fn all_hold(&self) -> bool {
+        self.verdicts.iter().all(|v| v.holds)
+    }
+
+    pub fn failed(&self) -> Vec<&ClaimVerdict> {
+        self.verdicts.iter().filter(|v| !v.holds).collect()
+    }
+
+    /// Machine-readable report, `BENCH_*.json`-style: one deterministic
+    /// self-describing object.
+    pub fn to_json(&self) -> Json {
+        let workloads: Vec<Json> = self
+            .outcomes
+            .iter()
+            .map(|o| {
+                let systems: Vec<Json> = o
+                    .systems
+                    .iter()
+                    .map(|s| {
+                        let sweep: Vec<Json> = s
+                            .sweep
+                            .iter()
+                            .map(|p| {
+                                Json::obj(vec![
+                                    ("rate_mult", Json::Num(p.rate_mult)),
+                                    ("rate", Json::Num(p.rate)),
+                                    ("slo_attainment", Json::Num(p.report.slo_attainment)),
+                                    ("goodput_tokens", Json::Num(p.report.goodput_tokens)),
+                                    ("token_throughput", Json::Num(p.report.token_throughput)),
+                                    ("p90_ttft", Json::Num(p.report.p90_ttft)),
+                                    ("p90_tpot", Json::Num(p.report.p90_tpot)),
+                                    ("n_finished", Json::Num(p.report.n_finished as f64)),
+                                    ("n_failed", Json::Num(p.report.n_failed as f64)),
+                                ])
+                            })
+                            .collect();
+                        Json::obj(vec![
+                            ("system", Json::Str(s.system.label().into())),
+                            ("max_sustainable_rate", Json::Num(s.max_sustainable)),
+                            ("sweep", Json::Arr(sweep)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("trace", Json::Str(o.workload.clone())),
+                    ("ttft_slo", Json::Num(o.ttft_slo)),
+                    ("tpot_slo", Json::Num(o.tpot_slo)),
+                    ("base_rate", Json::Num(o.base_rate)),
+                    ("n_requests", Json::Num(o.n_requests as f64)),
+                    ("stress_mult", Json::Num(o.stress_mult)),
+                    ("systems", Json::Arr(systems)),
+                ])
+            })
+            .collect();
+        let verdicts: Vec<Json> = self
+            .verdicts
+            .iter()
+            .map(|v| {
+                Json::obj(vec![
+                    ("workload", Json::Str(v.workload.clone())),
+                    ("claim", Json::Str(v.claim.clone())),
+                    ("holds", Json::Bool(v.holds)),
+                    ("measured", Json::Num(v.measured)),
+                    ("bound", Json::Num(v.bound)),
+                    ("detail", Json::Str(v.detail.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("report", Json::Str("claims".into())),
+            ("cost_model", Json::Str(self.cost_model.into())),
+            ("seed", Json::Num(self.cfg.seed as f64)),
+            ("clip_seconds", Json::Num(self.cfg.clip_seconds)),
+            ("gpus", Json::Num(self.cfg.gpus as f64)),
+            ("target", Json::Num(self.cfg.target)),
+            ("tolerance", Json::Num(self.cfg.tolerance)),
+            ("smoke", Json::Bool(self.cfg.smoke)),
+            ("rate_mults", Json::arr_f64(&self.cfg.rate_mults)),
+            ("workloads", Json::Arr(workloads)),
+            ("claims", Json::Arr(verdicts)),
+            ("all_hold", Json::Bool(self.all_hold())),
+        ])
+    }
+
+    /// Human-readable summary (the `arrow claims` stdout table).
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "Paper-claims conformance — {} cost model, {} mode ({} GPUs, seed {}, clip {:.0}s)",
+            self.cost_model,
+            if self.cfg.smoke { "smoke" } else { "full" },
+            self.cfg.gpus,
+            self.cfg.seed,
+            self.cfg.clip_seconds,
+        );
+        for o in &self.outcomes {
+            let _ = writeln!(
+                s,
+                "\n[{}] base {:.2} req/s, {} requests, SLO ttft {}s / tpot {}s, stress x{}",
+                o.workload, o.base_rate, o.n_requests, o.ttft_slo, o.tpot_slo, o.stress_mult
+            );
+            let _ = writeln!(
+                s,
+                "  {:<14} {:>9} {:>11} {:>13} {:>10} {:>10}",
+                "system", "max_rate", "att@stress", "goodput@strs", "p90_ttft", "p90_tpot"
+            );
+            for sys in &o.systems {
+                let r = sys.at_mult(o.stress_mult);
+                let _ = writeln!(
+                    s,
+                    "  {:<14} {:>9.2} {:>11.3} {:>13.1} {:>10.3} {:>10.4}",
+                    sys.system.label(),
+                    sys.max_sustainable,
+                    r.slo_attainment,
+                    r.goodput_tokens,
+                    r.p90_ttft,
+                    r.p90_tpot
+                );
+            }
+        }
+        let n_ok = self.verdicts.iter().filter(|v| v.holds).count();
+        let _ = writeln!(s, "\nclaims: {}/{} hold", n_ok, self.verdicts.len());
+        for v in &self.verdicts {
+            let _ = writeln!(
+                s,
+                "  {} [{}] {} — {}",
+                if v.holds { "ok  " } else { "FAIL" },
+                v.workload,
+                v.claim,
+                v.detail
+            );
+        }
+        s
+    }
+}
+
+/// One simulated point: `system` on `trace` rescaled to `rate`, under the
+/// workload's SLOs and the given cost model.
+fn run_point(
+    sys: System,
+    base: &CostModel,
+    trace: &Trace,
+    w: &Workload,
+    gpus: usize,
+    rate: f64,
+) -> SloReport {
+    let t = trace.with_rate(rate);
+    let cl = build(sys, gpus, base, w.ttft_slo, w.tpot_slo, false);
+    let res = cl.run(&t);
+    SloReport::from_records(&res.records, w.ttft_slo, w.tpot_slo, t.duration())
+}
+
+/// Sweep every system over the grid for one workload, then search each
+/// system's max sustainable rate.
+fn sweep_workload(w: &Workload, base: &CostModel, cfg: &ClaimsConfig) -> WorkloadOutcome {
+    assert!(!cfg.rate_mults.is_empty(), "claims need a non-empty rate grid");
+    let trace = w.generate(cfg.seed).clip_seconds(cfg.clip_seconds);
+    assert!(!trace.is_empty(), "workload {} clipped to nothing", w.name());
+    let base_rate = trace.rate();
+
+    // Grid sweep: system-major job order so the slices below line up.
+    let jobs: Vec<(System, f64)> = System::all()
+        .into_iter()
+        .flat_map(|s| cfg.rate_mults.iter().map(move |&m| (s, m)))
+        .collect();
+    let reports = parallel_map(jobs, cfg.workers, |&(sys, m)| {
+        run_point(sys, base, &trace, w, cfg.gpus, base_rate * m)
+    });
+
+    // Max-rate search per system (independently parallel; each search is
+    // internally sequential by nature of bisection).
+    let max_rates = parallel_map(System::all().to_vec(), cfg.workers, |&sys| {
+        max_sustainable_rate(
+            |rate| run_point(sys, base, &trace, w, cfg.gpus, rate),
+            base_rate,
+            cfg.target,
+            cfg.rate_search_tolerance,
+        )
+    });
+
+    let n_mults = cfg.rate_mults.len();
+    let systems: Vec<SystemOutcome> = System::all()
+        .into_iter()
+        .enumerate()
+        .map(|(si, sys)| SystemOutcome {
+            system: sys,
+            sweep: reports[si * n_mults..(si + 1) * n_mults]
+                .iter()
+                .zip(&cfg.rate_mults)
+                .map(|(rep, &m)| SweepPoint {
+                    rate_mult: m,
+                    rate: base_rate * m,
+                    report: rep.clone(),
+                })
+                .collect(),
+            max_sustainable: max_rates[si],
+        })
+        .collect();
+
+    // Stress point: lightest swept overload of the best static split.
+    let best_static_att = |m: f64| {
+        STATIC_SPLITS
+            .iter()
+            .map(|&s| {
+                systems
+                    .iter()
+                    .find(|o| o.system == s)
+                    .unwrap()
+                    .at_mult(m)
+                    .slo_attainment
+            })
+            .fold(0.0f64, f64::max)
+    };
+    let stress_mult = cfg
+        .rate_mults
+        .iter()
+        .copied()
+        .find(|&m| best_static_att(m) < cfg.target)
+        .unwrap_or(*cfg.rate_mults.last().unwrap());
+
+    WorkloadOutcome {
+        workload: w.name().to_string(),
+        ttft_slo: w.ttft_slo,
+        tpot_slo: w.tpot_slo,
+        base_rate,
+        n_requests: trace.len(),
+        systems,
+        stress_mult,
+    }
+}
+
+/// Evaluate the paper's ordering claims for one swept workload.
+fn verdicts_for(o: &WorkloadOutcome, cfg: &ClaimsConfig) -> Vec<ClaimVerdict> {
+    let mut out = Vec::new();
+    let arrow = o.system(System::Arrow);
+
+    // 1. Max-rate ordering: Arrow sustains >= every static split (band
+    //    widened by the bisection quantization).
+    for &s in &STATIC_SPLITS {
+        let st = o.system(s);
+        let bound = st.max_sustainable * cfg.rate_band();
+        out.push(ClaimVerdict {
+            workload: o.workload.clone(),
+            claim: format!("max_rate:arrow>={}", s.label()),
+            holds: arrow.max_sustainable >= bound,
+            measured: arrow.max_sustainable,
+            bound,
+            detail: format!(
+                "arrow sustains {:.2} req/s vs {} {:.2} (band {:.2})",
+                arrow.max_sustainable,
+                s.label(),
+                st.max_sustainable,
+                cfg.rate_band()
+            ),
+        });
+    }
+
+    // 2. Goodput ordering at the stress point.
+    let m = o.stress_mult;
+    let a = arrow.at_mult(m);
+    for &s in &STATIC_SPLITS {
+        let sr = o.system(s).at_mult(m);
+        let bound = sr.goodput_tokens * (1.0 - cfg.tolerance);
+        out.push(ClaimVerdict {
+            workload: o.workload.clone(),
+            claim: format!("goodput:arrow>={}@x{}", s.label(), m),
+            holds: a.goodput_tokens >= bound,
+            measured: a.goodput_tokens,
+            bound,
+            detail: format!(
+                "arrow goodput {:.1} tok/s vs {} {:.1} at stress x{} (att {:.3} vs {:.3})",
+                a.goodput_tokens,
+                s.label(),
+                sr.goodput_tokens,
+                m,
+                a.slo_attainment,
+                sr.slo_attainment
+            ),
+        });
+    }
+
+    // 3. Degradation shapes, on the burst workload (§7.2 is an
+    //    azure_code observation; the other traces don't saturate the
+    //    TP=n colocated engine inside the swept grid).
+    if o.workload == "azure_code" {
+        let lo = *cfg.rate_mults.first().unwrap();
+        let hi = *cfg.rate_mults.last().unwrap();
+        let coloc = o.system(System::VllmColocated);
+        let (cl, ch) = (coloc.at_mult(lo), coloc.at_mult(hi));
+        out.push(ClaimVerdict {
+            workload: o.workload.clone(),
+            claim: "colocated:ttft_inflates".into(),
+            holds: ch.p90_ttft >= 3.0 * cl.p90_ttft,
+            measured: ch.p90_ttft,
+            bound: 3.0 * cl.p90_ttft,
+            detail: format!(
+                "colocated p90 TTFT {:.3}s at x{lo} -> {:.3}s at x{hi}",
+                cl.p90_ttft, ch.p90_ttft
+            ),
+        });
+        // meets_target-style inversion: these two are *upper* bounds, so
+        // `measured`/`bound` are negated to keep "holds iff measured >=
+        // bound" uniform for report consumers.
+        out.push(ClaimVerdict {
+            workload: o.workload.clone(),
+            claim: "colocated:tpot_stays_low".into(),
+            holds: ch.p90_tpot <= o.tpot_slo,
+            measured: -ch.p90_tpot,
+            bound: -o.tpot_slo,
+            detail: format!(
+                "colocated p90 TPOT {:.4}s at x{hi} vs SLO {}s (decode priority)",
+                ch.p90_tpot, o.tpot_slo
+            ),
+        });
+        let ah = arrow.at_mult(hi);
+        out.push(ClaimVerdict {
+            workload: o.workload.clone(),
+            claim: "disagg:tpot_stable_past_saturation".into(),
+            holds: ah.p90_tpot <= o.tpot_slo,
+            measured: -ah.p90_tpot,
+            bound: -o.tpot_slo,
+            detail: format!(
+                "arrow p90 TPOT {:.4}s at x{hi} vs SLO {}s (disaggregation isolates decode)",
+                ah.p90_tpot, o.tpot_slo
+            ),
+        });
+    }
+    out
+}
+
+/// Run the conformance sweep over an explicit workload list (the test
+/// tiers use this to focus on one trace).
+pub fn run_claims_for(workloads: &[Workload], cfg: &ClaimsConfig) -> ClaimsReport {
+    let base = CostModel::normalized();
+    let outcomes: Vec<WorkloadOutcome> = workloads
+        .iter()
+        .map(|w| sweep_workload(w, &base, cfg))
+        .collect();
+    let verdicts = outcomes
+        .iter()
+        .flat_map(|o| verdicts_for(o, cfg))
+        .collect();
+    ClaimsReport {
+        cfg: cfg.clone(),
+        cost_model: "normalized",
+        outcomes,
+        verdicts,
+    }
+}
+
+/// Run the full conformance sweep: all six systems × all Table-1
+/// workloads × the configured rate grid.
+pub fn run_claims(cfg: &ClaimsConfig) -> ClaimsReport {
+    run_claims_for(&catalog::table1(), cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smallest meaningful config: one tiny clip, one rate point — unit
+    /// tests only exercise plumbing; the claims *tier* does the real run.
+    fn tiny_cfg() -> ClaimsConfig {
+        ClaimsConfig {
+            clip_seconds: 20.0,
+            rate_mults: vec![2.0],
+            rate_search_tolerance: 0.5,
+            workers: 2,
+            ..ClaimsConfig::smoke()
+        }
+    }
+
+    #[test]
+    fn sweep_covers_all_systems_and_accounts_every_request() {
+        let w = catalog::by_name("smoke").unwrap();
+        let report = run_claims_for(&[w], &tiny_cfg());
+        assert_eq!(report.outcomes.len(), 1);
+        let o = &report.outcomes[0];
+        assert_eq!(o.systems.len(), System::all().len());
+        for sys in &o.systems {
+            assert_eq!(sys.sweep.len(), 1);
+            let r = &sys.sweep[0].report;
+            assert_eq!(
+                r.n_finished + r.n_failed,
+                r.n_requests,
+                "{}: accounting",
+                sys.system.label()
+            );
+            assert!(sys.max_sustainable >= 0.0);
+            assert!(sys.max_sustainable.is_finite());
+        }
+        // Stress point is on the grid.
+        assert!(report.cfg.rate_mults.contains(&o.stress_mult));
+    }
+
+    #[test]
+    fn report_json_roundtrips_and_is_self_describing() {
+        let w = catalog::by_name("smoke").unwrap();
+        let report = run_claims_for(&[w], &tiny_cfg());
+        let text = report.to_json().encode();
+        let back = Json::parse(&text).expect("claims report must be valid JSON");
+        assert_eq!(back.get("report").as_str(), Some("claims"));
+        assert_eq!(back.get("cost_model").as_str(), Some("normalized"));
+        assert_eq!(back.get("workloads").as_arr().unwrap().len(), 1);
+        let w0 = &back.get("workloads").as_arr().unwrap()[0];
+        assert_eq!(w0.get("systems").as_arr().unwrap().len(), 6);
+        assert!(back.get("claims").as_arr().is_some());
+        assert!(back.get("all_hold").as_bool().is_some());
+        // Summary renders every verdict.
+        let s = report.summary();
+        for v in &report.verdicts {
+            assert!(s.contains(&v.claim), "summary missing claim {}", v.claim);
+        }
+    }
+
+    #[test]
+    fn configs_are_sane() {
+        for cfg in [ClaimsConfig::full(), ClaimsConfig::smoke()] {
+            assert!(!cfg.rate_mults.is_empty());
+            assert!(cfg.rate_mults.windows(2).all(|w| w[0] < w[1]), "grid sorted");
+            assert!(cfg.clip_seconds > 0.0);
+            assert!((0.0..1.0).contains(&cfg.tolerance));
+            assert!(cfg.rate_band() > 0.5, "claim band degenerated");
+        }
+        assert!(ClaimsConfig::smoke().clip_seconds < ClaimsConfig::full().clip_seconds);
+    }
+
+    #[test]
+    fn verdicts_cover_the_burst_claims_for_azure_code() {
+        // Claim *presence* is part of the contract (a refactor that
+        // silently stops evaluating a claim must fail here); claim
+        // *truth* on the real grid is tests/claims.rs territory.
+        let w = catalog::by_name("azure_code").unwrap();
+        let cfg = ClaimsConfig {
+            clip_seconds: 30.0,
+            ..tiny_cfg()
+        };
+        let report = run_claims_for(&[w], &cfg);
+        let names: Vec<&str> = report.verdicts.iter().map(|v| v.claim.as_str()).collect();
+        for split in STATIC_SPLITS {
+            assert!(
+                names.iter().any(|n| *n == format!("max_rate:arrow>={}", split.label())),
+                "missing max-rate claim for {}",
+                split.label()
+            );
+        }
+        assert!(names.contains(&"colocated:ttft_inflates"));
+        assert!(names.contains(&"colocated:tpot_stays_low"));
+        assert!(names.contains(&"disagg:tpot_stable_past_saturation"));
+    }
+}

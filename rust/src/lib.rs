@@ -14,11 +14,15 @@
 //! * [`runtime`] — PJRT loader executing the AOT artifacts emitted by
 //!   `python/compile/aot.py` (L2 JAX model + L1 Pallas kernels).
 //! * [`baselines`], [`scenarios`], [`metrics`] — evaluation harness.
+//! * [`harness`] — paper-claims conformance: the normalized-cost-model
+//!   sweep that turns the paper's cross-system orderings into
+//!   machine-checkable verdicts (`arrow claims`, `tests/claims.rs`).
 
 pub mod baselines;
 pub mod coordinator;
 pub mod costmodel;
 pub mod engine;
+pub mod harness;
 pub mod json;
 pub mod metrics;
 pub mod request;

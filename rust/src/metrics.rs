@@ -116,12 +116,30 @@ pub fn max_sustainable_rate(
             return lo; // absurdly high — report what we proved
         }
     }
-    if lo == 0.0 {
-        // Even the base rate fails; search below it.
-        lo = 0.0;
-    }
-    // Bisect [lo, hi].
-    while hi - lo > tolerance.max(1e-6) * hi {
+    // Bisect (lo, hi]: `lo` is the highest *proven-sustainable* rate
+    // (0.0 when even the base rate fails — every assignment to `lo` comes
+    // from a passing eval), `hi` a proven-failing rate.
+    //
+    // The stopping rule needs an absolute floor in addition to the
+    // relative one — but only for the unsatisfiable case: with `lo == 0`
+    // the old `hi - lo > tol * hi` condition could never converge
+    // relative to itself (`hi - lo` IS `hi`), so an unsatisfiable target
+    // burned ~1000 halvings down through the subnormals before `hi`
+    // underflowed to zero — one wasted full simulation per halving. The
+    // floor pins "nothing is sustainable" to "less than tol × the first
+    // failing rate", i.e. a handful of evals. Once `lo > 0` the floor is
+    // deliberately NOT used: it is anchored to the *initial* (larger) hi,
+    // so letting it fire there would double the quantization error
+    // versus the documented tolerance. The iteration cap bounds eval
+    // count even for degenerate tolerances (NaN tolerance, NaN
+    // attainment): each eval can be a multi-second simulation, so
+    // runaway refinement is a real cost, not a nicety.
+    let tol = tolerance.max(1e-6);
+    let abs_floor = tol * hi;
+    for _ in 0..64 {
+        if hi - lo <= tol * hi || (lo == 0.0 && hi <= abs_floor) {
+            break;
+        }
         let mid = 0.5 * (lo + hi);
         if eval(mid).meets_target(target) {
             lo = mid;
@@ -207,6 +225,115 @@ mod tests {
         ] {
             assert_eq!(got.to_bits(), want.to_bits(), "{got} != {want}");
         }
+    }
+
+    /// A degenerate report whose only meaningful field is attainment.
+    fn flat(att: f64) -> SloReport {
+        SloReport {
+            n_requests: 1,
+            n_finished: 1,
+            n_failed: 0,
+            slo_attainment: att,
+            ttft_attainment: att,
+            tpot_attainment: att,
+            p50_ttft: 0.0,
+            p90_ttft: 0.0,
+            p99_ttft: 0.0,
+            p50_tpot: 0.0,
+            p90_tpot: 0.0,
+            p99_tpot: 0.0,
+            token_throughput: 0.0,
+            goodput_tokens: 0.0,
+        }
+    }
+
+    #[test]
+    fn max_rate_never_passing_terminates_in_bounded_evals() {
+        // Regression (PR 5): with an unsatisfiable target the bracket low
+        // end stays at 0, and the old relative-only stopping rule halved
+        // `hi` ~1000 times down through the subnormals before exiting.
+        // Each eval is a full simulation in real use — the search must
+        // give up after a handful.
+        let mut calls = 0u32;
+        let r = max_sustainable_rate(
+            |_| {
+                calls += 1;
+                flat(0.0)
+            },
+            1.0,
+            0.9,
+            0.01,
+        );
+        assert_eq!(r, 0.0, "nothing sustainable must report 0");
+        assert!(calls < 40, "unsatisfiable target burned {calls} evals");
+    }
+
+    #[test]
+    fn max_rate_always_passing_capped_by_doubling_guard() {
+        let mut calls = 0u32;
+        let r = max_sustainable_rate(
+            |_| {
+                calls += 1;
+                flat(1.0)
+            },
+            1.0,
+            0.9,
+            0.01,
+        );
+        // 17 doublings from the base rate, then report what was proved.
+        assert_eq!(r, 65_536.0);
+        assert!(calls <= 18, "always-passing eval ran {calls} times");
+    }
+
+    #[test]
+    fn max_rate_non_monotone_returns_a_proven_rate() {
+        // Attainment passes below 7, fails on [7, 10), passes again on
+        // [10, 12) — e.g. a burst-alignment artifact. Bisection cannot
+        // promise the global optimum, but it must terminate and whatever
+        // it returns must be a rate an eval actually proved sustainable.
+        let passes = |rate: f64| rate <= 7.0 || (10.0..12.0).contains(&rate);
+        let mut calls = 0u32;
+        let r = max_sustainable_rate(
+            |rate| {
+                calls += 1;
+                flat(if passes(rate) { 1.0 } else { 0.0 })
+            },
+            1.0,
+            0.9,
+            0.01,
+        );
+        assert!(calls < 64, "non-monotone eval ran {calls} times");
+        assert!(passes(r), "returned rate {r} was never proven sustainable");
+        assert!((6.5..=12.0).contains(&r), "r={r} escaped the feasible region");
+    }
+
+    #[test]
+    fn max_rate_nan_attainment_treated_as_failure() {
+        // A NaN attainment (empty trace, 0/0) must behave like a failing
+        // eval: no panic, no spin, result 0.
+        let mut calls = 0u32;
+        let r = max_sustainable_rate(
+            |_| {
+                calls += 1;
+                flat(f64::NAN)
+            },
+            1.0,
+            0.9,
+            0.01,
+        );
+        assert_eq!(r, 0.0);
+        assert!(calls < 40, "NaN attainment burned {calls} evals");
+    }
+
+    #[test]
+    fn max_rate_zero_attainment_with_nan_percentiles() {
+        // The shape a failed run actually produces: 0 attainment and NaN
+        // percentiles (no finished requests to take a percentile of).
+        let mut rep = flat(0.0);
+        rep.p50_ttft = f64::NAN;
+        rep.p99_tpot = f64::NAN;
+        let r = max_sustainable_rate(|_| rep.clone(), 2.5, 0.9, 0.05);
+        assert_eq!(r, 0.0);
     }
 
     #[test]

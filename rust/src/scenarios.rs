@@ -18,7 +18,7 @@ use crate::coordinator::arrow::{ArrowConfig, ArrowPolicy};
 use crate::costmodel::CostModel;
 use crate::engine::SimInstance;
 use crate::request::InstanceId;
-use crate::sim::{Cluster, MembershipChange, SimConfig};
+use crate::sim::{Cluster, MembershipChange, SimConfig, MONITOR_PERIOD};
 
 /// Systems evaluated in Fig. 7 / Fig. 8.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -70,13 +70,39 @@ pub fn build(
     tpot_slo: f64,
     record_timeline: bool,
 ) -> Cluster {
+    build_time_scaled(system, n_gpus, base, ttft_slo, tpot_slo, record_timeline, 1.0)
+}
+
+/// [`build`] with every *time* dimension dilated by `time_scale`: cost
+/// model coefficients, SLOs, drain timeout, monitor period, and the
+/// vLLM-disagg transfer-fail timeout all scale together (token/byte
+/// capacities are dimensionless and do not). For power-of-two scales the
+/// dilation is bit-exact, so a scheduler whose decisions depend only on
+/// *ratios* of times — which is all of them — must produce the identical
+/// placement schedule on a correspondingly dilated trace. The metamorphic
+/// conformance tier (`tests/metamorphic.rs`) enforces exactly that; a
+/// divergence means some placement path sneaked in an absolute-seconds
+/// constant.
+pub fn build_time_scaled(
+    system: System,
+    n_gpus: usize,
+    base: &CostModel,
+    ttft_slo: f64,
+    tpot_slo: f64,
+    record_timeline: bool,
+    time_scale: f64,
+) -> Cluster {
     assert!(n_gpus >= 2, "scenarios need >= 2 GPUs");
+    let k = time_scale;
+    let base = &base.scaled(k);
+    let (ttft_slo, tpot_slo) = (ttft_slo * k, tpot_slo * k);
     let cfg = SimConfig {
         record_timeline,
         // 5 minutes of drain after the last arrival: ample for any run
         // that can still meet a 90% SLO target, and it bounds the cost of
         // the (many) deliberately-oversaturated sweep points.
-        drain_timeout: 300.0,
+        drain_timeout: 300.0 * k,
+        monitor_period: MONITOR_PERIOD * k,
         ..Default::default()
     };
     match system {
@@ -115,11 +141,9 @@ pub fn build(
                 .map(|i| SimInstance::new(InstanceId(i), Arc::clone(&cost)))
                 .collect();
             let quirks = SimConfig {
-                record_timeline,
-                drain_timeout: 300.0,
                 transfer_buffer_tokens: Some(120_000), // bounded KV buffer
-                transfer_fail_timeout: Some(120.0),
-                ..Default::default()
+                transfer_fail_timeout: Some(120.0 * k),
+                ..cfg
             };
             let policy =
                 StaticDisaggPolicy::new("vllm-disagg", vec![0], vec![1], PickRule::MinimalLoad);

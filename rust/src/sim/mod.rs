@@ -154,6 +154,12 @@ pub struct SimConfig {
     pub transfer_buffer_tokens: Option<u64>,
     /// Fail requests whose KV transfer waits longer than this.
     pub transfer_fail_timeout: Option<f64>,
+    /// Interval of the instance-monitor tick. Default [`MONITOR_PERIOD`];
+    /// the metamorphic cost-scale tier dilates it together with the cost
+    /// model so the whole simulation is an exact time dilation (a fixed
+    /// 1 s tick would otherwise sample the dilated run at a different
+    /// phase and legitimately flip instances at different moments).
+    pub monitor_period: f64,
 }
 
 impl Default for SimConfig {
@@ -163,6 +169,7 @@ impl Default for SimConfig {
             record_timeline: false,
             transfer_buffer_tokens: None,
             transfer_fail_timeout: None,
+            monitor_period: MONITOR_PERIOD,
         }
     }
 }
@@ -888,7 +895,7 @@ impl Cluster {
             self.maybe_finish_drain(i);
         }
         if self.done < self.records.len() {
-            self.push(self.now + MONITOR_PERIOD, EventKind::MonitorTick);
+            self.push(self.now + self.cfg.monitor_period, EventKind::MonitorTick);
         }
     }
 

@@ -104,4 +104,65 @@ mod tests {
             assert!(by_name(n).is_some(), "{n}");
         }
     }
+
+    #[test]
+    fn names_and_by_name_round_trip_exactly() {
+        // names() -> by_name -> name() must be the identity, the catalog
+        // must contain no duplicates, and by_name must agree with the
+        // Table-1 row it resolves to (same spec target + SLOs) — the
+        // claims harness keys everything on these names.
+        let ns = names();
+        assert_eq!(ns.len(), table1().len() + 1, "table1 + smoke");
+        for n in &ns {
+            let w = by_name(n).unwrap_or_else(|| panic!("{n} in names() but not by_name"));
+            assert_eq!(w.name(), *n, "by_name({n}) resolved to {}", w.name());
+        }
+        let mut sorted = ns.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ns.len(), "duplicate workload names");
+        for row in table1() {
+            let via = by_name(row.name()).unwrap();
+            assert_eq!(via.spec.n_requests, row.spec.n_requests, "{}", row.name());
+            assert_eq!(via.ttft_slo, row.ttft_slo, "{}", row.name());
+            assert_eq!(via.tpot_slo, row.tpot_slo, "{}", row.name());
+        }
+    }
+
+    #[test]
+    fn generate_is_seed_deterministic_for_every_workload() {
+        // Same seed => byte-identical trace (every request field equal,
+        // arrival bits included — `Request` is PartialEq over exact f64),
+        // for all Table-1 workloads and the smoke workload. The claims
+        // and golden tiers depend on this holding for the *whole* trace,
+        // not a prefix.
+        for n in names() {
+            let w = by_name(n).unwrap();
+            let a = w.generate(42);
+            let b = w.generate(42);
+            assert_eq!(a.len(), b.len(), "{n}: length drifted across same-seed runs");
+            assert_eq!(a.requests, b.requests, "{n}: same seed must be byte-identical");
+            assert_eq!(a.name, b.name, "{n}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_change_the_arrivals_for_every_workload() {
+        for n in names() {
+            let w = by_name(n).unwrap();
+            let a = w.generate(1);
+            let b = w.generate(2);
+            // Arrival *times* must differ somewhere (lengths could
+            // coincide by chance for a few requests, timestamps cannot
+            // across a whole trace from an independent stream).
+            let arrivals = |t: &crate::trace::Trace| {
+                t.requests.iter().map(|r| r.arrival.to_bits()).collect::<Vec<_>>()
+            };
+            assert_ne!(
+                arrivals(&a),
+                arrivals(&b),
+                "{n}: different seeds produced identical arrival sequences"
+            );
+        }
+    }
 }

@@ -1,0 +1,188 @@
+//! Paper-claims conformance tier (PR 5).
+//!
+//! Asserts the paper's qualitative cross-system orderings under the
+//! dimensionless [`CostModel::normalized`] preset, so the claims are
+//! deterministic properties of the *scheduler* and survive any future
+//! hardware recalibration of `h800_llama8b`.
+//!
+//! Budget: the default run uses the smoke grid (the full grid is the
+//! `arrow claims` CLI's job); `ARROW_CLAIMS_FULL=1` opts a test run into
+//! the full grid. The headline burst assertion always runs on the 300s
+//! azure_code clip regardless — shorter clips can miss the burst minutes
+//! entirely (seed-test triage note, PR 3).
+
+use arrow::harness::{self, ClaimsConfig, STATIC_SPLITS};
+use arrow::scenarios::System;
+use arrow::trace::catalog;
+
+fn env_truthy(key: &str) -> bool {
+    std::env::var(key).map_or(false, |v| v != "0" && !v.is_empty())
+}
+
+/// Smoke grid by default; `ARROW_CLAIMS_FULL=1` escalates, and the ci.sh
+/// `ARROW_CLAIMS_SMOKE=1` knob caps it back down explicitly.
+///
+/// Debug builds additionally thin the sweep: the PR-4 moment oracles
+/// (`debug_assert` queue walks on every placement) make unoptimized sims
+/// an order of magnitude slower, and ci.sh runs this suite under both
+/// profiles *plus* the release `arrow claims` gate — the full-strength
+/// runs are the release ones; the debug pass checks the same claims at
+/// reduced resolution.
+fn test_cfg() -> ClaimsConfig {
+    let mut cfg = if env_truthy("ARROW_CLAIMS_FULL") && !harness::smoke_env() {
+        ClaimsConfig::full()
+    } else {
+        ClaimsConfig::smoke()
+    };
+    if cfg!(debug_assertions) {
+        cfg.clip_seconds = cfg.clip_seconds.min(60.0);
+        cfg.rate_search_tolerance = cfg.rate_search_tolerance.max(0.3);
+    }
+    cfg
+}
+
+/// Bisection resolution for the 300s-clip tests below: strict in
+/// release, looser in debug (same wall-clock rationale as `test_cfg`).
+fn search_tolerance() -> f64 {
+    if cfg!(debug_assertions) {
+        0.25
+    } else {
+        0.1
+    }
+}
+
+#[test]
+fn claims_report_covers_all_six_systems_on_all_table1_workloads() {
+    // Coverage is the contract: the report must measure every system on
+    // every Table-1 workload, account every request, and serialize.
+    let cfg = ClaimsConfig {
+        rate_mults: vec![2.0],
+        clip_seconds: 30.0,
+        rate_search_tolerance: 0.5,
+        ..ClaimsConfig::smoke()
+    };
+    let report = harness::run_claims(&cfg);
+    assert_eq!(report.outcomes.len(), catalog::table1().len());
+    for o in &report.outcomes {
+        assert_eq!(o.systems.len(), System::all().len(), "{}", o.workload);
+        assert!(o.n_requests > 0, "{}: empty clip", o.workload);
+        for sys in &o.systems {
+            for p in &sys.sweep {
+                assert_eq!(
+                    p.report.n_finished + p.report.n_failed,
+                    p.report.n_requests,
+                    "{}/{}: accounting",
+                    o.workload,
+                    sys.system.label()
+                );
+            }
+            assert!(sys.max_sustainable.is_finite());
+        }
+    }
+    let parsed = arrow::json::Json::parse(&report.to_json().encode())
+        .expect("claims report must be machine-readable JSON");
+    assert_eq!(
+        parsed.get("workloads").as_arr().unwrap().len(),
+        catalog::table1().len()
+    );
+}
+
+#[test]
+fn arrow_at_least_matches_every_static_split_on_goodput_under_burst() {
+    // The acceptance headline: under the bursty azure_code workload at
+    // the stress point (lightest swept overload of the best static
+    // split), Arrow's goodput is at least every static split's, under
+    // the normalized cost model. 300s clip: long enough to include burst
+    // minutes (shorter clips of this trace can be burst-free and make
+    // the comparison vacuous).
+    let w = catalog::by_name("azure_code").unwrap();
+    let cfg = ClaimsConfig {
+        clip_seconds: 300.0,
+        rate_mults: vec![4.0, 8.0, 12.0, 16.0, 24.0],
+        rate_search_tolerance: search_tolerance(),
+        ..ClaimsConfig::smoke()
+    };
+    let report = harness::run_claims_for(&[w], &cfg);
+    let o = &report.outcomes[0];
+    let m = o.stress_mult;
+    let arrow = o.system(System::Arrow).at_mult(m);
+    for &s in &STATIC_SPLITS {
+        let st = o.system(s).at_mult(m);
+        assert!(
+            arrow.goodput_tokens >= st.goodput_tokens * (1.0 - cfg.tolerance),
+            "arrow goodput {:.1} tok/s below {} {:.1} at stress x{m}",
+            arrow.goodput_tokens,
+            s.label(),
+            st.goodput_tokens
+        );
+        assert!(
+            arrow.slo_attainment >= st.slo_attainment - 0.02,
+            "arrow attainment {:.3} below {} {:.3} at stress x{m}",
+            arrow.slo_attainment,
+            s.label(),
+            st.slo_attainment
+        );
+    }
+    // And the max-rate orderings the verdicts computed on the same run.
+    for v in report.verdicts.iter().filter(|v| v.claim.starts_with("max_rate:")) {
+        assert!(v.holds, "{} failed: {}", v.claim, v.detail);
+    }
+}
+
+#[test]
+fn disaggregated_tpot_stable_while_colocated_ttft_degrades() {
+    // §7.2's shape claims on the burst workload: the colocated engine's
+    // P90 TTFT inflates under load while its decode-prioritized TPOT
+    // stays inside the SLO — and Arrow's disaggregated TPOT stays inside
+    // the SLO even past saturation.
+    let w = catalog::by_name("azure_code").unwrap();
+    let tpot_slo = w.tpot_slo;
+    let cfg = ClaimsConfig {
+        clip_seconds: 300.0,
+        rate_mults: vec![2.0, 40.0],
+        rate_search_tolerance: 0.5, // max rates unused by this test
+        ..ClaimsConfig::smoke()
+    };
+    let report = harness::run_claims_for(&[w], &cfg);
+    let o = &report.outcomes[0];
+    let coloc = o.system(System::VllmColocated);
+    let (low, high) = (coloc.at_mult(2.0), coloc.at_mult(40.0));
+    assert!(
+        high.p90_ttft > 3.0 * low.p90_ttft,
+        "colocated TTFT must inflate under saturation: {:.3}s -> {:.3}s",
+        low.p90_ttft,
+        high.p90_ttft
+    );
+    assert!(
+        high.p90_tpot <= tpot_slo,
+        "colocated decode priority must keep TPOT inside the SLO: {:.4}s > {}s",
+        high.p90_tpot,
+        tpot_slo
+    );
+    let arrow_high = o.system(System::Arrow).at_mult(40.0);
+    assert!(
+        arrow_high.p90_tpot <= tpot_slo,
+        "arrow's disaggregated TPOT must stay inside the SLO past saturation: {:.4}s > {}s",
+        arrow_high.p90_tpot,
+        tpot_slo
+    );
+}
+
+#[test]
+fn all_claims_hold_on_the_configured_grid() {
+    // The whole verdict set — max-rate orderings, stress-point goodput
+    // orderings, and the degradation shapes — across every Table-1
+    // workload on the smoke grid (full grid with ARROW_CLAIMS_FULL=1).
+    let report = harness::run_claims(&test_cfg());
+    let failed = report.failed();
+    assert!(
+        failed.is_empty(),
+        "{} paper claim(s) failed:\n{}",
+        failed.len(),
+        failed
+            .iter()
+            .map(|v| format!("  [{}] {} — {}", v.workload, v.claim, v.detail))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

@@ -12,6 +12,10 @@
 //!   `tests/golden/schedule_digests.json`. The file is written on first
 //!   run (or under `ARROW_BLESS=1`) and enforced afterwards, so an
 //!   unintended scheduling change fails loudly in CI.
+//!
+//! PR 5 adds `*@normalized` entries: the same workload digested under
+//! `CostModel::normalized()` for all six systems, so placement drift on
+//! the paper-claims conformance path is caught by the same golden gate.
 
 use arrow::costmodel::CostModel;
 use arrow::json::Json;
@@ -92,6 +96,31 @@ fn schedule_digests_stable_across_runs_modes_and_commits() {
     });
     check("arrow+spike-scale-out", &|| {
         spike_scale_out(6, 2, &base, ttft, tpot, 0.25 * d)
+    });
+
+    // Claims-path coverage (PR 5): the paper-claims tier runs every
+    // system under `CostModel::normalized()`, so placement drift on the
+    // normalized path must fail CI exactly like drift on the calibrated
+    // path — all six systems are digested (the claims sweep exercises
+    // all six).
+    let norm = CostModel::normalized();
+    check("arrow@normalized", &|| {
+        build(System::Arrow, 8, &norm, ttft, tpot, false)
+    });
+    check("vllm@normalized", &|| {
+        build(System::VllmColocated, 8, &norm, ttft, tpot, false)
+    });
+    check("vllm-disagg@normalized", &|| {
+        build(System::VllmDisaggregated, 8, &norm, ttft, tpot, false)
+    });
+    check("distserve@normalized", &|| {
+        build(System::DistServe, 8, &norm, ttft, tpot, false)
+    });
+    check("minimal-load@normalized", &|| {
+        build(System::MinimalLoad, 8, &norm, ttft, tpot, false)
+    });
+    check("round-robin@normalized", &|| {
+        build(System::RoundRobin, 8, &norm, ttft, tpot, false)
     });
 
     // Cross-commit regression: enforce (or record) the golden file.

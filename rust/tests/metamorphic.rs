@@ -1,0 +1,317 @@
+//! Metamorphic conformance tier (PR 5): scheduler-level invariants that
+//! no cost-model calibration can break. Where `tests/claims.rs` checks
+//! the paper's *orderings*, this file checks *relations between runs*:
+//!
+//! * rate-scaling monotonicity — pushing more load never raises SLO
+//!   attainment;
+//! * trace-permutation determinism — equal-time, equal-shape arrivals
+//!   are interchangeable, and tie-heavy traces schedule identically in
+//!   the cursor and heap-reference event loops;
+//! * cost-scale invariance — dilating every time dimension (cost model,
+//!   arrivals, SLOs, monitor period) by a power of two reproduces the
+//!   *identical* placement schedule, bit for bit: scheduling decisions
+//!   depend only on ratios of times, so a divergence means a placement
+//!   path sneaked in an absolute-seconds constant;
+//! * elastic-membership dominance — more instances never lower the
+//!   maximum sustainable rate, and spare instances joining mid-burst
+//!   never hurt attainment.
+//!
+//! Everything runs under [`CostModel::normalized`] (the conformance
+//! contract: these properties must hold on every commit, on every
+//! machine, with no calibration step).
+
+use arrow::costmodel::CostModel;
+use arrow::metrics::{max_sustainable_rate, SloReport};
+use arrow::request::Request;
+use arrow::scenarios::{build, build_time_scaled, spike_scale_out, System};
+use arrow::sim::SimResult;
+use arrow::trace::{catalog, Trace};
+use arrow::util::rng::Rng;
+
+fn report(res: &SimResult, ttft: f64, tpot: f64, span: f64) -> SloReport {
+    SloReport::from_records(&res.records, ttft, tpot, span)
+}
+
+// ---------------------------------------------------------------------------
+// Rate-scaling monotonicity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn slo_attainment_never_rises_with_load() {
+    let w = catalog::by_name("azure_code").unwrap();
+    let trace = w.generate(6).clip_seconds(180.0);
+    let base_rate = trace.rate();
+    let base = CostModel::normalized();
+    for sys in [System::Arrow, System::MinimalLoad, System::VllmColocated] {
+        let mut last = f64::INFINITY;
+        for mult in [1.0, 6.0, 24.0] {
+            let t = trace.with_rate(base_rate * mult);
+            let cl = build(sys, 8, &base, w.ttft_slo, w.tpot_slo, false);
+            let rep = report(&cl.run(&t), w.ttft_slo, w.tpot_slo, t.duration());
+            // Small tolerance: rescaling compresses the burst structure,
+            // which can realign a handful of requests across the SLO
+            // boundary — but attainment must never *rise* with load.
+            assert!(
+                rep.slo_attainment <= last + 0.05,
+                "{}: attainment rose with load at x{mult}: {last:.3} -> {:.3}",
+                sys.label(),
+                rep.slo_attainment
+            );
+            last = rep.slo_attainment;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace-permutation determinism of equal-time arrivals
+// ---------------------------------------------------------------------------
+
+/// 24 tie groups of 5 requests each: every member of a group shares the
+/// exact arrival timestamp *and* shape, so any permutation of the input
+/// list is the same workload.
+fn tie_trace() -> (Vec<Request>, Rng) {
+    let mut rng = Rng::new(77);
+    let mut reqs = Vec::new();
+    let mut id = 0u64;
+    for g in 0..24 {
+        let at = g as f64 * 1.25;
+        let input = rng.int_range(64, 4096) as u32;
+        let output = rng.int_range(4, 64) as u32;
+        for _ in 0..5 {
+            reqs.push(Request::new(id, at, input, output));
+            id += 1;
+        }
+    }
+    (reqs, rng)
+}
+
+#[test]
+fn equal_time_equal_shape_arrivals_are_order_invariant() {
+    let (reqs, mut rng) = tie_trace();
+    let forward = Trace::new("ties", reqs.clone());
+    let mut shuffled = reqs;
+    rng.shuffle(&mut shuffled);
+    let permuted = Trace::new("ties", shuffled);
+    let base = CostModel::normalized();
+    for sys in [System::Arrow, System::MinimalLoad, System::RoundRobin] {
+        let a = build(sys, 8, &base, 2.0, 0.1, false).run(&forward);
+        let b = build(sys, 8, &base, 2.0, 0.1, false).run(&permuted);
+        assert_eq!(a.records.len(), b.records.len());
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(
+                ra.prefill_instance, rb.prefill_instance,
+                "{}: tie permutation moved a prefill placement",
+                sys.label()
+            );
+            assert_eq!(ra.decode_instance, rb.decode_instance, "{}", sys.label());
+            assert_eq!(ra.state, rb.state, "{}", sys.label());
+            assert_eq!(ra.token_times.len(), rb.token_times.len());
+            for (ta, tb) in ra.token_times.iter().zip(&rb.token_times) {
+                assert_eq!(
+                    ta.to_bits(),
+                    tb.to_bits(),
+                    "{}: token time drifted under tie permutation",
+                    sys.label()
+                );
+            }
+        }
+        assert_eq!(a.total_flips, b.total_flips, "{}", sys.label());
+        assert_eq!(a.total_iterations, b.total_iterations, "{}", sys.label());
+    }
+}
+
+#[test]
+fn tie_heavy_trace_schedules_identically_in_cursor_and_heap_modes() {
+    // The (time, seq) total order must break exact arrival ties the same
+    // way whether arrivals come from the calendar cursor or were
+    // pre-pushed into the heap (PR-1 equivalence contract, stressed with
+    // maximal tie density).
+    let (reqs, _) = tie_trace();
+    let trace = Trace::new("ties", reqs);
+    let base = CostModel::normalized();
+    for sys in [System::Arrow, System::MinimalLoad] {
+        let cur = build(sys, 8, &base, 2.0, 0.1, false).run(&trace);
+        let heap = build(sys, 8, &base, 2.0, 0.1, false).run_reference(&trace);
+        assert_eq!(cur.events_processed, heap.events_processed, "{}", sys.label());
+        for (rc, rh) in cur.records.iter().zip(&heap.records) {
+            assert_eq!(rc.prefill_instance, rh.prefill_instance, "{}", sys.label());
+            assert_eq!(rc.decode_instance, rh.decode_instance, "{}", sys.label());
+            for (tc, th) in rc.token_times.iter().zip(&rh.token_times) {
+                assert_eq!(tc.to_bits(), th.to_bits(), "{}", sys.label());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cost-scale invariance of placement decisions
+// ---------------------------------------------------------------------------
+
+/// Dilate arrivals by exactly `k` (power of two => bit-exact).
+fn scale_trace(t: &Trace, k: f64) -> Trace {
+    Trace::new(
+        &t.name,
+        t.requests
+            .iter()
+            .map(|r| Request {
+                arrival: r.arrival * k,
+                ..*r
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn scaling_all_times_by_k_changes_no_placement() {
+    // Loaded enough that queues, transfers, and (for Arrow) flips are
+    // all in play — invariance on an idle trace would prove nothing.
+    let w = catalog::by_name("azure_code").unwrap();
+    let trace = {
+        let t = w.generate(11).clip_seconds(60.0);
+        let r = t.rate();
+        t.with_rate(r * 8.0)
+    };
+    let base = CostModel::normalized();
+    for sys in System::all() {
+        let a = build(sys, 8, &base, w.ttft_slo, w.tpot_slo, false).run(&trace);
+        // Sanity: the regime is non-trivial for every system.
+        assert!(
+            a.records.iter().any(|r| r.finished()),
+            "{}: nothing finished, dilation check is vacuous",
+            sys.label()
+        );
+        for &k in &[2.0, 0.5] {
+            let st = scale_trace(&trace, k);
+            let b = build_time_scaled(sys, 8, &base, w.ttft_slo, w.tpot_slo, false, k).run(&st);
+            assert_eq!(a.records.len(), b.records.len());
+            for (ra, rb) in a.records.iter().zip(&b.records) {
+                assert_eq!(
+                    ra.prefill_instance, rb.prefill_instance,
+                    "{}/k={k}: prefill placement moved under pure time dilation \
+                     (an absolute-seconds constant leaked into a placement path)",
+                    sys.label()
+                );
+                assert_eq!(
+                    ra.decode_instance, rb.decode_instance,
+                    "{}/k={k}: decode placement moved under pure time dilation",
+                    sys.label()
+                );
+                assert_eq!(ra.state, rb.state, "{}/k={k}", sys.label());
+                assert_eq!(ra.token_times.len(), rb.token_times.len());
+                for (ta, tb) in ra.token_times.iter().zip(&rb.token_times) {
+                    assert_eq!(
+                        (ta * k).to_bits(),
+                        tb.to_bits(),
+                        "{}/k={k}: token timestamp not an exact dilation",
+                        sys.label()
+                    );
+                }
+            }
+            assert_eq!(a.total_flips, b.total_flips, "{}/k={k}: flip count", sys.label());
+            assert_eq!(
+                a.total_iterations, b.total_iterations,
+                "{}/k={k}: iteration count",
+                sys.label()
+            );
+            assert_eq!(
+                a.events_processed, b.events_processed,
+                "{}/k={k}: event count",
+                sys.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn scaled_run_preserves_slo_attainment_exactly() {
+    // The metric layer sees dilated latencies against dilated SLOs: the
+    // attainment fraction must be *identical*, not merely close.
+    let w = catalog::by_name("azure_code").unwrap();
+    let trace = {
+        let t = w.generate(11).clip_seconds(60.0);
+        let r = t.rate();
+        t.with_rate(r * 8.0)
+    };
+    let base = CostModel::normalized();
+    let k = 2.0;
+    for sys in [System::Arrow, System::MinimalLoad] {
+        let a = build(sys, 8, &base, w.ttft_slo, w.tpot_slo, false).run(&trace);
+        let st = scale_trace(&trace, k);
+        let b = build_time_scaled(sys, 8, &base, w.ttft_slo, w.tpot_slo, false, k).run(&st);
+        let ra = report(&a, w.ttft_slo, w.tpot_slo, trace.duration());
+        let rb = report(&b, w.ttft_slo * k, w.tpot_slo * k, st.duration());
+        assert_eq!(ra.n_finished, rb.n_finished, "{}", sys.label());
+        assert_eq!(ra.n_failed, rb.n_failed, "{}", sys.label());
+        assert_eq!(
+            ra.slo_attainment.to_bits(),
+            rb.slo_attainment.to_bits(),
+            "{}: attainment must be exactly dilation-invariant",
+            sys.label()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Elastic-membership dominance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn more_instances_never_lower_max_sustainable_rate() {
+    let w = catalog::by_name("azure_code").unwrap();
+    let trace = w.generate(9).clip_seconds(120.0);
+    let base_rate = trace.rate();
+    let base = CostModel::normalized();
+    let max_rate = |gpus: usize| {
+        max_sustainable_rate(
+            |rate| {
+                let t = trace.with_rate(rate);
+                let cl = build(System::Arrow, gpus, &base, w.ttft_slo, w.tpot_slo, false);
+                report(&cl.run(&t), w.ttft_slo, w.tpot_slo, t.duration())
+            },
+            base_rate,
+            0.9,
+            0.1,
+        )
+    };
+    let r4 = max_rate(4);
+    let r6 = max_rate(6);
+    let r8 = max_rate(8);
+    assert!(r4 > 0.0, "4 instances must sustain the base rate regime");
+    // Band absorbs the bisection quantization (10% tolerance), nothing
+    // else: capacity must be monotone in the instance count.
+    assert!(r6 >= r4 * 0.85, "6 GPUs sustain {r6:.2} < 4 GPUs {r4:.2}");
+    assert!(r8 >= r6 * 0.85, "8 GPUs sustain {r8:.2} < 6 GPUs {r6:.2}");
+    assert!(r8 >= r4 * 0.9, "8 GPUs sustain {r8:.2} vs 4 GPUs {r4:.2}");
+}
+
+#[test]
+fn spare_instances_joining_mid_run_never_hurt() {
+    // Elastic dominance, membership flavor: a 4-instance cluster that
+    // scales out to 8 mid-burst must do at least as well as the fixed
+    // 4-instance cluster on the same overloaded trace.
+    let w = catalog::by_name("azure_code").unwrap();
+    let trace = {
+        let t = w.generate(9).clip_seconds(120.0);
+        let r = t.rate();
+        t.with_rate(r * 10.0)
+    };
+    let base = CostModel::normalized();
+    let fixed = build(System::Arrow, 4, &base, w.ttft_slo, w.tpot_slo, false).run(&trace);
+    let elastic =
+        spike_scale_out(4, 4, &base, w.ttft_slo, w.tpot_slo, 0.25 * trace.duration()).run(&trace);
+    let rf = report(&fixed, w.ttft_slo, w.tpot_slo, trace.duration());
+    let re = report(&elastic, w.ttft_slo, w.tpot_slo, trace.duration());
+    assert_eq!(re.n_finished + re.n_failed, re.n_requests);
+    assert!(
+        re.slo_attainment >= rf.slo_attainment - 0.02,
+        "scale-out attainment {:.3} fell below fixed-membership {:.3}",
+        re.slo_attainment,
+        rf.slo_attainment
+    );
+    assert!(
+        re.goodput_tokens >= rf.goodput_tokens * 0.98,
+        "scale-out goodput {:.1} fell below fixed-membership {:.1}",
+        re.goodput_tokens,
+        rf.goodput_tokens
+    );
+}
