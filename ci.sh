@@ -17,7 +17,10 @@
 # (ROADMAP open item). The paper-claims conformance gate (PR 5) then
 # runs `arrow claims` in smoke mode: all 6 systems x all Table-1
 # workloads under CostModel::normalized(), exiting non-zero when any
-# paper claim fails.
+# paper claim fails. The chaos gate (PR 6) runs `arrow chaos` in smoke
+# mode: seeded fault plans against the recovery-armed cluster, exiting
+# non-zero when a robustness invariant (no silent loss, determinism,
+# goodput bound, recovery) fails.
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -105,6 +108,16 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo "== paper-claims conformance (smoke gate) =="
     ARROW_CLAIMS_SMOKE=1 cargo run --release -q --bin arrow -- \
         claims --out "$smoke_dir/claims"
+
+    # Chaos conformance gate (PR 6): seeded fault plans (flaps,
+    # stragglers, stalls, crash-rejoins) swept against the recovery-armed
+    # Arrow cluster in smoke mode. `arrow chaos` exits non-zero when a
+    # robustness invariant fails — a silently lost request, a
+    # nondeterministic faulted schedule, a goodput inversion, or a
+    # post-fault recovery shortfall.
+    echo "== chaos conformance (smoke gate) =="
+    ARROW_CHAOS_SMOKE=1 cargo run --release -q --bin arrow -- \
+        chaos --out "$smoke_dir/chaos"
 fi
 
 echo "CI OK"

@@ -313,15 +313,23 @@ impl Policy for ArrowPolicy {
         let own_on = |p: &ArrowPolicy, id: InstanceId| {
             p.predictor(id.0).prefill_seconds(req.input_len)
         };
+        // PR 6: a Degraded (straggler) argmin never wins the SLO test —
+        // its predictor was fit on healthy timings, so the promise is
+        // hollow. Fault-free clusters have no Degraded instances and the
+        // acceptance conditions below evaluate exactly as before.
         let t1 = self.min_prefill_delay(Pool::Prefill, view);
         if let Some((id, delay)) = t1 {
-            if delay + own_on(self, id) <= self.cfg.ttft_slo {
+            if delay + own_on(self, id) <= self.cfg.ttft_slo
+                && !view.liveness(id.0).is_degraded()
+            {
                 return id;
             }
         }
         let t2 = self.min_prefill_delay(Pool::DecodeToPrefill, view);
         if let Some((id, delay)) = t2 {
-            if delay + own_on(self, id) <= self.cfg.ttft_slo {
+            if delay + own_on(self, id) <= self.cfg.ttft_slo
+                && !view.liveness(id.0).is_degraded()
+            {
                 return id;
             }
         }
@@ -358,11 +366,20 @@ impl Policy for ArrowPolicy {
             })
             .unwrap_or_else(|| {
                 // Pools empty (everything lost/draining). Last ditch:
-                // first live instance in the view, else 0 — the
+                // first *healthy* live instance in the view, then any
+                // placeable (a straggler beats nothing), else 0 — the
                 // substrate fails the request if nothing is left.
                 (0..view.n_instances())
                     .map(InstanceId)
-                    .find(|id| view.liveness(id.0).placeable())
+                    .find(|id| {
+                        let l = view.liveness(id.0);
+                        l.placeable() && !l.is_degraded()
+                    })
+                    .or_else(|| {
+                        (0..view.n_instances())
+                            .map(InstanceId)
+                            .find(|id| view.liveness(id.0).placeable())
+                    })
                     .unwrap_or(InstanceId(0))
             })
     }
@@ -387,17 +404,26 @@ impl Policy for ArrowPolicy {
         {
             return prefill_instance;
         }
-        // Admission counts the incoming request's own KV footprint.
+        // Admission counts the incoming request's own KV footprint. A
+        // Degraded (straggler, PR 6) argmin fails acceptance the same way
+        // a TPOT-violating interval does — Alg. 2 escalates to a healthy
+        // pool or a flip instead of feeding the slow instance.
         let incoming = req.input_len as u64;
         let t1 = self.min_running_tokens(Pool::Decode, view);
         if let Some((id, tokens)) = t1 {
-            if tokens + incoming <= self.mrt(id.0) && self.interval_ok(view, id.0) {
+            if tokens + incoming <= self.mrt(id.0)
+                && self.interval_ok(view, id.0)
+                && !view.liveness(id.0).is_degraded()
+            {
                 return id;
             }
         }
         let t2 = self.min_running_tokens(Pool::PrefillToDecode, view);
         if let Some((id, tokens)) = t2 {
-            if tokens + incoming <= self.mrt(id.0) && self.interval_ok(view, id.0) {
+            if tokens + incoming <= self.mrt(id.0)
+                && self.interval_ok(view, id.0)
+                && !view.liveness(id.0).is_degraded()
+            {
                 return id;
             }
         }
@@ -823,6 +849,31 @@ mod tests {
             let d = p.place_decode(step as f64, &r, t, &SimView(&insts));
             assert!(d != InstanceId(1) && d != InstanceId(3), "decoded on departed {d}");
         }
+    }
+
+    #[test]
+    fn degraded_straggler_is_deprioritized_but_still_placeable() {
+        // PR 6: a straggler flagged Degraded loses the t1/t2 acceptance
+        // even when its queue-delay argmin wins; placement escalates to
+        // healthy capacity instead.
+        let (mut p, mut insts) = policy(4);
+        // Load instance 0 so the prefill argmin is instance 1, then mark
+        // 1 as a straggler: the SLO test must refuse it and Alg. 1 steals
+        // an (idle) decode instance instead.
+        insts[0].enqueue_prefill(crate::request::RequestId(9), 50_000);
+        insts[1].life = crate::sched::Liveness::Degraded;
+        let t = p.place_prefill(0.0, &req(1, 1000, 10), &SimView(&insts));
+        assert_ne!(t, InstanceId(1), "degraded argmin must not win acceptance");
+        // Decode: the min-running-tokens argmin (tie → lowest id = 2) is
+        // degraded; Alg. 2 must escalate rather than feed the straggler.
+        let (mut p2, mut insts2) = policy(4);
+        insts2[2].life = crate::sched::Liveness::Degraded;
+        let d = p2.place_decode(0.0, &req(2, 1000, 10), InstanceId(0), &SimView(&insts2));
+        assert_ne!(d, InstanceId(2), "degraded decode argmin must not win");
+        // Degraded is still placeable (last resort): liveness contract.
+        assert!(crate::sched::Liveness::Degraded.placeable());
+        assert!(crate::sched::Liveness::Degraded.in_cluster());
+        assert!(crate::sched::Liveness::Degraded.is_degraded());
     }
 
     #[test]

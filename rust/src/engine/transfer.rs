@@ -50,6 +50,15 @@ pub struct TransferFabric {
     in_flight_tokens: u64,
     /// Requests whose transfer waited longer than this fail (None = never).
     pub fail_timeout: Option<f64>,
+    /// Per-source link flap horizon (PR 6 fault plane): while
+    /// `now < flap_until[src]` the channel out of `src` is down — nothing
+    /// starts, and waiting transfers can still time out.
+    flap_until: Vec<Time>,
+    /// When true (retry mode), `next_wakeup` also wakes at timeout
+    /// deadlines and flap-window ends, so a blocked transfer is
+    /// guaranteed a poll that fails it into the retry path. Off by
+    /// default: legacy scenarios must keep their exact event schedules.
+    pub timeout_wakeups: bool,
 }
 
 impl TransferFabric {
@@ -61,6 +70,8 @@ impl TransferFabric {
             buffer_cap_tokens: None,
             in_flight_tokens: 0,
             fail_timeout: None,
+            flap_until: vec![0.0; n_instances],
+            timeout_wakeups: false,
         }
     }
 
@@ -69,10 +80,18 @@ impl TransferFabric {
         self.queues[t.from.0].push_back(t);
     }
 
+    /// Take the link out of `src` down until `until` (max-merged with any
+    /// flap already in effect). Injected by `FaultKind::TransferFlap`.
+    pub fn flap_link(&mut self, src: usize, until: Time) {
+        self.flap_until[src] = self.flap_until[src].max(until);
+    }
+
     /// Try to start queued transfers at time `now`. Returns started
     /// transfers (caller schedules their completion events) and failed
-    /// request ids (timeout waiting for buffer).
-    pub fn poll(&mut self, now: Time) -> (Vec<StartedTransfer>, Vec<RequestId>) {
+    /// transfers (timed out waiting for buffer or a downed link) — the
+    /// full `Transfer` comes back so the caller can retry the same route
+    /// with backoff instead of giving up.
+    pub fn poll(&mut self, now: Time) -> (Vec<StartedTransfer>, Vec<Transfer>) {
         let mut started = Vec::new();
         let mut failed = Vec::new();
         for src in 0..self.queues.len() {
@@ -81,13 +100,23 @@ impl TransferFabric {
                 if self.busy_until[src] > now {
                     break;
                 }
+                // Downed link: nothing starts; waiters can still time out
+                // into the retry path.
+                if self.flap_until[src] > now {
+                    if let Some(to) = self.fail_timeout {
+                        if now - head.requested_at > to {
+                            failed.push(self.queues[src].pop_front().unwrap());
+                            continue;
+                        }
+                    }
+                    break;
+                }
                 // Buffer admission.
                 if let Some(cap) = self.buffer_cap_tokens {
                     if self.in_flight_tokens + head.kv_tokens as u64 > cap {
                         if let Some(to) = self.fail_timeout {
                             if now - head.requested_at > to {
-                                let t = self.queues[src].pop_front().unwrap();
-                                failed.push(t.req);
+                                failed.push(self.queues[src].pop_front().unwrap());
                                 continue;
                             }
                         }
@@ -120,6 +149,34 @@ impl TransferFabric {
             if !q.is_empty() {
                 let cand = self.busy_until[src];
                 t = Some(t.map_or(cand, |x: f64| x.min(cand)));
+            }
+        }
+        t
+    }
+
+    /// Retry-mode wakeup (`timeout_wakeups`): earliest time strictly
+    /// after `now` at which a queued transfer could start *or* time out —
+    /// channel-free, flap-window end, and `fail_timeout` deadlines all
+    /// count. This guarantees a transfer stuck behind a downed link or a
+    /// full buffer gets a poll that fails it into the retry path, instead
+    /// of waiting for an unrelated event.
+    pub fn next_wakeup_after(&self, now: Time) -> Option<Time> {
+        let mut t: Option<Time> = None;
+        let mut consider = |cand: Time, t: &mut Option<Time>| {
+            if cand > now {
+                *t = Some(t.map_or(cand, |x: f64| x.min(cand)));
+            }
+        };
+        for (src, q) in self.queues.iter().enumerate() {
+            if let Some(head) = q.front() {
+                consider(self.busy_until[src].max(self.flap_until[src]), &mut t);
+                if let Some(to) = self.fail_timeout {
+                    // Nudge past the deadline: poll fails on *strictly*
+                    // exceeded timeouts, so a wakeup exactly at the
+                    // deadline would poll, fail nothing, and re-arm at
+                    // the same instant forever.
+                    consider(head.requested_at + to + 1e-9, &mut t);
+                }
             }
         }
         t
@@ -199,10 +256,14 @@ mod tests {
         f.request(t(2, 1, 0, 1000, 0.0));
         let (s2, f2) = f.poll(1.0);
         assert!(s2.is_empty() && f2.is_empty());
-        // After the timeout it fails.
+        // After the timeout it fails — the full route comes back so the
+        // caller can retry it.
         let (s3, f3) = f.poll(12.0);
         assert!(s3.is_empty());
-        assert_eq!(f3, vec![RequestId(2)]);
+        assert_eq!(f3.len(), 1);
+        assert_eq!(f3[0].req, RequestId(2));
+        assert_eq!(f3[0].from, InstanceId(1));
+        assert_eq!(f3[0].kv_tokens, 1000);
         // Releasing the buffer lets new transfers in.
         f.complete(1000);
         f.request(t(3, 1, 0, 1000, 12.0));
@@ -214,5 +275,50 @@ mod tests {
     fn next_wakeup_none_when_empty() {
         let f = fabric(2);
         assert_eq!(f.next_wakeup(), None);
+        assert_eq!(f.next_wakeup_after(0.0), None);
+    }
+
+    #[test]
+    fn flapped_link_blocks_then_recovers() {
+        let mut f = fabric(2);
+        f.flap_link(0, 10.0);
+        f.request(t(1, 0, 1, 1000, 0.0));
+        let (s, fl) = f.poll(5.0);
+        assert!(s.is_empty() && fl.is_empty(), "downed link starts nothing");
+        // The other source is unaffected.
+        f.request(t(2, 1, 0, 1000, 5.0));
+        let (s, _) = f.poll(5.0);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].transfer.req, RequestId(2));
+        // Once the flap clears, the blocked transfer starts.
+        let (s, _) = f.poll(10.0);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].transfer.req, RequestId(1));
+        // Flaps max-merge: extending backwards never shortens.
+        f.flap_link(0, 20.0);
+        f.flap_link(0, 15.0);
+        f.request(t(3, 0, 1, 1000, 10.0));
+        f.complete(1000);
+        f.complete(1000);
+        let (s, _) = f.poll(19.0);
+        assert!(s.is_empty(), "flap horizon is the max of all flaps");
+    }
+
+    #[test]
+    fn flapped_link_times_out_waiters_into_retry_path() {
+        let mut f = fabric(2);
+        f.fail_timeout = Some(3.0);
+        f.timeout_wakeups = true;
+        f.flap_link(0, 100.0);
+        f.request(t(1, 0, 1, 1000, 0.0));
+        // Wakeup covers the timeout deadline, not just the (past) channel
+        // free time.
+        let w = f.next_wakeup_after(0.0).unwrap();
+        assert!(w > 3.0 && w < 3.1, "deadline wakeup, got {w}");
+        let (s, fl) = f.poll(w);
+        assert!(s.is_empty());
+        assert_eq!(fl.len(), 1);
+        assert_eq!(fl[0].req, RequestId(1));
+        assert_eq!(f.next_wakeup_after(w), None, "queue drained");
     }
 }

@@ -1,0 +1,272 @@
+//! Deterministic fault-injection plane (PR 6, ROADMAP "Robustness
+//! architecture").
+//!
+//! Arrow's robustness argument is that *stateless* instances make
+//! recovery cheap (paper §5.2): any instance can re-run a prefill or
+//! adopt a decode because no scheduler state lives on the instance. The
+//! repo's membership machinery (PR 3) only exercised clean, scripted
+//! `Join/Drain/Fail` events; this module adds the messy middle — flapping
+//! transfer links, stragglers, stalls, crash-and-rejoin cycles — as a
+//! *seeded, fully deterministic* [`FaultPlan`] so chaos runs are
+//! replayable bit-for-bit and byte-identical across the simulator's
+//! cursor and reference event loops.
+//!
+//! Nothing here reads a wall clock or an OS entropy source: fault times
+//! come from [`FaultPlan::seeded`] (xoshiro via [`Rng`]) and retry jitter
+//! from [`TransferRetryPolicy::backoff_delay`], a pure function of
+//! `(seed, request id, attempt)`.
+
+use crate::util::rng::Rng;
+
+/// Seconds since run start (same clock as [`crate::request::Time`]).
+pub type Time = f64;
+
+/// One injectable fault. `Copy`: fault events ride the simulator's event
+/// heap, which must stay allocation-free per event (PR-1 invariant).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The transfer channel out of instance `link` rejects/drops KV
+    /// copies for `window` seconds (NIC flap, fabric congestion).
+    TransferFlap { link: usize, window: f64 },
+    /// Instance `inst` runs `slowdown`× slower for `window` seconds
+    /// (thermal throttle, noisy neighbor): every iteration's duration is
+    /// dilated, which the monitor observes as token-interval outliers.
+    Straggler { inst: usize, slowdown: f64, window: f64 },
+    /// Instance `inst` freezes for `duration` seconds: no new iterations
+    /// start until the stall clears (GC pause, driver hiccup). A
+    /// `duration` of 0.0 is the internal end-of-stall wake marker.
+    EngineStall { inst: usize, duration: f64 },
+    /// Instance `inst` fails hard now and rejoins `downtime` seconds
+    /// later (reuses the PR-3 membership machinery: fail re-places live
+    /// work, rejoin restores capacity).
+    CrashRejoin { inst: usize, downtime: f64 },
+}
+
+impl FaultKind {
+    /// The instance (or link endpoint) this fault targets.
+    pub fn instance(&self) -> usize {
+        match *self {
+            FaultKind::TransferFlap { link, .. } => link,
+            FaultKind::Straggler { inst, .. } => inst,
+            FaultKind::EngineStall { inst, .. } => inst,
+            FaultKind::CrashRejoin { inst, .. } => inst,
+        }
+    }
+}
+
+/// A time-ordered schedule of faults to inject into one run.
+///
+/// The plan is *data*, not behavior: the simulator turns each entry into
+/// an `EventKind::Fault` on its ordinary `(time, seq)` heap, so a plan
+/// perturbs a run exactly like any other event source and an empty plan
+/// adds zero events (and zero per-event allocation).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<(Time, FaultKind)>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Append a fault at absolute time `at` (seconds from run start).
+    /// Entries may be pushed out of order; `events()` returns them in
+    /// schedule order.
+    pub fn push(&mut self, at: Time, kind: FaultKind) {
+        assert!(at.is_finite() && at >= 0.0, "fault time must be finite and >= 0");
+        self.events.push((at, kind));
+        // Keep schedule order on insert: plans are tiny (a handful of
+        // faults), and sorted order is what run_mode pushes verbatim so
+        // cursor/reference seq assignment matches.
+        let mut i = self.events.len() - 1;
+        while i > 0 && self.events[i - 1].0 > self.events[i].0 {
+            self.events.swap(i - 1, i);
+            i -= 1;
+        }
+    }
+
+    /// The schedule, ordered by injection time (ties keep insert order).
+    pub fn events(&self) -> &[(Time, FaultKind)] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Generate a deterministic chaos schedule for an `n_instances`
+    /// cluster over a run of `duration` seconds.
+    ///
+    /// `intensity` scales the number of faults (~4 per unit; 0.0 means an
+    /// empty plan — the chaos harness's fault-free baseline). All faults
+    /// are injected in `[0.2, 0.55] * duration` and every window/downtime
+    /// ends by `0.75 * duration`, so the tail of the run is a clean
+    /// recovery region the chaos tier can compare against the fault-free
+    /// steady state.
+    pub fn seeded(seed: u64, n_instances: usize, duration: f64, intensity: f64) -> FaultPlan {
+        assert!(n_instances > 0, "fault plan needs at least one instance");
+        assert!(duration > 0.0 && duration.is_finite());
+        assert!(intensity >= 0.0);
+        let n_events = (intensity * 4.0).round() as usize;
+        let mut plan = FaultPlan::new();
+        if n_events == 0 {
+            return plan;
+        }
+        let mut rng = Rng::new(seed);
+        for _ in 0..n_events {
+            let at = (0.2 + 0.35 * rng.f64()) * duration;
+            // Longest allowed disruption still ends inside the 0.75
+            // recovery horizon.
+            let max_window = (0.75 * duration - at).max(1e-6);
+            let window = (0.05 + 0.15 * rng.f64()) * duration;
+            let window = window.min(max_window);
+            let inst = rng.index(n_instances);
+            let kind = match rng.index(4) {
+                0 => FaultKind::TransferFlap { link: inst, window },
+                1 => FaultKind::Straggler {
+                    inst,
+                    slowdown: 2.0 + 2.0 * rng.f64(),
+                    window,
+                },
+                2 => FaultKind::EngineStall {
+                    inst,
+                    duration: window,
+                },
+                _ => FaultKind::CrashRejoin {
+                    inst,
+                    downtime: window,
+                },
+            };
+            plan.push(at, kind);
+        }
+        plan
+    }
+}
+
+/// KV-transfer retry policy: capped exponential backoff with
+/// deterministic, seeded jitter (no wall clock — retries must replay
+/// bit-for-bit and stay byte-identical across event-loop modes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransferRetryPolicy {
+    /// Retries before escalating to stateless re-placement (attempt
+    /// numbers 1..=max_retries re-enqueue the same route).
+    pub max_retries: u32,
+    /// Backoff before the first retry (seconds).
+    pub base_delay_s: f64,
+    /// Backoff cap (seconds).
+    pub max_delay_s: f64,
+    /// Jitter stream seed; the jitter for a given (request, attempt) is a
+    /// pure function of this seed.
+    pub seed: u64,
+}
+
+impl Default for TransferRetryPolicy {
+    fn default() -> TransferRetryPolicy {
+        TransferRetryPolicy {
+            max_retries: 2,
+            base_delay_s: 0.5,
+            max_delay_s: 8.0,
+            seed: 0x41525257, // "ARRW"
+        }
+    }
+}
+
+impl TransferRetryPolicy {
+    /// Delay before retry number `attempt` (1-based) of request `req`.
+    ///
+    /// `min(base * 2^(attempt-1), cap)`, then scaled into `[0.5, 1.0)` of
+    /// itself by a jitter value drawn from an rng keyed on
+    /// `(seed, req, attempt)` — decorrelated across requests so a burst
+    /// of simultaneous timeouts doesn't retry in lockstep, yet fully
+    /// deterministic for replay.
+    pub fn backoff_delay(&self, req: u64, attempt: u32) -> f64 {
+        debug_assert!(attempt >= 1, "attempts are 1-based");
+        let exp = (attempt - 1).min(30);
+        let raw = (self.base_delay_s * (1u64 << exp) as f64).min(self.max_delay_s);
+        let mut rng = Rng::new(
+            self.seed
+                ^ req.wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (attempt as u64).wrapping_mul(0xBF58476D1CE4E5B9),
+        );
+        raw * (0.5 + 0.5 * rng.f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        let a = FaultPlan::seeded(42, 5, 600.0, 1.5);
+        let b = FaultPlan::seeded(42, 5, 600.0, 1.5);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 6); // 1.5 * 4
+        let c = FaultPlan::seeded(43, 5, 600.0, 1.5);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn zero_intensity_is_empty() {
+        let p = FaultPlan::seeded(7, 4, 300.0, 0.0);
+        assert!(p.is_empty());
+        assert_eq!(p.len(), 0);
+    }
+
+    #[test]
+    fn seeded_faults_respect_bounds_and_recovery_horizon() {
+        for seed in 0..20 {
+            let d = 500.0;
+            let p = FaultPlan::seeded(seed, 6, d, 2.0);
+            for &(at, kind) in p.events() {
+                assert!((0.2 * d..=0.55 * d).contains(&at), "at={at}");
+                assert!(kind.instance() < 6);
+                let end = match kind {
+                    FaultKind::TransferFlap { window, .. } => at + window,
+                    FaultKind::Straggler { slowdown, window, .. } => {
+                        assert!((2.0..4.0).contains(&slowdown));
+                        at + window
+                    }
+                    FaultKind::EngineStall { duration, .. } => at + duration,
+                    FaultKind::CrashRejoin { downtime, .. } => at + downtime,
+                };
+                assert!(
+                    end <= 0.75 * d + 1e-9,
+                    "fault {kind:?}@{at} must clear by the recovery horizon"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_events_come_out_time_ordered() {
+        let mut p = FaultPlan::new();
+        p.push(5.0, FaultKind::EngineStall { inst: 0, duration: 1.0 });
+        p.push(1.0, FaultKind::TransferFlap { link: 1, window: 2.0 });
+        p.push(3.0, FaultKind::CrashRejoin { inst: 2, downtime: 4.0 });
+        let times: Vec<f64> = p.events().iter().map(|e| e.0).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_jittered() {
+        let p = TransferRetryPolicy::default();
+        // Deterministic: same (req, attempt) -> same delay.
+        assert_eq!(p.backoff_delay(9, 1), p.backoff_delay(9, 1));
+        // Jitter keeps each delay in [raw/2, raw).
+        for attempt in 1..=8u32 {
+            let raw = (p.base_delay_s * (1u64 << (attempt - 1)) as f64).min(p.max_delay_s);
+            let d = p.backoff_delay(3, attempt);
+            assert!(d >= raw * 0.5 && d < raw, "attempt {attempt}: {d} vs raw {raw}");
+        }
+        // Capped: deep attempts never exceed the cap.
+        assert!(p.backoff_delay(3, 30) < p.max_delay_s);
+        // Decorrelated across requests.
+        assert_ne!(p.backoff_delay(1, 1), p.backoff_delay(2, 1));
+    }
+}

@@ -448,6 +448,33 @@ pub fn claims(opts: &FigOpts, smoke: bool) -> bool {
     report.all_hold()
 }
 
+// ---------------------------------------------------------------------------
+// Chaos conformance (PR 6) — the `arrow chaos` subcommand
+// ---------------------------------------------------------------------------
+
+/// Run the seeded fault-plan robustness sweep under the normalized cost
+/// model, print the invariant table, and write `chaos.json` next to the
+/// figure outputs. Returns whether every chaos invariant held — the CLI
+/// exits non-zero otherwise, which is how ci.sh gates it.
+pub fn chaos(opts: &FigOpts, smoke: bool) -> bool {
+    let mut cfg = if smoke {
+        crate::harness::chaos::ChaosConfig::smoke()
+    } else {
+        crate::harness::chaos::ChaosConfig::full()
+    };
+    cfg.seed = opts.seed;
+    cfg.gpus = opts.gpus;
+    cfg.workers = opts.workers;
+    if !smoke {
+        // Smoke keeps its own (capped) clip; full follows --clip.
+        cfg.clip_seconds = opts.clip_seconds;
+    }
+    let report = crate::harness::chaos::run_chaos(&cfg);
+    print!("{}", report.summary());
+    write_json(opts, "chaos.json", &report.to_json());
+    report.all_hold()
+}
+
 /// Run everything (the `figures all` subcommand).
 pub fn all(opts: &FigOpts) {
     table1(opts);

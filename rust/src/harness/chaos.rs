@@ -1,0 +1,489 @@
+//! Chaos conformance harness (PR 6 — ROADMAP "Robustness architecture").
+//!
+//! The claims harness proves Arrow schedules *well*; this module proves
+//! it degrades *honestly*. It sweeps seeded, fully deterministic
+//! [`FaultPlan`]s of increasing intensity through the recovery-armed
+//! Arrow cluster ([`crate::scenarios::arrow_chaos`]) under the
+//! dimensionless [`CostModel::normalized`] preset and turns the PR 6
+//! robustness contracts into machine-checkable verdicts:
+//!
+//! * **no silent loss** — under any fault plan, every request either
+//!   finishes or is explicitly shed with a recorded [`ShedReason`]; a
+//!   `Failed` record without a reason is a bug, full stop;
+//! * **determinism** — the same seed produces byte-identical schedules
+//!   in the calendar-cursor and heap-reference event loops, faults
+//!   included (chaos runs must be replayable to be debuggable);
+//! * **goodput bound** — injecting faults never *increases* goodput
+//!   beyond a tolerance band (a violation means the fault machinery
+//!   perturbs fault-free scheduling, which the golden digests forbid);
+//! * **recovery** — requests arriving after the plan's recovery horizon
+//!   (all faults clear by 0.75 × duration) complete at close to the
+//!   fault-free tail rate: faults must not leave permanent scar tissue.
+//!
+//! `tests/chaos.rs` asserts the verdicts; `arrow chaos` emits the full
+//! machine-readable report (`chaos.json`, same `BENCH_*.json`-style
+//! conventions as the claims report) and exits non-zero when a verdict
+//! fails, which is how ci.sh gates it.
+
+use crate::costmodel::CostModel;
+use crate::fault::FaultPlan;
+use crate::json::Json;
+use crate::metrics::SloReport;
+use crate::request::{RequestRecord, RequestState, ShedReason};
+use crate::scenarios::arrow_chaos;
+use crate::trace::catalog::{self, Workload};
+use crate::util::threads::{default_workers, parallel_map};
+
+/// `ARROW_CHAOS_SMOKE` (the ci.sh knob): truthy when set to anything but
+/// "0"/empty — same convention as `ARROW_CLAIMS_SMOKE`.
+pub fn smoke_env() -> bool {
+    std::env::var("ARROW_CHAOS_SMOKE").map_or(false, |v| v != "0" && !v.is_empty())
+}
+
+/// Sweep parameters for one chaos run.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    pub seed: u64,
+    /// Clip the trace to this many seconds before injecting faults.
+    pub clip_seconds: f64,
+    pub gpus: usize,
+    /// Fault intensities swept. 0.0 (required, first) is the fault-free
+    /// baseline; intensity `i` seeds `round(4·i)` faults.
+    pub intensities: Vec<f64>,
+    /// Goodput tolerance band: a faulted run may exceed the fault-free
+    /// baseline by this fraction before the bound verdict fails (absorbs
+    /// shed-vs-finished discretization, not real inversions).
+    pub tolerance: f64,
+    /// Allowed absolute drop in post-horizon completion rate vs the
+    /// fault-free baseline (residual backlog drains, it does not linger).
+    pub recovery_band: f64,
+    pub workers: usize,
+    pub smoke: bool,
+}
+
+impl ChaosConfig {
+    /// The full sweep `arrow chaos` runs by default.
+    pub fn full() -> ChaosConfig {
+        ChaosConfig {
+            seed: 42,
+            clip_seconds: 120.0,
+            gpus: 8,
+            intensities: vec![0.0, 0.5, 1.0, 2.0],
+            tolerance: 0.05,
+            recovery_band: 0.25,
+            workers: default_workers(),
+            smoke: false,
+        }
+    }
+
+    /// CI-budget variant (`ARROW_CHAOS_SMOKE=1`): shorter clip, two
+    /// intensities — the same invariants, evaluated inside the bench-gate
+    /// time budget.
+    pub fn smoke() -> ChaosConfig {
+        ChaosConfig {
+            clip_seconds: 60.0,
+            intensities: vec![0.0, 1.0],
+            smoke: true,
+            ..ChaosConfig::full()
+        }
+    }
+
+    /// Full or smoke, per the `ARROW_CHAOS_SMOKE` environment knob.
+    pub fn from_env() -> ChaosConfig {
+        if smoke_env() {
+            ChaosConfig::smoke()
+        } else {
+            ChaosConfig::full()
+        }
+    }
+}
+
+/// One (intensity, run) sweep point with its robustness accounting.
+#[derive(Debug, Clone)]
+pub struct ChaosPoint {
+    pub intensity: f64,
+    /// Faults in the seeded plan at this intensity.
+    pub n_faults: usize,
+    pub report: SloReport,
+    /// Failed records with no recorded shed reason — silently lost.
+    /// The contract is that this is always zero.
+    pub silently_lost: usize,
+    /// Explicit sheds by reason:
+    /// [NoCapacity, Oversized, TransferTimeout, DeadlineExceeded].
+    pub shed: [usize; 4],
+    /// Completion rate of requests arriving after the recovery horizon
+    /// (0.75 × duration, when every fault has cleared). 1.0 when the
+    /// clip leaves no tail arrivals.
+    pub tail_completion: f64,
+    /// Cursor and heap-reference event loops produced byte-identical
+    /// schedules for this seed.
+    pub deterministic: bool,
+}
+
+/// One robustness invariant, evaluated: `holds` iff `measured >= bound`.
+#[derive(Debug, Clone)]
+pub struct ChaosVerdict {
+    pub claim: String,
+    pub holds: bool,
+    pub measured: f64,
+    pub bound: f64,
+    pub detail: String,
+}
+
+/// The full chaos report: sweep points plus verdicts.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub cfg: ChaosConfig,
+    /// Always "normalized": robustness is a scheduler property, never a
+    /// calibration property.
+    pub cost_model: &'static str,
+    pub workload: String,
+    pub points: Vec<ChaosPoint>,
+    pub verdicts: Vec<ChaosVerdict>,
+}
+
+fn shed_index(r: ShedReason) -> usize {
+    match r {
+        ShedReason::NoCapacity => 0,
+        ShedReason::Oversized => 1,
+        ShedReason::TransferTimeout => 2,
+        ShedReason::DeadlineExceeded => 3,
+    }
+}
+
+/// Byte-identity of two runs' request schedules (the same fields the
+/// cross-substrate tier compares, plus the shed reasons).
+fn records_identical(a: &[RequestRecord], b: &[RequestRecord]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.state == y.state
+                && x.token_times == y.token_times
+                && x.prefill_instance == y.prefill_instance
+                && x.decode_instance == y.decode_instance
+                && x.shed == y.shed
+        })
+}
+
+/// Run one intensity point: seeded plan, both event-loop modes, full
+/// robustness accounting.
+fn run_point(w: &Workload, cfg: &ChaosConfig, intensity: f64) -> ChaosPoint {
+    let base = CostModel::normalized();
+    let trace = w.generate(cfg.seed).clip_seconds(cfg.clip_seconds);
+    assert!(!trace.is_empty(), "workload {} clipped to nothing", w.name());
+    let duration = trace.duration();
+    // Per-intensity fault seed: deterministic, distinct per point.
+    let plan = FaultPlan::seeded(cfg.seed ^ intensity.to_bits(), cfg.gpus, duration, intensity);
+
+    let mut cursor = arrow_chaos(cfg.gpus, &base, w.ttft_slo, w.tpot_slo);
+    cursor.schedule_fault_plan(&plan);
+    let res = cursor.run(&trace);
+    let mut reference = arrow_chaos(cfg.gpus, &base, w.ttft_slo, w.tpot_slo);
+    reference.schedule_fault_plan(&plan);
+    let ref_res = reference.run_reference(&trace);
+    let deterministic = res.events_processed == ref_res.events_processed
+        && records_identical(&res.records, &ref_res.records);
+
+    let mut silently_lost = 0usize;
+    let mut shed = [0usize; 4];
+    for r in &res.records {
+        if r.state == RequestState::Failed {
+            match r.shed {
+                Some(reason) => shed[shed_index(reason)] += 1,
+                None => silently_lost += 1,
+            }
+        }
+    }
+    let horizon = 0.75 * duration;
+    let tail: Vec<&RequestRecord> =
+        res.records.iter().filter(|r| r.arrival > horizon).collect();
+    let tail_completion = if tail.is_empty() {
+        1.0
+    } else {
+        tail.iter().filter(|r| r.finished()).count() as f64 / tail.len() as f64
+    };
+
+    ChaosPoint {
+        intensity,
+        n_faults: plan.len(),
+        report: SloReport::from_records(&res.records, w.ttft_slo, w.tpot_slo, duration),
+        silently_lost,
+        shed,
+        tail_completion,
+        deterministic,
+    }
+}
+
+/// Evaluate the robustness invariants over a sweep.
+fn verdicts_for(points: &[ChaosPoint], cfg: &ChaosConfig) -> Vec<ChaosVerdict> {
+    let mut out = Vec::new();
+    let baseline = &points[0];
+    assert!(
+        baseline.intensity == 0.0,
+        "the first intensity must be the fault-free baseline"
+    );
+    for p in points {
+        out.push(ChaosVerdict {
+            claim: format!("no_silent_loss@x{}", p.intensity),
+            holds: p.silently_lost == 0,
+            measured: -(p.silently_lost as f64),
+            bound: 0.0,
+            detail: format!(
+                "{} silently lost of {} requests ({} faults, shed {:?})",
+                p.silently_lost, p.report.n_requests, p.n_faults, p.shed
+            ),
+        });
+        out.push(ChaosVerdict {
+            claim: format!("deterministic@x{}", p.intensity),
+            holds: p.deterministic,
+            measured: if p.deterministic { 1.0 } else { 0.0 },
+            bound: 1.0,
+            detail: format!(
+                "cursor vs heap-reference schedules at intensity {} ({} faults)",
+                p.intensity, p.n_faults
+            ),
+        });
+    }
+    for p in &points[1..] {
+        let bound = p.report.goodput_tokens;
+        let measured = baseline.report.goodput_tokens * (1.0 + cfg.tolerance) + 1e-6;
+        out.push(ChaosVerdict {
+            claim: format!("goodput_bound@x{}", p.intensity),
+            holds: measured >= bound,
+            measured,
+            bound,
+            detail: format!(
+                "fault-free goodput {:.1} tok/s (band +{:.0}%) vs faulted {:.1} at intensity {}",
+                baseline.report.goodput_tokens,
+                cfg.tolerance * 100.0,
+                p.report.goodput_tokens,
+                p.intensity
+            ),
+        });
+        let bound = baseline.tail_completion - cfg.recovery_band;
+        out.push(ChaosVerdict {
+            claim: format!("recovery@x{}", p.intensity),
+            holds: p.tail_completion >= bound,
+            measured: p.tail_completion,
+            bound,
+            detail: format!(
+                "post-horizon completion {:.3} vs fault-free {:.3} (band {:.2}) at intensity {}",
+                p.tail_completion, baseline.tail_completion, cfg.recovery_band, p.intensity
+            ),
+        });
+    }
+    out
+}
+
+impl ChaosReport {
+    pub fn all_hold(&self) -> bool {
+        self.verdicts.iter().all(|v| v.holds)
+    }
+
+    pub fn failed(&self) -> Vec<&ChaosVerdict> {
+        self.verdicts.iter().filter(|v| !v.holds).collect()
+    }
+
+    /// Machine-readable report, `BENCH_*.json`-style: one deterministic
+    /// self-describing object.
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("intensity", Json::Num(p.intensity)),
+                    ("n_faults", Json::Num(p.n_faults as f64)),
+                    ("goodput_tokens", Json::Num(p.report.goodput_tokens)),
+                    ("slo_attainment", Json::Num(p.report.slo_attainment)),
+                    ("n_finished", Json::Num(p.report.n_finished as f64)),
+                    ("n_failed", Json::Num(p.report.n_failed as f64)),
+                    ("silently_lost", Json::Num(p.silently_lost as f64)),
+                    ("shed_no_capacity", Json::Num(p.shed[0] as f64)),
+                    ("shed_oversized", Json::Num(p.shed[1] as f64)),
+                    ("shed_transfer_timeout", Json::Num(p.shed[2] as f64)),
+                    ("shed_deadline", Json::Num(p.shed[3] as f64)),
+                    ("tail_completion", Json::Num(p.tail_completion)),
+                    ("deterministic", Json::Bool(p.deterministic)),
+                ])
+            })
+            .collect();
+        let verdicts: Vec<Json> = self
+            .verdicts
+            .iter()
+            .map(|v| {
+                Json::obj(vec![
+                    ("claim", Json::Str(v.claim.clone())),
+                    ("holds", Json::Bool(v.holds)),
+                    ("measured", Json::Num(v.measured)),
+                    ("bound", Json::Num(v.bound)),
+                    ("detail", Json::Str(v.detail.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("report", Json::Str("chaos".into())),
+            ("cost_model", Json::Str(self.cost_model.into())),
+            ("workload", Json::Str(self.workload.clone())),
+            ("seed", Json::Num(self.cfg.seed as f64)),
+            ("clip_seconds", Json::Num(self.cfg.clip_seconds)),
+            ("gpus", Json::Num(self.cfg.gpus as f64)),
+            ("tolerance", Json::Num(self.cfg.tolerance)),
+            ("recovery_band", Json::Num(self.cfg.recovery_band)),
+            ("smoke", Json::Bool(self.cfg.smoke)),
+            ("intensities", Json::arr_f64(&self.cfg.intensities)),
+            ("points", Json::Arr(points)),
+            ("claims", Json::Arr(verdicts)),
+            ("all_hold", Json::Bool(self.all_hold())),
+        ])
+    }
+
+    /// Human-readable summary (the `arrow chaos` stdout table).
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "Chaos conformance — {} cost model, {} mode ({} GPUs, seed {}, clip {:.0}s, [{}])",
+            self.cost_model,
+            if self.cfg.smoke { "smoke" } else { "full" },
+            self.cfg.gpus,
+            self.cfg.seed,
+            self.cfg.clip_seconds,
+            self.workload,
+        );
+        let _ = writeln!(
+            s,
+            "  {:>9} {:>7} {:>10} {:>9} {:>7} {:>6} {:>9} {:>6}",
+            "intensity", "faults", "goodput", "finished", "shed", "lost", "tail_cmp", "det"
+        );
+        for p in &self.points {
+            let _ = writeln!(
+                s,
+                "  {:>9} {:>7} {:>10.1} {:>9} {:>7} {:>6} {:>9.3} {:>6}",
+                p.intensity,
+                p.n_faults,
+                p.report.goodput_tokens,
+                p.report.n_finished,
+                p.shed.iter().sum::<usize>(),
+                p.silently_lost,
+                p.tail_completion,
+                if p.deterministic { "yes" } else { "NO" }
+            );
+        }
+        let n_ok = self.verdicts.iter().filter(|v| v.holds).count();
+        let _ = writeln!(s, "\nchaos invariants: {}/{} hold", n_ok, self.verdicts.len());
+        for v in &self.verdicts {
+            let _ = writeln!(
+                s,
+                "  {} {} — {}",
+                if v.holds { "ok  " } else { "FAIL" },
+                v.claim,
+                v.detail
+            );
+        }
+        s
+    }
+}
+
+/// Run the chaos sweep on one explicit workload.
+pub fn run_chaos_for(w: &Workload, cfg: &ChaosConfig) -> ChaosReport {
+    assert!(!cfg.intensities.is_empty(), "chaos needs a non-empty sweep");
+    let points = parallel_map(cfg.intensities.clone(), cfg.workers, |&i| {
+        run_point(w, cfg, i)
+    });
+    let verdicts = verdicts_for(&points, cfg);
+    ChaosReport {
+        cfg: cfg.clone(),
+        cost_model: "normalized",
+        workload: w.name().to_string(),
+        points,
+        verdicts,
+    }
+}
+
+/// Run the default chaos sweep: the burst workload in full mode, the
+/// smoke trace under the CI budget.
+pub fn run_chaos(cfg: &ChaosConfig) -> ChaosReport {
+    let name = if cfg.smoke { "smoke" } else { "azure_code" };
+    let w = catalog::by_name(name).expect("catalog workload");
+    run_chaos_for(&w, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smallest meaningful sweep: short clip, baseline + one intensity —
+    /// unit tests exercise plumbing; the chaos *tier* does the real run.
+    fn tiny_cfg() -> ChaosConfig {
+        ChaosConfig {
+            clip_seconds: 20.0,
+            intensities: vec![0.0, 1.0],
+            gpus: 4,
+            workers: 2,
+            ..ChaosConfig::smoke()
+        }
+    }
+
+    #[test]
+    fn sweep_accounts_every_request_and_covers_verdicts() {
+        let w = catalog::by_name("smoke").unwrap();
+        let report = run_chaos_for(&w, &tiny_cfg());
+        assert_eq!(report.points.len(), 2);
+        for p in &report.points {
+            assert_eq!(
+                p.report.n_finished + p.report.n_failed,
+                p.report.n_requests,
+                "accounting at intensity {}",
+                p.intensity
+            );
+            assert_eq!(p.silently_lost, 0, "silent loss at intensity {}", p.intensity);
+            assert!(p.deterministic, "nondeterminism at intensity {}", p.intensity);
+        }
+        assert_eq!(report.points[0].n_faults, 0, "baseline must be fault-free");
+        assert!(report.points[1].n_faults > 0);
+        // Verdict presence is part of the contract.
+        let names: Vec<&str> = report.verdicts.iter().map(|v| v.claim.as_str()).collect();
+        for want in [
+            "no_silent_loss@x0",
+            "no_silent_loss@x1",
+            "deterministic@x0",
+            "deterministic@x1",
+            "goodput_bound@x1",
+            "recovery@x1",
+        ] {
+            assert!(names.contains(&want), "missing verdict {want}: {names:?}");
+        }
+        assert!(report.all_hold(), "failed: {:?}", report.failed());
+    }
+
+    #[test]
+    fn report_json_roundtrips_and_is_self_describing() {
+        let w = catalog::by_name("smoke").unwrap();
+        let report = run_chaos_for(&w, &tiny_cfg());
+        let text = report.to_json().encode();
+        let back = Json::parse(&text).expect("chaos report must be valid JSON");
+        assert_eq!(back.get("report").as_str(), Some("chaos"));
+        assert_eq!(back.get("cost_model").as_str(), Some("normalized"));
+        assert_eq!(back.get("points").as_arr().unwrap().len(), 2);
+        assert!(back.get("claims").as_arr().is_some());
+        assert!(back.get("all_hold").as_bool().is_some());
+        let s = report.summary();
+        for v in &report.verdicts {
+            assert!(s.contains(&v.claim), "summary missing {}", v.claim);
+        }
+    }
+
+    #[test]
+    fn configs_are_sane() {
+        for cfg in [ChaosConfig::full(), ChaosConfig::smoke()] {
+            assert!(!cfg.intensities.is_empty());
+            assert_eq!(cfg.intensities[0], 0.0, "baseline leads the sweep");
+            assert!(cfg.intensities.windows(2).all(|w| w[0] < w[1]));
+            assert!(cfg.clip_seconds > 0.0);
+            assert!((0.0..1.0).contains(&cfg.tolerance));
+            assert!((0.0..1.0).contains(&cfg.recovery_band));
+        }
+        assert!(ChaosConfig::smoke().clip_seconds < ChaosConfig::full().clip_seconds);
+    }
+}

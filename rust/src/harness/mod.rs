@@ -39,6 +39,8 @@ use crate::trace::catalog::{self, Workload};
 use crate::trace::Trace;
 use crate::util::threads::{default_workers, parallel_map};
 
+pub mod chaos;
+
 /// The §7.1/§7.3 baselines that disaggregate with *fixed* roles — the
 /// systems the paper's "vs static PD disaggregation" claims range over.
 /// The colocated system is deliberately not here: it appears in the

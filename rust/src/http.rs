@@ -62,9 +62,11 @@ impl HttpResponse {
             403 => "Forbidden",
             404 => "Not Found",
             405 => "Method Not Allowed",
+            413 => "Payload Too Large",
             429 => "Too Many Requests",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
+            504 => "Gateway Timeout",
             _ => "Unknown",
         }
     }
@@ -83,13 +85,56 @@ impl HttpResponse {
     }
 }
 
-/// Parse one request from a stream. Returns None on clean EOF.
-pub fn parse_request(stream: &mut TcpStream) -> std::io::Result<Option<HttpRequest>> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    if reader.read_line(&mut line)? == 0 {
+/// Hard limits on inbound requests (PR 6 hardening): the server binds
+/// 0.0.0.0, so one socket must never be able to balloon memory with an
+/// unbounded header section or a huge declared body.
+pub const MAX_HEADERS: usize = 128;
+pub const MAX_HEADER_LINE_BYTES: u64 = 8 * 1024;
+pub const MAX_BODY_BYTES: usize = 64 << 20;
+
+/// Why a request could not be parsed — `serve` maps each variant to a
+/// status instead of the blanket 400 (and, before PR 6, the silent
+/// truncation) it used to answer with.
+#[derive(Debug)]
+pub enum ParseError {
+    /// Socket error or malformed request line (400).
+    Bad(std::io::Error),
+    /// Header section exceeds `MAX_HEADERS` / `MAX_HEADER_LINE_BYTES` (400).
+    HeadersTooLarge,
+    /// Declared `Content-Length` exceeds `MAX_BODY_BYTES` (413).
+    BodyTooLarge,
+}
+
+impl From<std::io::Error> for ParseError {
+    fn from(e: std::io::Error) -> Self {
+        ParseError::Bad(e)
+    }
+}
+
+/// One `\n`-terminated line, refusing lines past the cap. None = EOF.
+fn read_line_capped(reader: &mut BufReader<TcpStream>) -> Result<Option<String>, ParseError> {
+    let mut buf = Vec::new();
+    let n = reader
+        .by_ref()
+        .take(MAX_HEADER_LINE_BYTES)
+        .read_until(b'\n', &mut buf)?;
+    if n == 0 {
         return Ok(None);
     }
+    // Cap hit without a terminator: the line keeps going — reject rather
+    // than mis-parse the tail as further headers.
+    if n as u64 == MAX_HEADER_LINE_BYTES && buf.last() != Some(&b'\n') {
+        return Err(ParseError::HeadersTooLarge);
+    }
+    Ok(Some(String::from_utf8_lossy(&buf).into_owned()))
+}
+
+/// Parse one request from a stream. Returns None on clean EOF.
+pub fn parse_request(stream: &mut TcpStream) -> Result<Option<HttpRequest>, ParseError> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let Some(line) = read_line_capped(&mut reader)? else {
+        return Ok(None);
+    };
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_uppercase();
     let path = parts.next().unwrap_or("/").to_string();
@@ -97,17 +142,20 @@ pub fn parse_request(stream: &mut TcpStream) -> std::io::Result<Option<HttpReque
         return Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
             "bad request line",
-        ));
+        )
+        .into());
     }
     let mut headers = BTreeMap::new();
+    let mut n_headers = 0usize;
     loop {
-        let mut h = String::new();
-        if reader.read_line(&mut h)? == 0 {
-            break;
-        }
+        let Some(h) = read_line_capped(&mut reader)? else { break };
         let h = h.trim_end();
         if h.is_empty() {
             break;
+        }
+        n_headers += 1;
+        if n_headers > MAX_HEADERS {
+            return Err(ParseError::HeadersTooLarge);
         }
         if let Some((k, v)) = h.split_once(':') {
             headers.insert(k.trim().to_lowercase(), v.trim().to_string());
@@ -117,7 +165,10 @@ pub fn parse_request(stream: &mut TcpStream) -> std::io::Result<Option<HttpReque
         .get("content-length")
         .and_then(|v| v.parse().ok())
         .unwrap_or(0);
-    let mut body = vec![0u8; len.min(64 << 20)]; // 64 MB cap
+    if len > MAX_BODY_BYTES {
+        return Err(ParseError::BodyTooLarge);
+    }
+    let mut body = vec![0u8; len];
     if len > 0 {
         reader.read_exact(&mut body)?;
     }
@@ -161,7 +212,17 @@ where
                             }
                         }
                         Ok(None) => return,
-                        Err(_) => HttpResponse::json(400, "{\"error\":\"bad request\"}"),
+                        Err(ParseError::BodyTooLarge) => HttpResponse::json(
+                            413,
+                            "{\"error\":\"request body exceeds limit\"}",
+                        ),
+                        Err(ParseError::HeadersTooLarge) => HttpResponse::json(
+                            400,
+                            "{\"error\":\"header section exceeds limit\"}",
+                        ),
+                        Err(ParseError::Bad(_)) => {
+                            HttpResponse::json(400, "{\"error\":\"bad request\"}")
+                        }
                     };
                     let _ = resp.write_to(&mut stream);
                 });
@@ -238,6 +299,65 @@ mod tests {
         let (addr, shutdown) = start(|_req| panic!("boom"));
         let resp = roundtrip(&addr, "GET / HTTP/1.1\r\n\r\n");
         assert!(resp.starts_with("HTTP/1.1 500"), "{resp}");
+        shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn oversized_content_length_rejected_413() {
+        let (addr, shutdown) = start(|_req| HttpResponse::text(200, "ok"));
+        // Declared body far past MAX_BODY_BYTES: rejected up front, never
+        // allocated (the old parser silently truncated to the cap).
+        let resp = roundtrip(
+            &addr,
+            &format!(
+                "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                MAX_BODY_BYTES + 1
+            ),
+        );
+        assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+        shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn too_many_headers_rejected_400() {
+        let (addr, shutdown) = start(|_req| HttpResponse::text(200, "ok"));
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADERS + 1) {
+            raw.push_str(&format!("X-H{i}: v\r\n"));
+        }
+        raw.push_str("\r\n");
+        let resp = roundtrip(&addr, &raw);
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn oversized_header_line_rejected_400() {
+        let (addr, shutdown) = start(|_req| HttpResponse::text(200, "ok"));
+        let raw = format!(
+            "GET / HTTP/1.1\r\nX-Big: {}\r\n\r\n",
+            "a".repeat(MAX_HEADER_LINE_BYTES as usize + 16)
+        );
+        let resp = roundtrip(&addr, &raw);
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        shutdown.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn body_at_limit_still_parses() {
+        let (addr, shutdown) = start(|req| {
+            HttpResponse::json(200, &format!("{{\"len\":{}}}", req.body.len()))
+        });
+        let body = "b".repeat(1024);
+        let resp = roundtrip(
+            &addr,
+            &format!(
+                "POST /echo HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+                body.len(),
+                body
+            ),
+        );
+        assert!(resp.contains("\"len\":1024"), "{resp}");
         shutdown.store(true, Ordering::Relaxed);
     }
 }

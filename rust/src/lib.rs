@@ -22,6 +22,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod costmodel;
 pub mod engine;
+pub mod fault;
 pub mod harness;
 pub mod json;
 pub mod metrics;

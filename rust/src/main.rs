@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   figures <table1|fig1|fig2|fig4|fig7|fig8|fig9|all>   regenerate paper tables/figures
 //!   claims [--smoke]                                       paper-claims conformance sweep
+//!   chaos [--smoke]                                        seeded fault-plan robustness sweep
 //!   replay --system S --workload W --rate-mult M          one simulated run
 //!   serve --artifacts DIR [--port P] [--instances N]      real-mode HTTP serving (PJRT)
 //!   calibrate --artifacts DIR                              profile PJRT executables, fit cost model
@@ -26,10 +27,16 @@ subcommands:
           [--workers N] [--target FRAC]
           (normalized-cost-model conformance sweep; exits non-zero when a
            paper claim fails; ARROW_CLAIMS_SMOKE=1 implies --smoke)
+  chaos   [--smoke] [--seed N] [--clip SECONDS] [--gpus N] [--out DIR]
+          [--workers N]
+          (goodput vs seeded fault intensity; exits non-zero when a chaos
+           invariant fails — e.g. a silently lost request;
+           ARROW_CHAOS_SMOKE=1 implies --smoke)
   replay  --system <arrow|vllm|vllm-disagg|distserve|minimal-load|round-robin>
           --workload <azure_code|azure_conv|burstgpt|mooncake_conv|smoke>
           [--rate-mult M] [--seed N] [--clip SECONDS] [--gpus N]
   serve   [--artifacts DIR] [--port P] [--instances N] [--ttft-slo S] [--tpot-slo S]
+          [--max-inflight N] [--deadline SECONDS]
   calibrate [--artifacts DIR]
   traces  [--out DIR] [--seed N]
   info"
@@ -58,6 +65,7 @@ fn main() {
     let result = match sub {
         "figures" => cmd_figures(&p),
         "claims" => cmd_claims(&p),
+        "chaos" => cmd_chaos(&p),
         "replay" => cmd_replay(&p),
         "serve" => cmd_serve(&p),
         "calibrate" => cmd_calibrate(&p),
@@ -110,6 +118,25 @@ fn cmd_claims(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
     }
 }
 
+fn cmd_chaos(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
+    p.check_known(&["seed", "clip", "gpus", "out", "workers", "target", "smoke"])?;
+    let mut opts = fig_opts(p)?;
+    // Like claims, the chaos contract is keyed to its own fixed seed;
+    // --seed still overrides for exploratory sweeps.
+    opts.seed = p.u64_or("seed", 42)?;
+    let smoke = p.has("smoke") || arrow::harness::chaos::smoke_env();
+    if figures::chaos(&opts, smoke) {
+        Ok(())
+    } else {
+        Err(format!(
+            "chaos conformance FAILED (see verdicts above; \
+             {}/chaos.json has the full report)",
+            opts.out_dir
+        )
+        .into())
+    }
+}
+
 fn cmd_replay(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
     p.check_known(&["system", "workload", "rate-mult", "seed", "clip", "gpus"])?;
     let sys = System::by_label(&p.str_or("system", "arrow")).ok_or("unknown --system")?;
@@ -121,7 +148,15 @@ fn cmd_replay(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
 }
 
 fn cmd_serve(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
-    p.check_known(&["artifacts", "port", "instances", "ttft-slo", "tpot-slo"])?;
+    p.check_known(&[
+        "artifacts",
+        "port",
+        "instances",
+        "ttft-slo",
+        "tpot-slo",
+        "max-inflight",
+        "deadline",
+    ])?;
     let cfg = arrow::server::ServeConfig {
         artifacts_dir: p.str_or("artifacts", "artifacts"),
         port: p.u64_or("port", 8080)? as u16,
@@ -131,6 +166,10 @@ fn cmd_serve(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
         // Destructive /admin/* membership endpoints stay disabled unless
         // the operator provides a shared secret.
         admin_token: std::env::var("ARROW_ADMIN_TOKEN").ok(),
+        // Graceful degradation knobs (PR 6): queue-depth admission and
+        // the per-request deadline (old behavior was a fixed 120 s hang).
+        max_inflight: p.usize_or("max-inflight", 256)?,
+        request_deadline_s: p.f64_or("deadline", 120.0)?,
     };
     arrow::server::serve(cfg)?;
     Ok(())

@@ -90,6 +90,21 @@ pub enum RequestState {
     Failed,
 }
 
+/// Why a request was explicitly shed (PR 6 chaos contract: a request may
+/// fail, but it must never be *silently* lost — every `Failed` record
+/// carries its reason).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Arrived when no in-cluster instance could accept it.
+    NoCapacity,
+    /// Prompt larger than any instance's KV capacity.
+    Oversized,
+    /// KV migration timed out (and retries, if enabled, were exhausted).
+    TransferTimeout,
+    /// Still unfinished when the run ended (force-failed by the sweep).
+    DeadlineExceeded,
+}
+
 /// Per-request latency record — everything the metrics layer needs to
 /// compute TTFT, TPOT, and SLO attainment.
 #[derive(Debug, Clone)]
@@ -107,6 +122,10 @@ pub struct RequestRecord {
     /// Which instance ran the prefill / decode phases (for Fig. 4 + debug).
     pub prefill_instance: Option<InstanceId>,
     pub decode_instance: Option<InstanceId>,
+    /// Set iff the request was explicitly shed: `state == Failed` without
+    /// a reason is a *silently lost* request, which the chaos tier
+    /// (`tests/chaos.rs`) treats as a bug.
+    pub shed: Option<ShedReason>,
 }
 
 impl RequestRecord {
@@ -124,6 +143,7 @@ impl RequestRecord {
             state: RequestState::PrefillQueued,
             prefill_instance: None,
             decode_instance: None,
+            shed: None,
         }
     }
 

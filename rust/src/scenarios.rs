@@ -17,6 +17,7 @@ use crate::baselines::{ColocatedPolicy, PickRule, StaticDisaggPolicy};
 use crate::coordinator::arrow::{ArrowConfig, ArrowPolicy};
 use crate::costmodel::CostModel;
 use crate::engine::SimInstance;
+use crate::fault::TransferRetryPolicy;
 use crate::request::InstanceId;
 use crate::sim::{Cluster, MembershipChange, SimConfig, MONITOR_PERIOD};
 
@@ -293,6 +294,43 @@ pub fn decode_node_failure(
     cl
 }
 
+/// An Arrow cluster with the PR 6 recovery machinery armed: a bounded
+/// transfer fabric (buffer cap + fail timeout) so flapped links actually
+/// block, KV-transfer retry with capped backoff, and monitor-tick
+/// straggler detection feeding `Liveness::Degraded`. The chaos harness
+/// (`arrow chaos`) and `tests/chaos.rs` drive seeded [`crate::fault::FaultPlan`]s
+/// through this builder; with an empty plan it behaves like
+/// `build(System::Arrow, ..)` plus the bounded fabric.
+pub fn arrow_chaos(
+    n: usize,
+    base: &CostModel,
+    ttft_slo: f64,
+    tpot_slo: f64,
+) -> Cluster {
+    assert!(n >= 2, "chaos scenarios need >= 2 instances");
+    let cfg = SimConfig {
+        record_timeline: false,
+        drain_timeout: 300.0,
+        // Bounded fabric: generous enough that fault-free runs never
+        // block, small enough that a flapped link backs it up.
+        transfer_buffer_tokens: Some(200_000),
+        transfer_fail_timeout: Some(10.0),
+        transfer_retry: Some(TransferRetryPolicy::default()),
+        straggler_factor: Some(3.0),
+        ..Default::default()
+    };
+    let policy = ArrowPolicy::new(ArrowConfig::new(ttft_slo, tpot_slo, n), n);
+    let cost = Arc::new(base.clone());
+    let instances: Vec<SimInstance> = (0..n)
+        .map(|i| {
+            let mut inst = SimInstance::new(InstanceId(i), Arc::clone(&cost));
+            inst.iter_time_budget = Some(0.8 * tpot_slo);
+            inst
+        })
+        .collect();
+    Cluster::new(instances, Box::new(policy), cfg)
+}
+
 // ---------------------------------------------------------------------------
 // Large-cluster scenarios (PR 4): the scale regime the ROADMAP north-star
 // ("heavy traffic from millions of users") needs — 64/256 stateless
@@ -432,6 +470,18 @@ mod tests {
             a.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
             "arrivals sorted"
         );
+    }
+
+    #[test]
+    fn chaos_builder_fault_free_completes_light_load() {
+        // With no fault plan, the armed recovery machinery must be inert:
+        // every request finishes, nothing is shed.
+        let base = CostModel::h800_llama8b();
+        let trace = smoke(120, 2).generate(11);
+        let res = arrow_chaos(4, &base, 2.0, 0.1).run(&trace);
+        let finished = res.records.iter().filter(|r| r.finished()).count();
+        assert_eq!(finished, trace.len(), "fault-free chaos builder lost requests");
+        assert!(res.records.iter().all(|r| r.shed.is_none()));
     }
 
     #[test]

@@ -187,6 +187,11 @@ pub fn f64_from_key_bits(k: u64) -> f64 {
 pub enum Liveness {
     /// Serving; placements allowed.
     Active,
+    /// Serving, but observed as a straggler (PR 6): token intervals are a
+    /// multiple of the cluster median. Still in the cluster, still
+    /// placeable as a last resort — policies deprioritize it so healthy
+    /// capacity absorbs new work while the monitor watches for recovery.
+    Degraded,
     /// Leaving gracefully: finishes in-flight work, accepts nothing new.
     Draining,
     /// Not part of the cluster (never joined, left, or failed).
@@ -194,15 +199,24 @@ pub enum Liveness {
 }
 
 impl Liveness {
-    /// May the scheduler place *new* work on this instance?
+    /// May the scheduler place *new* work on this instance? Degraded
+    /// counts: a slow instance beats a dead letter queue — policies
+    /// *prefer* healthy instances via [`Liveness::is_degraded`] but may
+    /// still fall back to a straggler when nothing healthy remains.
     pub fn placeable(self) -> bool {
-        matches!(self, Liveness::Active)
+        matches!(self, Liveness::Active | Liveness::Degraded)
     }
 
     /// Is the instance still part of the cluster (able to finish work it
-    /// already holds — Active or Draining)?
+    /// already holds — Active, Degraded or Draining)?
     pub fn in_cluster(self) -> bool {
         !matches!(self, Liveness::Dead)
+    }
+
+    /// Straggler flag (PR 6): placeable, but only when nothing healthy
+    /// can take the work.
+    pub fn is_degraded(self) -> bool {
+        matches!(self, Liveness::Degraded)
     }
 }
 

@@ -51,6 +51,23 @@ pub struct ServeConfig {
     /// server binds 0.0.0.0, so cluster-reshaping operations must never
     /// be an unauthenticated POST away.
     pub admin_token: Option<String>,
+    /// Admission control (PR 6, §5.5 overload rule): submissions beyond
+    /// this many waiting requests get an immediate 503 instead of piling
+    /// onto queues that decode-priority scheduling will not drain soon.
+    pub max_inflight: usize,
+    /// Per-request deadline on the submit waiter: a request the cluster
+    /// cannot finish in time answers 504 instead of hanging the client
+    /// socket forever.
+    pub request_deadline_s: f64,
+}
+
+/// Poison-tolerant lock (PR 6): a panicking handler thread must not wedge
+/// every later `/metrics` read or completion delivery. The guarded data
+/// (append-only metric vectors, waiter maps, engine registries) stays
+/// structurally valid even when a writer died mid-update, so recovering
+/// the guard is strictly better than propagating the poison panic.
+fn lock_ok<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// Completed-request latency record for /metrics.
@@ -76,6 +93,24 @@ enum CoordMsg {
     Engine(EngineEvent),
     Tick,
     Membership(MembershipCmd),
+    /// Operator-injected fault (PR 6 `/admin/inject`): the live analog of
+    /// the simulator's `Event::Fault` arm, serialized through the same
+    /// single channel so recovery is totally ordered with placements.
+    Fault(FaultCmd),
+}
+
+/// Faults injectable into the live cluster (PR 6 chaos drills).
+enum FaultCmd {
+    /// Mark an engine a straggler: stays in the cluster, policies
+    /// deprioritize it (what monitor-tick detection would conclude).
+    Degrade { engine: usize },
+    /// Clear an injected/detected Degraded flag.
+    Restore { engine: usize },
+    /// Fail an engine now and scale a replacement back in after
+    /// `downtime_s` — the live counterpart of `FaultKind::CrashRejoin`.
+    /// Stateless instances make the rejoin a plain scale-out: the
+    /// replacement takes a fresh slot, work was already re-dispatched.
+    CrashRejoin { engine: usize, downtime_s: f64 },
 }
 
 /// Operator-triggered membership changes (the `/admin/*` endpoints).
@@ -109,6 +144,9 @@ struct Inflight {
     decode_engine: Option<usize>,
     /// Wall-clock TTFT, recorded when `PrefillDone` arrives.
     first_token_s: Option<f64>,
+    /// How many times an engine refused a command for this request (PR 6):
+    /// bounded stateless re-placement before the explicit failure answer.
+    dispatch_attempts: u32,
 }
 
 /// Scheduler state published for `/metrics` (lock-free reads from HTTP
@@ -119,9 +157,9 @@ struct Inflight {
 pub struct SchedPublish {
     pools_packed: AtomicU64,
     flips: AtomicU64,
-    /// Per-engine liveness codes (0 = active, 1 = draining, 2 = dead),
-    /// refreshed after every membership transition. Mutex is fine: only
-    /// `/metrics` reads it, and membership changes are rare.
+    /// Per-engine liveness codes (0 = active, 1 = draining, 2 = dead,
+    /// 3 = degraded), refreshed after every membership transition. Mutex
+    /// is fine: only `/metrics` reads it, and transitions are rare.
     states: Mutex<Vec<u8>>,
 }
 
@@ -134,9 +172,10 @@ impl SchedPublish {
         }
     }
 
-    /// Liveness code per engine slot (0 active, 1 draining, 2 dead).
+    /// Liveness code per engine slot (0 active, 1 draining, 2 dead,
+    /// 3 degraded).
     pub fn engine_states(&self) -> Vec<u8> {
-        self.states.lock().unwrap().clone()
+        lock_ok(&self.states).clone()
     }
 
     fn store_pools(&self, pools: [usize; 4]) {
@@ -284,13 +323,14 @@ impl Coordinator {
     /// transitions call this — liveness never changes on the per-request
     /// path, so the lock + rebuild stays off it.
     fn publish_membership(&self) {
-        *self.sched.states.lock().unwrap() = self
+        *lock_ok(&self.sched.states) = self
             .life
             .iter()
             .map(|l| match l {
                 Liveness::Active => 0u8,
                 Liveness::Draining => 1,
                 Liveness::Dead => 2,
+                Liveness::Degraded => 3,
             })
             .collect();
     }
@@ -311,6 +351,7 @@ impl Coordinator {
                         prompt: prompt.into(),
                         decode_engine: None,
                         first_token_s: None,
+                        dispatch_attempts: 0,
                     },
                 );
                 self.dispatch_prefill(req);
@@ -318,6 +359,10 @@ impl Coordinator {
             }
             CoordMsg::Engine(ev) => self.handle_engine(ev),
             CoordMsg::Tick => {
+                // Straggler detection first (PR 6) so the policy's view
+                // this tick already carries fresh Degraded flags — same
+                // ordering as the simulator's MonitorTick.
+                self.detect_stragglers();
                 // Monitor tick (paper §5.5): drained-pool settling,
                 // TPOT-violation flips, idle-prefill harvesting — live.
                 let now = self.now_s();
@@ -330,6 +375,92 @@ impl Coordinator {
                 self.publish_sched();
             }
             CoordMsg::Membership(cmd) => self.handle_membership(cmd),
+            CoordMsg::Fault(cmd) => self.handle_fault(cmd),
+        }
+    }
+
+    /// Token-interval outlier detection (PR 6): flag engines whose recent
+    /// inter-token gap is a multiple of the cluster median as Degraded,
+    /// and clear the flag once they fall back in line. Mirrors the
+    /// simulator's monitor-tick `detect_stragglers` — quorum of three
+    /// finite samples, factor `STRAGGLER_FACTOR` over the median.
+    fn detect_stragglers(&mut self) {
+        const STRAGGLER_FACTOR: f64 = 3.0;
+        let intervals: Vec<f64> = self
+            .engines
+            .iter()
+            .map(|e| e.stats().token_interval_s)
+            .collect();
+        let mut finite: Vec<f64> = self
+            .life
+            .iter()
+            .zip(&intervals)
+            .filter(|(l, v)| l.in_cluster() && v.is_finite())
+            .map(|(_, &v)| v)
+            .collect();
+        if finite.len() < 3 {
+            return;
+        }
+        finite.sort_unstable_by(|a, b| a.total_cmp(b));
+        let median = finite[finite.len() / 2];
+        if !median.is_finite() || median <= 0.0 {
+            return;
+        }
+        let mut changed = false;
+        for (i, &v) in intervals.iter().enumerate() {
+            match self.life[i] {
+                Liveness::Active if v.is_finite() && v > STRAGGLER_FACTOR * median => {
+                    self.life[i] = Liveness::Degraded;
+                    println!("engine {i} degraded (token interval {v:.3}s, median {median:.3}s)");
+                    changed = true;
+                }
+                Liveness::Degraded if !v.is_finite() || v <= STRAGGLER_FACTOR * median => {
+                    self.life[i] = Liveness::Active;
+                    println!("engine {i} recovered from degraded");
+                    changed = true;
+                }
+                _ => {}
+            }
+        }
+        if changed {
+            self.publish_membership();
+        }
+    }
+
+    /// Operator-injected fault (PR 6). Degrade/Restore touch only the
+    /// membership table — the policy sees the flag through its next view
+    /// snapshot, exactly like monitor-detected stragglers. CrashRejoin
+    /// composes the PR 3 machinery: fail now, scale back in later.
+    fn handle_fault(&mut self, cmd: FaultCmd) {
+        match cmd {
+            FaultCmd::Degrade { engine } => {
+                if engine < self.life.len() && self.life[engine] == Liveness::Active {
+                    self.life[engine] = Liveness::Degraded;
+                    println!("engine {engine} degraded (injected)");
+                    self.publish_membership();
+                }
+            }
+            FaultCmd::Restore { engine } => {
+                if engine < self.life.len() && self.life[engine] == Liveness::Degraded {
+                    self.life[engine] = Liveness::Active;
+                    println!("engine {engine} restored (injected)");
+                    self.publish_membership();
+                }
+            }
+            FaultCmd::CrashRejoin { engine, downtime_s } => {
+                self.handle_membership(MembershipCmd::Fail { engine });
+                let back = self.msg_tx.clone();
+                let d = downtime_s.max(0.0);
+                let spawned = std::thread::Builder::new()
+                    .name("fault-rejoin".into())
+                    .spawn(move || {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(d));
+                        let _ = back.send(CoordMsg::Membership(MembershipCmd::Join));
+                    });
+                if let Err(e) = spawned {
+                    eprintln!("fault inject: cannot spawn rejoin timer: {e}");
+                }
+            }
         }
     }
 
@@ -371,6 +502,27 @@ impl Coordinator {
         self.moments[t].add_task(len, len, self.chunks[t]);
         if self.engines[t].send(EngineCmd::Prefill { req, prompt }).is_err() {
             self.unqueue_prefill(t, req);
+            self.retry_or_fail(req);
+        }
+    }
+
+    /// An engine refused a command — its channel closed, i.e. it is dying
+    /// but not yet declared Dead. Stateless re-placement (PR 6): retry
+    /// the whole request a bounded number of times (the policy will see
+    /// the slot die and place elsewhere) before the explicit failure
+    /// answer the client gets instead of a silent hang.
+    fn retry_or_fail(&mut self, req: u64) {
+        const MAX_DISPATCH_ATTEMPTS: u32 = 3;
+        let attempts = match self.inflight.get_mut(&req) {
+            Some(fl) => {
+                fl.dispatch_attempts += 1;
+                fl.dispatch_attempts
+            }
+            None => return,
+        };
+        if attempts < MAX_DISPATCH_ATTEMPTS {
+            self.dispatch_prefill(req);
+        } else {
             self.finish(req, Vec::new());
         }
     }
@@ -413,7 +565,7 @@ impl Coordinator {
                 };
                 // Register the slot everywhere before the policy learns
                 // of it, so the view it sees already covers the joiner.
-                self.registry.lock().unwrap().push(handle.clone_handle());
+                lock_ok(&self.registry).push(handle.clone_handle());
                 self.engines.push(handle);
                 self.queued.push(Vec::new());
                 self.moments.push(PrefillQueueMoments::default());
@@ -576,7 +728,14 @@ impl Coordinator {
                     })
                     .is_err()
                 {
-                    self.finish(req, Vec::new());
+                    // The decode target died mid-handoff; its KV copy is
+                    // gone with it. Retract the ledger entry and restart
+                    // from prefill elsewhere (bounded attempts).
+                    self.decoding[t].retain(|&r| r != req);
+                    if let Some(fl) = self.inflight.get_mut(&req) {
+                        fl.decode_engine = None;
+                    }
+                    self.retry_or_fail(req);
                 }
                 self.publish_sched();
             }
@@ -621,12 +780,12 @@ impl Coordinator {
         } else {
             0.0
         };
-        self.done.lock().unwrap().push(Done {
+        lock_ok(&self.done).push(Done {
             ttft_s: ttft,
             tpot_s: tpot,
             tokens: n,
         });
-        if let Some(tx) = self.waiters.lock().unwrap().remove(&req) {
+        if let Some(tx) = lock_ok(&self.waiters).remove(&req) {
             let _ = tx.send((tokens, total, tpot));
         }
     }
@@ -811,13 +970,11 @@ fn route(
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => HttpResponse::text(200, "ok"),
         ("GET", "/metrics") => {
-            let d = done.lock().unwrap();
+            let d = lock_ok(done);
             let ttfts: Vec<f64> = d.iter().map(|x| x.ttft_s).collect();
             let tpots: Vec<f64> = d.iter().map(|x| x.tpot_s).collect();
             let total_tokens: usize = d.iter().map(|x| x.tokens).sum();
-            let engines: Vec<EngineHandle> = registry
-                .lock()
-                .unwrap()
+            let engines: Vec<EngineHandle> = lock_ok(registry)
                 .iter()
                 .map(|e| e.clone_handle())
                 .collect();
@@ -875,6 +1032,7 @@ fn route(
                                     match s {
                                         0 => "active",
                                         1 => "draining",
+                                        3 => "degraded",
                                         _ => "dead",
                                     }
                                     .into(),
@@ -894,19 +1052,8 @@ fn route(
         // the server's first *destructive* endpoints and the bind is
         // 0.0.0.0 — they require the configured shared secret.
         ("POST", "/admin/scale-out") | ("POST", "/admin/drain") | ("POST", "/admin/fail") => {
-            let authorized = match &cfg.admin_token {
-                Some(tok) => req
-                    .headers
-                    .get("x-admin-token")
-                    .is_some_and(|v| v == tok),
-                None => false,
-            };
-            if !authorized {
-                return HttpResponse::json(
-                    403,
-                    "{\"error\":\"admin endpoints require X-Admin-Token (set \
-                     admin_token / ARROW_ADMIN_TOKEN to enable)\"}",
-                );
+            if !admin_authorized(req, cfg) {
+                return admin_forbidden();
             }
             let cmd = if req.path == "/admin/scale-out" {
                 MembershipCmd::Join
@@ -933,6 +1080,44 @@ fn route(
                 Err(_) => HttpResponse::json(503, "{\"error\":\"coordinator unavailable\"}"),
             }
         }
+        // ------------------------------------------------ chaos (PR 6)
+        // Deterministic fault injection for live drills: degrade/restore
+        // a straggler flag, or crash an engine and scale a replacement
+        // back in after a downtime. Same guard as the other /admin/*
+        // endpoints — faults reshape the cluster.
+        ("POST", "/admin/inject") => {
+            if !admin_authorized(req, cfg) {
+                return admin_forbidden();
+            }
+            let body = match Json::parse(&req.body_str()) {
+                Ok(b) => b,
+                Err(e) => {
+                    return HttpResponse::json(400, &format!("{{\"error\":\"{e}\"}}"))
+                }
+            };
+            let Some(engine) = body.get("engine").as_u64() else {
+                return HttpResponse::json(400, "{\"error\":\"missing 'engine' index\"}");
+            };
+            let engine = engine as usize;
+            let cmd = match body.get("kind").as_str() {
+                Some("degrade") => FaultCmd::Degrade { engine },
+                Some("restore") => FaultCmd::Restore { engine },
+                Some("crash") => FaultCmd::CrashRejoin {
+                    engine,
+                    downtime_s: body.get("downtime_s").as_f64().unwrap_or(5.0).max(0.0),
+                },
+                _ => {
+                    return HttpResponse::json(
+                        400,
+                        "{\"error\":\"'kind' must be degrade|restore|crash\"}",
+                    )
+                }
+            };
+            match submit.send(CoordMsg::Fault(cmd)) {
+                Ok(()) => HttpResponse::json(202, "{\"status\":\"injected\"}"),
+                Err(_) => HttpResponse::json(503, "{\"error\":\"coordinator unavailable\"}"),
+            }
+        }
         ("POST", "/v1/completions") => {
             let body = match Json::parse(&req.body_str()) {
                 Ok(b) => b,
@@ -955,11 +1140,35 @@ fn route(
             if tokens.is_empty() {
                 return HttpResponse::json(400, "{\"error\":\"empty prompt\"}");
             }
-            let max_tokens = body.get("max_tokens").as_u64().unwrap_or(16) as usize;
+            // Validate max_tokens (PR 6): absent defaults to 16, but a
+            // *present* malformed value (0, negative, fractional, or
+            // absurd) is a client error — the old `unwrap_or(16)` would
+            // silently run a nonsense budget instead.
+            const MAX_MAX_TOKENS: u64 = 100_000;
+            let max_tokens = match body.get("max_tokens") {
+                Json::Null => 16usize,
+                v => match v.as_u64() {
+                    Some(m) if (1..=MAX_MAX_TOKENS).contains(&m) => m as usize,
+                    _ => {
+                        return HttpResponse::json(
+                            400,
+                            "{\"error\":\"'max_tokens' must be an integer in [1, 100000]\"}",
+                        )
+                    }
+                },
+            };
+
+            // Admission control (PR 6, §5.5 overload rule): shed at the
+            // door with an honest 503 once too many requests are already
+            // waiting — decode-priority scheduling will not drain a
+            // runaway queue soon, and an eternal hang helps nobody.
+            if lock_ok(waiters).len() >= cfg.max_inflight {
+                return HttpResponse::json(503, "{\"error\":\"overloaded, retry later\"}");
+            }
 
             let id = next_id.fetch_add(1, Ordering::Relaxed);
             let (tx, rx) = mpsc::channel();
-            waiters.lock().unwrap().insert(id, tx);
+            lock_ok(waiters).insert(id, tx);
             // All placement happens on the coordinator thread, where the
             // policy lives; the HTTP handler only submits and waits.
             if submit
@@ -971,11 +1180,12 @@ fn route(
                 })
                 .is_err()
             {
-                waiters.lock().unwrap().remove(&id);
+                lock_ok(waiters).remove(&id);
                 return HttpResponse::json(503, "{\"error\":\"coordinator unavailable\"}");
             }
 
-            match rx.recv_timeout(std::time::Duration::from_secs(120)) {
+            let deadline = std::time::Duration::from_secs_f64(cfg.request_deadline_s);
+            match rx.recv_timeout(deadline) {
                 Ok((tokens, total_s, tpot_s)) if !tokens.is_empty() => {
                     let out = Json::obj(vec![
                         ("id", Json::Num(id as f64)),
@@ -989,9 +1199,31 @@ fn route(
                     HttpResponse::json(200, &out.encode())
                 }
                 Ok(_) => HttpResponse::json(500, "{\"error\":\"request failed\"}"),
-                Err(_) => HttpResponse::json(500, "{\"error\":\"timeout\"}"),
+                Err(_) => {
+                    // Deadline exceeded (PR 6): reclaim the waiter entry —
+                    // it also backs the admission count, so a leak would
+                    // ratchet the server toward a permanent 503.
+                    lock_ok(waiters).remove(&id);
+                    HttpResponse::json(504, "{\"error\":\"deadline exceeded\"}")
+                }
             }
         }
         _ => HttpResponse::not_found(),
     }
+}
+
+/// Shared guard for every destructive `/admin/*` endpoint.
+fn admin_authorized(req: &HttpRequest, cfg: &ServeConfig) -> bool {
+    match &cfg.admin_token {
+        Some(tok) => req.headers.get("x-admin-token").is_some_and(|v| v == tok),
+        None => false,
+    }
+}
+
+fn admin_forbidden() -> HttpResponse {
+    HttpResponse::json(
+        403,
+        "{\"error\":\"admin endpoints require X-Admin-Token (set \
+         admin_token / ARROW_ADMIN_TOKEN to enable)\"}",
+    )
 }

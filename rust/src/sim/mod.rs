@@ -49,7 +49,8 @@ use std::sync::Arc;
 
 use crate::costmodel::CostModel;
 use crate::engine::{IterationPlan, Produced, SimInstance, Transfer, TransferFabric};
-use crate::request::{InstanceId, Request, RequestId, RequestRecord, RequestState, Time};
+use crate::fault::{FaultKind, FaultPlan, TransferRetryPolicy};
+use crate::request::{InstanceId, Request, RequestId, RequestRecord, RequestState, ShedReason, Time};
 use crate::sched::{Epoched, Liveness, MembershipEvent};
 use crate::trace::Trace;
 
@@ -104,6 +105,15 @@ enum EventKind {
     FabricPoll,
     MonitorTick,
     Membership(MembershipChange),
+    /// Deterministic fault injection (PR 6): the scheduled entries of a
+    /// [`FaultPlan`], plus internally scheduled end-of-stall markers.
+    /// `Copy` payload — fault events cost the heap nothing extra.
+    Fault(FaultKind),
+    /// Retry a timed-out KV transfer on the same route after backoff.
+    /// `gen` is the request's transfer generation at scheduling time: a
+    /// re-placement or restart bumps the generation, making stale retries
+    /// recognizably dead (same trick as `IterDone`'s epoch).
+    TransferRetry { req: usize, from: usize, to: usize, kv: u32, gen: u32 },
 }
 
 #[derive(Debug, Clone)]
@@ -160,6 +170,16 @@ pub struct SimConfig {
     /// 1 s tick would otherwise sample the dilated run at a different
     /// phase and legitimately flip instances at different moments).
     pub monitor_period: f64,
+    /// Retry timed-out KV transfers with capped, seeded backoff before
+    /// escalating to stateless decode re-placement (PR 6). `None` keeps
+    /// the legacy fail-fast semantics byte-identical (golden digests).
+    pub transfer_retry: Option<TransferRetryPolicy>,
+    /// Straggler detection at the monitor tick: an in-cluster instance
+    /// whose token interval exceeds `factor ×` the cluster median turns
+    /// `Liveness::Degraded` (deprioritized by the policy) until it
+    /// recovers. `None` (default) disables detection entirely — fault-free
+    /// scenarios keep their exact schedules.
+    pub straggler_factor: Option<f64>,
 }
 
 impl Default for SimConfig {
@@ -170,6 +190,8 @@ impl Default for SimConfig {
             transfer_buffer_tokens: None,
             transfer_fail_timeout: None,
             monitor_period: MONITOR_PERIOD,
+            transfer_retry: None,
+            straggler_factor: None,
         }
     }
 }
@@ -231,6 +253,24 @@ pub struct Cluster {
     /// Scheduled membership changes, pushed into the event heap at run
     /// start (identically in cursor and reference modes).
     membership_schedule: Vec<(Time, MembershipChange)>,
+    /// Scheduled fault injections (PR 6), pushed right after the
+    /// membership schedule — empty plan, zero events, zero cost.
+    fault_schedule: Vec<(Time, FaultKind)>,
+    /// Per-instance stall horizon (`EngineStall`): no new iteration
+    /// starts while `now < stall_until[i]`.
+    stall_until: Vec<f64>,
+    /// Per-instance straggler window (`Straggler`): iteration durations
+    /// are dilated by `slow_factor[i]` while `now < slow_until[i]`.
+    slow_until: Vec<f64>,
+    slow_factor: Vec<f64>,
+    /// Per-request transfer retry attempts (cumulative across routes: the
+    /// escalation ladder retry → re-place → shed is bounded per request).
+    transfer_attempts: Vec<u32>,
+    /// Per-request transfer generation, bumped at every fetch admission;
+    /// a `TransferRetry` event whose generation is stale is a no-op.
+    transfer_gen: Vec<u32>,
+    /// Scratch for straggler detection (reused across ticks).
+    interval_buf: Vec<f64>,
     /// Per-target queues of (req idx, from) waiting for target memory (q2).
     fetch_wait: Vec<VecDeque<(usize, usize)>>,
     /// Reusable buffer for iteration-completion events.
@@ -261,6 +301,9 @@ impl Cluster {
         let mut fabric = TransferFabric::new(n, Arc::clone(&instances[0].cost));
         fabric.buffer_cap_tokens = cfg.transfer_buffer_tokens;
         fabric.fail_timeout = cfg.transfer_fail_timeout;
+        // Retry mode needs wakeups at timeout deadlines / flap ends so a
+        // blocked transfer is guaranteed to fail into the retry path.
+        fabric.timeout_wakeups = cfg.transfer_retry.is_some();
         Cluster {
             now: 0.0,
             instances,
@@ -277,6 +320,13 @@ impl Cluster {
             fetch_epoch: Vec::new(),
             initial_live: None,
             membership_schedule: Vec::new(),
+            fault_schedule: Vec::new(),
+            stall_until: vec![0.0; n],
+            slow_until: vec![0.0; n],
+            slow_factor: vec![1.0; n],
+            transfer_attempts: Vec::new(),
+            transfer_gen: Vec::new(),
+            interval_buf: Vec::new(),
             fetch_wait: (0..n).map(|_| VecDeque::new()).collect(),
             produced_buf: Vec::new(),
             clock: 0,
@@ -337,6 +387,21 @@ impl Cluster {
         self.membership_schedule.push((at, change));
     }
 
+    /// Schedule a fault injection at simulated time `at` (PR 6). Faults
+    /// enter the heap in schedule order right after the membership
+    /// schedule, identically in cursor and reference modes.
+    pub fn schedule_fault(&mut self, at: Time, kind: FaultKind) {
+        assert!(kind.instance() < self.instances.len(), "unknown instance");
+        self.fault_schedule.push((at, kind));
+    }
+
+    /// Schedule every entry of a [`FaultPlan`].
+    pub fn schedule_fault_plan(&mut self, plan: &FaultPlan) {
+        for &(at, kind) in plan.events() {
+            self.schedule_fault(at, kind);
+        }
+    }
+
     /// Run the trace to completion; consumes the cluster.
     pub fn run(self, trace: &Trace) -> SimResult {
         self.run_mode(trace, false)
@@ -364,6 +429,8 @@ impl Cluster {
             .collect();
         self.records = self.requests.iter().map(RequestRecord::new).collect();
         self.fetch_epoch = vec![(0, 0); self.requests.len()];
+        self.transfer_attempts = vec![0; self.requests.len()];
+        self.transfer_gen = vec![0; self.requests.len()];
         self.last_arrival = trace.duration();
 
         self.policy.init(&SimView(&self.instances));
@@ -396,6 +463,13 @@ impl Cluster {
         let schedule = std::mem::take(&mut self.membership_schedule);
         for (t, change) in schedule {
             self.push(t, EventKind::Membership(change));
+        }
+        // Fault schedule next: fixed position in the seq assignment, so
+        // cursor and reference modes agree on every tie-break. An empty
+        // plan pushes nothing — the fault plane is free when unused.
+        let faults = std::mem::take(&mut self.fault_schedule);
+        for (t, kind) in faults {
+            self.push(t, EventKind::Fault(kind));
         }
         self.push(0.0, EventKind::MonitorTick);
 
@@ -439,6 +513,10 @@ impl Cluster {
                     EventKind::FabricPoll => self.poll_fabric(),
                     EventKind::MonitorTick => self.on_monitor_tick(),
                     EventKind::Membership(change) => self.on_membership_change(change),
+                    EventKind::Fault(kind) => self.on_fault(kind),
+                    EventKind::TransferRetry { req, from, to, kv, gen } => {
+                        self.on_transfer_retry(req, from, to, kv, gen)
+                    }
                 }
             }
             if self.done == self.records.len() {
@@ -446,10 +524,13 @@ impl Cluster {
             }
         }
 
-        // Anything not finished at the deadline is a failure.
+        // Anything not finished at the deadline is a failure — an
+        // *explicit* one: the chaos no-silent-loss contract requires every
+        // failed record to carry its reason.
         for rec in &mut self.records {
             if !matches!(rec.state, RequestState::Finished | RequestState::Failed) {
                 rec.state = RequestState::Failed;
+                rec.shed = Some(ShedReason::DeadlineExceeded);
             }
         }
 
@@ -486,14 +567,12 @@ impl Cluster {
             // queue entry would sit out the whole drain timeout, and a
             // later rejoin of the slot must never execute work placed
             // while it was dead.
-            self.records[idx].state = RequestState::Failed;
-            self.done += 1;
+            self.shed(idx, ShedReason::NoCapacity);
             return;
         }
         if req.input_len as u64 + 1 > inst.cost.max_kv_tokens {
             // Cannot ever fit (paper: DistServe OOM on long context).
-            self.records[idx].state = RequestState::Failed;
-            self.done += 1;
+            self.shed(idx, ShedReason::Oversized);
             return;
         }
         self.records[idx].prefill_instance = Some(target);
@@ -597,6 +676,9 @@ impl Cluster {
             }
             self.fetch_wait[target].pop_front();
             self.fetch_epoch[idx] = (self.epochs[from], self.epochs[target]);
+            // New admission supersedes any in-flight retry of an older
+            // route for this request.
+            self.transfer_gen[idx] = self.transfer_gen[idx].wrapping_add(1);
             self.fabric.request(Transfer {
                 req: self.requests[idx].id,
                 from: InstanceId(from),
@@ -625,18 +707,219 @@ impl Cluster {
                 },
             );
         }
-        for rid in failed {
-            let idx = rid.0 as usize;
-            if !matches!(self.records[idx].state, RequestState::Failed) {
-                self.records[idx].state = RequestState::Failed;
-                self.done += 1;
-            }
+        for t in failed {
+            self.on_transfer_timeout(t);
         }
-        if let Some(t) = self.fabric.next_wakeup() {
+        if self.fabric.timeout_wakeups {
+            // Retry mode: wakeups also cover timeout deadlines and flap
+            // ends (already filtered to strictly-future times).
+            if let Some(t) = self.fabric.next_wakeup_after(self.now) {
+                self.push(t, EventKind::FabricPoll);
+            }
+        } else if let Some(t) = self.fabric.next_wakeup() {
             if t > self.now {
                 self.push(t, EventKind::FabricPoll);
             }
         }
+    }
+
+    /// Explicitly shed request `idx`: failed *with a recorded reason*.
+    /// The chaos tier's no-silent-loss invariant keys off `shed`.
+    fn shed(&mut self, idx: usize, why: ShedReason) {
+        let rec = &mut self.records[idx];
+        if matches!(rec.state, RequestState::Finished | RequestState::Failed) {
+            return;
+        }
+        rec.state = RequestState::Failed;
+        rec.shed = Some(why);
+        self.done += 1;
+    }
+
+    /// A KV transfer waited out `transfer_fail_timeout`. Without a retry
+    /// policy this is the legacy fail-fast path (byte-identical event
+    /// schedule, now with the reason recorded; the stuck reservations are
+    /// deliberately left in place — that *is* the vLLM v0.7.3 buffer bug
+    /// this knob models). With a retry policy the request climbs an
+    /// escalation ladder: seeded-backoff retries on the same route, then
+    /// one stateless decode re-placement, then an explicit shed that
+    /// frees both endpoints.
+    fn on_transfer_timeout(&mut self, t: Transfer) {
+        let idx = t.req.0 as usize;
+        if matches!(
+            self.records[idx].state,
+            RequestState::Finished | RequestState::Failed
+        ) {
+            return;
+        }
+        let Some(policy) = self.cfg.transfer_retry else {
+            self.shed(idx, ShedReason::TransferTimeout);
+            return;
+        };
+        let (from, to, kv) = (t.from.0, t.to.0, t.kv_tokens);
+        self.transfer_attempts[idx] = self.transfer_attempts[idx].saturating_add(1);
+        let attempt = self.transfer_attempts[idx];
+        if attempt <= policy.max_retries {
+            let delay = policy.backoff_delay(t.req.0, attempt);
+            self.push(
+                self.now + delay,
+                EventKind::TransferRetry {
+                    req: idx,
+                    from,
+                    to,
+                    kv,
+                    gen: self.transfer_gen[idx],
+                },
+            );
+            return;
+        }
+        // Retries exhausted: free the target's reservation (if that
+        // endpoint still exists as admitted) — both escalation rungs
+        // abandon this route.
+        let (src_epoch, dst_epoch) = self.fetch_epoch[idx];
+        let to_ok =
+            self.instances[to].life.in_cluster() && dst_epoch == self.epochs[to];
+        if to_ok {
+            self.instances[to].release_kv(kv as u64 + 1);
+            self.start_fetches(to);
+            self.kick(to);
+        }
+        if attempt == policy.max_retries + 1 {
+            // Stateless re-placement: the KV still parks on the source;
+            // only the decode placement redoes (paper §5.2 — any
+            // instance can adopt the decode).
+            self.replace_decode(idx, from);
+            return;
+        }
+        // The re-placed route timed out too: shed explicitly, freeing the
+        // source's parked KV so the failure doesn't leak capacity.
+        let from_ok =
+            self.instances[from].life.in_cluster() && src_epoch == self.epochs[from];
+        if from_ok {
+            self.instances[from].migration_out_done(kv);
+            self.start_fetches(from);
+            self.kick(from);
+            self.maybe_finish_drain(from);
+        }
+        self.shed(idx, ShedReason::TransferTimeout);
+    }
+
+    /// A scheduled retry fires: if the request still waits on this exact
+    /// route (generation match) and both endpoints still hold their
+    /// admitted state, re-enqueue the transfer with a fresh timeout
+    /// clock; otherwise fall back to the same recovery moves a stale
+    /// `TransferDone` would make.
+    fn on_transfer_retry(&mut self, idx: usize, from: usize, to: usize, kv: u32, gen: u32) {
+        if gen != self.transfer_gen[idx]
+            || self.records[idx].state != RequestState::Migrating
+            || self.records[idx].decode_instance != Some(InstanceId(to))
+        {
+            return; // superseded: re-placed, restarted, finished, or shed
+        }
+        let (src_epoch, dst_epoch) = self.fetch_epoch[idx];
+        let from_ok =
+            self.instances[from].life.in_cluster() && src_epoch == self.epochs[from];
+        let to_ok = self.instances[to].life.in_cluster() && dst_epoch == self.epochs[to];
+        if !from_ok {
+            // The parked KV died with the source: restart from scratch
+            // (and release the target's reservation if it survives).
+            if to_ok {
+                self.instances[to].release_kv(kv as u64 + 1);
+                self.start_fetches(to);
+                self.kick(to);
+            }
+            self.restart_request(idx);
+            return;
+        }
+        if !to_ok {
+            self.replace_decode(idx, from);
+            return;
+        }
+        self.fabric.request(Transfer {
+            req: self.requests[idx].id,
+            from: InstanceId(from),
+            to: InstanceId(to),
+            kv_tokens: kv,
+            requested_at: self.now,
+        });
+        self.poll_fabric();
+    }
+
+    /// Dispatch one injected fault (PR 6 fault plane).
+    fn on_fault(&mut self, kind: FaultKind) {
+        match kind {
+            FaultKind::TransferFlap { link, window } => {
+                self.fabric.flap_link(link, self.now + window);
+                // Guaranteed wakeup at flap end, even without retry mode.
+                self.push(self.now + window, EventKind::FabricPoll);
+            }
+            FaultKind::Straggler { inst, slowdown, window } => {
+                self.slow_factor[inst] = slowdown.max(1.0);
+                self.slow_until[inst] = self.now + window;
+            }
+            FaultKind::EngineStall { inst, duration } => {
+                if duration > 0.0 {
+                    self.stall_until[inst] = self.stall_until[inst].max(self.now + duration);
+                    // End-of-stall wake marker (duration 0) re-kicks.
+                    self.push(
+                        self.stall_until[inst],
+                        EventKind::Fault(FaultKind::EngineStall { inst, duration: 0.0 }),
+                    );
+                } else {
+                    self.kick(inst);
+                }
+            }
+            FaultKind::CrashRejoin { inst, downtime } => {
+                self.on_instance_fail(inst);
+                self.push(
+                    self.now + downtime,
+                    EventKind::Membership(MembershipChange::Join(inst)),
+                );
+            }
+        }
+    }
+
+    /// Monitor-tick straggler detection: an in-cluster instance whose
+    /// observed token interval is a `factor ×`-median outlier turns
+    /// [`Liveness::Degraded`]; it recovers to Active once back under (or
+    /// once it has no evidence at all). No membership event fires — the
+    /// instance never leaves the cluster, the policy simply sees the
+    /// state through `ClusterView::liveness` and deprioritizes it.
+    fn detect_stragglers(&mut self, factor: f64) {
+        let mut buf = std::mem::take(&mut self.interval_buf);
+        buf.clear();
+        for inst in &self.instances {
+            if inst.life.in_cluster() {
+                let v = inst.avg_token_interval();
+                if v.is_finite() {
+                    buf.push(v);
+                }
+            }
+        }
+        // Need a quorum of evidence: with < 3 samples an outlier *is* the
+        // median and everything reads healthy.
+        if buf.len() >= 3 {
+            buf.sort_unstable_by(|a, b| a.total_cmp(b));
+            let median = buf[buf.len() / 2];
+            if median.is_finite() && median > 0.0 {
+                for i in 0..self.instances.len() {
+                    let v = self.instances[i].avg_token_interval();
+                    match self.instances[i].life {
+                        Liveness::Active => {
+                            if v.is_finite() && v > factor * median {
+                                self.instances[i].life = Liveness::Degraded;
+                            }
+                        }
+                        Liveness::Degraded => {
+                            if !v.is_finite() || v <= factor * median {
+                                self.instances[i].life = Liveness::Active;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+        self.interval_buf = buf;
     }
 
     fn on_transfer_done(&mut self, idx: usize, from: usize, to: usize, kv: u32) {
@@ -708,6 +991,14 @@ impl Cluster {
             MembershipChange::Join(i) => {
                 if self.instances[i].life == Liveness::Active {
                     return; // duplicate join
+                }
+                if self.instances[i].life == Liveness::Degraded {
+                    // A degraded instance never left the cluster (no
+                    // membership event fired), so a Join merely clears
+                    // the degradation — notifying the policy of a join
+                    // it never saw leave would double-count the slot.
+                    self.instances[i].life = Liveness::Active;
+                    return;
                 }
                 // A rejoin supersedes any armed restart-drill rejoin: a
                 // later plain Drain must retire the slot for good, not
@@ -834,6 +1125,10 @@ impl Cluster {
         rec.prefill_instance = None;
         rec.decode_instance = None;
         rec.state = RequestState::PrefillQueued;
+        // Any in-flight transfer retry for the old life is now stale, and
+        // the fresh life starts its escalation ladder from the bottom.
+        self.transfer_gen[idx] = self.transfer_gen[idx].wrapping_add(1);
+        self.transfer_attempts[idx] = 0;
         self.on_arrival(idx);
     }
 
@@ -846,6 +1141,8 @@ impl Cluster {
             self.restart_request(idx);
             return;
         }
+        // The old route (and any retry scheduled against it) is dead.
+        self.transfer_gen[idx] = self.transfer_gen[idx].wrapping_add(1);
         let req = self.requests[idx];
         let target = self.policy.place_decode(
             self.now,
@@ -868,6 +1165,12 @@ impl Cluster {
     }
 
     fn on_monitor_tick(&mut self) {
+        // Straggler detection first: the policy's tick should see the
+        // fresh liveness picture (paper Fig. 5 VI — the monitor feeds
+        // the scheduler, not the other way round).
+        if let Some(factor) = self.cfg.straggler_factor {
+            self.detect_stragglers(factor);
+        }
         self.policy
             .on_tick(self.now, &Epoched(SimView(&self.instances), self.clock));
 
@@ -904,8 +1207,20 @@ impl Cluster {
         if self.instances[i].busy || !self.instances[i].life.in_cluster() {
             return;
         }
+        if self.now < self.stall_until[i] {
+            // Stalled engine (`EngineStall`): frozen until the stall
+            // clears — the end-of-stall wake marker re-kicks it.
+            return;
+        }
         if let Some(plan) = self.instances[i].plan_iteration() {
-            let t = self.now + plan.duration;
+            // A straggler window dilates wall-clock duration (the planned
+            // work is unchanged — the instance is just slow), which the
+            // monitor observes as token-interval outliers.
+            let mut d = plan.duration;
+            if self.now < self.slow_until[i] {
+                d *= self.slow_factor[i];
+            }
+            let t = self.now + d;
             self.plans[i] = Some(plan);
             self.push(
                 t,
@@ -1165,6 +1480,105 @@ mod tests {
             res.records.iter().any(|r| r.state == RequestState::Failed),
             "buffer-capped transfers should fail"
         );
+        // PR 6: even the legacy fail-fast path records *why* (no silent
+        // loss — the timeline sweep or the timeout names every failure).
+        for r in res.records.iter().filter(|r| r.state == RequestState::Failed) {
+            assert!(
+                matches!(
+                    r.shed,
+                    Some(ShedReason::TransferTimeout) | Some(ShedReason::DeadlineExceeded)
+                ),
+                "failed request {} has no shed reason",
+                r.id
+            );
+        }
+    }
+
+    #[test]
+    fn transfer_retry_escalates_and_never_silently_loses() {
+        // Permanent buffer starvation: every migration times out. With a
+        // retry policy the request climbs the full ladder — backoff
+        // retries, one stateless re-placement, then an explicit shed.
+        let mut trace = smoke(20, 1).generate(9);
+        for r in &mut trace.requests {
+            r.input_len = 5_000;
+            r.output_len = 8;
+        }
+        let cfg = SimConfig {
+            transfer_buffer_tokens: Some(1_000), // < any single KV
+            transfer_fail_timeout: Some(5.0),
+            transfer_retry: Some(TransferRetryPolicy::default()),
+            ..Default::default()
+        };
+        let run = |cfg: SimConfig| {
+            Cluster::homogeneous(
+                2,
+                small_cost(),
+                Box::new(StaticSplit { prefill: vec![0], decode: vec![1] }),
+                cfg,
+            )
+            .run(&trace)
+        };
+        let res = run(cfg.clone());
+        for r in &res.records {
+            assert!(r.finished() || r.shed.is_some(), "req {} silently lost", r.id);
+        }
+        assert!(
+            res.records.iter().any(|r| r.shed == Some(ShedReason::TransferTimeout)),
+            "the exhausted ladder must shed explicitly"
+        );
+        // Seeded backoff: the retry schedule replays bit-for-bit.
+        let res2 = run(cfg);
+        assert_eq!(res.events_processed, res2.events_processed);
+        for (x, y) in res.records.iter().zip(&res2.records) {
+            assert_eq!(x.token_times, y.token_times);
+            assert_eq!(x.shed, y.shed);
+        }
+    }
+
+    #[test]
+    fn engine_stall_freezes_then_recovers_without_loss() {
+        let trace = smoke(60, 1).generate(14);
+        let d = trace.duration();
+        let mut cl = Cluster::homogeneous(
+            2,
+            small_cost(),
+            Box::new(StaticSplit { prefill: vec![0], decode: vec![1] }),
+            SimConfig::default(),
+        );
+        cl.schedule_fault(0.3 * d, FaultKind::EngineStall { inst: 0, duration: 5.0 });
+        let res = cl.run(&trace);
+        assert!(
+            res.records.iter().all(|r| r.finished()),
+            "a stall delays work, it must not lose any"
+        );
+    }
+
+    #[test]
+    fn seeded_fault_plan_is_deterministic_and_never_silently_loses() {
+        use crate::coordinator::arrow::{ArrowConfig, ArrowPolicy};
+        let trace = smoke(120, 2).generate(15);
+        let plan = FaultPlan::seeded(99, 4, trace.duration(), 1.5);
+        assert!(!plan.is_empty());
+        let run = || {
+            let policy = ArrowPolicy::new(ArrowConfig::new(3.0, 0.1, 4), 4);
+            let cfg = SimConfig {
+                transfer_retry: Some(TransferRetryPolicy::default()),
+                straggler_factor: Some(3.0),
+                ..Default::default()
+            };
+            let mut cl = Cluster::homogeneous(4, small_cost(), Box::new(policy), cfg);
+            cl.schedule_fault_plan(&plan);
+            cl.run(&trace)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.events_processed, b.events_processed);
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.token_times, y.token_times, "req {}: chaos diverges", x.id);
+            assert_eq!(x.shed, y.shed);
+            assert!(x.finished() || x.shed.is_some(), "req {} silently lost", x.id);
+        }
     }
 
     fn arrow_cluster(n_total: usize, n_live: usize) -> Cluster {

@@ -1,0 +1,298 @@
+//! Chaos conformance tier (PR 6 tentpole acceptance).
+//!
+//! Four contracts, every one enforced on seeded, replayable fault plans:
+//!
+//! * **no silent loss** — under any fault plan, every request either
+//!   finishes (with exactly `output_len` tokens) or is explicitly shed
+//!   with a recorded [`ShedReason`];
+//! * **determinism** — the same seed produces byte-identical schedules in
+//!   the calendar-cursor and heap-reference event loops, faults included;
+//! * **bounded-fabric recovery** (satellite) — a flapped link over a
+//!   tiny, exhaustible transfer buffer either recovers via retry /
+//!   re-placement or sheds with `TransferTimeout`, identically in both
+//!   loop modes;
+//! * **substrate-blind degradation** (satellite) — `Liveness::Degraded`
+//!   reads identically through the simulator borrow (`SimView`) and the
+//!   live-server snapshot (`mirror_sim_instances`), and Arrow places
+//!   identically on both.
+//!
+//! The end-to-end harness invariants (goodput bound, post-fault recovery)
+//! are asserted through `arrow::harness::chaos` itself, so this tier
+//! fails exactly when `arrow chaos` would exit non-zero.
+
+use std::sync::Arc;
+
+use arrow::coordinator::arrow::{ArrowConfig, ArrowPolicy};
+use arrow::costmodel::CostModel;
+use arrow::engine::SimInstance;
+use arrow::fault::{FaultKind, FaultPlan, TransferRetryPolicy};
+use arrow::harness::chaos::{run_chaos_for, ChaosConfig};
+use arrow::request::{InstanceId, Request, RequestState, ShedReason};
+use arrow::scenarios::arrow_chaos;
+use arrow::sched::{Liveness, Policy};
+use arrow::server::view::mirror_sim_instances;
+use arrow::sim::{Cluster, SimConfig, SimResult, SimView};
+use arrow::trace::catalog;
+use arrow::trace::Trace;
+use arrow::util::rng::Rng;
+
+const TTFT_SLO: f64 = 2.0;
+const TPOT_SLO: f64 = 0.1;
+
+/// Prefill-heavy chaos traffic: enough sustained load that faults land on
+/// busy instances, small enough to keep the tier fast.
+fn chaos_trace(seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut reqs = Vec::new();
+    for id in 0..180u64 {
+        reqs.push(Request::new(
+            id,
+            (id as f64) * 0.5 + rng.f64() * 0.4,
+            rng.int_range(400, 8_000) as u32,
+            rng.int_range(20, 120) as u32,
+        ));
+    }
+    Trace::new("chaos-tier", reqs)
+}
+
+/// The no-silent-loss contract over one run's records.
+fn assert_fully_accounted(res: &SimResult, ctx: &str) {
+    for r in &res.records {
+        match r.state {
+            RequestState::Finished => {
+                assert_eq!(
+                    r.token_times.len(),
+                    r.output_len as usize,
+                    "{ctx}: req {} finished short of its tokens",
+                    r.id
+                );
+                assert!(r.shed.is_none(), "{ctx}: req {} finished yet shed", r.id);
+            }
+            RequestState::Failed => {
+                assert!(
+                    r.shed.is_some(),
+                    "{ctx}: req {} failed with no shed reason — silently lost",
+                    r.id
+                );
+            }
+            other => panic!("{ctx}: req {} ended in transient state {other:?}", r.id),
+        }
+    }
+}
+
+/// Byte-identity of two runs: same event count, same iterations, same
+/// per-request schedule (states, placements, token timestamps, sheds).
+fn assert_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.events_processed, b.events_processed, "{ctx}: event counts");
+    assert_eq!(a.total_iterations, b.total_iterations, "{ctx}: iterations");
+    assert_eq!(a.records.len(), b.records.len(), "{ctx}: record counts");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.state, y.state, "{ctx}: req {} state", x.id);
+        assert_eq!(x.shed, y.shed, "{ctx}: req {} shed reason", x.id);
+        assert_eq!(
+            x.prefill_instance, y.prefill_instance,
+            "{ctx}: req {} prefill placement",
+            x.id
+        );
+        assert_eq!(
+            x.decode_instance, y.decode_instance,
+            "{ctx}: req {} decode placement",
+            x.id
+        );
+        assert_eq!(x.token_times, y.token_times, "{ctx}: req {} token times", x.id);
+    }
+}
+
+#[test]
+fn seeded_chaos_never_silently_loses_requests() {
+    let base = CostModel::h800_llama8b();
+    for seed in [1u64, 7, 42] {
+        let trace = chaos_trace(seed);
+        let plan = FaultPlan::seeded(seed, 4, trace.duration(), 2.0);
+        assert!(!plan.is_empty(), "intensity 2.0 must inject faults");
+        let mut cl = arrow_chaos(4, &base, TTFT_SLO, TPOT_SLO);
+        cl.schedule_fault_plan(&plan);
+        let res = cl.run(&trace);
+        assert_fully_accounted(&res, &format!("seed {seed}"));
+        // The run must still mostly work: chaos degrades, it does not
+        // collapse (all faults clear by 0.75 × duration).
+        let finished = res.records.iter().filter(|r| r.finished()).count();
+        assert!(
+            finished * 2 > res.records.len(),
+            "seed {seed}: fewer than half the requests survived ({finished}/{})",
+            res.records.len()
+        );
+    }
+}
+
+#[test]
+fn same_seed_chaos_schedules_byte_identical_across_loop_modes() {
+    let base = CostModel::h800_llama8b();
+    for seed in [3u64, 11, 42] {
+        let trace = chaos_trace(seed);
+        let plan = FaultPlan::seeded(seed ^ 0xC0FFEE, 4, trace.duration(), 1.5);
+        let mut cursor = arrow_chaos(4, &base, TTFT_SLO, TPOT_SLO);
+        cursor.schedule_fault_plan(&plan);
+        let a = cursor.run(&trace);
+        let mut reference = arrow_chaos(4, &base, TTFT_SLO, TPOT_SLO);
+        reference.schedule_fault_plan(&plan);
+        let b = reference.run_reference(&trace);
+        assert_identical(&a, &b, &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn fault_free_chaos_builder_matches_its_own_baseline() {
+    // An empty plan must change nothing: the fault plumbing is pure
+    // overhead-free data until a fault actually fires (golden-digest
+    // safety for every fault-free scenario).
+    let base = CostModel::h800_llama8b();
+    let trace = chaos_trace(5);
+    let plain = arrow_chaos(4, &base, TTFT_SLO, TPOT_SLO).run(&trace);
+    let mut armed = arrow_chaos(4, &base, TTFT_SLO, TPOT_SLO);
+    armed.schedule_fault_plan(&FaultPlan::new());
+    let with_empty_plan = armed.run(&trace);
+    assert_identical(&plain, &with_empty_plan, "empty plan");
+    assert_fully_accounted(&plain, "fault-free");
+    assert!(plain.records.iter().all(|r| r.finished()));
+}
+
+#[test]
+fn chaos_harness_invariants_hold_end_to_end() {
+    // The exact invariants `arrow chaos` gates on (no silent loss,
+    // cursor/reference determinism, goodput bound, post-horizon
+    // recovery), on a CI-sized sweep.
+    let w = catalog::by_name("smoke").expect("smoke workload");
+    let cfg = ChaosConfig {
+        clip_seconds: 30.0,
+        intensities: vec![0.0, 1.5],
+        gpus: 4,
+        workers: 2,
+        ..ChaosConfig::smoke()
+    };
+    let report = run_chaos_for(&w, &cfg);
+    assert!(
+        report.all_hold(),
+        "chaos invariants failed: {:?}",
+        report
+            .failed()
+            .iter()
+            .map(|v| v.claim.as_str())
+            .collect::<Vec<_>>()
+    );
+    assert!(report.points[1].n_faults > 0, "faulted point injected nothing");
+}
+
+/// Satellite: buffer exhaustion + fail_timeout on a flapped link. The
+/// fabric here is tiny (one mid-size KV fills it) and the flap covers the
+/// whole burst, so transfers must queue, time out, retry with backoff,
+/// and escalate — and the outcome must be the same in both loop modes.
+#[test]
+fn flapped_tiny_fabric_recovers_or_sheds_identically() {
+    let base = CostModel::h800_llama8b();
+    let build = || {
+        let n = 3;
+        let cfg = SimConfig {
+            record_timeline: false,
+            drain_timeout: 300.0,
+            transfer_buffer_tokens: Some(4_000),
+            transfer_fail_timeout: Some(2.0),
+            transfer_retry: Some(TransferRetryPolicy {
+                max_retries: 2,
+                base_delay_s: 0.25,
+                max_delay_s: 2.0,
+                seed: 7,
+            }),
+            straggler_factor: Some(3.0),
+            ..Default::default()
+        };
+        let policy = ArrowPolicy::new(ArrowConfig::new(TTFT_SLO, TPOT_SLO, n), n);
+        let cost = Arc::new(base.clone());
+        let instances: Vec<SimInstance> = (0..n)
+            .map(|i| SimInstance::new(InstanceId(i), Arc::clone(&cost)))
+            .collect();
+        let mut cl = Cluster::new(instances, Box::new(policy), cfg);
+        // Every link out of every instance flaps across the busy window:
+        // any migration in that span hits a dead fabric.
+        for link in 0..n {
+            cl.schedule_fault(10.0, FaultKind::TransferFlap { link, window: 40.0 });
+        }
+        cl
+    };
+    let trace = chaos_trace(13);
+    let a = build().run(&trace);
+    let b = build().run_reference(&trace);
+    assert_identical(&a, &b, "flapped fabric");
+    assert_fully_accounted(&a, "flapped fabric");
+    // Anything that did fail, failed for a flap-shaped reason (the
+    // transfer path, or the end-of-run force-fail of work the flap
+    // stalled) — never capacity or size pressure, which would mean the
+    // flap corrupted unrelated accounting.
+    for r in &a.records {
+        if r.state == RequestState::Failed {
+            assert!(
+                matches!(
+                    r.shed,
+                    Some(ShedReason::TransferTimeout) | Some(ShedReason::DeadlineExceeded)
+                ),
+                "req {}: flap-era failure with reason {:?}",
+                r.id,
+                r.shed
+            );
+        }
+    }
+    // And the run as a whole survived the flap.
+    let finished = a.records.iter().filter(|r| r.finished()).count();
+    assert!(
+        finished * 2 > a.records.len(),
+        "flapped fabric collapsed the run ({finished}/{})",
+        a.records.len()
+    );
+}
+
+/// Satellite: `Liveness::Degraded` is substrate-blind — the simulator
+/// borrow and the live-server snapshot report it identically, and Arrow
+/// makes identical placements over both.
+#[test]
+fn degraded_liveness_identical_across_adapters() {
+    use arrow::sched::ClusterView;
+    let n = 4;
+    let base = CostModel::h800_llama8b();
+    let mut insts: Vec<SimInstance> = (0..n)
+        .map(|i| SimInstance::new(InstanceId(i), base.clone()))
+        .collect();
+    insts[2].life = Liveness::Degraded;
+
+    // The adapters agree on what Degraded *is*.
+    let snap = mirror_sim_instances(&insts);
+    for i in 0..n {
+        let (sim_l, srv_l) = (SimView(&insts).liveness(i), snap.liveness(i));
+        assert_eq!(sim_l, srv_l, "inst {i}: liveness diverged across adapters");
+        assert_eq!(sim_l.is_degraded(), i == 2);
+        assert!(sim_l.placeable() && sim_l.in_cluster());
+    }
+
+    // And on what Degraded *means*: identical (deprioritized) placements.
+    let mut sim_policy = ArrowPolicy::new(ArrowConfig::new(TTFT_SLO, TPOT_SLO, n), n);
+    let mut srv_policy = ArrowPolicy::new(ArrowConfig::new(TTFT_SLO, TPOT_SLO, n), n);
+    sim_policy.init(&SimView(&insts));
+    srv_policy.init(&SimView(&insts));
+    let mut rng = Rng::new(21);
+    for step in 0..60u64 {
+        let r = Request::new(step, step as f64, rng.int_range(100, 20_000) as u32, 16);
+        let snap = mirror_sim_instances(&insts);
+        let a = sim_policy.place_prefill(step as f64, &r, &SimView(&insts));
+        let b = srv_policy.place_prefill(step as f64, &r, &snap);
+        assert_eq!(a, b, "step {step}: placement diverged with a degraded member");
+        assert_ne!(
+            a,
+            InstanceId(2),
+            "step {step}: a lightly-loaded cluster must route around the straggler"
+        );
+        assert_eq!(
+            sim_policy.pool_sizes(),
+            srv_policy.pool_sizes(),
+            "step {step}: pool states diverged"
+        );
+    }
+}

@@ -61,6 +61,8 @@ fn server_end_to_end() {
             ttft_slo: 2.0,
             tpot_slo: 0.5,
             admin_token: Some(ADMIN_TOKEN.into()),
+            max_inflight: 256,
+            request_deadline_s: 120.0,
         })
         .unwrap();
     });
@@ -161,11 +163,48 @@ fn server_end_to_end() {
     let toks = Json::parse(&r).unwrap().get("tokens").encode();
     assert!(toks.starts_with("[1362,1879,164,1296"), "post-drain oracle: {toks}");
 
+    // Fault injection (PR 6): degrade an engine, see it in /metrics,
+    // verify the cluster still answers correctly, then restore it.
+    let r = post_admin(&addr, "/admin/inject", "{\"kind\":\"degrade\",\"engine\":1}").unwrap();
+    assert!(r.contains("injected"), "{r}");
+    let t0 = Instant::now();
+    loop {
+        let m = Json::parse(&get(&addr, "/metrics").unwrap()).unwrap();
+        let states = m.get("engine_states").as_arr().expect("engine_states");
+        if states[1].as_str() == Some("degraded") {
+            // Degraded stays in the cluster — still counted live.
+            assert_eq!(m.get("live_instances").as_f64(), Some(2.0));
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "degrade never surfaced");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let r = post(&addr, "/v1/completions", b).unwrap();
+    let toks = Json::parse(&r).unwrap().get("tokens").encode();
+    assert!(toks.starts_with("[1362,1879,164,1296"), "degraded-cluster oracle: {toks}");
+    let r = post_admin(&addr, "/admin/inject", "{\"kind\":\"restore\",\"engine\":1}").unwrap();
+    assert!(r.contains("injected"), "{r}");
+
     // Error paths.
     let bad = post(&addr, "/v1/completions", "{\"max_tokens\":3}").unwrap();
     assert!(bad.contains("error"));
+    // Validation (PR 6): present-but-nonsense max_tokens is a 400, not a
+    // silently substituted default.
+    let bad = post(&addr, "/v1/completions", "{\"tokens\":[1,2],\"max_tokens\":0}").unwrap();
+    assert!(bad.contains("max_tokens"), "{bad}");
+    let bad = post(
+        &addr,
+        "/v1/completions",
+        "{\"tokens\":[1,2],\"max_tokens\":9999999}",
+    )
+    .unwrap();
+    assert!(bad.contains("max_tokens"), "{bad}");
     let nf = get(&addr, "/nope").unwrap();
     assert!(nf.contains("not found"));
     let bad = post_admin(&addr, "/admin/drain", "{}").unwrap();
     assert!(bad.contains("error"), "{bad}");
+    let bad = post_admin(&addr, "/admin/inject", "{\"kind\":\"meteor\",\"engine\":0}").unwrap();
+    assert!(bad.contains("error"), "{bad}");
+    let denied = post(&addr, "/admin/inject", "{\"kind\":\"degrade\",\"engine\":0}").unwrap();
+    assert!(denied.contains("X-Admin-Token"), "{denied}");
 }
