@@ -20,7 +20,13 @@
 # paper claim fails. The chaos gate (PR 6) runs `arrow chaos` in smoke
 # mode: seeded fault plans against the recovery-armed cluster, exiting
 # non-zero when a robustness invariant (no silent loss, determinism,
-# goodput bound, recovery) fails.
+# goodput bound, recovery) fails. The sweep gate (PR 7) runs
+# `benches/sweep.rs` in smoke mode: streamed 1M- and 10M-request runs
+# through a counting allocator, exiting non-zero when the 10M-request
+# peak allocation exceeds 1.1x the 1M-request peak
+# (ARROW_SWEEP_MAX_MEM_RATIO) or throughput drops below 1M events/s;
+# request counts shrink via ARROW_SWEEP_BASE_REQS / ARROW_SWEEP_REQS
+# on slow hardware.
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -92,10 +98,21 @@ if [[ "${1:-}" != "--fast" ]]; then
     ARROW_BENCH_SMOKE=1 ARROW_BENCH_OUT="$smoke_dir/BENCH_scale.json" \
         cargo bench --bench scale
 
+    # Streaming-sweep memory gate (PR 7): 1M- then 10M-request streamed
+    # runs through the counting allocator; peak allocation must stay
+    # within ARROW_SWEEP_MAX_MEM_RATIO (default 1.1x) of the 1M run
+    # while holding ARROW_BENCH_MIN_EPS events/s. This is the longest
+    # bench gate (~10M requests end to end); trim with
+    # ARROW_SWEEP_BASE_REQS / ARROW_SWEEP_REQS if the host is slow.
+    echo "== sweep bench (memory-flatness smoke gate) =="
+    ARROW_BENCH_SMOKE=1 ARROW_BENCH_OUT="$smoke_dir/BENCH_sweep.json" \
+        cargo bench --bench sweep
+
     # Regression diff against the committed baselines (>20% drop on the
-    # headline metric fails; placeholder/missing baselines warn + skip).
+    # headline metric fails — for the sweep family a >20% peak-allocation
+    # *rise* fails too; placeholder/missing baselines warn + skip).
     echo "== bench baseline comparison =="
-    for fam in simulator scheduler scale; do
+    for fam in simulator scheduler scale sweep; do
         cargo run --release -q --bin benchdiff -- \
             "BENCH_${fam}.json" "$smoke_dir/BENCH_${fam}.json"
     done

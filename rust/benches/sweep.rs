@@ -1,0 +1,283 @@
+//! Streaming-sweep memory gate: peak allocation must be flat in trace
+//! length (PR 7 tentpole acceptance).
+//!
+//! The streamed path (`ArrivalSource` → event loop slot window →
+//! `StreamingSlo` sink) is supposed to hold simulation memory at
+//! O(instances + in-flight requests), independent of how many requests
+//! flow through. This bench proves it with a counting global allocator:
+//! it runs the same synthetic workload at a base request count and at
+//! 10× the base count, and asserts the larger run's peak allocation is
+//! within `ARROW_SWEEP_MAX_MEM_RATIO` (default 1.1×) of the smaller
+//! run's — while the event loop still clears `ARROW_BENCH_MIN_EPS`
+//! (default 1,000,000) events/s on the large run.
+//!
+//! Modes:
+//! * default — full measurement: both streamed runs plus a retained
+//!   (materialized-trace) run at the base count for contrast, emitting
+//!   `BENCH_sweep.json`;
+//! * `ARROW_BENCH_SMOKE=1` — CI gate: the two streamed runs only;
+//!   process exits non-zero if either the memory-flatness or the
+//!   throughput floor fails.
+//!
+//! Knobs: `ARROW_SWEEP_BASE_REQS` (default 1,000,000), `ARROW_SWEEP_REQS`
+//! (default 10,000,000), `ARROW_SWEEP_RPS` (arrival rate, default 96 —
+//! the in-flight window, and therefore the expected peak, is rate ×
+//! latency, so both runs see the same steady state), `ARROW_BENCH_OUT`.
+
+use std::alloc::{GlobalAlloc, Layout, System as SystemAlloc};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use arrow::costmodel::CostModel;
+use arrow::json::Json;
+use arrow::metrics::StreamingSlo;
+use arrow::scenarios::{build, System};
+use arrow::trace::stream::SyntheticSource;
+use arrow::trace::synthetic;
+use arrow::util::benchkit::{env_f64, fmt_dur};
+
+// ---------------------------------------------------------------------------
+// Counting allocator: live bytes + high-water mark.
+// ---------------------------------------------------------------------------
+
+static CURRENT: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+fn count_add(n: usize) {
+    let cur = CURRENT.fetch_add(n, Ordering::Relaxed) + n;
+    let mut peak = PEAK.load(Ordering::Relaxed);
+    while cur > peak {
+        match PEAK.compare_exchange_weak(peak, cur, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(p) => peak = p,
+        }
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = SystemAlloc.alloc(layout);
+        if !p.is_null() {
+            count_add(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        SystemAlloc.dealloc(ptr, layout);
+        CURRENT.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = SystemAlloc.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size >= layout.size() {
+                count_add(new_size - layout.size());
+            } else {
+                CURRENT.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+            }
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Start a fresh high-water measurement from the current live set.
+fn reset_peak() {
+    PEAK.store(CURRENT.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+fn peak_bytes() -> usize {
+    PEAK.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// The sweep runs.
+// ---------------------------------------------------------------------------
+
+const SEED: u64 = 7;
+const TTFT_SLO: f64 = 2.0;
+const TPOT_SLO: f64 = 0.1;
+
+struct RunStats {
+    label: String,
+    requests: u64,
+    events: u64,
+    iterations: u64,
+    seconds: f64,
+    events_per_sec: f64,
+    peak_bytes: usize,
+}
+
+impl RunStats {
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("seconds", Json::Num(self.seconds)),
+            ("events_per_sec", Json::Num(self.events_per_sec)),
+            ("peak_alloc_bytes", Json::Num(self.peak_bytes as f64)),
+        ])
+    }
+
+    fn print(&self) {
+        println!(
+            "{:<16} {:>9} reqs  {:>10} events in {:>9}  -> {:>10.0} events/s, peak {:.1} MiB",
+            self.label,
+            self.requests,
+            self.events,
+            fmt_dur(self.seconds),
+            self.events_per_sec,
+            self.peak_bytes as f64 / (1024.0 * 1024.0)
+        );
+    }
+}
+
+/// One streamed run: lazy synthetic arrivals into the constant-memory SLO
+/// sink. Nothing O(n) is allocated on this path — that is the claim the
+/// peak counter checks.
+fn streamed_run(n: usize, rps: f64, label: &str) -> RunStats {
+    let minutes = ((n as f64 / (rps * 60.0)).ceil() as usize).max(1);
+    let spec = synthetic::smoke(n, minutes);
+    reset_peak();
+    let t0 = Instant::now();
+    let cl = build(System::Arrow, 8, &CostModel::normalized(), TTFT_SLO, TPOT_SLO, false);
+    let mut src = SyntheticSource::new(&spec, SEED);
+    let mut slo = StreamingSlo::new(TTFT_SLO, TPOT_SLO);
+    let res = cl.run_streamed(&mut src, &mut |r| slo.observe(&r));
+    let seconds = t0.elapsed().as_secs_f64();
+    RunStats {
+        label: label.to_string(),
+        requests: slo.observed() as u64,
+        events: res.events_processed,
+        iterations: res.total_iterations,
+        seconds,
+        events_per_sec: res.events_processed as f64 / seconds,
+        peak_bytes: peak_bytes(),
+    }
+}
+
+/// Retained-mode contrast run (full measurement only): materialize the
+/// trace and keep every record — the O(n) memory profile the streaming
+/// path retires from the sweep loop.
+fn retained_run(n: usize, rps: f64) -> RunStats {
+    let minutes = ((n as f64 / (rps * 60.0)).ceil() as usize).max(1);
+    let spec = synthetic::smoke(n, minutes);
+    reset_peak();
+    let t0 = Instant::now();
+    let trace = spec.generate(SEED);
+    let cl = build(System::Arrow, 8, &CostModel::normalized(), TTFT_SLO, TPOT_SLO, false);
+    let res = cl.run(&trace);
+    let seconds = t0.elapsed().as_secs_f64();
+    RunStats {
+        label: "retained-base".to_string(),
+        requests: res.records.len() as u64,
+        events: res.events_processed,
+        iterations: res.total_iterations,
+        seconds,
+        events_per_sec: res.events_processed as f64 / seconds,
+        peak_bytes: peak_bytes(),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("ARROW_BENCH_SMOKE").map_or(false, |v| v != "0" && !v.is_empty());
+    let base_n = env_f64("ARROW_SWEEP_BASE_REQS", 1.0e6) as usize;
+    let big_n = env_f64("ARROW_SWEEP_REQS", 1.0e7) as usize;
+    let rps = env_f64("ARROW_SWEEP_RPS", 96.0);
+    let max_ratio = env_f64("ARROW_SWEEP_MAX_MEM_RATIO", 1.1);
+    let min_eps = env_f64("ARROW_BENCH_MIN_EPS", 1.0e6);
+
+    println!(
+        "== streaming sweep memory gate{} ==",
+        if smoke { " (smoke)" } else { "" }
+    );
+    println!(
+        "workload: smoke spec @ {rps:.0} req/s, {base_n} -> {big_n} requests; \
+         gates: peak <= {max_ratio:.2}x base, >= {min_eps:.0} events/s\n"
+    );
+
+    // Peak high-water marks are monotone within a measurement window, so
+    // each run resets the mark to the current live set first; the base
+    // run goes first so its transient state is freed before the big one.
+    let base = streamed_run(base_n, rps, "streamed-base");
+    base.print();
+    let big = streamed_run(big_n, rps, "streamed-10x");
+    big.print();
+
+    let mut runs = vec![base.json(), big.json()];
+    let mut retained = Json::Null;
+    if !smoke {
+        let r = retained_run(base_n, rps);
+        r.print();
+        println!(
+            "retained/streamed peak at {base_n} reqs: {:.1}x",
+            r.peak_bytes as f64 / base.peak_bytes.max(1) as f64
+        );
+        retained = r.json();
+        runs.push(retained.clone());
+    }
+
+    let ratio = big.peak_bytes as f64 / base.peak_bytes.max(1) as f64;
+    println!(
+        "\npeak allocation: base {:.1} MiB, 10x {:.1} MiB -> ratio {ratio:.3} \
+         (gate <= {max_ratio:.2})",
+        base.peak_bytes as f64 / (1024.0 * 1024.0),
+        big.peak_bytes as f64 / (1024.0 * 1024.0)
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("sweep".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("base_requests", Json::Num(base_n as f64)),
+        ("requests", Json::Num(big_n as f64)),
+        ("rps", Json::Num(rps)),
+        ("target_max_mem_ratio", Json::Num(max_ratio)),
+        ("target_events_per_sec", Json::Num(min_eps)),
+        ("runs", Json::Arr(runs)),
+        ("retained_base", retained),
+        // benchdiff headlines: throughput (higher is better) and memory
+        // (lower is better), both from the 10x streamed run.
+        ("events_per_sec", Json::Num(big.events_per_sec)),
+        ("peak_alloc_bytes", Json::Num(big.peak_bytes as f64)),
+        ("peak_ratio", Json::Num(ratio)),
+    ]);
+    let path = std::env::var("ARROW_BENCH_OUT").unwrap_or_else(|_| "BENCH_sweep.json".into());
+    match std::fs::write(&path, out.encode()) {
+        Ok(()) => println!("-> {path}"),
+        Err(e) => eprintln!("warn: cannot write {path}: {e}"),
+    }
+
+    // Only the smoke (CI) mode gates; a full measurement run must always
+    // succeed so the JSON can be regenerated on slower hardware.
+    if smoke {
+        let mut failed = false;
+        if ratio > max_ratio {
+            eprintln!(
+                "FAIL: peak allocation grew {ratio:.3}x from {base_n} to {big_n} requests \
+                 (gate {max_ratio:.2}x) — the sweep path is not O(in-flight)"
+            );
+            failed = true;
+        }
+        if big.events_per_sec < min_eps {
+            eprintln!(
+                "FAIL: streamed event throughput {:.0} events/s below the {min_eps:.0} gate",
+                big.events_per_sec
+            );
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        println!(
+            "gate OK: peak ratio {ratio:.3} <= {max_ratio:.2}, {:.0} events/s >= {min_eps:.0}",
+            big.events_per_sec
+        );
+    }
+}

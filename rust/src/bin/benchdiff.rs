@@ -7,46 +7,78 @@
 //!
 //! per bench. Exit codes:
 //! * `0` — no baseline / placeholder baseline (warns; the gate is INERT
-//!   until a measured baseline is committed — ROADMAP open item), or the
+//!   until a measured baseline is committed — ROADMAP open item), or every
 //!   fresh headline metric is within `max-regression` (default 0.20,
-//!   i.e. fresh >= 0.8 × baseline);
+//!   i.e. fresh >= 0.8 × baseline for higher-is-better metrics and
+//!   fresh <= 1.2 × baseline for lower-is-better ones);
 //! * `1` — measurable regression beyond the threshold, or an unreadable
 //!   fresh file (CI wiring bug — fail loudly, never silently skip).
 //!
-//! The headline metric per bench family:
+//! Headline metrics per bench family:
 //! * `simulator` — arrow events/s (from `systems[]`),
 //! * `scheduler` — `worst_placement_decisions_per_sec`,
-//! * `scale` — `min_decisions_per_sec`.
+//! * `scale` — `min_decisions_per_sec`,
+//! * `sweep` — `events_per_sec` (higher is better) AND
+//!   `peak_alloc_bytes` (lower is better — a memory regression fails the
+//!   gate exactly like a throughput one, PR 7).
 
 use arrow::json::Json;
 
-/// Headline (label, value) of a bench JSON; `None` when the document is
-/// a schema placeholder (no measured number in it).
-fn headline(doc: &Json) -> Option<(String, f64)> {
-    let metric = match doc.get("bench").as_str() {
-        Some("simulator") => doc
-            .get("systems")
-            .as_arr()
-            .and_then(|rows| {
-                rows.iter()
-                    .find(|r| r.get("system").as_str() == Some("arrow"))
-            })
-            .and_then(|r| r.get("events_per_sec").as_f64())
-            .map(|v| ("arrow events/s".to_string(), v)),
-        Some("scheduler") => doc
-            .get("worst_placement_decisions_per_sec")
-            .as_f64()
-            .map(|v| ("worst placement decisions/s".to_string(), v)),
-        Some("scale") => doc
-            .get("min_decisions_per_sec")
-            .as_f64()
-            .map(|v| ("min placement decisions/s".to_string(), v)),
-        other => {
-            eprintln!("benchdiff: unknown bench family {other:?}");
-            None
+/// Which way a headline metric improves.
+#[derive(Clone, Copy, PartialEq)]
+enum Dir {
+    Higher,
+    Lower,
+}
+
+/// Headline metrics of a bench JSON; empty when the document is a schema
+/// placeholder (no measured number in it).
+fn headlines(doc: &Json) -> Vec<(String, f64, Dir)> {
+    let mut out: Vec<(String, f64, Dir)> = Vec::new();
+    let mut push = |label: &str, v: Option<f64>, dir: Dir| {
+        if let Some(v) = v.filter(|v| v.is_finite() && *v > 0.0) {
+            out.push((label.to_string(), v, dir));
         }
     };
-    metric.filter(|(_, v)| v.is_finite() && *v > 0.0)
+    match doc.get("bench").as_str() {
+        Some("simulator") => push(
+            "arrow events/s",
+            doc.get("systems")
+                .as_arr()
+                .and_then(|rows| {
+                    rows.iter()
+                        .find(|r| r.get("system").as_str() == Some("arrow"))
+                })
+                .and_then(|r| r.get("events_per_sec").as_f64()),
+            Dir::Higher,
+        ),
+        Some("scheduler") => push(
+            "worst placement decisions/s",
+            doc.get("worst_placement_decisions_per_sec").as_f64(),
+            Dir::Higher,
+        ),
+        Some("scale") => push(
+            "min placement decisions/s",
+            doc.get("min_decisions_per_sec").as_f64(),
+            Dir::Higher,
+        ),
+        Some("sweep") => {
+            push(
+                "streamed events/s",
+                doc.get("events_per_sec").as_f64(),
+                Dir::Higher,
+            );
+            push(
+                "peak alloc bytes",
+                doc.get("peak_alloc_bytes").as_f64(),
+                Dir::Lower,
+            );
+        }
+        other => {
+            eprintln!("benchdiff: unknown bench family {other:?}");
+        }
+    }
+    out
 }
 
 fn main() {
@@ -113,7 +145,8 @@ fn main() {
         return;
     }
 
-    let Some((label, base_v)) = headline(&baseline) else {
+    let base_metrics = headlines(&baseline);
+    if base_metrics.is_empty() {
         println!(
             "benchdiff WARN: {} is a placeholder (no measured headline metric) — \
              regression gate skipped until a measured baseline is committed \
@@ -121,28 +154,59 @@ fn main() {
             args[1]
         );
         return;
-    };
-    let Some((_, fresh_v)) = headline(&fresh) else {
-        eprintln!(
-            "benchdiff FAIL: fresh output {} carries no measured headline metric",
-            args[2]
-        );
-        std::process::exit(1);
-    };
+    }
+    let fresh_metrics = headlines(&fresh);
 
-    let floor = (1.0 - max_regress) * base_v;
-    if fresh_v < floor {
-        eprintln!(
-            "benchdiff FAIL: {label} regressed {:.1}%: {fresh_v:.0} < {floor:.0} \
-             (baseline {base_v:.0}, allowed -{:.0}%)",
-            100.0 * (1.0 - fresh_v / base_v),
-            100.0 * max_regress
-        );
+    let mut failed = false;
+    for (label, base_v, dir) in &base_metrics {
+        let Some((_, fresh_v, _)) = fresh_metrics.iter().find(|(l, _, _)| l == label) else {
+            eprintln!(
+                "benchdiff FAIL: fresh output {} carries no measured '{label}' metric",
+                args[2]
+            );
+            failed = true;
+            continue;
+        };
+        match dir {
+            Dir::Higher => {
+                let floor = (1.0 - max_regress) * base_v;
+                if *fresh_v < floor {
+                    eprintln!(
+                        "benchdiff FAIL: {label} regressed {:.1}%: {fresh_v:.0} < {floor:.0} \
+                         (baseline {base_v:.0}, allowed -{:.0}%)",
+                        100.0 * (1.0 - fresh_v / base_v),
+                        100.0 * max_regress
+                    );
+                    failed = true;
+                    continue;
+                }
+                println!(
+                    "benchdiff OK: {label} {fresh_v:.0} vs baseline {base_v:.0} \
+                     ({:+.1}%, floor {floor:.0})",
+                    100.0 * (fresh_v / base_v - 1.0)
+                );
+            }
+            Dir::Lower => {
+                let ceil = (1.0 + max_regress) * base_v;
+                if *fresh_v > ceil {
+                    eprintln!(
+                        "benchdiff FAIL: {label} regressed {:.1}%: {fresh_v:.0} > {ceil:.0} \
+                         (baseline {base_v:.0}, allowed +{:.0}%)",
+                        100.0 * (fresh_v / base_v - 1.0),
+                        100.0 * max_regress
+                    );
+                    failed = true;
+                    continue;
+                }
+                println!(
+                    "benchdiff OK: {label} {fresh_v:.0} vs baseline {base_v:.0} \
+                     ({:+.1}%, ceiling {ceil:.0})",
+                    100.0 * (fresh_v / base_v - 1.0)
+                );
+            }
+        }
+    }
+    if failed {
         std::process::exit(1);
     }
-    println!(
-        "benchdiff OK: {label} {fresh_v:.0} vs baseline {base_v:.0} \
-         ({:+.1}%, floor {floor:.0})",
-        100.0 * (fresh_v / base_v - 1.0)
-    );
 }

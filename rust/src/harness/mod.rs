@@ -33,9 +33,10 @@
 
 use crate::costmodel::CostModel;
 use crate::json::Json;
-use crate::metrics::{max_sustainable_rate, SloReport};
+use crate::metrics::{max_sustainable_rate, SloReport, StreamingSlo};
 use crate::scenarios::{build, System};
 use crate::trace::catalog::{self, Workload};
+use crate::trace::stream::{Scaled, TraceSource};
 use crate::trace::Trace;
 use crate::util::threads::{default_workers, parallel_map};
 
@@ -357,6 +358,14 @@ impl ClaimsReport {
 
 /// One simulated point: `system` on `trace` rescaled to `rate`, under the
 /// workload's SLOs and the given cost model.
+///
+/// Streaming sweep path (PR 7): arrivals are rescaled on the fly
+/// (`Scaled` applies exactly `with_rate`'s `arrival * k`) and completed
+/// records fold into a constant-memory [`StreamingSlo`] sink — no
+/// rescaled trace copy, no full record vector, no retained token times
+/// per point. Counts/attainment/throughput are exact; the latency
+/// percentiles are sketch estimates (tolerance-banded against the exact
+/// oracle in `metrics::tests` and `tests/streaming.rs`).
 fn run_point(
     sys: System,
     base: &CostModel,
@@ -365,10 +374,14 @@ fn run_point(
     gpus: usize,
     rate: f64,
 ) -> SloReport {
-    let t = trace.with_rate(rate);
+    let k = trace.rate() / rate;
+    let mut src = Scaled::new(TraceSource::new(trace), k);
     let cl = build(sys, gpus, base, w.ttft_slo, w.tpot_slo, false);
-    let res = cl.run(&t);
-    SloReport::from_records(&res.records, w.ttft_slo, w.tpot_slo, t.duration())
+    let mut slo = StreamingSlo::new(w.ttft_slo, w.tpot_slo);
+    cl.run_streamed(&mut src, &mut |rec| slo.observe(&rec));
+    // Same span as the materialized path: the rescaled trace's duration
+    // is its last arrival times k, bit-identically.
+    slo.report(trace.duration() * k)
 }
 
 /// Sweep every system over the grid for one workload, then search each

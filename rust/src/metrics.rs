@@ -2,6 +2,7 @@
 //! max-sustainable-rate search the paper's headline numbers come from.
 
 use crate::request::RequestRecord;
+use crate::util::quantile::{BucketQuantile, P2Quantile};
 use crate::util::stats;
 
 /// Aggregated metrics over one run (one trace × one system × one rate).
@@ -46,7 +47,12 @@ impl SloReport {
         for r in records {
             if r.finished() {
                 finished += 1;
-                tokens += r.token_times.len() as u64;
+                // output_len, not token_times.len(): a finished record
+                // emitted exactly output_len tokens (sim invariant), and
+                // streaming records never populate token_times — counting
+                // the declared length makes both modes agree by
+                // construction (PR 7 satellite; regression test below).
+                tokens += r.output_len as u64;
                 let (a, b) = (r.ttft().unwrap(), r.tpot().unwrap());
                 ttfts.push(a);
                 tpots.push(b);
@@ -58,7 +64,7 @@ impl SloReport {
                 }
                 if a <= ttft_slo && b <= tpot_slo {
                     ok += 1;
-                    good_tokens += r.token_times.len() as u64;
+                    good_tokens += r.output_len as u64;
                 }
             } else {
                 failed += 1;
@@ -92,6 +98,182 @@ impl SloReport {
     /// The paper's success criterion: ≥90% of requests meet both SLOs.
     pub fn meets_target(&self, target: f64) -> bool {
         self.slo_attainment >= target
+    }
+}
+
+/// The percentiles a [`StreamingSlo`] tracks (matching [`SloReport`]).
+const STREAM_PS: [f64; 3] = [50.0, 90.0, 99.0];
+
+/// Which quantile sketch backs a [`StreamingSlo`].
+enum LatencySketch {
+    /// One P² estimator per tracked percentile: O(1) memory, no merge.
+    P2([P2Quantile; 3]),
+    /// Log-bucket histogram: slightly coarser, but merges exactly — the
+    /// sharded `parallel_map` reduction uses this variant.
+    Bucket(BucketQuantile),
+}
+
+impl LatencySketch {
+    fn p2() -> LatencySketch {
+        LatencySketch::P2([
+            P2Quantile::new(STREAM_PS[0]),
+            P2Quantile::new(STREAM_PS[1]),
+            P2Quantile::new(STREAM_PS[2]),
+        ])
+    }
+
+    fn bucket() -> LatencySketch {
+        LatencySketch::Bucket(BucketQuantile::latency_default())
+    }
+
+    fn push(&mut self, x: f64) {
+        match self {
+            LatencySketch::P2(qs) => {
+                for q in qs.iter_mut() {
+                    q.push(x);
+                }
+            }
+            LatencySketch::Bucket(b) => b.push(x),
+        }
+    }
+
+    /// Estimate of `STREAM_PS[i]`.
+    fn estimate(&self, i: usize) -> f64 {
+        match self {
+            LatencySketch::P2(qs) => qs[i].estimate(),
+            LatencySketch::Bucket(b) => b.estimate(STREAM_PS[i]),
+        }
+    }
+
+    fn merge(&mut self, other: &LatencySketch) {
+        match (self, other) {
+            (LatencySketch::Bucket(a), LatencySketch::Bucket(b)) => a.merge(b),
+            _ => panic!("only bucket-mode StreamingSlo sinks merge (P2 markers are not mergeable)"),
+        }
+    }
+}
+
+/// Constant-memory SLO sink (PR 7): fed one record at request completion,
+/// it folds counts, token sums and attainment *exactly* (bit-identical to
+/// [`SloReport::from_records`]) and the TTFT/TPOT percentiles through
+/// quantile sketches (estimates; the sorted `from_records` path remains
+/// the oracle, with tolerance-banded agreement tests). This is what lets
+/// `max_sustainable_rate` sweeps drop the O(trace) record vector.
+pub struct StreamingSlo {
+    ttft_slo: f64,
+    tpot_slo: f64,
+    n: usize,
+    finished: usize,
+    failed: usize,
+    ok: usize,
+    ttft_ok: usize,
+    tpot_ok: usize,
+    tokens: u64,
+    good_tokens: u64,
+    ttft_q: LatencySketch,
+    tpot_q: LatencySketch,
+}
+
+impl StreamingSlo {
+    /// Default sink: P² estimators (smallest memory, sharpest estimates).
+    pub fn new(ttft_slo: f64, tpot_slo: f64) -> StreamingSlo {
+        StreamingSlo::mk(ttft_slo, tpot_slo, LatencySketch::p2)
+    }
+
+    /// Mergeable sink: fixed log-bucket histograms, for sharded sweeps
+    /// whose per-shard sinks are folded with [`StreamingSlo::merge`].
+    pub fn new_mergeable(ttft_slo: f64, tpot_slo: f64) -> StreamingSlo {
+        StreamingSlo::mk(ttft_slo, tpot_slo, LatencySketch::bucket)
+    }
+
+    fn mk(ttft_slo: f64, tpot_slo: f64, sketch: fn() -> LatencySketch) -> StreamingSlo {
+        StreamingSlo {
+            ttft_slo,
+            tpot_slo,
+            n: 0,
+            finished: 0,
+            failed: 0,
+            ok: 0,
+            ttft_ok: 0,
+            tpot_ok: 0,
+            tokens: 0,
+            good_tokens: 0,
+            ttft_q: sketch(),
+            tpot_q: sketch(),
+        }
+    }
+
+    /// Fold one completed (finished *or* failed) record. Must be called
+    /// exactly once per request — same contract as a record's single slot
+    /// in the `from_records` input.
+    pub fn observe(&mut self, r: &RequestRecord) {
+        self.n += 1;
+        if r.finished() {
+            self.finished += 1;
+            self.tokens += r.output_len as u64;
+            let (a, b) = (r.ttft().unwrap(), r.tpot().unwrap());
+            self.ttft_q.push(a);
+            self.tpot_q.push(b);
+            if a <= self.ttft_slo {
+                self.ttft_ok += 1;
+            }
+            if b <= self.tpot_slo {
+                self.tpot_ok += 1;
+            }
+            if a <= self.ttft_slo && b <= self.tpot_slo {
+                self.ok += 1;
+                self.good_tokens += r.output_len as u64;
+            }
+        } else {
+            self.failed += 1;
+        }
+    }
+
+    /// Requests observed so far.
+    pub fn observed(&self) -> usize {
+        self.n
+    }
+
+    /// Fold another sink into this one (bucket mode only). Counts add
+    /// exactly; sketches merge exactly and associatively.
+    pub fn merge(&mut self, other: &StreamingSlo) {
+        assert!(
+            self.ttft_slo == other.ttft_slo && self.tpot_slo == other.tpot_slo,
+            "merging sinks with different SLOs"
+        );
+        self.n += other.n;
+        self.finished += other.finished;
+        self.failed += other.failed;
+        self.ok += other.ok;
+        self.ttft_ok += other.ttft_ok;
+        self.tpot_ok += other.tpot_ok;
+        self.tokens += other.tokens;
+        self.good_tokens += other.good_tokens;
+        self.ttft_q.merge(&other.ttft_q);
+        self.tpot_q.merge(&other.tpot_q);
+    }
+
+    /// Summarize. Counts, attainment, throughput and goodput are exact
+    /// (same arithmetic as `from_records`); percentiles are sketch
+    /// estimates.
+    pub fn report(&self, span_seconds: f64) -> SloReport {
+        let span = span_seconds.max(1e-9);
+        SloReport {
+            n_requests: self.n,
+            n_finished: self.finished,
+            n_failed: self.failed,
+            slo_attainment: self.ok as f64 / self.n.max(1) as f64,
+            ttft_attainment: self.ttft_ok as f64 / self.n.max(1) as f64,
+            tpot_attainment: self.tpot_ok as f64 / self.n.max(1) as f64,
+            p50_ttft: self.ttft_q.estimate(0),
+            p90_ttft: self.ttft_q.estimate(1),
+            p99_ttft: self.ttft_q.estimate(2),
+            p50_tpot: self.tpot_q.estimate(0),
+            p90_tpot: self.tpot_q.estimate(1),
+            p99_tpot: self.tpot_q.estimate(2),
+            token_throughput: self.tokens as f64 / span,
+            goodput_tokens: self.good_tokens as f64 / span,
+        }
     }
 }
 
@@ -158,13 +340,14 @@ mod tests {
     fn rec(arrival: f64, times: &[f64]) -> RequestRecord {
         let req = Request::new(0, arrival, 10, times.len().max(1) as u32);
         let mut r = RequestRecord::new(&req);
-        if !times.is_empty() {
-            r.first_token = Some(times[0]);
-            r.token_times = times.to_vec();
-            r.state = RequestState::Finished;
-        } else {
-            r.state = RequestState::Failed;
+        for &t in times {
+            r.push_token(t);
         }
+        r.state = if times.is_empty() {
+            RequestState::Failed
+        } else {
+            RequestState::Finished
+        };
         r
     }
 
@@ -225,6 +408,148 @@ mod tests {
         ] {
             assert_eq!(got.to_bits(), want.to_bits(), "{got} != {want}");
         }
+    }
+
+    /// PR 7 satellite regression: token counts now come from `output_len`
+    /// for finished records. The sim pushes exactly `output_len` tokens
+    /// before marking a record finished, so the old `token_times.len()`
+    /// accounting must agree bit-for-bit — on retained *and* streaming
+    /// records (whose `token_times` is empty).
+    #[test]
+    fn token_counts_match_token_times_len_for_finished() {
+        let records = vec![
+            rec(0.0, &[0.5, 0.6, 0.7]),
+            rec(0.0, &[5.0, 5.1]),
+            rec(0.5, &[0.9]),
+            rec(0.0, &[]), // failed: contributes no tokens either way
+        ];
+        let rep = SloReport::from_records(&records, 1.0, 0.2, 10.0);
+        let by_len: u64 = records
+            .iter()
+            .filter(|r| r.finished())
+            .map(|r| r.token_times.len() as u64)
+            .sum();
+        assert_eq!(
+            rep.token_throughput.to_bits(),
+            (by_len as f64 / 10.0).to_bits()
+        );
+        // Streaming twins: identical report despite empty token_times.
+        let streaming: Vec<RequestRecord> = records
+            .iter()
+            .map(|r| {
+                let req = Request::new(0, r.arrival, r.input_len, r.output_len);
+                let mut s = RequestRecord::new_streaming(&req);
+                for &t in &r.token_times {
+                    s.push_token(t);
+                }
+                s.state = r.state;
+                s
+            })
+            .collect();
+        let rep2 = SloReport::from_records(&streaming, 1.0, 0.2, 10.0);
+        assert_eq!(rep.token_throughput.to_bits(), rep2.token_throughput.to_bits());
+        assert_eq!(rep.goodput_tokens.to_bits(), rep2.goodput_tokens.to_bits());
+        assert_eq!(rep.slo_attainment.to_bits(), rep2.slo_attainment.to_bits());
+    }
+
+    /// PR 7: the streaming sink's exact fields are bit-identical to
+    /// `from_records`; its percentiles agree within the sketch bands.
+    #[test]
+    fn streaming_slo_agrees_with_from_records() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        let records: Vec<RequestRecord> = (0..5_000)
+            .map(|i| {
+                if rng.f64() < 0.05 {
+                    return rec(i as f64 * 0.01, &[]); // failed
+                }
+                let t0 = i as f64 * 0.01 + 0.2 + rng.f64();
+                let gap = 0.02 + 0.2 * rng.f64();
+                let times: Vec<f64> = (0..8).map(|k| t0 + k as f64 * gap).collect();
+                rec(i as f64 * 0.01, &times)
+            })
+            .collect();
+        let span = 60.0;
+        let (ttft_slo, tpot_slo) = (1.0, 0.15);
+        let oracle = SloReport::from_records(&records, ttft_slo, tpot_slo, span);
+        for mergeable in [false, true] {
+            let mut sink = if mergeable {
+                StreamingSlo::new_mergeable(ttft_slo, tpot_slo)
+            } else {
+                StreamingSlo::new(ttft_slo, tpot_slo)
+            };
+            for r in &records {
+                sink.observe(r);
+            }
+            let got = sink.report(span);
+            // Exact fields: bit-identical.
+            assert_eq!(got.n_requests, oracle.n_requests);
+            assert_eq!(got.n_finished, oracle.n_finished);
+            assert_eq!(got.n_failed, oracle.n_failed);
+            for (a, b) in [
+                (got.slo_attainment, oracle.slo_attainment),
+                (got.ttft_attainment, oracle.ttft_attainment),
+                (got.tpot_attainment, oracle.tpot_attainment),
+                (got.token_throughput, oracle.token_throughput),
+                (got.goodput_tokens, oracle.goodput_tokens),
+            ] {
+                assert_eq!(a.to_bits(), b.to_bits(), "exact field drifted");
+            }
+            // Estimated percentiles: within 10% of the sorted oracle.
+            for (est, exact, what) in [
+                (got.p50_ttft, oracle.p50_ttft, "p50_ttft"),
+                (got.p90_ttft, oracle.p90_ttft, "p90_ttft"),
+                (got.p99_ttft, oracle.p99_ttft, "p99_ttft"),
+                (got.p50_tpot, oracle.p50_tpot, "p50_tpot"),
+                (got.p90_tpot, oracle.p90_tpot, "p90_tpot"),
+                (got.p99_tpot, oracle.p99_tpot, "p99_tpot"),
+            ] {
+                assert!(
+                    (est - exact).abs() <= 0.10 * exact.abs() + 1e-9,
+                    "{what} (mergeable={mergeable}): est {est} vs exact {exact}"
+                );
+            }
+        }
+    }
+
+    /// Bucket-mode sinks merge exactly: sharded fold == single pass.
+    #[test]
+    fn streaming_slo_merge_matches_single_pass() {
+        let shards: Vec<Vec<RequestRecord>> = (0..3)
+            .map(|s| {
+                (0..200)
+                    .map(|i| {
+                        let t0 = 0.1 + (s * 200 + i) as f64 * 0.003;
+                        rec(t0 - 0.1, &[t0, t0 + 0.05, t0 + 0.1])
+                    })
+                    .collect()
+            })
+            .collect();
+        let sink_of = |rs: &[RequestRecord]| {
+            let mut s = StreamingSlo::new_mergeable(1.0, 0.2);
+            for r in rs {
+                s.observe(r);
+            }
+            s
+        };
+        let mut merged = sink_of(&shards[0]);
+        merged.merge(&sink_of(&shards[1]));
+        merged.merge(&sink_of(&shards[2]));
+        let all: Vec<RequestRecord> = shards.iter().flatten().cloned().collect();
+        let single = sink_of(&all);
+        let (a, b) = (merged.report(10.0), single.report(10.0));
+        for (x, y) in [
+            (a.p50_ttft, b.p50_ttft),
+            (a.p90_ttft, b.p90_ttft),
+            (a.p99_ttft, b.p99_ttft),
+            (a.p50_tpot, b.p50_tpot),
+            (a.p90_tpot, b.p90_tpot),
+            (a.p99_tpot, b.p99_tpot),
+            (a.slo_attainment, b.slo_attainment),
+            (a.token_throughput, b.token_throughput),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.n_requests, b.n_requests);
     }
 
     /// A degenerate report whose only meaningful field is attainment.

@@ -116,8 +116,22 @@ pub struct RequestRecord {
     /// Time the first token was emitted (end of prefill). None => failed
     /// before prefill completed.
     pub first_token: Option<Time>,
-    /// Emission time of every output token (first included).
+    /// Emission time of every output token (first included). Populated
+    /// only in retained mode ([`RequestRecord::new`]) — golden digests and
+    /// the chaos tier compare it bit-for-bit. Streaming records
+    /// ([`RequestRecord::new_streaming`]) never allocate it; TTFT/TPOT/
+    /// max-gap come from the incremental folds maintained by
+    /// [`RequestRecord::push_token`], which are bit-identical in both
+    /// modes.
     pub token_times: Vec<Time>,
+    /// Tokens emitted so far (== `token_times.len()` in retained mode).
+    n_tokens: u32,
+    /// Emission time of the most recent token (NaN before the first).
+    last_token: Time,
+    /// Folded max inter-token gap under `total_cmp` (NaN below 2 tokens).
+    max_gap: Time,
+    /// Whether `push_token` also records into `token_times`.
+    retain: bool,
     pub state: RequestState,
     /// Which instance ran the prefill / decode phases (for Fig. 4 + debug).
     pub prefill_instance: Option<InstanceId>,
@@ -140,11 +154,69 @@ impl RequestRecord {
             // a finished request; reserving up front keeps the per-token
             // hot path free of reallocation.
             token_times: Vec::with_capacity(req.output_len as usize),
+            n_tokens: 0,
+            last_token: f64::NAN,
+            max_gap: f64::NAN,
+            retain: true,
             state: RequestState::PrefillQueued,
             prefill_instance: None,
             decode_instance: None,
             shed: None,
         }
+    }
+
+    /// Streaming-mode record: `token_times` is never allocated, so a
+    /// record costs O(1) memory regardless of `output_len`. TTFT/TPOT/
+    /// max-gap come from the same incremental folds as retained mode.
+    pub fn new_streaming(req: &Request) -> Self {
+        let mut rec = RequestRecord::new(req);
+        rec.token_times = Vec::new();
+        rec.retain = false;
+        rec
+    }
+
+    /// Record a token emission at time `t`. Sets `first_token` on the
+    /// first call, folds the inter-token gap incrementally (same
+    /// `total_cmp` max as re-walking `token_times`, bit for bit), and
+    /// appends to `token_times` only in retained mode.
+    pub fn push_token(&mut self, t: Time) {
+        if self.first_token.is_none() {
+            self.first_token = Some(t);
+        }
+        if self.n_tokens > 0 {
+            let gap = t - self.last_token;
+            self.max_gap = if self.n_tokens == 1 {
+                gap
+            } else {
+                // Equal under total_cmp implies identical bits, so
+                // keeping the incumbent matches Iterator::max_by exactly.
+                match self.max_gap.total_cmp(&gap) {
+                    std::cmp::Ordering::Less => gap,
+                    _ => self.max_gap,
+                }
+            };
+        }
+        self.last_token = t;
+        self.n_tokens += 1;
+        if self.retain {
+            self.token_times.push(t);
+        }
+    }
+
+    /// Forget all emitted tokens (fault-recovery restart: the request is
+    /// re-prefilled from scratch, so its latency clock starts over).
+    pub fn reset_tokens(&mut self) {
+        self.first_token = None;
+        self.token_times.clear();
+        self.n_tokens = 0;
+        self.last_token = f64::NAN;
+        self.max_gap = f64::NAN;
+    }
+
+    /// Tokens emitted so far (`token_times.len()` without needing the
+    /// vector — valid in streaming mode too).
+    pub fn tokens_emitted(&self) -> u32 {
+        self.n_tokens
     }
 
     /// Time-to-first-token (paper Eq. 1): q1 + p1.
@@ -156,28 +228,24 @@ impl RequestRecord {
     /// one-token request has TPOT 0 by the paper's definition.
     pub fn tpot(&self) -> Option<f64> {
         let ft = self.first_token?;
-        let m = self.token_times.len();
+        let m = self.n_tokens;
         if m == 0 {
             return None;
         }
         if m == 1 {
             return Some(0.0);
         }
-        let last = *self.token_times.last().unwrap();
-        Some((last - ft) / (m - 1) as f64)
+        Some((self.last_token - ft) / (m - 1) as f64)
     }
 
     /// Maximum inter-token gap (stall detector; stricter than mean TPOT).
+    /// Folded at push time; a NaN timestamp (broken trace/clock) surfaces
+    /// as a NaN gap via `total_cmp`, never as a panic.
     pub fn max_token_gap(&self) -> Option<f64> {
-        if self.token_times.len() < 2 {
+        if self.n_tokens < 2 {
             return None;
         }
-        self.token_times
-            .windows(2)
-            .map(|w| w[1] - w[0])
-            // total_cmp: a NaN timestamp (broken trace/clock) must surface
-            // as a weird gap, never as a panic in the metrics layer.
-            .max_by(|a, b| a.total_cmp(b))
+        Some(self.max_gap)
     }
 
     pub fn finished(&self) -> bool {
@@ -203,9 +271,10 @@ mod tests {
     fn mk_record(arrival: f64, times: &[f64]) -> RequestRecord {
         let req = Request::new(1, arrival, 10, times.len() as u32);
         let mut rec = RequestRecord::new(&req);
-        if let Some(&t0) = times.first() {
-            rec.first_token = Some(t0);
-            rec.token_times = times.to_vec();
+        for &t in times {
+            rec.push_token(t);
+        }
+        if !times.is_empty() {
             rec.state = RequestState::Finished;
         }
         rec
@@ -251,6 +320,63 @@ mod tests {
         assert!(ok.meets_slo(1.0, 0.2));
         assert!(!ok.meets_slo(0.4, 0.2)); // ttft 0.5 > 0.4
         assert!(!ok.meets_slo(1.0, 0.05)); // tpot 0.1 > 0.05
+    }
+
+    /// PR 7: the incremental folds must agree bit-for-bit with re-walking
+    /// `token_times`, and streaming records (no vector at all) must agree
+    /// with retained ones, including through a reset (restart path).
+    #[test]
+    fn incremental_folds_match_token_times_rewalk() {
+        let cases: &[&[f64]] = &[
+            &[],
+            &[1.0],
+            &[1.0, 1.5, 2.0],
+            &[1.0, 1.1, 1.2, 4.0],
+            &[1.0, f64::NAN, 2.0],
+            &[3.0, 3.0, 3.0],
+            &[0.0, -0.0, 1.0],
+        ];
+        for times in cases {
+            let retained = mk_record(0.0, times);
+            // Oracle: re-walk the retained vector the pre-PR-7 way.
+            let walk_gap = retained
+                .token_times
+                .windows(2)
+                .map(|w| w[1] - w[0])
+                .max_by(|a, b| a.total_cmp(b));
+            assert_eq!(
+                retained.max_token_gap().map(f64::to_bits),
+                walk_gap.map(f64::to_bits),
+                "fold vs rewalk: {times:?}"
+            );
+            assert_eq!(retained.tokens_emitted() as usize, times.len());
+            // Streaming twin: no token_times allocation, same metrics.
+            let req = Request::new(1, 0.0, 10, times.len().max(1) as u32);
+            let mut streaming = RequestRecord::new_streaming(&req);
+            assert_eq!(streaming.token_times.capacity(), 0);
+            for &t in *times {
+                streaming.push_token(t);
+            }
+            assert!(streaming.token_times.is_empty());
+            assert_eq!(
+                streaming.ttft().map(f64::to_bits),
+                retained.ttft().map(f64::to_bits)
+            );
+            assert_eq!(
+                streaming.tpot().map(f64::to_bits),
+                retained.tpot().map(f64::to_bits)
+            );
+            assert_eq!(
+                streaming.max_token_gap().map(f64::to_bits),
+                retained.max_token_gap().map(f64::to_bits)
+            );
+            // Reset (fault-recovery restart) clears every fold.
+            streaming.reset_tokens();
+            assert_eq!(streaming.first_token, None);
+            assert_eq!(streaming.tokens_emitted(), 0);
+            assert_eq!(streaming.tpot(), None);
+            assert_eq!(streaming.max_token_gap(), None);
+        }
     }
 
     #[test]

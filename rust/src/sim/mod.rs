@@ -39,6 +39,13 @@
 //!   per instance.
 //! * **Buffer reuse.** Iteration completions write into one reusable
 //!   `Produced` buffer instead of allocating a `Vec` per iteration.
+//! * **Streaming window (PR 7).** Per-request state lives in a sliding
+//!   window of [`Slot`]s indexed by global arrival index. In the classic
+//!   `run`/`run_reference` modes the window never drains (the records
+//!   come back in `SimResult`, byte-identical to the pre-window code).
+//!   In `run_streamed` mode arrivals are pulled lazily from an
+//!   [`ArrivalSource`], completed records are handed to a sink and their
+//!   slots freed, so memory is O(instances + in-flight), not O(trace).
 
 pub mod policy;
 pub mod view;
@@ -52,6 +59,7 @@ use crate::engine::{IterationPlan, Produced, SimInstance, Transfer, TransferFabr
 use crate::fault::{FaultKind, FaultPlan, TransferRetryPolicy};
 use crate::request::{InstanceId, Request, RequestId, RequestRecord, RequestState, ShedReason, Time};
 use crate::sched::{Epoched, Liveness, MembershipEvent};
+use crate::trace::stream::{ArrivalSource, TraceSource};
 use crate::trace::Trace;
 
 pub use policy::Policy;
@@ -223,15 +231,75 @@ pub struct SimResult {
 // The cluster
 // ---------------------------------------------------------------------------
 
+/// Per-request simulation state, keyed by global arrival index. Slots live
+/// in a sliding window (`Cluster::slots` + `Cluster::base`): retained runs
+/// never drain the window (so `SimResult::records` comes back whole and
+/// byte-identical to the pre-window layout of parallel vectors), while a
+/// streamed run pops completed front slots to the sink and frees them.
+struct Slot {
+    req: Request,
+    rec: RequestRecord,
+    /// (source epoch, target epoch) captured when a fetch was admitted;
+    /// a mismatch at TransferDone means that endpoint failed (and
+    /// possibly rejoined) mid-transfer — its parked KV / reservation no
+    /// longer exists, even if the slot is Active again.
+    fetch_epoch: (u64, u64),
+    /// Transfer retry attempts (cumulative across routes: the escalation
+    /// ladder retry → re-place → shed is bounded per request).
+    transfer_attempts: u32,
+    /// Transfer generation, bumped at every fetch admission; a
+    /// `TransferRetry` event whose generation is stale is a no-op.
+    transfer_gen: u32,
+    /// Outstanding external references: fabric-queued transfers plus
+    /// in-heap TransferDone/TransferRetry events naming this request.
+    /// A slot only drains to the streaming sink at zero — a stale
+    /// transfer completion must still find the epochs it needs to
+    /// release the right reservations (chaos no-silent-loss contract).
+    refs: u32,
+}
+
+impl Slot {
+    fn new(req: Request, streaming: bool) -> Self {
+        Slot {
+            rec: if streaming {
+                RequestRecord::new_streaming(&req)
+            } else {
+                RequestRecord::new(&req)
+            },
+            req,
+            fetch_epoch: (0, 0),
+            transfer_attempts: 0,
+            transfer_gen: 0,
+            refs: 0,
+        }
+    }
+
+    fn settled(&self) -> bool {
+        matches!(
+            self.rec.state,
+            RequestState::Finished | RequestState::Failed
+        ) && self.refs == 0
+    }
+}
+
 pub struct Cluster {
     pub now: Time,
     instances: Vec<SimInstance>,
     fabric: TransferFabric,
     policy: Box<dyn Policy>,
-    records: Vec<RequestRecord>,
-    requests: Vec<Request>,
-    /// Cursor into `requests` (sorted by arrival): the calendar queue.
-    next_arrival: usize,
+    /// Sliding window of per-request state: `slots[i]` holds global
+    /// arrival index `base + i`. Retained modes keep `base == 0`.
+    slots: VecDeque<Slot>,
+    /// Global arrival index of `slots[0]`.
+    base: usize,
+    /// Requests admitted from the arrival source so far; the next
+    /// admission takes global index `arrived`.
+    arrived: usize,
+    /// One-ahead arrival peeked from the source but not yet admitted —
+    /// the streaming face of the old sorted-slice cursor.
+    pending: Option<Request>,
+    /// The arrival source has returned `None` (and stays exhausted).
+    exhausted: bool,
     events: BinaryHeap<Reverse<Event>>,
     seq: u64,
     /// In-flight iteration plan per instance.
@@ -242,11 +310,6 @@ pub struct Cluster {
     /// Pending rejoin delays of `Restart` drains: when slot `i` finishes
     /// draining, a Join fires `restart_after[i]` seconds later.
     restart_after: Vec<Option<f64>>,
-    /// (source epoch, target epoch) captured when a fetch was admitted;
-    /// a mismatch at TransferDone means that endpoint failed (and
-    /// possibly rejoined) mid-transfer — its parked KV / reservation no
-    /// longer exists, even if the slot is Active again.
-    fetch_epoch: Vec<(u64, u64)>,
     /// Instances that start outside the cluster (join later); None means
     /// everyone is live at t=0 (the fixed-membership default).
     initial_live: Option<Vec<bool>>,
@@ -263,12 +326,6 @@ pub struct Cluster {
     /// are dilated by `slow_factor[i]` while `now < slow_until[i]`.
     slow_until: Vec<f64>,
     slow_factor: Vec<f64>,
-    /// Per-request transfer retry attempts (cumulative across routes: the
-    /// escalation ladder retry → re-place → shed is bounded per request).
-    transfer_attempts: Vec<u32>,
-    /// Per-request transfer generation, bumped at every fetch admission;
-    /// a `TransferRetry` event whose generation is stale is a no-op.
-    transfer_gen: Vec<u32>,
     /// Scratch for straggler detection (reused across ticks).
     interval_buf: Vec<f64>,
     /// Per-target queues of (req idx, from) waiting for target memory (q2).
@@ -309,23 +366,22 @@ impl Cluster {
             instances,
             fabric,
             policy,
-            records: Vec::new(),
-            requests: Vec::new(),
-            next_arrival: 0,
+            slots: VecDeque::new(),
+            base: 0,
+            arrived: 0,
+            pending: None,
+            exhausted: true,
             events: BinaryHeap::new(),
             seq: 0,
             plans: (0..n).map(|_| None).collect(),
             epochs: vec![0; n],
             restart_after: vec![None; n],
-            fetch_epoch: Vec::new(),
             initial_live: None,
             membership_schedule: Vec::new(),
             fault_schedule: Vec::new(),
             stall_until: vec![0.0; n],
             slow_until: vec![0.0; n],
             slow_factor: vec![1.0; n],
-            transfer_attempts: Vec::new(),
-            transfer_gen: Vec::new(),
             interval_buf: Vec::new(),
             fetch_wait: (0..n).map(|_| VecDeque::new()).collect(),
             produced_buf: Vec::new(),
@@ -402,9 +458,36 @@ impl Cluster {
         }
     }
 
+    /// Window accessors: global arrival index → resident slot. Retained
+    /// modes keep `base == 0`, so these are plain vector indexing there.
+    #[inline]
+    fn slot(&self, idx: usize) -> &Slot {
+        &self.slots[idx - self.base]
+    }
+
+    #[inline]
+    fn slot_mut(&mut self, idx: usize) -> &mut Slot {
+        &mut self.slots[idx - self.base]
+    }
+
+    /// Admit the next arrival: normalize its id to the global arrival
+    /// index (traces and sources may carry arbitrary ids) and open its
+    /// slot. Returns the index.
+    fn admit(&mut self, raw: Request, streaming: bool) -> usize {
+        let idx = self.arrived;
+        let req = Request {
+            id: RequestId(idx as u64),
+            ..raw
+        };
+        self.slots.push_back(Slot::new(req, streaming));
+        self.arrived += 1;
+        idx
+    }
+
     /// Run the trace to completion; consumes the cluster.
     pub fn run(self, trace: &Trace) -> SimResult {
-        self.run_mode(trace, false)
+        let mut src = TraceSource::new(trace);
+        self.run_core(&mut src, Some(trace.duration()), false, None)
     }
 
     /// Legacy semantics: pre-push every arrival into the event heap (the
@@ -412,37 +495,63 @@ impl Cluster {
     /// calendar-vs-heap equivalence property test; O(N) heap, slow.
     #[doc(hidden)]
     pub fn run_reference(self, trace: &Trace) -> SimResult {
-        self.run_mode(trace, true)
+        let mut src = TraceSource::new(trace);
+        self.run_core(&mut src, Some(trace.duration()), true, None)
     }
 
-    fn run_mode(mut self, trace: &Trace, prepush_arrivals: bool) -> SimResult {
-        // Normalize ids to vector indices: traces may carry arbitrary ids
-        // (they are sorted by arrival), but the event loop indexes by id.
-        self.requests = trace
-            .requests
-            .iter()
-            .enumerate()
-            .map(|(i, r)| Request {
-                id: crate::request::RequestId(i as u64),
-                ..*r
-            })
-            .collect();
-        self.records = self.requests.iter().map(RequestRecord::new).collect();
-        self.fetch_epoch = vec![(0, 0); self.requests.len()];
-        self.transfer_attempts = vec![0; self.requests.len()];
-        self.transfer_gen = vec![0; self.requests.len()];
-        self.last_arrival = trace.duration();
+    /// Streaming sweep entry point (PR 7): arrivals are pulled lazily
+    /// from `source`, each completed [`RequestRecord`] is handed to
+    /// `sink` (in arrival order) and its slot freed, and records skip
+    /// `token_times` retention entirely — memory stays
+    /// O(instances + in-flight) instead of O(trace).
+    /// `SimResult::records` comes back empty; everything else
+    /// (`events_processed`, `sim_time`, …) is the same as a materialized
+    /// run of the same arrivals — byte-identical, pinned by
+    /// `tests/streaming.rs`.
+    pub fn run_streamed(
+        self,
+        source: &mut dyn ArrivalSource,
+        sink: &mut dyn FnMut(RequestRecord),
+    ) -> SimResult {
+        self.run_core(source, None, false, Some(sink))
+    }
+
+    fn run_core(
+        mut self,
+        source: &mut dyn ArrivalSource,
+        known_duration: Option<Time>,
+        prepush_arrivals: bool,
+        mut sink: Option<&mut dyn FnMut(RequestRecord)>,
+    ) -> SimResult {
+        let streaming = sink.is_some();
+        if !streaming {
+            if let Some(hint) = source.len_hint() {
+                self.slots.reserve(hint);
+            }
+        }
+        // With a materialized trace the drain deadline is known up front;
+        // a true stream pins it only once the source runs dry (below) —
+        // equivalent, because arrivals always precede the deadline.
+        if let Some(d) = known_duration {
+            self.last_arrival = d;
+        }
+        self.exhausted = false;
 
         self.policy.init(&SimView(&self.instances));
 
         if prepush_arrivals {
-            // Reference mode: arrivals occupy seqs 1..=N, exactly like the
-            // seed implementation, so ties resolve identically.
-            for idx in 0..self.requests.len() {
-                let t = self.requests[idx].arrival;
+            // Reference mode: drain the source up front; arrivals occupy
+            // seqs 1..=N, exactly like the seed implementation, so ties
+            // resolve identically.
+            while let Some(r) = source.next_request() {
+                if known_duration.is_none() {
+                    self.last_arrival = r.arrival;
+                }
+                let idx = self.admit(r, streaming);
+                let t = self.slot(idx).req.arrival;
                 self.push(t, EventKind::Arrival { idx });
             }
-            self.next_arrival = self.requests.len();
+            self.exhausted = true;
         }
         // Elastic membership: instances configured to join later start
         // outside the cluster, expressed as InstanceLost notifications
@@ -473,12 +582,35 @@ impl Cluster {
         }
         self.push(0.0, EventKind::MonitorTick);
 
-        let deadline = self.last_arrival + self.cfg.drain_timeout;
+        let known_deadline = known_duration.map(|d| d + self.cfg.drain_timeout);
         loop {
+            // One-ahead peek: the streaming face of the sorted-slice
+            // cursor. `pending` holds the next arrival until the merge
+            // below admits it.
+            if self.pending.is_none() && !self.exhausted {
+                match source.next_request() {
+                    Some(r) => {
+                        if known_duration.is_none() {
+                            self.last_arrival = r.arrival;
+                        }
+                        self.pending = Some(r);
+                    }
+                    None => self.exhausted = true,
+                }
+            }
+            // The drain deadline only binds after the last arrival (the
+            // static deadline of a materialized run can never fire while
+            // arrivals remain, since every arrival precedes it), so a
+            // true stream may leave it open until the source runs dry.
+            let deadline = match known_deadline {
+                Some(d) => d,
+                None if self.exhausted => self.last_arrival + self.cfg.drain_timeout,
+                None => f64::INFINITY,
+            };
             // Merge the arrival calendar with the event heap. Time ties go
             // to the arrival: in the reference ordering every arrival's
             // seq precedes every runtime-scheduled event's seq.
-            let next_arrival_t = self.requests.get(self.next_arrival).map(|r| r.arrival);
+            let next_arrival_t = self.pending.as_ref().map(|r| r.arrival);
             let next_heap_t = self.events.peek().map(|r| r.0.time);
             let take_arrival = match (next_arrival_t, next_heap_t) {
                 (Some(a), Some(h)) => a <= h,
@@ -488,9 +620,9 @@ impl Cluster {
             };
 
             if take_arrival {
-                let idx = self.next_arrival;
-                self.next_arrival += 1;
-                self.now = self.requests[idx].arrival.max(self.now);
+                let raw = self.pending.take().unwrap();
+                let idx = self.admit(raw, streaming);
+                self.now = self.slot(idx).req.arrival.max(self.now);
                 self.events_processed += 1;
                 if self.now > deadline {
                     break;
@@ -519,7 +651,16 @@ impl Cluster {
                     }
                 }
             }
-            if self.done == self.records.len() {
+            // Streaming: completed front slots leave the window in
+            // arrival order. O(1) amortized — each slot drains once.
+            if let Some(s) = sink.as_mut() {
+                while matches!(self.slots.front(), Some(slot) if slot.settled()) {
+                    let slot = self.slots.pop_front().unwrap();
+                    self.base += 1;
+                    s(slot.rec);
+                }
+            }
+            if self.exhausted && self.pending.is_none() && self.done == self.arrived {
                 break;
             }
         }
@@ -527,17 +668,64 @@ impl Cluster {
         // Anything not finished at the deadline is a failure — an
         // *explicit* one: the chaos no-silent-loss contract requires every
         // failed record to carry its reason.
-        for rec in &mut self.records {
-            if !matches!(rec.state, RequestState::Finished | RequestState::Failed) {
-                rec.state = RequestState::Failed;
-                rec.shed = Some(ShedReason::DeadlineExceeded);
+        for slot in self.slots.iter_mut() {
+            if !matches!(
+                slot.rec.state,
+                RequestState::Finished | RequestState::Failed
+            ) {
+                slot.rec.state = RequestState::Failed;
+                slot.rec.shed = Some(ShedReason::DeadlineExceeded);
             }
         }
 
         let total_iterations = self.instances.iter().map(|i| i.iterations).sum();
         let total_flips = self.policy.flip_count();
+
+        // Flush the window, then any arrivals the deadline cut off before
+        // admission — those still owe (failed) records, exactly like the
+        // pre-window code that materialized every record up front.
+        let mut fail_leftover = |raw: Request, idx: usize| {
+            let req = Request {
+                id: RequestId(idx as u64),
+                ..raw
+            };
+            let mut rec = if streaming {
+                RequestRecord::new_streaming(&req)
+            } else {
+                RequestRecord::new(&req)
+            };
+            rec.state = RequestState::Failed;
+            rec.shed = Some(ShedReason::DeadlineExceeded);
+            rec
+        };
+        let mut records = Vec::new();
+        if !streaming {
+            records.reserve(self.arrived);
+        }
+        let mut emit = |rec: RequestRecord| match sink.as_mut() {
+            Some(s) => s(rec),
+            None => records.push(rec),
+        };
+        for slot in std::mem::take(&mut self.slots) {
+            emit(slot.rec);
+        }
+        let mut next_idx = self.arrived;
+        if let Some(raw) = self.pending.take() {
+            emit(fail_leftover(raw, next_idx));
+            next_idx += 1;
+        }
+        while !self.exhausted {
+            match source.next_request() {
+                Some(raw) => {
+                    emit(fail_leftover(raw, next_idx));
+                    next_idx += 1;
+                }
+                None => self.exhausted = true,
+            }
+        }
+
         SimResult {
-            records: self.records,
+            records,
             timeline: self.timeline,
             sim_time: self.now,
             events_processed: self.events_processed,
@@ -549,7 +737,7 @@ impl Cluster {
     // ------------------------------------------------------------- events
 
     fn on_arrival(&mut self, idx: usize) {
-        let req = self.requests[idx];
+        let req = self.slot(idx).req;
         // Disjoint field borrows: the policy reads the instance table
         // (through the zero-cost SimView adapter) while being mutated
         // itself — no take()/put-back, no clone.
@@ -559,7 +747,7 @@ impl Cluster {
             &Epoched(SimView(&self.instances), self.clock),
         );
 
-        let inst = &mut self.instances[target.0];
+        let inst = &self.instances[target.0];
         if !inst.life.in_cluster() {
             // The policy only names a departed slot when nothing
             // placeable remains (its last-ditch fallback). Fail the
@@ -575,9 +763,12 @@ impl Cluster {
             self.shed(idx, ShedReason::Oversized);
             return;
         }
-        self.records[idx].prefill_instance = Some(target);
-        self.records[idx].state = RequestState::Prefilling;
-        inst.enqueue_prefill(req.id, req.input_len);
+        {
+            let rec = &mut self.slot_mut(idx).rec;
+            rec.prefill_instance = Some(target);
+            rec.state = RequestState::Prefilling;
+        }
+        self.instances[target.0].enqueue_prefill(req.id, req.input_len);
         self.touch();
         self.kick(target.0);
     }
@@ -596,14 +787,15 @@ impl Cluster {
         self.instances[i].finish_iteration_into(&plan, self.now, &mut produced);
         self.touch();
         let mut freed_memory = false;
+        let now = self.now;
         for p in produced.drain(..) {
             match p {
                 Produced::Token { id } => {
-                    self.records[id.0 as usize].token_times.push(self.now);
+                    self.slot_mut(id.0 as usize).rec.push_token(now);
                 }
                 Produced::FinalToken { id, .. } => {
-                    let rec = &mut self.records[id.0 as usize];
-                    rec.token_times.push(self.now);
+                    let rec = &mut self.slot_mut(id.0 as usize).rec;
+                    rec.push_token(now);
                     rec.state = RequestState::Finished;
                     self.done += 1;
                     freed_memory = true;
@@ -624,19 +816,20 @@ impl Cluster {
     /// First token is emitted at prefill completion (paper Fig. 6 step c);
     /// then the decode sub-request is placed (step d).
     fn on_prefill_done(&mut self, idx: usize, prefill_inst: usize, kv_tokens: u32) {
-        let req = self.requests[idx];
-        {
-            let rec = &mut self.records[idx];
-            rec.first_token = Some(self.now);
-            rec.token_times.push(self.now);
-        }
+        let req = self.slot(idx).req;
+        let now = self.now;
+        // push_token sets `first_token` (the record was reset if this is
+        // a post-restart prefill) and folds the gap/ttft incrementally.
+        self.slot_mut(idx).rec.push_token(now);
 
         if req.output_len <= 1 {
             // Entire output was the first token: done, free the KV.
             self.instances[prefill_inst].migration_out_done(kv_tokens);
-            self.records[idx].state = RequestState::Finished;
-            self.records[idx].decode_instance =
-                Some(InstanceId(prefill_inst));
+            {
+                let rec = &mut self.slot_mut(idx).rec;
+                rec.state = RequestState::Finished;
+                rec.decode_instance = Some(InstanceId(prefill_inst));
+            }
             self.done += 1;
             self.start_fetches(prefill_inst);
             self.kick(prefill_inst);
@@ -649,18 +842,18 @@ impl Cluster {
             InstanceId(prefill_inst),
             &Epoched(SimView(&self.instances), self.clock),
         );
-        self.records[idx].decode_instance = Some(target);
+        self.slot_mut(idx).rec.decode_instance = Some(target);
 
         let remaining = req.output_len - 1;
         if target.0 == prefill_inst {
             // Local handoff — no KV migration (paper §5.3).
             self.instances[prefill_inst].adopt_local_decode(req.id, kv_tokens, remaining);
             self.touch();
-            self.records[idx].state = RequestState::DecodeQueued;
+            self.slot_mut(idx).rec.state = RequestState::DecodeQueued;
             self.kick(prefill_inst);
         } else {
             // Queue for the decode instance to fetch (q2).
-            self.records[idx].state = RequestState::Migrating;
+            self.slot_mut(idx).rec.state = RequestState::Migrating;
             self.fetch_wait[target.0].push_back((idx, prefill_inst));
             self.start_fetches(target.0);
         }
@@ -670,21 +863,30 @@ impl Cluster {
     fn start_fetches(&mut self, target: usize) {
         let mut admitted_any = false;
         while let Some(&(idx, from)) = self.fetch_wait[target].front() {
-            let kv = self.requests[idx].input_len;
+            let kv = self.slot(idx).req.input_len;
             if !self.instances[target].try_reserve_kv(kv as u64 + 1) {
                 break;
             }
             self.fetch_wait[target].pop_front();
-            self.fetch_epoch[idx] = (self.epochs[from], self.epochs[target]);
-            // New admission supersedes any in-flight retry of an older
-            // route for this request.
-            self.transfer_gen[idx] = self.transfer_gen[idx].wrapping_add(1);
+            let epochs = (self.epochs[from], self.epochs[target]);
+            let rid = {
+                let slot = self.slot_mut(idx);
+                slot.fetch_epoch = epochs;
+                // New admission supersedes any in-flight retry of an
+                // older route for this request.
+                slot.transfer_gen = slot.transfer_gen.wrapping_add(1);
+                // The fabric now holds a reference until the transfer
+                // starts or times out.
+                slot.refs += 1;
+                slot.req.id
+            };
+            let now = self.now;
             self.fabric.request(Transfer {
-                req: self.requests[idx].id,
+                req: rid,
                 from: InstanceId(from),
                 to: InstanceId(target),
                 kv_tokens: kv,
-                requested_at: self.now,
+                requested_at: now,
             });
             admitted_any = true;
         }
@@ -726,7 +928,7 @@ impl Cluster {
     /// Explicitly shed request `idx`: failed *with a recorded reason*.
     /// The chaos tier's no-silent-loss invariant keys off `shed`.
     fn shed(&mut self, idx: usize, why: ShedReason) {
-        let rec = &mut self.records[idx];
+        let rec = &mut self.slot_mut(idx).rec;
         if matches!(rec.state, RequestState::Finished | RequestState::Failed) {
             return;
         }
@@ -745,8 +947,11 @@ impl Cluster {
     /// frees both endpoints.
     fn on_transfer_timeout(&mut self, t: Transfer) {
         let idx = t.req.0 as usize;
+        // The fabric's reference on this slot dies with the timed-out
+        // queue entry (a scheduled retry takes a fresh one below).
+        self.slot_mut(idx).refs -= 1;
         if matches!(
-            self.records[idx].state,
+            self.slot(idx).rec.state,
             RequestState::Finished | RequestState::Failed
         ) {
             return;
@@ -756,10 +961,14 @@ impl Cluster {
             return;
         };
         let (from, to, kv) = (t.from.0, t.to.0, t.kv_tokens);
-        self.transfer_attempts[idx] = self.transfer_attempts[idx].saturating_add(1);
-        let attempt = self.transfer_attempts[idx];
+        let (attempt, gen) = {
+            let slot = self.slot_mut(idx);
+            slot.transfer_attempts = slot.transfer_attempts.saturating_add(1);
+            (slot.transfer_attempts, slot.transfer_gen)
+        };
         if attempt <= policy.max_retries {
             let delay = policy.backoff_delay(t.req.0, attempt);
+            self.slot_mut(idx).refs += 1;
             self.push(
                 self.now + delay,
                 EventKind::TransferRetry {
@@ -767,7 +976,7 @@ impl Cluster {
                     from,
                     to,
                     kv,
-                    gen: self.transfer_gen[idx],
+                    gen,
                 },
             );
             return;
@@ -775,7 +984,7 @@ impl Cluster {
         // Retries exhausted: free the target's reservation (if that
         // endpoint still exists as admitted) — both escalation rungs
         // abandon this route.
-        let (src_epoch, dst_epoch) = self.fetch_epoch[idx];
+        let (src_epoch, dst_epoch) = self.slot(idx).fetch_epoch;
         let to_ok =
             self.instances[to].life.in_cluster() && dst_epoch == self.epochs[to];
         if to_ok {
@@ -809,13 +1018,18 @@ impl Cluster {
     /// clock; otherwise fall back to the same recovery moves a stale
     /// `TransferDone` would make.
     fn on_transfer_retry(&mut self, idx: usize, from: usize, to: usize, kv: u32, gen: u32) {
-        if gen != self.transfer_gen[idx]
-            || self.records[idx].state != RequestState::Migrating
-            || self.records[idx].decode_instance != Some(InstanceId(to))
+        // The retry event's reference on this slot is consumed here.
+        self.slot_mut(idx).refs -= 1;
         {
-            return; // superseded: re-placed, restarted, finished, or shed
+            let slot = self.slot(idx);
+            if gen != slot.transfer_gen
+                || slot.rec.state != RequestState::Migrating
+                || slot.rec.decode_instance != Some(InstanceId(to))
+            {
+                return; // superseded: re-placed, restarted, finished, or shed
+            }
         }
-        let (src_epoch, dst_epoch) = self.fetch_epoch[idx];
+        let (src_epoch, dst_epoch) = self.slot(idx).fetch_epoch;
         let from_ok =
             self.instances[from].life.in_cluster() && src_epoch == self.epochs[from];
         let to_ok = self.instances[to].life.in_cluster() && dst_epoch == self.epochs[to];
@@ -834,12 +1048,15 @@ impl Cluster {
             self.replace_decode(idx, from);
             return;
         }
+        let rid = self.slot(idx).req.id;
+        self.slot_mut(idx).refs += 1;
+        let now = self.now;
         self.fabric.request(Transfer {
-            req: self.requests[idx].id,
+            req: rid,
             from: InstanceId(from),
             to: InstanceId(to),
             kv_tokens: kv,
-            requested_at: self.now,
+            requested_at: now,
         });
         self.poll_fabric();
     }
@@ -923,12 +1140,14 @@ impl Cluster {
     }
 
     fn on_transfer_done(&mut self, idx: usize, from: usize, to: usize, kv: u32) {
+        // The TransferDone event's reference on this slot is consumed.
+        self.slot_mut(idx).refs -= 1;
         self.fabric.complete(kv);
         // Both endpoints must have lived through the whole copy: a
         // failure wipes parked KV and reservations, and a rejoined slot
         // is a *fresh* instance that never held this transfer's state —
         // liveness alone can't tell, the admission-time epochs can.
-        let (src_epoch, dst_epoch) = self.fetch_epoch[idx];
+        let (src_epoch, dst_epoch) = self.slot(idx).fetch_epoch;
         let from_ok =
             self.instances[from].life.in_cluster() && src_epoch == self.epochs[from];
         let to_ok = self.instances[to].life.in_cluster() && dst_epoch == self.epochs[to];
@@ -953,7 +1172,7 @@ impl Cluster {
             self.poll_fabric();
             return;
         }
-        let req = self.requests[idx];
+        let req = self.slot(idx).req;
         // Source frees its parked copy.
         self.instances[from].migration_out_done(kv);
         // Target's reservation was made at fetch admission; release the
@@ -963,7 +1182,7 @@ impl Cluster {
         debug_assert!(ok, "reservation accounting broken");
         self.instances[to].enqueue_decode(req.id, kv, req.output_len - 1);
         self.touch();
-        self.records[idx].state = RequestState::DecodeQueued;
+        self.slot_mut(idx).rec.state = RequestState::DecodeQueued;
         // Source memory freed: it can admit fetches/prefill again.
         self.start_fetches(from);
         self.kick(from);
@@ -1116,19 +1335,24 @@ impl Cluster {
     /// was lost with a failed instance). Token bookkeeping resets so a
     /// finished record still holds exactly `output_len` token times.
     fn restart_request(&mut self, idx: usize) {
-        let rec = &mut self.records[idx];
-        if matches!(rec.state, RequestState::Finished | RequestState::Failed) {
-            return;
+        {
+            let slot = self.slot_mut(idx);
+            if matches!(
+                slot.rec.state,
+                RequestState::Finished | RequestState::Failed
+            ) {
+                return;
+            }
+            slot.rec.reset_tokens();
+            slot.rec.prefill_instance = None;
+            slot.rec.decode_instance = None;
+            slot.rec.state = RequestState::PrefillQueued;
+            // Any in-flight transfer retry for the old life is now stale,
+            // and the fresh life starts its escalation ladder from the
+            // bottom.
+            slot.transfer_gen = slot.transfer_gen.wrapping_add(1);
+            slot.transfer_attempts = 0;
         }
-        rec.first_token = None;
-        rec.token_times.clear();
-        rec.prefill_instance = None;
-        rec.decode_instance = None;
-        rec.state = RequestState::PrefillQueued;
-        // Any in-flight transfer retry for the old life is now stale, and
-        // the fresh life starts its escalation ladder from the bottom.
-        self.transfer_gen[idx] = self.transfer_gen[idx].wrapping_add(1);
-        self.transfer_attempts[idx] = 0;
         self.on_arrival(idx);
     }
 
@@ -1142,23 +1366,26 @@ impl Cluster {
             return;
         }
         // The old route (and any retry scheduled against it) is dead.
-        self.transfer_gen[idx] = self.transfer_gen[idx].wrapping_add(1);
-        let req = self.requests[idx];
+        let req = {
+            let slot = self.slot_mut(idx);
+            slot.transfer_gen = slot.transfer_gen.wrapping_add(1);
+            slot.req
+        };
         let target = self.policy.place_decode(
             self.now,
             &req,
             InstanceId(from),
             &Epoched(SimView(&self.instances), self.clock),
         );
-        self.records[idx].decode_instance = Some(target);
+        self.slot_mut(idx).rec.decode_instance = Some(target);
         if target.0 == from {
             // The KV is parked right here — local adoption.
             self.instances[from].adopt_local_decode(req.id, req.input_len, req.output_len - 1);
             self.touch();
-            self.records[idx].state = RequestState::DecodeQueued;
+            self.slot_mut(idx).rec.state = RequestState::DecodeQueued;
             self.kick(from);
         } else {
-            self.records[idx].state = RequestState::Migrating;
+            self.slot_mut(idx).rec.state = RequestState::Migrating;
             self.fetch_wait[target.0].push_back((idx, from));
             self.start_fetches(target.0);
         }
@@ -1197,7 +1424,10 @@ impl Cluster {
             self.kick(i);
             self.maybe_finish_drain(i);
         }
-        if self.done < self.records.len() {
+        // Re-arm while any admitted request is unfinished *or* more
+        // arrivals are still due — the streaming equivalent of the old
+        // `done < records.len()` (un-arrived requests can't be done).
+        if self.done < self.arrived || !self.exhausted || self.pending.is_some() {
             self.push(self.now + self.cfg.monitor_period, EventKind::MonitorTick);
         }
     }

@@ -9,7 +9,10 @@
 
 pub mod catalog;
 pub mod io;
+pub mod stream;
 pub mod synthetic;
+
+pub use stream::{ArrivalSource, SyntheticSource, TraceSource};
 
 use crate::request::Request;
 

@@ -1,0 +1,278 @@
+//! Streaming arrival sources (PR 7): the event loop's calendar cursor
+//! consumes arrivals one at a time, so a sweep never materializes a
+//! `Vec<Request>` for the whole trace.
+//!
+//! Contract: a source yields requests in **nondecreasing arrival order**
+//! (ties in generation order), exactly the order of the corresponding
+//! materialized `Trace`'s sorted `requests` vector. Request *ids* carried
+//! by a source are advisory — the simulator re-normalizes ids to the
+//! arrival index, which is what makes a [`SyntheticSource`] run
+//! byte-identical to running the materialized `WorkloadSpec::generate`
+//! trace (pinned by `tests/streaming.rs`).
+
+use super::synthetic::WorkloadSpec;
+use super::Trace;
+use crate::request::Request;
+use crate::util::rng::Rng;
+
+/// A lazily-consumed stream of trace arrivals.
+pub trait ArrivalSource {
+    /// The next request, in nondecreasing arrival order; `None` once the
+    /// source is exhausted (it stays exhausted — fused).
+    fn next_request(&mut self) -> Option<Request>;
+
+    /// How many requests this source will yield in total, if cheaply
+    /// known (used only for capacity hints, never for control flow).
+    fn len_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Cursor over a materialized trace's (already sorted) request slice —
+/// the bridge that lets every existing `Trace` run through the streaming
+/// entry point, and the equivalence oracle's view of the same data.
+pub struct TraceSource<'a> {
+    requests: &'a [Request],
+    pos: usize,
+}
+
+impl<'a> TraceSource<'a> {
+    pub fn new(trace: &'a Trace) -> Self {
+        TraceSource {
+            requests: &trace.requests,
+            pos: 0,
+        }
+    }
+
+    /// Stream an arbitrary arrival-sorted slice.
+    pub fn from_slice(requests: &'a [Request]) -> Self {
+        TraceSource { requests, pos: 0 }
+    }
+}
+
+impl ArrivalSource for TraceSource<'_> {
+    fn next_request(&mut self) -> Option<Request> {
+        let r = self.requests.get(self.pos).copied();
+        self.pos += r.is_some() as usize;
+        r
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.requests.len())
+    }
+}
+
+/// Lazy synthetic generator: identical RNG consumption to
+/// `WorkloadSpec::generate`, but holding only the per-minute weight table
+/// (O(duration_min)) and one minute's batch (O(arrivals/minute)) instead
+/// of the full trace.
+pub struct SyntheticSource {
+    spec: WorkloadSpec,
+    rng: Rng,
+    weights: Vec<f64>,
+    total_w: f64,
+    minute: usize,
+    batch: Vec<Request>,
+    pos: usize,
+    next_id: u64,
+}
+
+impl SyntheticSource {
+    pub fn new(spec: &WorkloadSpec, seed: u64) -> Self {
+        let (rng, weights, total_w) = spec.arrival_setup(seed);
+        SyntheticSource {
+            spec: spec.clone(),
+            rng,
+            weights,
+            total_w,
+            minute: 0,
+            batch: Vec::new(),
+            pos: 0,
+            next_id: 0,
+        }
+    }
+}
+
+impl ArrivalSource for SyntheticSource {
+    fn next_request(&mut self) -> Option<Request> {
+        loop {
+            if self.pos < self.batch.len() {
+                let r = self.batch[self.pos];
+                self.pos += 1;
+                return Some(r);
+            }
+            if self.minute >= self.weights.len() {
+                return None;
+            }
+            let minute = self.minute;
+            self.minute += 1;
+            let lam = self.spec.n_requests as f64 * self.weights[minute] / self.total_w;
+            self.spec
+                .minute_batch(&mut self.rng, minute, lam, &mut self.next_id, &mut self.batch);
+            self.pos = 0;
+        }
+    }
+}
+
+/// Timestamp rescale — the streaming twin of `Trace::with_rate`, which
+/// multiplies every arrival by `k = current_rate / target_rate`. Same
+/// arithmetic (`arrival * k`), so the streamed request is bit-identical
+/// to the rescaled trace's. Monotone for `k > 0`, so order is preserved.
+pub struct Scaled<S> {
+    inner: S,
+    k: f64,
+}
+
+impl<S: ArrivalSource> Scaled<S> {
+    pub fn new(inner: S, k: f64) -> Self {
+        assert!(k > 0.0 && k.is_finite(), "bad time-scale factor {k}");
+        Scaled { inner, k }
+    }
+}
+
+impl<S: ArrivalSource> ArrivalSource for Scaled<S> {
+    fn next_request(&mut self) -> Option<Request> {
+        self.inner.next_request().map(|r| Request {
+            arrival: r.arrival * self.k,
+            ..r
+        })
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.inner.len_hint()
+    }
+}
+
+/// Prefix clip — the streaming twin of `Trace::clip_seconds(secs)`, which
+/// keeps requests with `arrival <= secs`. On an arrival-sorted stream
+/// that is a prefix, so the clip stops (and fuses) at the first arrival
+/// past the cutoff. NaN arrivals compare `false` here and sort last in
+/// the materialized path — both drop them.
+pub struct Clipped<S> {
+    inner: S,
+    secs: f64,
+    done: bool,
+}
+
+impl<S: ArrivalSource> Clipped<S> {
+    pub fn new(inner: S, secs: f64) -> Self {
+        Clipped {
+            inner,
+            secs,
+            done: false,
+        }
+    }
+}
+
+impl<S: ArrivalSource> ArrivalSource for Clipped<S> {
+    fn next_request(&mut self) -> Option<Request> {
+        if self.done {
+            return None;
+        }
+        match self.inner.next_request() {
+            Some(r) if r.arrival <= self.secs => Some(r),
+            _ => {
+                self.done = true;
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synthetic;
+
+    fn drain(mut s: impl ArrivalSource) -> Vec<Request> {
+        let mut v = Vec::new();
+        while let Some(r) = s.next_request() {
+            v.push(r);
+        }
+        v
+    }
+
+    /// The core PR 7 generator equivalence: lazy emission matches the
+    /// materialized trace bit-for-bit — arrivals, lengths, ids, order —
+    /// for every catalog workload.
+    #[test]
+    fn synthetic_source_matches_generate_exactly() {
+        for spec in [
+            synthetic::azure_code(),
+            synthetic::azure_conversation(),
+            synthetic::burstgpt(),
+            synthetic::mooncake_conversation(),
+            synthetic::smoke(500, 5),
+        ] {
+            for seed in [1u64, 42] {
+                let trace = spec.generate(seed);
+                let streamed = drain(SyntheticSource::new(&spec, seed));
+                assert_eq!(
+                    trace.requests.len(),
+                    streamed.len(),
+                    "{} seed {seed}",
+                    spec.name
+                );
+                for (i, (a, b)) in trace.requests.iter().zip(&streamed).enumerate() {
+                    assert_eq!(a.arrival.to_bits(), b.arrival.to_bits(), "req {i}");
+                    assert_eq!((a.id, a.input_len, a.output_len), (b.id, b.input_len, b.output_len));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_source_is_fused_and_sorted() {
+        let spec = synthetic::smoke(300, 4);
+        let mut src = SyntheticSource::new(&spec, 9);
+        let mut prev = f64::NEG_INFINITY;
+        let mut n = 0usize;
+        while let Some(r) = src.next_request() {
+            assert!(r.arrival >= prev, "unsorted stream");
+            prev = r.arrival;
+            n += 1;
+        }
+        assert!(n > 0);
+        assert!(src.next_request().is_none(), "fused after exhaustion");
+        assert!(src.next_request().is_none());
+    }
+
+    #[test]
+    fn scaled_matches_with_rate() {
+        let trace = synthetic::smoke(200, 3).generate(5);
+        let target = trace.rate() * 2.5;
+        let rescaled = trace.with_rate(target);
+        let k = trace.rate() / target;
+        let streamed = drain(Scaled::new(TraceSource::new(&trace), k));
+        assert_eq!(streamed.len(), rescaled.requests.len());
+        for (a, b) in rescaled.requests.iter().zip(&streamed) {
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+        }
+    }
+
+    #[test]
+    fn clipped_matches_clip_seconds() {
+        let trace = synthetic::smoke(200, 5).generate(6);
+        let cut = 0.6 * trace.duration();
+        let clipped = trace.clip_seconds(cut);
+        let streamed = drain(Clipped::new(TraceSource::new(&trace), cut));
+        assert_eq!(streamed.len(), clipped.requests.len());
+        for (a, b) in clipped.requests.iter().zip(&streamed) {
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+        }
+        // Clip boundary is inclusive, like the materialized filter.
+        let boundary = Trace::new(
+            "b",
+            vec![Request::new(0, 1.0, 4, 4), Request::new(1, 2.0, 4, 4)],
+        );
+        let kept = drain(Clipped::new(TraceSource::new(&boundary), 1.0));
+        assert_eq!(kept.len(), 1);
+    }
+
+    #[test]
+    fn trace_source_len_hint() {
+        let trace = synthetic::smoke(50, 2).generate(3);
+        let src = TraceSource::new(&trace);
+        assert_eq!(src.len_hint(), Some(trace.len()));
+    }
+}

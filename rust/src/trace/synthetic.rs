@@ -53,9 +53,31 @@ pub struct WorkloadSpec {
 
 impl WorkloadSpec {
     /// Deterministically generate the trace for a seed.
+    ///
+    /// Built from the same [`WorkloadSpec::arrival_setup`] /
+    /// [`WorkloadSpec::minute_batch`] phases the streaming
+    /// `trace::stream::SyntheticSource` consumes lazily, so both paths
+    /// draw from the RNG identically and yield the same requests in the
+    /// same order (PR 7 equivalence tests pin this bit-for-bit).
     pub fn generate(&self, seed: u64) -> Trace {
+        let (mut rng, weights, total_w) = self.arrival_setup(seed);
+        let mut requests = Vec::with_capacity(self.n_requests + 64);
+        let mut id = 0u64;
+        let mut batch = Vec::new();
+        for (minute, w) in weights.iter().enumerate() {
+            let lam = self.n_requests as f64 * w / total_w;
+            self.minute_batch(&mut rng, minute, lam, &mut id, &mut batch);
+            requests.extend_from_slice(&batch);
+        }
+        Trace::new(self.name, requests)
+    }
+
+    /// Phase 1 of generation: the seeded RNG plus the per-minute
+    /// intensity weights and their sum. O(duration_min) memory — the one
+    /// part of the arrival process that cannot stream, because every
+    /// minute's Poisson mean is normalized by the total weight.
+    pub(crate) fn arrival_setup(&self, seed: u64) -> (Rng, Vec<f64>, f64) {
         let mut rng = Rng::new(seed ^ fxhash(self.name));
-        // 1. Per-minute intensities (relative weights).
         let mut log_i = 0.0f64;
         let mut weights = Vec::with_capacity(self.duration_min);
         for _ in 0..self.duration_min {
@@ -68,21 +90,32 @@ impl WorkloadSpec {
             weights.push(w);
         }
         let total_w: f64 = weights.iter().sum();
+        (rng, weights, total_w)
+    }
 
-        // 2. Poisson counts per minute, expectation proportional to weight.
-        let mut requests = Vec::with_capacity(self.n_requests + 64);
-        let mut id = 0u64;
-        for (minute, w) in weights.iter().enumerate() {
-            let lam = self.n_requests as f64 * w / total_w;
-            let count = poisson(&mut rng, lam);
-            for _ in 0..count {
-                let arrival = (minute as f64 + rng.f64()) * 60.0;
-                let (inp, out) = self.sample_lengths(&mut rng);
-                requests.push(Request::new(id, arrival, inp, out));
-                id += 1;
-            }
+    /// Phase 2, one minute at a time: Poisson count, then per-request
+    /// arrival + lengths, then a *stable* in-batch sort by arrival.
+    /// A minute-`m` arrival is `(m + f) * 60` with `f in [0, 1)`, so it
+    /// never exceeds `60 * (m + 1)` — stably-sorted batches concatenate
+    /// to exactly the globally stable-sorted trace `Trace::new` builds
+    /// (boundary ties keep generation order either way).
+    pub(crate) fn minute_batch(
+        &self,
+        rng: &mut Rng,
+        minute: usize,
+        lam: f64,
+        id: &mut u64,
+        out: &mut Vec<Request>,
+    ) {
+        out.clear();
+        let count = poisson(rng, lam);
+        for _ in 0..count {
+            let arrival = (minute as f64 + rng.f64()) * 60.0;
+            let (inp, outl) = self.sample_lengths(rng);
+            out.push(Request::new(*id, arrival, inp, outl));
+            *id += 1;
         }
-        Trace::new(self.name, requests)
+        out.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
     }
 
     /// Correlated lognormal input/output lengths.

@@ -5,6 +5,7 @@
 
 pub mod benchkit;
 pub mod prop;
+pub mod quantile;
 pub mod rng;
 pub mod stats;
 pub mod threads;

@@ -1,0 +1,540 @@
+//! Online quantile estimators for the streaming sweep path (PR 7).
+//!
+//! Two sketches back `metrics::StreamingSlo`:
+//!
+//! * [`P2Quantile`] — the P² algorithm (Jain & Chlamtac, CACM 1985): five
+//!   markers per tracked percentile, O(1) memory, no merge support. Exact
+//!   (bit-identical to [`percentile_sorted`]) below five samples, an
+//!   estimator above.
+//! * [`BucketQuantile`] — log-spaced fixed buckets with an exact,
+//!   associative merge (counts add), for the sharded `parallel_map` path.
+//!   Bounded *relative* error: a representative value is within a factor
+//!   of `ratio()` of every sample in its bucket.
+//!
+//! Both follow the repo-wide NaN convention (`util/stats.rs`): NaN samples
+//! rank last under `total_cmp`, so an estimate whose rank falls inside the
+//! NaN tail is NaN and lower ranks stay meaningful. The sorted path
+//! ([`percentile_sorted`]) remains the oracle everywhere; these are
+//! estimators with tolerance-banded agreement tests.
+
+use crate::util::stats::percentile_sorted;
+
+/// Shared NaN-tail rank logic: with `finite` non-NaN samples and `nan`
+/// NaN samples, the sorted oracle places NaNs last; percentile `p` of the
+/// combined set is NaN exactly when the interpolation touches index
+/// `>= finite`, i.e. when the (fractional) rank exceeds `finite - 1`.
+/// Returns the rank among the finite prefix, or None when poisoned.
+fn finite_rank(p: f64, finite: u64, nan: u64) -> Option<f64> {
+    let total = finite + nan;
+    if total == 0 || finite == 0 {
+        return None;
+    }
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (total - 1) as f64;
+    if nan > 0 && rank > (finite - 1) as f64 {
+        return None;
+    }
+    Some(rank.min((finite - 1) as f64))
+}
+
+/// P² single-quantile estimator: five markers whose heights approximate
+/// the min, p/2, p, (100+p)/2 and max percentiles. Constant memory, one
+/// comparison pass per sample. Does **not** merge — use
+/// [`BucketQuantile`] for sharded aggregation.
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    /// Target percentile in [0, 100].
+    p: f64,
+    /// Marker heights h_0..h_4.
+    h: [f64; 5],
+    /// Actual marker positions (1-based ranks).
+    pos: [f64; 5],
+    /// Desired marker positions.
+    want: [f64; 5],
+    /// Per-sample desired-position increments.
+    dpos: [f64; 5],
+    /// Exact buffer for the first five finite samples (sorted).
+    small: Vec<f64>,
+    /// Finite samples observed.
+    n: u64,
+    /// NaN samples observed (tracked for the sort-last convention).
+    nan: u64,
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> Self {
+        assert!((0.0..=100.0).contains(&p), "percentile out of range: {p}");
+        let q = p / 100.0;
+        P2Quantile {
+            p,
+            h: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            want: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            dpos: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            small: Vec::with_capacity(5),
+            n: 0,
+            nan: 0,
+        }
+    }
+
+    /// Finite samples observed so far.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// NaN samples observed so far.
+    pub fn nan_count(&self) -> u64 {
+        self.nan
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x.is_nan() {
+            self.nan += 1;
+            return;
+        }
+        self.n += 1;
+        if self.n <= 5 {
+            self.small.push(x);
+            self.small.sort_by(|a, b| a.total_cmp(b));
+            if self.n == 5 {
+                for (i, &v) in self.small.iter().enumerate() {
+                    self.h[i] = v;
+                }
+            }
+            return;
+        }
+        // Locate the cell k with h[k] <= x < h[k+1], extending the
+        // extreme markers when x falls outside them.
+        let k = if x < self.h[0] {
+            self.h[0] = x;
+            0
+        } else if x >= self.h[4] {
+            self.h[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            while k < 3 && x >= self.h[k + 1] {
+                k += 1;
+            }
+            k
+        };
+        for i in (k + 1)..5 {
+            self.pos[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.want[i] += self.dpos[i];
+        }
+        // Nudge the interior markers toward their desired positions.
+        for i in 1..4 {
+            let d = self.want[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let s = if d >= 1.0 { 1.0 } else { -1.0 };
+                let hp = self.parabolic(i, s);
+                self.h[i] = if self.h[i - 1] < hp && hp < self.h[i + 1] {
+                    hp
+                } else {
+                    self.linear(i, s)
+                };
+                self.pos[i] += s;
+            }
+        }
+    }
+
+    /// Piecewise-parabolic (P²) height update for interior marker `i`.
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let (h, p) = (&self.h, &self.pos);
+        h[i]
+            + s / (p[i + 1] - p[i - 1])
+                * ((p[i] - p[i - 1] + s) * (h[i + 1] - h[i]) / (p[i + 1] - p[i])
+                    + (p[i + 1] - p[i] - s) * (h[i] - h[i - 1]) / (p[i] - p[i - 1]))
+    }
+
+    /// Linear fallback when the parabolic prediction leaves the bracket.
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = if s > 0.0 { i + 1 } else { i - 1 };
+        self.h[i] + s * (self.h[j] - self.h[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate of the tracked percentile. Exact (bit-identical
+    /// to the sorted oracle) below five finite samples; NaN when the
+    /// combined-set rank lands in the NaN tail or nothing was observed.
+    pub fn estimate(&self) -> f64 {
+        match finite_rank(self.p, self.n, self.nan) {
+            None => f64::NAN,
+            Some(_) if self.n <= 5 => percentile_sorted(&self.small, self.p),
+            Some(_) => self.h[2],
+        }
+    }
+}
+
+/// Log-spaced histogram sketch over `(0, +inf)` with underflow/overflow
+/// bins. Merge is exact and associative (bucket counts add), so sharded
+/// sweeps can fold per-shard sketches in any grouping and get
+/// bit-identical estimates.
+#[derive(Debug, Clone)]
+pub struct BucketQuantile {
+    lo: f64,
+    hi: f64,
+    ratio: f64,
+    /// `[underflow, bucket_0 .. bucket_{nb-1}, overflow]`.
+    counts: Vec<u64>,
+    n: u64,
+    nan: u64,
+    min_seen: f64,
+    max_seen: f64,
+}
+
+impl BucketQuantile {
+    /// `nb` log-spaced buckets covering `[lo, hi)`; values below `lo`
+    /// (including zero and negatives) land in the underflow bin, values
+    /// `>= hi` in the overflow bin.
+    pub fn new(lo: f64, hi: f64, nb: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && nb > 0, "bad bucket config");
+        BucketQuantile {
+            lo,
+            hi,
+            ratio: (hi / lo).powf(1.0 / nb as f64),
+            counts: vec![0; nb + 2],
+            n: 0,
+            nan: 0,
+            min_seen: f64::INFINITY,
+            max_seen: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Default latency sketch: 0.1 ms .. 10 000 s in 512 buckets, i.e.
+    /// a per-bucket width ratio of ~1.037 (≈ 1.8% representative error).
+    pub fn latency_default() -> Self {
+        BucketQuantile::new(1e-4, 1e4, 512)
+    }
+
+    /// Per-bucket edge ratio — a representative is within this factor of
+    /// every in-range sample sharing its bucket.
+    pub fn ratio(&self) -> f64 {
+        self.ratio
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn nan_count(&self) -> u64 {
+        self.nan
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x.is_nan() {
+            self.nan += 1;
+            return;
+        }
+        self.n += 1;
+        self.min_seen = self.min_seen.min(x);
+        self.max_seen = self.max_seen.max(x);
+        let nb = self.counts.len() - 2;
+        let idx = if x < self.lo {
+            0
+        } else if x >= self.hi {
+            nb + 1
+        } else {
+            // floor(log_ratio(x / lo)), clamped against FP edge rounding.
+            let b = ((x / self.lo).ln() / self.ratio.ln()).floor() as usize;
+            1 + b.min(nb - 1)
+        };
+        self.counts[idx] += 1;
+    }
+
+    /// Exact merge: same-config sketches add counts. Associative and
+    /// commutative, so any shard fold order yields bit-identical state.
+    pub fn merge(&mut self, other: &BucketQuantile) {
+        assert!(
+            self.lo == other.lo && self.hi == other.hi && self.counts.len() == other.counts.len(),
+            "merging differently-configured bucket sketches"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.nan += other.nan;
+        self.min_seen = self.min_seen.min(other.min_seen);
+        self.max_seen = self.max_seen.max(other.max_seen);
+    }
+
+    /// Percentile estimate: the representative value (geometric bucket
+    /// midpoint, clamped to the observed range) of the bucket holding the
+    /// rounded oracle rank. NaN under the same tail convention as
+    /// [`P2Quantile::estimate`].
+    pub fn estimate(&self, p: f64) -> f64 {
+        let rank = match finite_rank(p, self.n, self.nan) {
+            None => return f64::NAN,
+            Some(r) => r,
+        };
+        let k = (rank.round() as u64).min(self.n - 1);
+        let mut cum = 0u64;
+        let nb = self.counts.len() - 2;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > k {
+                let rep = if idx == 0 {
+                    self.min_seen
+                } else if idx == nb + 1 {
+                    self.max_seen
+                } else {
+                    let edge = self.lo * self.ratio.powi(idx as i32 - 1);
+                    edge * self.ratio.sqrt()
+                };
+                return rep.clamp(self.min_seen, self.max_seen);
+            }
+        }
+        // Unreachable: k < n and the counts sum to n.
+        f64::NAN
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::percentile;
+
+    /// Rank-band oracle check: the estimate must fall inside the value
+    /// band spanned by percentiles `p - band .. p + band` of the sorted
+    /// data, widened by `rel` relative slack on each side.
+    fn assert_in_rank_band(est: f64, sorted: &[f64], p: f64, band: f64, rel: f64) {
+        let lo = percentile_sorted(sorted, (p - band).max(0.0));
+        let hi = percentile_sorted(sorted, (p + band).min(100.0));
+        let (lo, hi) = (lo - rel * lo.abs() - 1e-12, hi + rel * hi.abs() + 1e-12);
+        assert!(
+            est >= lo && est <= hi,
+            "p{p}: estimate {est} outside band [{lo}, {hi}]"
+        );
+    }
+
+    fn sorted(xs: &[f64]) -> Vec<f64> {
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.total_cmp(b));
+        v
+    }
+
+    #[test]
+    fn p2_small_n_is_exact() {
+        for n in 1..=5usize {
+            let mut r = Rng::new(7 + n as u64);
+            let xs: Vec<f64> = (0..n).map(|_| r.normal() * 3.0).collect();
+            for p in [0.0, 50.0, 90.0, 99.0, 100.0] {
+                let mut q = P2Quantile::new(p);
+                for &x in &xs {
+                    q.push(x);
+                }
+                assert_eq!(
+                    q.estimate().to_bits(),
+                    percentile(&xs, p).to_bits(),
+                    "n={n} p={p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn p2_uniform_within_band() {
+        let mut r = Rng::new(11);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.f64()).collect();
+        let s = sorted(&xs);
+        for p in [50.0, 90.0, 99.0] {
+            let mut q = P2Quantile::new(p);
+            for &x in &xs {
+                q.push(x);
+            }
+            assert_in_rank_band(q.estimate(), &s, p, 1.0, 0.01);
+        }
+    }
+
+    #[test]
+    fn p2_lognormal_skew_within_band() {
+        // Heavy right tail — the adversarial case for marker estimators.
+        let mut r = Rng::new(12);
+        let xs: Vec<f64> = (0..50_000).map(|_| (1.5 * r.normal()).exp()).collect();
+        let s = sorted(&xs);
+        for p in [50.0, 90.0, 99.0] {
+            let mut q = P2Quantile::new(p);
+            for &x in &xs {
+                q.push(x);
+            }
+            assert_in_rank_band(q.estimate(), &s, p, 1.5, 0.05);
+        }
+    }
+
+    #[test]
+    fn p2_heavy_ties_converges_to_mode() {
+        // 90% of the mass at one value: p50 and p90 sit deep inside the
+        // tie block, so the estimate must land (almost) exactly on it.
+        let mut r = Rng::new(13);
+        let xs: Vec<f64> = (0..30_000)
+            .map(|_| {
+                if r.f64() < 0.9 {
+                    5.0
+                } else if r.bool(0.5) {
+                    r.f64()
+                } else {
+                    10.0 + r.f64()
+                }
+            })
+            .collect();
+        for p in [50.0, 90.0] {
+            let mut q = P2Quantile::new(p);
+            for &x in &xs {
+                q.push(x);
+            }
+            let est = q.estimate();
+            assert!((est - 5.0).abs() < 0.1, "p{p}: {est} should be ~5.0");
+        }
+    }
+
+    #[test]
+    fn p2_nan_poisoned_matches_tail_convention() {
+        // 30% NaN: the oracle (NaN sorts last) keeps p50 meaningful and
+        // poisons p99. The sketch must agree on which is which.
+        let mut r = Rng::new(14);
+        let xs: Vec<f64> = (0..20_000)
+            .map(|_| if r.f64() < 0.3 { f64::NAN } else { r.f64() })
+            .collect();
+        let s = sorted(&xs);
+        let mut q50 = P2Quantile::new(50.0);
+        let mut q99 = P2Quantile::new(99.0);
+        for &x in &xs {
+            q50.push(x);
+            q99.push(x);
+        }
+        assert!(percentile_sorted(&s, 99.0).is_nan(), "oracle p99 poisoned");
+        assert!(q99.estimate().is_nan(), "sketch p99 must be poisoned too");
+        let est = q50.estimate();
+        assert!(est.is_finite(), "p50 stays meaningful: {est}");
+        // Oracle p50 of the combined set ranks within the finite prefix;
+        // the sketch estimates the finite-sample percentile, so compare
+        // against a generous rank band of the finite values.
+        let finite = sorted(&xs.iter().copied().filter(|x| !x.is_nan()).collect::<Vec<_>>());
+        assert_in_rank_band(est, &finite, 50.0, 3.0, 0.05);
+        // All-NaN input: NaN estimate, never a panic.
+        let mut q = P2Quantile::new(50.0);
+        for _ in 0..10 {
+            q.push(f64::NAN);
+        }
+        assert!(q.estimate().is_nan());
+        assert_eq!(q.nan_count(), 10);
+    }
+
+    #[test]
+    fn bucket_relative_error_bounded() {
+        let mut r = Rng::new(21);
+        let xs: Vec<f64> = (0..50_000).map(|_| (1.2 * r.normal() - 1.0).exp()).collect();
+        let s = sorted(&xs);
+        let q = {
+            let mut q = BucketQuantile::latency_default();
+            for &x in &xs {
+                q.push(x);
+            }
+            q
+        };
+        for p in [50.0, 90.0, 99.0] {
+            let est = q.estimate(p);
+            let oracle = percentile_sorted(&s, p);
+            // Representative shares a bucket with the oracle rank (up to
+            // the 0.5-rank rounding), so it is within one bucket factor.
+            let f = q.ratio() * 1.001;
+            assert!(
+                est >= oracle / f && est <= oracle * f,
+                "p{p}: {est} vs oracle {oracle} (factor {f})"
+            );
+        }
+    }
+
+    #[test]
+    fn bucket_ties_and_tiny_n_exact() {
+        // All samples identical: min==max, so the clamp makes the
+        // representative exact regardless of bucket edges.
+        let mut q = BucketQuantile::latency_default();
+        for _ in 0..1000 {
+            q.push(0.25);
+        }
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(q.estimate(p).to_bits(), 0.25f64.to_bits(), "p{p}");
+        }
+        // Single sample.
+        let mut q1 = BucketQuantile::latency_default();
+        q1.push(3.0);
+        assert_eq!(q1.estimate(50.0).to_bits(), 3.0f64.to_bits());
+        // Empty sketch.
+        assert!(BucketQuantile::latency_default().estimate(50.0).is_nan());
+        // Underflow/overflow land on the observed extremes.
+        let mut q2 = BucketQuantile::new(1.0, 10.0, 4);
+        q2.push(1e-9);
+        q2.push(1e9);
+        assert_eq!(q2.estimate(0.0), 1e-9);
+        assert_eq!(q2.estimate(100.0), 1e9);
+    }
+
+    #[test]
+    fn bucket_nan_tail_convention() {
+        let mut q = BucketQuantile::latency_default();
+        for _ in 0..70 {
+            q.push(1.0);
+        }
+        for _ in 0..30 {
+            q.push(f64::NAN);
+        }
+        assert!(q.estimate(50.0).is_finite());
+        assert!(q.estimate(99.0).is_nan(), "rank in the NaN tail");
+    }
+
+    #[test]
+    fn bucket_merge_is_associative_and_order_free() {
+        // Three shards, folded in both groupings and compared against a
+        // single-pass sketch over the concatenation: every counter and
+        // every estimate must be bit-identical — this is what makes the
+        // sharded `parallel_map` reduction deterministic.
+        let mut r = Rng::new(31);
+        let shards: Vec<Vec<f64>> = (0..3)
+            .map(|_| {
+                (0..5_000)
+                    .map(|_| {
+                        if r.f64() < 0.02 {
+                            f64::NAN
+                        } else {
+                            (r.normal()).exp()
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let sketch = |xs: &[f64]| {
+            let mut q = BucketQuantile::latency_default();
+            for &x in xs {
+                q.push(x);
+            }
+            q
+        };
+        let (a, b, c) = (sketch(&shards[0]), sketch(&shards[1]), sketch(&shards[2]));
+        // (a + b) + c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a + (b + c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        // single pass
+        let all: Vec<f64> = shards.iter().flatten().copied().collect();
+        let single = sketch(&all);
+        for other in [&right, &single] {
+            assert_eq!(left.counts, other.counts);
+            assert_eq!(left.n, other.n);
+            assert_eq!(left.nan, other.nan);
+            assert_eq!(left.min_seen.to_bits(), other.min_seen.to_bits());
+            assert_eq!(left.max_seen.to_bits(), other.max_seen.to_bits());
+            for p in [50.0, 90.0, 99.0] {
+                assert_eq!(left.estimate(p).to_bits(), other.estimate(p).to_bits());
+            }
+        }
+    }
+}

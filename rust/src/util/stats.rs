@@ -331,8 +331,9 @@ mod tests {
         use crate::request::{Request, RequestRecord};
         let req = Request::new(1, 0.0, 10, 3);
         let mut rec = RequestRecord::new(&req);
-        rec.first_token = Some(1.0);
-        rec.token_times = vec![1.0, f64::NAN, 2.0];
+        rec.push_token(1.0);
+        rec.push_token(f64::NAN);
+        rec.push_token(2.0);
         let _ = rec.max_token_gap(); // must not panic
     }
 

@@ -1,0 +1,253 @@
+//! Streaming sweep path equivalence (PR 7 tentpole acceptance).
+//!
+//! The simulator now has three front doors over one event loop:
+//!
+//! * `run` — calendar-cursor arrivals over a materialized trace,
+//!   retained records (the default);
+//! * `run_reference` — the legacy pre-pushed heap, the PR-1 oracle;
+//! * `run_streamed` — lazy arrivals from an `ArrivalSource`, records
+//!   folded incrementally and handed to a sink, `token_times` never
+//!   retained.
+//!
+//! Contract pinned here: on the same arrivals and seed, all three produce
+//! the *same simulation* — identical event counts, identical per-request
+//! placements and token timing (bit-for-bit where retained, via the
+//! incremental folds where streamed) — for every Table-1 catalog workload
+//! plus the smoke workload, and under chaos (membership changes, fault
+//! plans, transfer retries). The constant-memory `StreamingSlo` sink must
+//! agree with the exact `SloReport::from_records` oracle: exact fields
+//! bit-identical, sketched percentiles inside an explicit band.
+
+use arrow::costmodel::CostModel;
+use arrow::fault::{FaultPlan, TransferRetryPolicy};
+use arrow::metrics::{SloReport, StreamingSlo};
+use arrow::request::RequestRecord;
+use arrow::scenarios::{build, System};
+use arrow::sim::{Cluster, MembershipChange, SimConfig, SimResult};
+use arrow::trace::catalog;
+use arrow::trace::stream::{SyntheticSource, TraceSource};
+use arrow::trace::Trace;
+
+const SEED: u64 = 42;
+
+/// Clip horizon keeping per-workload runtime test-tier sized while still
+/// covering hundreds of requests per trace (azure_conv ~5.4 req/s).
+const CLIP_SECONDS: f64 = 60.0;
+
+fn catalog_traces() -> Vec<(String, Trace, f64, f64)> {
+    let mut out = Vec::new();
+    for name in catalog::names() {
+        let w = catalog::by_name(name).unwrap();
+        let trace = w.generate(SEED).clip_seconds(CLIP_SECONDS);
+        assert!(!trace.is_empty(), "{name} clipped to nothing");
+        out.push((name.to_string(), trace, w.ttft_slo, w.tpot_slo));
+    }
+    out
+}
+
+fn run_streamed_collect(cl: Cluster, trace: &Trace) -> (SimResult, Vec<RequestRecord>) {
+    let mut src = TraceSource::new(trace);
+    let mut recs = Vec::new();
+    let res = cl.run_streamed(&mut src, &mut |r| recs.push(r));
+    (res, recs)
+}
+
+/// The streamed record must be the retained record minus the retained
+/// token-time vector: same identity, same placements, same folded
+/// latency aggregates to the bit.
+fn assert_rec_equivalent(ctx: &str, retained: &RequestRecord, streamed: &RequestRecord) {
+    assert_eq!(retained.id, streamed.id, "{ctx}: id");
+    assert_eq!(retained.state, streamed.state, "{ctx}: state");
+    assert_eq!(retained.shed, streamed.shed, "{ctx}: shed reason");
+    assert_eq!(
+        retained.prefill_instance, streamed.prefill_instance,
+        "{ctx}: prefill placement"
+    );
+    assert_eq!(
+        retained.decode_instance, streamed.decode_instance,
+        "{ctx}: decode placement"
+    );
+    assert_eq!(retained.first_token, streamed.first_token, "{ctx}: first token");
+    assert_eq!(
+        retained.tokens_emitted(),
+        streamed.tokens_emitted(),
+        "{ctx}: token count"
+    );
+    assert_eq!(
+        retained.token_times.len(),
+        retained.tokens_emitted() as usize,
+        "{ctx}: retained mode keeps every token time"
+    );
+    assert!(
+        streamed.token_times.is_empty(),
+        "{ctx}: streamed mode must not retain token times"
+    );
+    let bits = |v: Option<f64>| v.map(f64::to_bits);
+    assert_eq!(bits(retained.ttft()), bits(streamed.ttft()), "{ctx}: ttft");
+    assert_eq!(bits(retained.tpot()), bits(streamed.tpot()), "{ctx}: tpot");
+    assert_eq!(
+        bits(retained.max_token_gap()),
+        bits(streamed.max_token_gap()),
+        "{ctx}: max gap"
+    );
+}
+
+/// Tentpole acceptance: cursor, heap-reference, and streamed runs are the
+/// same simulation on every catalog workload.
+#[test]
+fn streamed_matches_materialized_on_every_catalog_workload() {
+    let base = CostModel::normalized();
+    for (name, trace, ttft_slo, tpot_slo) in catalog_traces() {
+        let mk = || build(System::Arrow, 4, &base, ttft_slo, tpot_slo, false);
+        let cursor = mk().run(&trace);
+        let reference = mk().run_reference(&trace);
+        let (streamed, streamed_recs) = run_streamed_collect(mk(), &trace);
+
+        assert_eq!(
+            cursor.events_processed, reference.events_processed,
+            "{name}: cursor vs reference event counts"
+        );
+        assert_eq!(
+            cursor.events_processed, streamed.events_processed,
+            "{name}: cursor vs streamed event counts"
+        );
+        assert_eq!(cursor.total_iterations, streamed.total_iterations, "{name}");
+        assert_eq!(cursor.sim_time.to_bits(), streamed.sim_time.to_bits(), "{name}");
+        assert!(streamed.records.is_empty(), "{name}: streamed result carries no records");
+
+        assert_eq!(cursor.records.len(), trace.len(), "{name}");
+        assert_eq!(streamed_recs.len(), trace.len(), "{name}");
+        for (i, (r, h)) in cursor.records.iter().zip(&reference.records).enumerate() {
+            assert_eq!(r.token_times, h.token_times, "{name} req {i}: cursor vs reference");
+            assert_eq!(r.state, h.state, "{name} req {i}");
+        }
+        for (i, (r, s)) in cursor.records.iter().zip(&streamed_recs).enumerate() {
+            assert_rec_equivalent(&format!("{name} req {i}"), r, s);
+        }
+        // Sink receives records in arrival order (ids are normalized to
+        // the arrival index).
+        for (i, s) in streamed_recs.iter().enumerate() {
+            assert_eq!(s.id.0 as usize, i, "{name}: sink order");
+        }
+    }
+}
+
+/// A lazy synthetic source drives the simulator to the same schedule as
+/// the materialized trace it mirrors — no `Vec<Request>` of the whole
+/// trace anywhere on the streamed path.
+#[test]
+fn synthetic_source_run_matches_generated_trace_run() {
+    let base = CostModel::normalized();
+    let w = catalog::by_name("smoke").unwrap();
+    let trace = w.generate(SEED);
+    let mk = || build(System::Arrow, 4, &base, w.ttft_slo, w.tpot_slo, false);
+
+    let retained = mk().run(&trace);
+
+    let mut src = SyntheticSource::new(&w.spec, SEED);
+    let mut streamed_recs = Vec::new();
+    let streamed = mk().run_streamed(&mut src, &mut |r| streamed_recs.push(r));
+
+    assert_eq!(retained.events_processed, streamed.events_processed);
+    assert_eq!(retained.total_iterations, streamed.total_iterations);
+    assert_eq!(retained.records.len(), streamed_recs.len());
+    for (i, (r, s)) in retained.records.iter().zip(&streamed_recs).enumerate() {
+        assert_rec_equivalent(&format!("smoke req {i}"), r, s);
+    }
+}
+
+/// Chaos parity: the streaming window must survive restarts, stale
+/// transfer completions, and membership churn — the slot-reference
+/// accounting keeps a completed-but-referenced slot resident until its
+/// last in-flight transfer event resolves, so recovery sees the same
+/// epochs the materialized run sees.
+#[test]
+fn streamed_matches_materialized_under_chaos() {
+    use arrow::coordinator::arrow::{ArrowConfig, ArrowPolicy};
+    let trace = arrow::trace::synthetic::smoke(150, 2).generate(15);
+    let plan = FaultPlan::seeded(99, 4, trace.duration(), 1.5);
+    assert!(!plan.is_empty());
+    let mk = || {
+        let policy = ArrowPolicy::new(ArrowConfig::new(3.0, 0.1, 4), 4);
+        let cfg = SimConfig {
+            transfer_retry: Some(TransferRetryPolicy::default()),
+            straggler_factor: Some(3.0),
+            ..Default::default()
+        };
+        let mut cl = Cluster::homogeneous(
+            4,
+            CostModel::h800_llama8b(),
+            Box::new(policy),
+            cfg,
+        );
+        cl.schedule_membership(trace.duration() * 0.5, MembershipChange::Drain(0));
+        cl.schedule_fault_plan(&plan);
+        cl
+    };
+    let retained = mk().run(&trace);
+    let (streamed, streamed_recs) = run_streamed_collect(mk(), &trace);
+
+    assert_eq!(retained.events_processed, streamed.events_processed, "chaos event counts");
+    assert_eq!(retained.records.len(), streamed_recs.len());
+    for (i, (r, s)) in retained.records.iter().zip(&streamed_recs).enumerate() {
+        assert_rec_equivalent(&format!("chaos req {i}"), r, s);
+        // No-silent-loss carries over to the streamed path.
+        assert!(s.finished() || s.shed.is_some(), "chaos req {i} silently lost");
+    }
+}
+
+/// The constant-memory SLO sink agrees with the exact oracle: counting
+/// fields bit-identical, sketched percentiles within the documented band.
+#[test]
+fn streaming_slo_sink_matches_from_records_oracle() {
+    let base = CostModel::normalized();
+    for (name, trace, ttft_slo, tpot_slo) in catalog_traces() {
+        let mk = || build(System::Arrow, 4, &base, ttft_slo, tpot_slo, false);
+        let span = trace.duration();
+
+        let retained = mk().run(&trace);
+        let exact = SloReport::from_records(&retained.records, ttft_slo, tpot_slo, span);
+
+        let mut slo = StreamingSlo::new(ttft_slo, tpot_slo);
+        let mut src = TraceSource::new(&trace);
+        mk().run_streamed(&mut src, &mut |r| slo.observe(&r));
+        let est = slo.report(span);
+
+        assert_eq!(exact.n_requests, est.n_requests, "{name}");
+        assert_eq!(exact.n_finished, est.n_finished, "{name}");
+        assert_eq!(exact.n_failed, est.n_failed, "{name}");
+        assert_eq!(
+            exact.slo_attainment.to_bits(),
+            est.slo_attainment.to_bits(),
+            "{name}: attainment is exact in streaming mode"
+        );
+        assert_eq!(
+            exact.token_throughput.to_bits(),
+            est.token_throughput.to_bits(),
+            "{name}: throughput is exact in streaming mode"
+        );
+        assert_eq!(
+            exact.goodput_tokens.to_bits(),
+            est.goodput_tokens.to_bits(),
+            "{name}: goodput is exact in streaming mode"
+        );
+        // Sketched percentiles: inside a 10% relative band of the exact
+        // oracle (absolute floor for near-zero latencies).
+        let close = |a: f64, b: f64| {
+            (a.is_nan() && b.is_nan()) || (a - b).abs() <= 0.10 * b.abs().max(1e-3)
+        };
+        for (ex, es, what) in [
+            (exact.p50_ttft, est.p50_ttft, "p50_ttft"),
+            (exact.p90_ttft, est.p90_ttft, "p90_ttft"),
+            (exact.p99_ttft, est.p99_ttft, "p99_ttft"),
+            (exact.p50_tpot, est.p50_tpot, "p50_tpot"),
+            (exact.p90_tpot, est.p90_tpot, "p90_tpot"),
+            (exact.p99_tpot, est.p99_tpot, "p99_tpot"),
+        ] {
+            assert!(
+                close(es, ex),
+                "{name} {what}: sketch {es} vs exact {ex} outside band"
+            );
+        }
+    }
+}
