@@ -126,6 +126,14 @@ if [[ "${1:-}" != "--fast" ]]; then
     ARROW_CLAIMS_SMOKE=1 cargo run --release -q --bin arrow -- \
         claims --out "$smoke_dir/claims"
 
+    # Claims-report drift diff (PR 8): the headline is the count of
+    # *core* holding claims — slo_class:* claims are excluded by
+    # benchdiff so a baseline committed before the per-class claims
+    # existed still compares like-for-like. Warn-skips until a smoke
+    # claims.json baseline is committed at the repo root.
+    cargo run --release -q --bin benchdiff -- \
+        claims.json "$smoke_dir/claims/claims.json"
+
     # Chaos conformance gate (PR 6): seeded fault plans (flaps,
     # stragglers, stalls, crash-rejoins) swept against the recovery-armed
     # Arrow cluster in smoke mode. `arrow chaos` exits non-zero when a

@@ -21,6 +21,13 @@
 //! * `sweep` — `events_per_sec` (higher is better) AND
 //!   `peak_alloc_bytes` (lower is better — a memory regression fails the
 //!   gate exactly like a throughput one, PR 7).
+//!
+//! Claims reports (`"report": "claims"`, PR 8) diff on the count of
+//! *core* holding claims — `slo_class:`-prefixed claims are excluded
+//! from the headline so a baseline emitted before the per-class claims
+//! existed still compares like-for-like against a fresh report that
+//! carries them (the slo_class claims are gated by `tests/claims.rs`
+//! and `arrow claims` itself, not by benchdiff).
 
 use arrow::json::Json;
 
@@ -40,6 +47,21 @@ fn headlines(doc: &Json) -> Vec<(String, f64, Dir)> {
             out.push((label.to_string(), v, dir));
         }
     };
+    if doc.get("report").as_str() == Some("claims") {
+        // Count only core claims: slo_class:* were added in PR 8 and
+        // must not break comparisons against older baselines.
+        let holding = doc.get("claims").as_arr().map(|claims| {
+            claims
+                .iter()
+                .filter(|c| {
+                    !c.get("claim").as_str().map_or(false, |n| n.starts_with("slo_class:"))
+                        && c.get("holds").as_bool() == Some(true)
+                })
+                .count() as f64
+        });
+        push("core claims holding", holding, Dir::Higher);
+        return out;
+    }
     match doc.get("bench").as_str() {
         Some("simulator") => push(
             "arrow events/s",

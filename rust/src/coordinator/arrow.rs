@@ -21,7 +21,7 @@
 
 use super::pools::{Pool, Pools};
 use super::predictor::TtftPredictor;
-use crate::request::{InstanceId, Request, Time};
+use crate::request::{InstanceId, Request, SloClass, Time};
 use crate::sched::{
     f64_from_key_bits, f64_key_bits, ClusterView, MembershipEvent, Policy,
     PrefillQueueMoments, ProfileSource, EPOCH_UNKNOWN,
@@ -45,6 +45,13 @@ pub struct ArrowConfig {
     /// Fraction of decode-capable instances whose token interval must
     /// exceed the TPOT threshold to count a violation tick.
     pub tpot_violation_frac: f64,
+    /// Judge Alg. 1/2 acceptance against each request's *own*
+    /// [`SloClass`] targets (PR 8) and deprioritize lax-SLO (batch) work
+    /// under pressure. With all-Standard traffic the class targets *are*
+    /// the base pair, so this flag changes nothing — it exists so the
+    /// claims harness can run a class-blind Arrow against mixed-class
+    /// traffic as the comparison baseline.
+    pub class_aware: bool,
 }
 
 impl ArrowConfig {
@@ -56,6 +63,7 @@ impl ArrowConfig {
             decode_low_watermark: 0.5,
             tpot_violation_ticks: 2,
             tpot_violation_frac: 0.5,
+            class_aware: true,
         }
     }
 }
@@ -156,23 +164,18 @@ impl ArrowPolicy {
                     #[cfg(debug_assertions)]
                     {
                         // Debug-mode oracle: the O(1) moments path must
-                        // agree with the full queue walk it replaced. The
-                        // walk clamps each task's prediction at 0 while
-                        // the moments path clamps only the total, so a
-                        // degenerate fit with a negative coefficient can
-                        // legitimately price below the walk — equality is
-                        // asserted only for well-formed (non-negative)
-                        // fits; otherwise the moments total must merely
-                        // never exceed the per-task-clamped walk.
+                        // agree with the full queue walk it replaced.
+                        // Since PR 8 both paths share one clamp
+                        // convention (raw per-task costs summed, the
+                        // *total* clamped), so strict agreement holds for
+                        // every fit — including degenerate ones with
+                        // negative coefficients.
                         let walk = pred.queue_delay_view(view, i);
-                        let c = pred.coefficients();
                         let tol = 1e-6 * walk.abs().max(1.0);
                         let ok = if delay.is_nan() || walk.is_nan() {
                             delay.is_nan() && walk.is_nan()
-                        } else if c[1] >= 0.0 && c[2] >= 0.0 && pred.overhead_s() >= 0.0 {
-                            (delay - walk).abs() <= tol
                         } else {
-                            delay <= walk + tol
+                            (delay - walk).abs() <= tol
                         };
                         debug_assert!(ok, "inst {i}: moments delay {delay} != walk {walk}");
                     }
@@ -239,10 +242,33 @@ impl ArrowPolicy {
         util_sum / n as f64 < self.cfg.decode_low_watermark
     }
 
-    /// Recent token interval of an instance, NaN treated as "no evidence".
-    fn interval_ok(&self, view: &dyn ClusterView, inst: usize) -> bool {
+    /// Recent token interval of an instance against the given TPOT
+    /// target, NaN treated as "no evidence".
+    fn interval_ok(&self, view: &dyn ClusterView, inst: usize, tpot_slo: f64) -> bool {
         let v = view.avg_token_interval(inst);
-        v.is_nan() || v <= self.cfg.tpot_slo
+        v.is_nan() || v <= tpot_slo
+    }
+
+    /// The TTFT target `req` is judged against in Alg. 1: its own class
+    /// target when class-aware (PR 8), the base SLO otherwise. Standard's
+    /// class target *is* the base pair, so all-Standard traffic is
+    /// unaffected by the flag.
+    fn ttft_slo_for(&self, req: &Request) -> f64 {
+        if self.cfg.class_aware {
+            req.class.ttft_slo(self.cfg.ttft_slo)
+        } else {
+            self.cfg.ttft_slo
+        }
+    }
+
+    /// The TPOT target `req` is judged against in Alg. 2 (see
+    /// [`ArrowPolicy::ttft_slo_for`]).
+    fn tpot_slo_for(&self, req: &Request) -> f64 {
+        if self.cfg.class_aware {
+            req.class.tpot_slo(self.cfg.tpot_slo)
+        } else {
+            self.cfg.tpot_slo
+        }
     }
 
     // -------------------------------------------- Algorithms 3 & 4 (§5.5)
@@ -308,6 +334,10 @@ impl Policy for ArrowPolicy {
         req: &Request,
         view: &dyn ClusterView,
     ) -> InstanceId {
+        // PR 8: Alg. 1 acceptance is tested against the request's *own*
+        // class target — an interactive request demands a tighter queue,
+        // a batch request tolerates a deep one.
+        let ttft_slo = self.ttft_slo_for(req);
         // "Own" prefill time is instance-dependent on heterogeneous
         // clusters; evaluate per candidate below via its own predictor.
         let own_on = |p: &ArrowPolicy, id: InstanceId| {
@@ -319,7 +349,7 @@ impl Policy for ArrowPolicy {
         // acceptance conditions below evaluate exactly as before.
         let t1 = self.min_prefill_delay(Pool::Prefill, view);
         if let Some((id, delay)) = t1 {
-            if delay + own_on(self, id) <= self.cfg.ttft_slo
+            if delay + own_on(self, id) <= ttft_slo
                 && !view.liveness(id.0).is_degraded()
             {
                 return id;
@@ -327,7 +357,7 @@ impl Policy for ArrowPolicy {
         }
         let t2 = self.min_prefill_delay(Pool::DecodeToPrefill, view);
         if let Some((id, delay)) = t2 {
-            if delay + own_on(self, id) <= self.cfg.ttft_slo
+            if delay + own_on(self, id) <= ttft_slo
                 && !view.liveness(id.0).is_degraded()
             {
                 return id;
@@ -339,13 +369,18 @@ impl Policy for ArrowPolicy {
         // a flip for nothing.
         let best = t1.or(t2);
         if let Some((id, _)) = best {
-            if own_on(self, id) > self.cfg.ttft_slo {
+            if own_on(self, id) > ttft_slo {
                 return id;
             }
         }
         // Try to grow the prefill pool — but only if decode can spare an
-        // instance (overload policy: decode has priority).
-        if self.decode_load_low(view) {
+        // instance (overload policy: decode has priority). Batch-class
+        // work never burns a flip (PR 8): its lax deadline is what the
+        // deep queue is *for* — stealing decode capacity to rescue it
+        // would trade interactive decode headroom for worthless slack.
+        let may_steal =
+            !(self.cfg.class_aware && req.class == SloClass::Batch);
+        if may_steal && self.decode_load_low(view) {
             if let Some(t3) = self.try_move_decode_to_prefill(view) {
                 return t3;
             }
@@ -407,12 +442,15 @@ impl Policy for ArrowPolicy {
         // Admission counts the incoming request's own KV footprint. A
         // Degraded (straggler, PR 6) argmin fails acceptance the same way
         // a TPOT-violating interval does — Alg. 2 escalates to a healthy
-        // pool or a flip instead of feeding the slow instance.
+        // pool or a flip instead of feeding the slow instance. The
+        // interval is judged against the request's own class TPOT target
+        // (PR 8): batch work accepts a busier instance than interactive.
+        let tpot_slo = self.tpot_slo_for(req);
         let incoming = req.input_len as u64;
         let t1 = self.min_running_tokens(Pool::Decode, view);
         if let Some((id, tokens)) = t1 {
             if tokens + incoming <= self.mrt(id.0)
-                && self.interval_ok(view, id.0)
+                && self.interval_ok(view, id.0, tpot_slo)
                 && !view.liveness(id.0).is_degraded()
             {
                 return id;
@@ -421,14 +459,20 @@ impl Policy for ArrowPolicy {
         let t2 = self.min_running_tokens(Pool::PrefillToDecode, view);
         if let Some((id, tokens)) = t2 {
             if tokens + incoming <= self.mrt(id.0)
-                && self.interval_ok(view, id.0)
+                && self.interval_ok(view, id.0, tpot_slo)
                 && !view.liveness(id.0).is_degraded()
             {
                 return id;
             }
         }
-        if let Some(t3) = self.try_move_prefill_to_decode(view) {
-            return t3;
+        // A batch-class miss never forces a P→D flip either (PR 8): the
+        // lax TPOT target already absorbed the pressure check above, and
+        // flips are reserved for work that can still meet a tight SLO.
+        let may_flip = !(self.cfg.class_aware && req.class == SloClass::Batch);
+        if may_flip {
+            if let Some(t3) = self.try_move_prefill_to_decode(view) {
+                return t3;
+            }
         }
         // Fallback: lesser-loaded of t1/t2 (Alg. 2's final branch).
         match (t1, t2) {
@@ -874,6 +918,68 @@ mod tests {
         assert!(crate::sched::Liveness::Degraded.placeable());
         assert!(crate::sched::Liveness::Degraded.in_cluster());
         assert!(crate::sched::Liveness::Degraded.is_degraded());
+    }
+
+    #[test]
+    fn batch_class_never_steals_a_decode_instance() {
+        // PR 8: the same burst that makes a Standard request steal a
+        // decode instance (see prefill_steals_decode_instance_under_burst)
+        // must leave the pools untouched for a Batch request — its lax
+        // deadline is absorbed by the deep prefill queue instead.
+        let (mut p, mut insts) = policy(4);
+        for i in 0..2 {
+            for r in 0..4 {
+                insts[i].enqueue_prefill(crate::request::RequestId(100 + r), 100_000);
+            }
+        }
+        assert_eq!(p.pools.sizes(), [2, 2, 0, 0]);
+        let r = req(1, 1000, 10).with_class(SloClass::Batch);
+        let t = p.place_prefill(0.0, &r, &SimView(&insts));
+        assert!(t.0 < 2, "batch must land on the prefill pool, got {t}");
+        assert_eq!(p.pools.sizes(), [2, 2, 0, 0], "no flip for batch work");
+        assert_eq!(p.flip_count(), 0);
+    }
+
+    #[test]
+    fn interactive_class_rejects_a_queue_standard_accepts() {
+        // A queue whose delay fits the base TTFT target but not the
+        // interactive (0.5x) target: Standard accepts the argmin,
+        // Interactive escalates to a steal. Class-blind mode treats both
+        // identically — the claims-harness baseline.
+        use crate::sched::FixedProfile;
+        let profile = FixedProfile {
+            predictors: vec![
+                TtftPredictor::from_coefficients([0.0, 1e-4, 0.0], 2048, 0.0);
+                4
+            ],
+            max_running_tokens: vec![1_000_000; 4],
+        };
+        let mut insts = cluster(4);
+        // Instances 0,1 prefill / 2,3 decode. Both prefill queues price
+        // at 0.6s; own time 0.1s: 0.7 <= 1.0 (standard) but > 0.5
+        // (interactive).
+        insts[0].enqueue_prefill(crate::request::RequestId(8), 6000);
+        insts[1].enqueue_prefill(crate::request::RequestId(9), 6000);
+        let mk = |class_aware: bool| {
+            let mut cfg = ArrowConfig::new(1.0, 0.1, 4);
+            cfg.class_aware = class_aware;
+            let mut p = ArrowPolicy::new(cfg, 4);
+            p.init(&profile);
+            p
+        };
+        let std_req = req(1, 1000, 10);
+        let int_req = req(2, 1000, 10).with_class(SloClass::Interactive);
+        assert_eq!(mk(true).place_prefill(0.0, &std_req, &SimView(&insts)), InstanceId(0));
+        let stolen = mk(true).place_prefill(0.0, &int_req, &SimView(&insts));
+        assert!(
+            stolen.0 >= 2,
+            "interactive must escalate off the too-deep queue, got {stolen}"
+        );
+        assert_eq!(
+            mk(false).place_prefill(0.0, &int_req, &SimView(&insts)),
+            InstanceId(0),
+            "class-blind mode ignores the class"
+        );
     }
 
     #[test]

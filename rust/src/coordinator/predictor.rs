@@ -79,17 +79,29 @@ impl TtftPredictor {
         (self.c[0] + self.c[1] * l + self.c[2] * l * l).clamp(0.0, f64::INFINITY)
     }
 
-    /// Predicted seconds to *finish* a partially prefilled prompt
-    /// (`remaining` of `input_len` tokens left). Uses the quadratic's
-    /// marginal cost over the remaining context range.
-    pub fn remaining_seconds(&self, input_len: u32, remaining: u32) -> f64 {
+    /// Unclamped marginal cost of finishing a partially prefilled prompt.
+    /// Queue-delay aggregation sums these *raw* values and clamps the
+    /// total — the same convention as [`TtftPredictor::queue_delay_moments`],
+    /// which cannot clamp per task (it only ever sees the aggregates). A
+    /// fitted curve with a negative linear term used to diverge here: the
+    /// walk clamped each task to 0 while the moments path let negative
+    /// terms cancel, tripping the refresh-index debug oracle (PR 8 fix).
+    fn remaining_seconds_raw(&self, input_len: u32, remaining: u32) -> f64 {
         let l = input_len as f64;
         let done = (input_len - remaining) as f64;
         let lin = self.c[1] * remaining as f64;
         let quad = self.c[2] * (l * l - done * done);
         let chunks = remaining.div_ceil(self.chunk.max(1)) as f64;
+        lin + quad + chunks * self.overhead
+    }
+
+    /// Predicted seconds to *finish* a partially prefilled prompt
+    /// (`remaining` of `input_len` tokens left). Uses the quadratic's
+    /// marginal cost over the remaining context range.
+    pub fn remaining_seconds(&self, input_len: u32, remaining: u32) -> f64 {
         // clamp (not max): NaN coefficients propagate, see prefill_seconds.
-        (lin + quad + chunks * self.overhead).clamp(0.0, f64::INFINITY)
+        self.remaining_seconds_raw(input_len, remaining)
+            .clamp(0.0, f64::INFINITY)
     }
 
     /// Predicted prefill queueing delay of an instance, given its public
@@ -104,7 +116,14 @@ impl TtftPredictor {
     /// [`crate::engine::SimInstance::prefill_queue_iter`]) so the
     /// per-request placement path never materializes a queue-view `Vec`.
     pub fn queue_delay_iter(&self, queue: impl Iterator<Item = (u32, u32)>) -> f64 {
-        queue.map(|(l, r)| self.remaining_seconds(l, r)).sum()
+        // Sum raw per-task costs, clamp the *total* — one clamp
+        // convention shared with `queue_delay_moments`, so the walk is a
+        // valid oracle for the O(1) path even when a fitted curve has a
+        // negative linear term. An empty queue sums to exactly 0.0.
+        queue
+            .map(|(l, r)| self.remaining_seconds_raw(l, r))
+            .sum::<f64>()
+            .clamp(0.0, f64::INFINITY)
     }
 
     /// Predicted prefill queueing delay of instance `inst` as seen
@@ -114,8 +133,10 @@ impl TtftPredictor {
     /// live-server predictions over equal queues are byte-identical.
     pub fn queue_delay_view(&self, view: &dyn ClusterView, inst: usize) -> f64 {
         let mut total = 0.0;
-        view.for_each_queued_prefill(inst, &mut |l, r| total += self.remaining_seconds(l, r));
-        total
+        view.for_each_queued_prefill(inst, &mut |l, r| {
+            total += self.remaining_seconds_raw(l, r)
+        });
+        total.clamp(0.0, f64::INFINITY)
     }
 
     /// O(1) queue delay from incrementally maintained aggregates (PR 4
@@ -131,9 +152,10 @@ impl TtftPredictor {
     /// deterministic function of queue *content* (independent of update
     /// history and of substrate), which is what keeps cross-substrate
     /// placements byte-identical. It differs from the walk only in f64
-    /// summation order (≤ ~1e-12 relative; property-tested at 1e-9) and
-    /// in clamping the total instead of each task — the walk stays
-    /// available as the debug-mode oracle. NaN coefficients yield NaN
+    /// summation order (≤ ~1e-12 relative; property-tested at 1e-9) —
+    /// both paths clamp the *total*, never individual tasks (PR 8), so
+    /// the walk is a valid oracle even for fits with negative
+    /// coefficients. NaN coefficients yield NaN
     /// (never a free 0 s) exactly like the walk, and an empty queue is
     /// 0 s even under a NaN-poisoned fit.
     pub fn queue_delay_moments(&self, m: &PrefillQueueMoments) -> f64 {
@@ -280,6 +302,43 @@ mod tests {
             broken.queue_delay_moments(&m).is_nan(),
             "a poisoned fit must price a non-empty queue as NaN"
         );
+    }
+
+    #[test]
+    fn negative_linear_coefficient_walk_matches_moments() {
+        // PR 8 regression: least-squares on noisy probe timings can fit a
+        // (slightly) negative linear term with a positive quadratic. The
+        // old per-task clamp zeroed short tasks' negative contributions
+        // in the walk while the O(1) moments path let them cancel inside
+        // the aggregate — walk > moments beyond the 1e-9 property band,
+        // tripping the refresh-index debug oracle. Both paths now clamp
+        // only the total.
+        let p = TtftPredictor::from_coefficients([0.0, -1e-5, 1e-9], 2048, 1e-4);
+        // Short tasks price negative raw; the long one positive.
+        let queue = [(64u32, 64u32), (128, 128), (50_000, 50_000), (256, 96)];
+        // Sanity: the per-task clamp genuinely differs on this queue.
+        let clamped_sum: f64 = queue.iter().map(|&(l, r)| p.remaining_seconds(l, r)).sum();
+        let walk = p.queue_delay_iter(queue.iter().copied());
+        assert!(
+            clamped_sum > walk + 1e-6,
+            "queue must exercise the divergent regime: clamped={clamped_sum} walk={walk}"
+        );
+        let mut m = PrefillQueueMoments::default();
+        for &(l, r) in &queue {
+            m.add_task(l, r, p.chunk_tokens());
+        }
+        let fast = p.queue_delay_moments(&m);
+        let rel = (fast - walk).abs() / walk.abs().max(1e-12);
+        assert!(rel < 1e-9, "walk={walk} moments={fast} rel={rel}");
+        // A queue whose raw total goes negative clamps to 0 on both paths.
+        let shorts = [(64u32, 64u32), (96, 96)];
+        let walk_neg = p.queue_delay_iter(shorts.iter().copied());
+        let mut mn = PrefillQueueMoments::default();
+        for &(l, r) in &shorts {
+            mn.add_task(l, r, p.chunk_tokens());
+        }
+        assert_eq!(walk_neg, 0.0);
+        assert_eq!(p.queue_delay_moments(&mn), 0.0);
     }
 
     #[test]

@@ -245,6 +245,29 @@ impl SimInstance {
         self.prefill_q.push_back(PrefillTask::new(id, input_len));
     }
 
+    /// Rank-aware prefill intake (PR 8): the task is inserted before the
+    /// first queued task with a *strictly greater* rank, so lower ranks
+    /// (tighter SLO classes) run earlier while equal ranks keep FIFO
+    /// order — a single-rank stream produces exactly the push_back queue,
+    /// bit for bit. The in-progress head is never displaced: chunked
+    /// prefill only ever advances `front()`, and an iteration may be in
+    /// flight against it (`busy`), so insertion starts behind a head that
+    /// has progress or a pending plan. The queue moments are
+    /// position-independent, so ranked insertion leaves them untouched.
+    pub fn enqueue_prefill_ranked(&mut self, id: RequestId, input_len: u32, rank: u8) {
+        self.prefill_moments
+            .add_task(input_len, input_len, self.chunk_tokens);
+        let mut task = PrefillTask::new(id, input_len);
+        task.rank = rank;
+        let protected_head = !self.prefill_q.is_empty()
+            && (self.busy || self.prefill_q.front().is_some_and(|t| t.done > 0));
+        let start = usize::from(protected_head);
+        let pos = (start..self.prefill_q.len())
+            .find(|&i| self.prefill_q[i].rank > rank)
+            .unwrap_or(self.prefill_q.len());
+        self.prefill_q.insert(pos, task);
+    }
+
     /// Reserve KV for an incoming migration (q2 admission check).
     /// Returns false if the instance lacks memory — caller keeps the
     /// request in the transfer wait queue.
@@ -667,6 +690,57 @@ mod tests {
         i.enqueue_prefill(RequestId(9), 777);
         i.clear();
         assert_eq!(i.prefill_queue_moments(), crate::sched::PrefillQueueMoments::default());
+    }
+
+    #[test]
+    fn ranked_enqueue_orders_by_rank_fifo_within() {
+        let mut i = inst();
+        i.enqueue_prefill_ranked(RequestId(1), 100, 1);
+        i.enqueue_prefill_ranked(RequestId(2), 100, 2);
+        i.enqueue_prefill_ranked(RequestId(3), 100, 1);
+        i.enqueue_prefill_ranked(RequestId(4), 100, 0);
+        i.enqueue_prefill_ranked(RequestId(5), 100, 2);
+        let order: Vec<u64> = i.prefill_q.iter().map(|t| t.id.0).collect();
+        // rank 0 first; FIFO among equal ranks (1 before 3, 2 before 5).
+        assert_eq!(order, vec![4, 1, 3, 2, 5]);
+        // Moments identical to plain enqueues (position-independent).
+        let mut plain = inst();
+        for id in 1..=5 {
+            plain.enqueue_prefill(RequestId(id), 100);
+        }
+        assert_eq!(i.prefill_queue_moments(), plain.prefill_queue_moments());
+    }
+
+    #[test]
+    fn single_rank_stream_matches_plain_fifo() {
+        // PR 8 bit-stability: all-Standard traffic arrives with one rank;
+        // the ranked path must build exactly the push_back queue.
+        let mut ranked = inst();
+        let mut plain = inst();
+        for id in 0..6u64 {
+            ranked.enqueue_prefill_ranked(RequestId(id), 64 * (id as u32 + 1), 1);
+            plain.enqueue_prefill(RequestId(id), 64 * (id as u32 + 1));
+        }
+        let a: Vec<_> = ranked.prefill_q.iter().map(|t| (t.id, t.input_len)).collect();
+        let b: Vec<_> = plain.prefill_q.iter().map(|t| (t.id, t.input_len)).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ranked_enqueue_never_displaces_in_progress_head() {
+        let mut i = inst();
+        i.enqueue_prefill_ranked(RequestId(1), 5000, 2);
+        // One chunk in flight: a higher-priority arrival lands *behind*
+        // the head while the iteration is pending...
+        let plan = i.plan_iteration().unwrap();
+        i.enqueue_prefill_ranked(RequestId(2), 100, 0);
+        assert_eq!(i.prefill_q.front().unwrap().id, RequestId(1));
+        i.finish_iteration(&plan, 0.1);
+        // ...and behind a partially-done head between iterations too.
+        assert!(i.prefill_q.front().unwrap().done > 0);
+        i.enqueue_prefill_ranked(RequestId(3), 100, 0);
+        let order: Vec<u64> = i.prefill_q.iter().map(|t| t.id.0).collect();
+        assert_eq!(order, vec![1, 2, 3]);
     }
 
     #[test]

@@ -14,6 +14,10 @@ pub struct PrefillTask {
     pub input_len: u32,
     /// Prompt tokens already prefilled.
     pub done: u32,
+    /// Queue priority (PR 8): lower ranks are dequeued first; equal ranks
+    /// keep FIFO order. Defaults to 0 — a single-rank queue behaves
+    /// exactly like the plain FIFO it used to be.
+    pub rank: u8,
 }
 
 impl PrefillTask {
@@ -22,6 +26,7 @@ impl PrefillTask {
             id,
             input_len,
             done: 0,
+            rank: 0,
         }
     }
 

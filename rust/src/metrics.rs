@@ -1,9 +1,71 @@
 //! Serving metrics: TTFT/TPOT distributions, SLO attainment, and the
 //! max-sustainable-rate search the paper's headline numbers come from.
 
-use crate::request::RequestRecord;
+use crate::request::{RequestRecord, SloClass};
 use crate::util::quantile::{BucketQuantile, P2Quantile};
 use crate::util::stats;
+
+/// Per-class slice of a report (PR 8). Exact integer folds only — no
+/// per-class percentiles — so the streaming sink reproduces these fields
+/// bit-identically to `from_records`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassReport {
+    pub class: SloClass,
+    pub n_requests: usize,
+    pub n_finished: usize,
+    pub n_failed: usize,
+    /// Fraction of this class's requests meeting *its own* scaled SLO
+    /// pair (failed count against; an empty class is vacuously 1.0).
+    pub slo_attainment: f64,
+    /// Output tokens of this class's SLO-meeting requests per second.
+    pub goodput_tokens: f64,
+}
+
+/// Shared per-class accumulator: one set of integer folds backs both
+/// `SloReport::from_records` and [`StreamingSlo`], so their `per_class`
+/// slices agree bit for bit by construction.
+#[derive(Debug, Clone, Default)]
+struct ClassFold {
+    n: [usize; 3],
+    finished: [usize; 3],
+    failed: [usize; 3],
+    ok: [usize; 3],
+    good_tokens: [u64; 3],
+}
+
+impl ClassFold {
+    fn add(&mut self, other: &ClassFold) {
+        for i in 0..3 {
+            self.n[i] += other.n[i];
+            self.finished[i] += other.finished[i];
+            self.failed[i] += other.failed[i];
+            self.ok[i] += other.ok[i];
+            self.good_tokens[i] += other.good_tokens[i];
+        }
+    }
+
+    /// `span` must already be floored (`max(1e-9)`) by the caller.
+    fn reports(&self, span: f64) -> Vec<ClassReport> {
+        SloClass::ALL
+            .iter()
+            .map(|&class| {
+                let i = class.index();
+                ClassReport {
+                    class,
+                    n_requests: self.n[i],
+                    n_finished: self.finished[i],
+                    n_failed: self.failed[i],
+                    slo_attainment: if self.n[i] == 0 {
+                        1.0
+                    } else {
+                        self.ok[i] as f64 / self.n[i] as f64
+                    },
+                    goodput_tokens: self.good_tokens[i] as f64 / span,
+                }
+            })
+            .collect()
+    }
+}
 
 /// Aggregated metrics over one run (one trace × one system × one rate).
 #[derive(Debug, Clone)]
@@ -25,9 +87,38 @@ pub struct SloReport {
     pub token_throughput: f64,
     /// Goodput: output tokens of SLO-meeting requests per second.
     pub goodput_tokens: f64,
+    /// Per-class breakdown (PR 8), one entry per [`SloClass::ALL`] member
+    /// in that order. Empty in hand-built test fixtures.
+    pub per_class: Vec<ClassReport>,
 }
 
 impl SloReport {
+    /// The zero-request report (PR 8 satellite): every attainment is
+    /// vacuously 1.0 (no request missed its SLO) and every percentile is
+    /// 0.0 — previously an empty run read as 0% attainment with NaN
+    /// percentiles, which made `max_sustainable_rate` treat "no traffic"
+    /// as "unsustainable" and poisoned downstream comparisons.
+    fn empty(span_seconds: f64) -> SloReport {
+        let span = span_seconds.max(1e-9);
+        SloReport {
+            n_requests: 0,
+            n_finished: 0,
+            n_failed: 0,
+            slo_attainment: 1.0,
+            ttft_attainment: 1.0,
+            tpot_attainment: 1.0,
+            p50_ttft: 0.0,
+            p90_ttft: 0.0,
+            p99_ttft: 0.0,
+            p50_tpot: 0.0,
+            p90_tpot: 0.0,
+            p99_tpot: 0.0,
+            token_throughput: 0.0,
+            goodput_tokens: 0.0,
+            per_class: ClassFold::default().reports(span),
+        }
+    }
+
     pub fn from_records(
         records: &[RequestRecord],
         ttft_slo: f64,
@@ -35,6 +126,9 @@ impl SloReport {
         span_seconds: f64,
     ) -> SloReport {
         let n = records.len();
+        if n == 0 {
+            return SloReport::empty(span_seconds);
+        }
         let mut ttfts = Vec::new();
         let mut tpots = Vec::new();
         let mut ok = 0usize;
@@ -44,9 +138,19 @@ impl SloReport {
         let mut failed = 0usize;
         let mut tokens = 0u64;
         let mut good_tokens = 0u64;
+        let mut cls = ClassFold::default();
         for r in records {
+            let ci = r.class.index();
+            cls.n[ci] += 1;
+            // Every request is judged against *its own class's* targets
+            // (PR 8). Standard's targets are the base pair untouched, so
+            // an all-Standard run folds bit-identically to the old
+            // class-blind arithmetic.
+            let t_slo = r.class.ttft_slo(ttft_slo);
+            let p_slo = r.class.tpot_slo(tpot_slo);
             if r.finished() {
                 finished += 1;
+                cls.finished[ci] += 1;
                 // output_len, not token_times.len(): a finished record
                 // emitted exactly output_len tokens (sim invariant), and
                 // streaming records never populate token_times — counting
@@ -56,18 +160,21 @@ impl SloReport {
                 let (a, b) = (r.ttft().unwrap(), r.tpot().unwrap());
                 ttfts.push(a);
                 tpots.push(b);
-                if a <= ttft_slo {
+                if a <= t_slo {
                     ttft_ok += 1;
                 }
-                if b <= tpot_slo {
+                if b <= p_slo {
                     tpot_ok += 1;
                 }
-                if a <= ttft_slo && b <= tpot_slo {
+                if a <= t_slo && b <= p_slo {
                     ok += 1;
                     good_tokens += r.output_len as u64;
+                    cls.ok[ci] += 1;
+                    cls.good_tokens[ci] += r.output_len as u64;
                 }
             } else {
                 failed += 1;
+                cls.failed[ci] += 1;
             }
         }
         let span = span_seconds.max(1e-9);
@@ -92,7 +199,18 @@ impl SloReport {
             p99_tpot: stats::percentile_sorted(&tpots, 99.0),
             token_throughput: tokens as f64 / span,
             goodput_tokens: good_tokens as f64 / span,
+            per_class: cls.reports(span),
         }
+    }
+
+    /// Attainment of one class by label-free lookup (PR 8 convenience;
+    /// callers hold the class, not its index).
+    pub fn class_attainment(&self, class: SloClass) -> f64 {
+        self.per_class
+            .iter()
+            .find(|c| c.class == class)
+            .map(|c| c.slo_attainment)
+            .unwrap_or(1.0)
     }
 
     /// The paper's success criterion: ≥90% of requests meet both SLOs.
@@ -170,6 +288,7 @@ pub struct StreamingSlo {
     tpot_ok: usize,
     tokens: u64,
     good_tokens: u64,
+    cls: ClassFold,
     ttft_q: LatencySketch,
     tpot_q: LatencySketch,
 }
@@ -198,6 +317,7 @@ impl StreamingSlo {
             tpot_ok: 0,
             tokens: 0,
             good_tokens: 0,
+            cls: ClassFold::default(),
             ttft_q: sketch(),
             tpot_q: sketch(),
         }
@@ -208,24 +328,34 @@ impl StreamingSlo {
     /// in the `from_records` input.
     pub fn observe(&mut self, r: &RequestRecord) {
         self.n += 1;
+        let ci = r.class.index();
+        self.cls.n[ci] += 1;
+        // Same class-scaled judgment as `from_records` — identical
+        // expressions, so the exact fields stay bit-identical.
+        let t_slo = r.class.ttft_slo(self.ttft_slo);
+        let p_slo = r.class.tpot_slo(self.tpot_slo);
         if r.finished() {
             self.finished += 1;
+            self.cls.finished[ci] += 1;
             self.tokens += r.output_len as u64;
             let (a, b) = (r.ttft().unwrap(), r.tpot().unwrap());
             self.ttft_q.push(a);
             self.tpot_q.push(b);
-            if a <= self.ttft_slo {
+            if a <= t_slo {
                 self.ttft_ok += 1;
             }
-            if b <= self.tpot_slo {
+            if b <= p_slo {
                 self.tpot_ok += 1;
             }
-            if a <= self.ttft_slo && b <= self.tpot_slo {
+            if a <= t_slo && b <= p_slo {
                 self.ok += 1;
                 self.good_tokens += r.output_len as u64;
+                self.cls.ok[ci] += 1;
+                self.cls.good_tokens[ci] += r.output_len as u64;
             }
         } else {
             self.failed += 1;
+            self.cls.failed[ci] += 1;
         }
     }
 
@@ -249,6 +379,7 @@ impl StreamingSlo {
         self.tpot_ok += other.tpot_ok;
         self.tokens += other.tokens;
         self.good_tokens += other.good_tokens;
+        self.cls.add(&other.cls);
         self.ttft_q.merge(&other.ttft_q);
         self.tpot_q.merge(&other.tpot_q);
     }
@@ -257,6 +388,9 @@ impl StreamingSlo {
     /// (same arithmetic as `from_records`); percentiles are sketch
     /// estimates.
     pub fn report(&self, span_seconds: f64) -> SloReport {
+        if self.n == 0 {
+            return SloReport::empty(span_seconds);
+        }
         let span = span_seconds.max(1e-9);
         SloReport {
             n_requests: self.n,
@@ -273,6 +407,7 @@ impl StreamingSlo {
             p99_tpot: self.tpot_q.estimate(2),
             token_throughput: self.tokens as f64 / span,
             goodput_tokens: self.good_tokens as f64 / span,
+            per_class: self.cls.reports(span),
         }
     }
 }
@@ -335,10 +470,11 @@ pub fn max_sustainable_rate(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::request::{Request, RequestRecord, RequestState};
+    use crate::request::{Request, RequestRecord, RequestState, SloClass};
 
-    fn rec(arrival: f64, times: &[f64]) -> RequestRecord {
-        let req = Request::new(0, arrival, 10, times.len().max(1) as u32);
+    fn rec_class(arrival: f64, times: &[f64], class: SloClass) -> RequestRecord {
+        let req =
+            Request::new(0, arrival, 10, times.len().max(1) as u32).with_class(class);
         let mut r = RequestRecord::new(&req);
         for &t in times {
             r.push_token(t);
@@ -349,6 +485,10 @@ mod tests {
             RequestState::Finished
         };
         r
+    }
+
+    fn rec(arrival: f64, times: &[f64]) -> RequestRecord {
+        rec_class(arrival, times, SloClass::Standard)
     }
 
     #[test]
@@ -494,6 +634,7 @@ mod tests {
             ] {
                 assert_eq!(a.to_bits(), b.to_bits(), "exact field drifted");
             }
+            assert_eq!(got.per_class, oracle.per_class, "per-class folds drifted");
             // Estimated percentiles: within 10% of the sorted oracle.
             for (est, exact, what) in [
                 (got.p50_ttft, oracle.p50_ttft, "p50_ttft"),
@@ -550,6 +691,63 @@ mod tests {
             assert_eq!(x.to_bits(), y.to_bits());
         }
         assert_eq!(a.n_requests, b.n_requests);
+        assert_eq!(a.per_class, b.per_class);
+    }
+
+    /// PR 8 satellite: a zero-request run is vacuously green — every
+    /// attainment 1.0, every percentile 0.0 — identically from
+    /// `from_records` and the streaming sink. (Previously: 0% attainment
+    /// + NaN percentiles, which read "no traffic" as "unsustainable".)
+    #[test]
+    fn empty_run_is_vacuously_green() {
+        let rep = SloReport::from_records(&[], 1.0, 0.2, 10.0);
+        assert_eq!(rep.n_requests, 0);
+        assert_eq!(rep.slo_attainment, 1.0);
+        assert_eq!(rep.ttft_attainment, 1.0);
+        assert_eq!(rep.tpot_attainment, 1.0);
+        assert_eq!(rep.p50_ttft, 0.0);
+        assert_eq!(rep.p99_tpot, 0.0);
+        assert!(rep.meets_target(0.9), "no traffic is not an SLO violation");
+        for c in &rep.per_class {
+            assert_eq!(c.n_requests, 0);
+            assert_eq!(c.slo_attainment, 1.0);
+        }
+        let srep = StreamingSlo::new(1.0, 0.2).report(10.0);
+        assert_eq!(srep.slo_attainment.to_bits(), rep.slo_attainment.to_bits());
+        assert_eq!(srep.p50_ttft.to_bits(), rep.p50_ttft.to_bits());
+        assert_eq!(srep.per_class, rep.per_class);
+    }
+
+    /// PR 8: every request is judged against its own class's scaled SLO
+    /// pair, and the per-class slices split accordingly — with identical
+    /// numbers from the streaming sink.
+    #[test]
+    fn per_class_judged_against_own_targets() {
+        // Base SLOs 1.0 / 0.2; each record has TTFT 0.7 and TPOT 0.1.
+        // Standard passes (0.7 <= 1.0), Batch passes (0.7 <= 4.0),
+        // Interactive misses its tightened 0.5 target.
+        let times = [0.7, 0.8, 0.9];
+        let records = vec![
+            rec_class(0.0, &times, SloClass::Interactive),
+            rec_class(0.0, &times, SloClass::Standard),
+            rec_class(0.0, &times, SloClass::Batch),
+        ];
+        let rep = SloReport::from_records(&records, 1.0, 0.2, 10.0);
+        assert!((rep.slo_attainment - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(rep.per_class.len(), 3);
+        assert_eq!(rep.class_attainment(SloClass::Interactive), 0.0);
+        assert_eq!(rep.class_attainment(SloClass::Standard), 1.0);
+        assert_eq!(rep.class_attainment(SloClass::Batch), 1.0);
+        // Goodput counts only the passing classes' tokens: 6 of 9 in 10 s.
+        assert!((rep.goodput_tokens - 0.6).abs() < 1e-12);
+        let mut sink = StreamingSlo::new(1.0, 0.2);
+        for r in &records {
+            sink.observe(r);
+        }
+        let srep = sink.report(10.0);
+        assert_eq!(srep.per_class, rep.per_class);
+        assert_eq!(srep.slo_attainment.to_bits(), rep.slo_attainment.to_bits());
+        assert_eq!(srep.goodput_tokens.to_bits(), rep.goodput_tokens.to_bits());
     }
 
     /// A degenerate report whose only meaningful field is attainment.
@@ -569,6 +767,7 @@ mod tests {
             p99_tpot: 0.0,
             token_throughput: 0.0,
             goodput_tokens: 0.0,
+            per_class: Vec::new(),
         }
     }
 
@@ -681,6 +880,7 @@ mod tests {
                 p99_tpot: 0.0,
                 token_throughput: 0.0,
                 goodput_tokens: 0.0,
+                per_class: Vec::new(),
             }
         };
         let r = max_sustainable_rate(eval, 1.0, 0.9, 0.01);
@@ -704,6 +904,7 @@ mod tests {
             p99_tpot: f64::NAN,
             token_throughput: 0.0,
             goodput_tokens: 0.0,
+            per_class: Vec::new(),
         };
         let r = max_sustainable_rate(eval, 1.0, 0.9, 0.01);
         assert!(r < 0.05, "r={r}");

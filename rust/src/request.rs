@@ -36,12 +36,97 @@ pub enum Phase {
     Decode,
 }
 
+/// Service tier of a request (PR 8). The paper's goodput criterion (§6)
+/// judges every request against one TTFT/TPOT pair; production traffic is
+/// tiered — interactive chat, standard API calls, and batch/background
+/// jobs each carry their own deadlines. A class scales the workload's
+/// base SLO pair and carries a priority rank used by class-aware
+/// scheduling and admission control.
+///
+/// `Standard` reproduces today's behavior exactly: its targets *are* the
+/// base pair (no arithmetic applied), its rank is the default queue
+/// rank, and it is never shed ahead of other work — so an all-Standard
+/// trace (the default) schedules bit-identically to a class-blind run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SloClass {
+    /// Tight deadlines (0.5x the base TTFT/TPOT): chat-style traffic.
+    Interactive,
+    /// The workload's base SLO pair, unchanged.
+    #[default]
+    Standard,
+    /// Lax deadlines (4x base): summarization / background agents. First
+    /// to be deprioritized and first to be shed under overload.
+    Batch,
+}
+
+impl SloClass {
+    pub const ALL: [SloClass; 3] = [SloClass::Interactive, SloClass::Standard, SloClass::Batch];
+
+    /// Queue priority: lower ranks run first. Standard keeps rank equal
+    /// to the implicit FIFO rank of a class-blind queue minus nothing —
+    /// equal ranks preserve arrival order, so all-Standard traffic is
+    /// scheduled exactly as before.
+    pub fn priority_rank(self) -> u8 {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Standard => 1,
+            SloClass::Batch => 2,
+        }
+    }
+
+    /// This class's TTFT target given the workload's base target.
+    /// Standard returns `base` untouched (no multiply — bit-stable).
+    pub fn ttft_slo(self, base: f64) -> f64 {
+        match self {
+            SloClass::Interactive => 0.5 * base,
+            SloClass::Standard => base,
+            SloClass::Batch => 4.0 * base,
+        }
+    }
+
+    /// This class's TPOT target given the workload's base target.
+    pub fn tpot_slo(self, base: f64) -> f64 {
+        match self {
+            SloClass::Interactive => 0.5 * base,
+            SloClass::Standard => base,
+            SloClass::Batch => 4.0 * base,
+        }
+    }
+
+    /// Stable per-class index for counter arrays (`[T; 3]`).
+    pub fn index(self) -> usize {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Standard => 1,
+            SloClass::Batch => 2,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    /// Parse a class label (HTTP body field / CLI); `None` on unknown.
+    pub fn from_label(s: &str) -> Option<SloClass> {
+        match s {
+            "interactive" => Some(SloClass::Interactive),
+            "standard" => Some(SloClass::Standard),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+}
+
 /// A request as it arrives at the frontend: timestamps and lengths only —
 /// exactly what the production traces record (§3.1).
 ///
-/// `Copy`: the struct is 24 bytes of plain data, and the simulator's hot
-/// path hands requests to the policy on every arrival/prefill-done event —
-/// passing by value must never allocate.
+/// `Copy`: the struct is a handful of bytes of plain data, and the
+/// simulator's hot path hands requests to the policy on every
+/// arrival/prefill-done event — passing by value must never allocate.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
     pub id: RequestId,
@@ -52,6 +137,9 @@ pub struct Request {
     /// Number of tokens to generate (from the trace; the simulator stops
     /// the request after this many tokens — stand-in for EOS).
     pub output_len: u32,
+    /// Service tier (PR 8). Defaults to [`SloClass::Standard`], which is
+    /// indistinguishable from the pre-class behavior.
+    pub class: SloClass,
 }
 
 impl Request {
@@ -61,7 +149,14 @@ impl Request {
             arrival,
             input_len: input_len.max(1),
             output_len: output_len.max(1),
+            class: SloClass::Standard,
         }
+    }
+
+    /// Builder-style class override (trace layer / server frontend).
+    pub fn with_class(mut self, class: SloClass) -> Self {
+        self.class = class;
+        self
     }
 
     /// Total KV-cache tokens this request will occupy at completion.
@@ -113,6 +208,9 @@ pub struct RequestRecord {
     pub arrival: Time,
     pub input_len: u32,
     pub output_len: u32,
+    /// Service tier (PR 8): copied from the request at admission; the
+    /// metrics layer judges each record against its *own* class targets.
+    pub class: SloClass,
     /// Time the first token was emitted (end of prefill). None => failed
     /// before prefill completed.
     pub first_token: Option<Time>,
@@ -149,6 +247,7 @@ impl RequestRecord {
             arrival: req.arrival,
             input_len: req.input_len,
             output_len: req.output_len,
+            class: req.class,
             first_token: None,
             // The simulator pushes exactly output_len token timestamps for
             // a finished request; reserving up front keeps the per-token
@@ -261,6 +360,16 @@ impl RequestRecord {
             (Some(a), Some(b)) => a <= ttft_slo && b <= tpot_slo,
             _ => false,
         }
+    }
+
+    /// Did this request meet *its own class's* SLOs, derived from the
+    /// workload's base pair? For `Standard` this is exactly
+    /// [`RequestRecord::meets_slo`] on the base pair (no arithmetic).
+    pub fn meets_class_slo(&self, base_ttft: f64, base_tpot: f64) -> bool {
+        self.meets_slo(
+            self.class.ttft_slo(base_ttft),
+            self.class.tpot_slo(base_tpot),
+        )
     }
 }
 
@@ -385,5 +494,49 @@ mod tests {
         assert_eq!(r.input_len, 1);
         assert_eq!(r.output_len, 1);
         assert_eq!(r.total_tokens(), 2);
+    }
+
+    /// PR 8: Standard is the default class and its targets are the base
+    /// pair *bit for bit* — no multiply may sneak in, or all-default
+    /// traces would stop reproducing pre-class schedules/metrics exactly.
+    #[test]
+    fn standard_class_is_transparent() {
+        let r = Request::new(4, 0.0, 5, 5);
+        assert_eq!(r.class, SloClass::Standard);
+        for base in [3.0, 0.1, 0.3 + 0.1 + 0.2, f64::MIN_POSITIVE] {
+            assert_eq!(SloClass::Standard.ttft_slo(base).to_bits(), base.to_bits());
+            assert_eq!(SloClass::Standard.tpot_slo(base).to_bits(), base.to_bits());
+        }
+        let rec = mk_record(0.0, &[0.5, 0.6]);
+        assert_eq!(rec.meets_class_slo(1.0, 0.2), rec.meets_slo(1.0, 0.2));
+    }
+
+    #[test]
+    fn class_ranks_and_targets_are_ordered() {
+        assert!(SloClass::Interactive.priority_rank() < SloClass::Standard.priority_rank());
+        assert!(SloClass::Standard.priority_rank() < SloClass::Batch.priority_rank());
+        assert!(SloClass::Interactive.ttft_slo(2.0) < SloClass::Standard.ttft_slo(2.0));
+        assert!(SloClass::Standard.tpot_slo(0.1) < SloClass::Batch.tpot_slo(0.1));
+        for (i, c) in SloClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+            assert_eq!(SloClass::from_label(c.label()), Some(*c));
+        }
+        assert_eq!(SloClass::from_label("premium"), None);
+    }
+
+    #[test]
+    fn class_flows_from_request_to_record() {
+        let r = Request::new(5, 0.0, 5, 5).with_class(SloClass::Batch);
+        assert_eq!(r.class, SloClass::Batch);
+        let rec = RequestRecord::new(&r);
+        assert_eq!(rec.class, SloClass::Batch);
+        // Batch targets are 4x base: a TTFT of 3.0 misses base 1.0 but
+        // meets the batch-scaled 4.0.
+        let mut rec = rec;
+        rec.push_token(3.0);
+        rec.push_token(3.05);
+        rec.state = RequestState::Finished;
+        assert!(!rec.meets_slo(1.0, 0.2));
+        assert!(rec.meets_class_slo(1.0, 0.2));
     }
 }

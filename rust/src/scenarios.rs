@@ -19,7 +19,7 @@ use crate::costmodel::CostModel;
 use crate::engine::SimInstance;
 use crate::fault::TransferRetryPolicy;
 use crate::request::InstanceId;
-use crate::sim::{Cluster, MembershipChange, SimConfig, MONITOR_PERIOD};
+use crate::sim::{AdmissionControl, Cluster, MembershipChange, SimConfig, MONITOR_PERIOD};
 
 /// Systems evaluated in Fig. 7 / Fig. 8.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -72,6 +72,45 @@ pub fn build(
     record_timeline: bool,
 ) -> Cluster {
     build_time_scaled(system, n_gpus, base, ttft_slo, tpot_slo, record_timeline, 1.0)
+}
+
+/// [`build`]'s Arrow arm with the PR 8 knobs exposed: the class-aware
+/// scheduling toggle ([`ArrowConfig::class_aware`]) and optional
+/// admission control. With `class_aware = true` and `admission = None`
+/// this is byte-identical to `build(System::Arrow, ..)` on an
+/// all-Standard trace (Standard's scaled targets *are* the base pair and
+/// the all-zero rank stream reproduces FIFO order) — the metamorphic
+/// tier pins that. The claims harness uses it to compare class-aware
+/// vs class-blind Arrow on a mixed-class trace under the same
+/// admission cap.
+pub fn build_arrow_classed(
+    n_gpus: usize,
+    base: &CostModel,
+    ttft_slo: f64,
+    tpot_slo: f64,
+    class_aware: bool,
+    admission: Option<AdmissionControl>,
+) -> Cluster {
+    assert!(n_gpus >= 2, "scenarios need >= 2 GPUs");
+    let cfg = SimConfig {
+        record_timeline: false,
+        drain_timeout: 300.0,
+        monitor_period: MONITOR_PERIOD,
+        admission,
+        ..Default::default()
+    };
+    let mut pcfg = ArrowConfig::new(ttft_slo, tpot_slo, n_gpus);
+    pcfg.class_aware = class_aware;
+    let policy = ArrowPolicy::new(pcfg, n_gpus);
+    let cost = Arc::new(base.clone());
+    let instances: Vec<SimInstance> = (0..n_gpus)
+        .map(|i| {
+            let mut inst = SimInstance::new(InstanceId(i), Arc::clone(&cost));
+            inst.iter_time_budget = Some(0.8 * tpot_slo);
+            inst
+        })
+        .collect();
+    Cluster::new(instances, Box::new(policy), cfg)
 }
 
 /// [`build`] with every *time* dimension dilated by `time_scale`: cost

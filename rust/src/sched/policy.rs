@@ -110,9 +110,29 @@ pub mod tests_support {
     }
 
     /// Fixed prefill/decode instance sets, round-robin within each.
+    ///
+    /// An empty set no longer panics with a mod-by-zero on the first
+    /// placement (PR 8): a phase whose set is empty falls back to the
+    /// other phase's set (degenerate colocated split). Both sets empty is
+    /// an unusable policy and panics with an explicit message instead of
+    /// an arithmetic error deep in a modulo.
     pub struct StaticSplit {
         pub prefill: Vec<usize>,
         pub decode: Vec<usize>,
+    }
+
+    impl StaticSplit {
+        /// Round-robin over `primary`, falling back to `fallback` when
+        /// `primary` is empty.
+        fn pick(primary: &[usize], fallback: &[usize], id: u64, phase: &str) -> InstanceId {
+            let set = if !primary.is_empty() { primary } else { fallback };
+            assert!(
+                !set.is_empty(),
+                "StaticSplit: both prefill and decode instance sets are empty — \
+                 cannot place {phase} for request r{id}"
+            );
+            InstanceId(set[id as usize % set.len()])
+        }
     }
 
     impl Policy for StaticSplit {
@@ -121,7 +141,7 @@ pub mod tests_support {
         }
 
         fn place_prefill(&mut self, _: Time, req: &Request, _: &dyn ClusterView) -> InstanceId {
-            InstanceId(self.prefill[req.id.0 as usize % self.prefill.len()])
+            StaticSplit::pick(&self.prefill, &self.decode, req.id.0, "prefill")
         }
 
         fn place_decode(
@@ -131,7 +151,72 @@ pub mod tests_support {
             _prefill: InstanceId,
             _: &dyn ClusterView,
         ) -> InstanceId {
-            InstanceId(self.decode[req.id.0 as usize % self.decode.len()])
+            StaticSplit::pick(&self.decode, &self.prefill, req.id.0, "decode")
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::StaticSplit;
+    use super::*;
+
+    /// Minimal no-op view so the placement methods can be exercised
+    /// without standing up a substrate.
+    struct NullView;
+
+    impl ClusterView for NullView {
+        fn n_instances(&self) -> usize {
+            0
+        }
+        fn for_each_queued_prefill(&self, _: usize, _: &mut dyn FnMut(u32, u32)) {}
+        fn running_tokens(&self, _: usize) -> u64 {
+            0
+        }
+        fn max_kv_tokens(&self, _: usize) -> u64 {
+            0
+        }
+        fn avg_token_interval(&self, _: usize) -> f64 {
+            f64::NAN
+        }
+        fn has_prefill_work(&self, _: usize) -> bool {
+            false
+        }
+        fn has_decode_work(&self, _: usize) -> bool {
+            false
+        }
+    }
+
+    /// PR 8 regression: an empty phase set used to panic with a
+    /// mod-by-zero (`% 0`) on the first placement. Now it falls back to
+    /// the other set.
+    #[test]
+    fn empty_phase_set_falls_back_to_other_phase() {
+        let mut p = StaticSplit {
+            prefill: vec![],
+            decode: vec![3, 4],
+        };
+        let r = Request::new(0, 0.0, 8, 8);
+        assert_eq!(p.place_prefill(0.0, &r, &NullView), InstanceId(3));
+        let r1 = Request::new(1, 0.0, 8, 8);
+        assert_eq!(p.place_prefill(0.0, &r1, &NullView), InstanceId(4));
+        assert_eq!(p.place_decode(0.0, &r1, InstanceId(3), &NullView), InstanceId(4));
+
+        let mut q = StaticSplit {
+            prefill: vec![7],
+            decode: vec![],
+        };
+        assert_eq!(q.place_decode(0.0, &r, InstanceId(7), &NullView), InstanceId(7));
+    }
+
+    #[test]
+    #[should_panic(expected = "both prefill and decode instance sets are empty")]
+    fn both_sets_empty_panics_with_clear_message() {
+        let mut p = StaticSplit {
+            prefill: vec![],
+            decode: vec![],
+        };
+        let r = Request::new(0, 0.0, 8, 8);
+        p.place_prefill(0.0, &r, &NullView);
     }
 }

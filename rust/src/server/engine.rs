@@ -20,7 +20,14 @@ pub enum EngineCmd {
     /// Run the prefill phase of a request. The prompt is shared with the
     /// coordinator's retained copy (failure re-dispatch) — an `Arc`
     /// refcount, not a per-dispatch memcpy of up-to-60k-token prompts.
-    Prefill { req: u64, prompt: Arc<[i32]> },
+    /// `rank` is the SLO-class queue priority (PR 8): lower ranks are
+    /// served first, equal ranks keep FIFO order, so an all-default-rank
+    /// stream behaves exactly like the old plain queue.
+    Prefill {
+        req: u64,
+        prompt: Arc<[i32]>,
+        rank: u8,
+    },
     /// Adopt a prefilled request for decoding (KV slab included — this is
     /// the migration payload when the prefill ran elsewhere).
     StartDecode {
@@ -234,14 +241,14 @@ fn engine_loop(
 ) {
     let mut decode = rt.new_decode_state();
     let mut slots: Vec<Option<SlotState>> = (0..decode.batch()).map(|_| None).collect();
-    let mut prefill_q: VecDeque<(u64, Arc<[i32]>)> = VecDeque::new();
+    let mut prefill_q: VecDeque<(u64, Arc<[i32]>, u8)> = VecDeque::new();
     let mut pending_decode: VecDeque<EngineCmd> = VecDeque::new();
     // Recent token-interval EMA (paper §5.3 TPOT proxy). Idle gaps are
     // not decode evidence: the anchor resets when the batch drains.
     let mut last_decode_iter: Option<Instant> = None;
     let mut interval_ema = f64::NAN;
 
-    let publish = |prefill_q: &VecDeque<(u64, Arc<[i32]>)>,
+    let publish = |prefill_q: &VecDeque<(u64, Arc<[i32]>, u8)>,
                    pending_decode: &VecDeque<EngineCmd>,
                    decode: &DecodeBatchState,
                    iters: u64| {
@@ -294,8 +301,16 @@ fn engine_loop(
         while let Some(c) = cmd {
             match c {
                 EngineCmd::Shutdown => return,
-                EngineCmd::Prefill { req, prompt } => {
-                    prefill_q.push_back((req, prompt));
+                EngineCmd::Prefill { req, prompt, rank } => {
+                    // Rank-ordered insert (PR 8): before the first entry
+                    // with a *strictly* greater rank — equal ranks stay
+                    // FIFO. Unlike the simulator there is no in-progress
+                    // head to protect: step 3 below always runs the
+                    // popped prefill to completion in the same pass.
+                    let pos = (0..prefill_q.len())
+                        .find(|&i| prefill_q[i].2 > rank)
+                        .unwrap_or(prefill_q.len());
+                    prefill_q.insert(pos, (req, prompt, rank));
                 }
                 c @ EngineCmd::StartDecode { .. } => pending_decode.push_back(c),
                 EngineCmd::BlockingPrefill { prompt, reply } => {
@@ -347,7 +362,7 @@ fn engine_loop(
         }
 
         // 3. One queued prefill (whole bucket — prompts are short here).
-        if let Some((req, prompt)) = prefill_q.pop_front() {
+        if let Some((req, prompt, _rank)) = prefill_q.pop_front() {
             match rt.prefill(&prompt) {
                 Ok(out) => {
                     let _ = events.send(EngineEvent::PrefillDone {

@@ -31,7 +31,7 @@ use crate::coordinator::arrow::{ArrowConfig, ArrowPolicy};
 use crate::coordinator::predictor::TtftPredictor;
 use crate::http::{self, HttpRequest, HttpResponse};
 use crate::json::Json;
-use crate::request::{InstanceId, Request};
+use crate::request::{InstanceId, Request, SloClass};
 use crate::sched::{
     FixedProfile, Liveness, MembershipEvent, Policy, PrefillQueueMoments, EPOCH_UNKNOWN,
 };
@@ -89,6 +89,9 @@ enum CoordMsg {
         prompt: Vec<i32>,
         max_tokens: usize,
         t0: Instant,
+        /// SLO class (PR 8): carried from the HTTP body into placement
+        /// (class-aware Arrow) and engine queue priority.
+        class: SloClass,
     },
     Engine(EngineEvent),
     Tick,
@@ -147,6 +150,9 @@ struct Inflight {
     /// How many times an engine refused a command for this request (PR 6):
     /// bounded stateless re-placement before the explicit failure answer.
     dispatch_attempts: u32,
+    /// SLO class (PR 8): drives class-aware placement targets and the
+    /// engine-side prefill queue rank, including on re-dispatch.
+    class: SloClass,
 }
 
 /// Scheduler state published for `/metrics` (lock-free reads from HTTP
@@ -161,6 +167,10 @@ pub struct SchedPublish {
     /// 3 = degraded), refreshed after every membership transition. Mutex
     /// is fine: only `/metrics` reads it, and transitions are rare.
     states: Mutex<Vec<u8>>,
+    /// Requests refused at the door by class-aware admission (PR 8),
+    /// indexed by [`SloClass::index`]. Written by HTTP handler threads,
+    /// read by `/metrics` — the no-silent-loss ledger of the 503 path.
+    shed_by_class: [AtomicU64; 3],
 }
 
 impl SchedPublish {
@@ -169,7 +179,21 @@ impl SchedPublish {
             pools_packed: AtomicU64::new(0),
             flips: AtomicU64::new(0),
             states: Mutex::new(Vec::new()),
+            shed_by_class: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
         }
+    }
+
+    fn record_shed(&self, class: SloClass) {
+        self.shed_by_class[class.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Admission sheds per class, in [`SloClass::ALL`] order.
+    pub fn sheds(&self) -> [u64; 3] {
+        [
+            self.shed_by_class[0].load(Ordering::Relaxed),
+            self.shed_by_class[1].load(Ordering::Relaxed),
+            self.shed_by_class[2].load(Ordering::Relaxed),
+        ]
     }
 
     /// Liveness code per engine slot (0 active, 1 draining, 2 dead,
@@ -342,6 +366,7 @@ impl Coordinator {
                 prompt,
                 max_tokens,
                 t0,
+                class,
             } => {
                 self.inflight.insert(
                     req,
@@ -352,6 +377,7 @@ impl Coordinator {
                         decode_engine: None,
                         first_token_s: None,
                         dispatch_attempts: 0,
+                        class,
                     },
                 );
                 self.dispatch_prefill(req);
@@ -478,9 +504,11 @@ impl Coordinator {
         fl.decode_engine = None;
         let prompt = Arc::clone(&fl.prompt);
         let max_tokens = fl.max_tokens;
+        let class = fl.class;
         let now = self.now_s();
         let snapshot = self.view();
-        let r = Request::new(req, now, prompt.len() as u32, max_tokens as u32);
+        let r = Request::new(req, now, prompt.len() as u32, max_tokens as u32)
+            .with_class(class);
         let target = self.policy.place_prefill(now, &r, &snapshot);
         // A policy must only name real instances; clamp in
         // release (stay serving) but fail loudly in debug.
@@ -500,7 +528,11 @@ impl Coordinator {
         let len = prompt.len() as u32;
         self.queued[t].push((req, len));
         self.moments[t].add_task(len, len, self.chunks[t]);
-        if self.engines[t].send(EngineCmd::Prefill { req, prompt }).is_err() {
+        let rank = class.priority_rank();
+        if self.engines[t]
+            .send(EngineCmd::Prefill { req, prompt, rank })
+            .is_err()
+        {
             self.unqueue_prefill(t, req);
             self.retry_or_fail(req);
         }
@@ -681,13 +713,13 @@ impl Coordinator {
                     return;
                 }
                 self.unqueue_prefill(engine, req);
-                let max_tokens = match self.inflight.get_mut(&req) {
+                let (max_tokens, class) = match self.inflight.get_mut(&req) {
                     Some(fl) => {
                         // First token exists now — wall-clock TTFT.
                         fl.first_token_s = Some(fl.t0.elapsed().as_secs_f64());
-                        fl.max_tokens
+                        (fl.max_tokens, fl.class)
                     }
-                    None => 1,
+                    None => (1, SloClass::Standard),
                 };
                 if max_tokens <= 1 {
                     self.finish(req, vec![first_token]);
@@ -697,7 +729,8 @@ impl Coordinator {
                 // (target == engine) avoids the cross-engine memcpy.
                 let now = self.now_s();
                 let snapshot = self.view();
-                let r = Request::new(req, now, prompt_len as u32, max_tokens as u32);
+                let r = Request::new(req, now, prompt_len as u32, max_tokens as u32)
+                    .with_class(class);
                 let target =
                     self.policy
                         .place_decode(now, &r, InstanceId(engine), &snapshot);
@@ -1020,6 +1053,17 @@ fn route(
                     Json::Arr(pools.iter().map(|&p| Json::Num(p as f64)).collect()),
                 ),
                 ("flips", Json::Num(sched.flips() as f64)),
+                // Class-aware admission ledger (PR 8): 503s per class.
+                (
+                    "shed_by_class",
+                    Json::obj(
+                        SloClass::ALL
+                            .iter()
+                            .zip(sched.sheds())
+                            .map(|(c, n)| (c.label(), Json::Num(n as f64)))
+                            .collect(),
+                    ),
+                ),
                 ("instances", Json::Num(states.len() as f64)),
                 ("live_instances", Json::Num(live as f64)),
                 (
@@ -1158,11 +1202,35 @@ fn route(
                 },
             };
 
+            // SLO class (PR 8): optional "class" body field; absent means
+            // Standard — exactly the pre-class behavior.
+            let class = match body.get("class") {
+                Json::Null => SloClass::Standard,
+                v => match v.as_str().and_then(SloClass::from_label) {
+                    Some(c) => c,
+                    None => {
+                        return HttpResponse::json(
+                            400,
+                            "{\"error\":\"'class' must be interactive|standard|batch\"}",
+                        )
+                    }
+                },
+            };
+
             // Admission control (PR 6, §5.5 overload rule): shed at the
             // door with an honest 503 once too many requests are already
             // waiting — decode-priority scheduling will not drain a
             // runaway queue soon, and an eternal hang helps nobody.
-            if lock_ok(waiters).len() >= cfg.max_inflight {
+            // Class-aware (PR 8): batch work sheds at half the cap so
+            // overload degrades the right traffic first. Standard and
+            // interactive keep the full PR-6 cap — default (class-less)
+            // clients see exactly the old admission behavior.
+            let cap = match class {
+                SloClass::Batch => (cfg.max_inflight / 2).max(1),
+                SloClass::Standard | SloClass::Interactive => cfg.max_inflight,
+            };
+            if lock_ok(waiters).len() >= cap {
+                sched.record_shed(class);
                 return HttpResponse::json(503, "{\"error\":\"overloaded, retry later\"}");
             }
 
@@ -1177,6 +1245,7 @@ fn route(
                     prompt: tokens,
                     max_tokens,
                     t0: Instant::now(),
+                    class,
                 })
                 .is_err()
             {

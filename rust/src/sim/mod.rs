@@ -57,7 +57,9 @@ use std::sync::Arc;
 use crate::costmodel::CostModel;
 use crate::engine::{IterationPlan, Produced, SimInstance, Transfer, TransferFabric};
 use crate::fault::{FaultKind, FaultPlan, TransferRetryPolicy};
-use crate::request::{InstanceId, Request, RequestId, RequestRecord, RequestState, ShedReason, Time};
+use crate::request::{
+    InstanceId, Request, RequestId, RequestRecord, RequestState, ShedReason, SloClass, Time,
+};
 use crate::sched::{Epoched, Liveness, MembershipEvent};
 use crate::trace::stream::{ArrivalSource, TraceSource};
 use crate::trace::Trace;
@@ -160,6 +162,59 @@ impl Ord for Event {
 // Cluster configuration & snapshots
 // ---------------------------------------------------------------------------
 
+/// Class-aware admission control (PR 8): gate *fresh* arrivals on the
+/// number of requests currently in flight, shedding lax-SLO work first.
+/// Batch is refused once in-flight load reaches `batch_headroom ×
+/// max_inflight`, Standard at `standard_headroom × max_inflight`, and
+/// Interactive only at the full cap. With `class_aware` false every class
+/// sheds at the full cap — the class-blind baseline the claims harness
+/// compares against. Refused requests fail explicitly with
+/// [`ShedReason::NoCapacity`] (the PR-6 no-silent-loss contract); restarts
+/// and re-placements of already-admitted requests are never re-gated.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionControl {
+    /// Hard in-flight cap; every class is refused at or above this.
+    pub max_inflight: usize,
+    /// Batch sheds at this fraction of the cap (default 0.5).
+    pub batch_headroom: f64,
+    /// Standard sheds at this fraction of the cap (default 0.8).
+    pub standard_headroom: f64,
+    /// When false, classes are ignored: one cap for all.
+    pub class_aware: bool,
+}
+
+impl AdmissionControl {
+    pub fn new(max_inflight: usize) -> Self {
+        AdmissionControl {
+            max_inflight,
+            batch_headroom: 0.5,
+            standard_headroom: 0.8,
+            class_aware: true,
+        }
+    }
+
+    /// In-flight cap applied to `class`. Fractions floor to an integer
+    /// count, never below 1 — a nonzero cap must admit *something* of
+    /// every class when the system is empty.
+    fn cap_for(&self, class: SloClass) -> usize {
+        if !self.class_aware {
+            return self.max_inflight;
+        }
+        let frac = match class {
+            SloClass::Interactive => 1.0,
+            SloClass::Standard => self.standard_headroom,
+            SloClass::Batch => self.batch_headroom,
+        };
+        ((self.max_inflight as f64 * frac) as usize).max(1)
+    }
+
+    /// Would a fresh arrival of `class` be admitted with `inflight`
+    /// other requests currently in the system?
+    pub fn admits(&self, class: SloClass, inflight: usize) -> bool {
+        inflight < self.cap_for(class)
+    }
+}
+
 /// Per-simulation knobs beyond instance hardware.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
@@ -188,6 +243,9 @@ pub struct SimConfig {
     /// recovers. `None` (default) disables detection entirely — fault-free
     /// scenarios keep their exact schedules.
     pub straggler_factor: Option<f64>,
+    /// Class-aware overload admission (PR 8). `None` (default) admits
+    /// everything — existing schedules stay byte-identical.
+    pub admission: Option<AdmissionControl>,
 }
 
 impl Default for SimConfig {
@@ -200,6 +258,7 @@ impl Default for SimConfig {
             monitor_period: MONITOR_PERIOD,
             transfer_retry: None,
             straggler_factor: None,
+            admission: None,
         }
     }
 }
@@ -495,6 +554,13 @@ impl Cluster {
     /// calendar-vs-heap equivalence property test; O(N) heap, slow.
     #[doc(hidden)]
     pub fn run_reference(self, trace: &Trace) -> SimResult {
+        // The admission gate counts in-flight work as `arrived - done`,
+        // which only holds when arrivals are admitted one at a time; the
+        // pre-pushed reference heap admits them all up front.
+        assert!(
+            self.cfg.admission.is_none(),
+            "run_reference predates admission control; use run()"
+        );
         let mut src = TraceSource::new(trace);
         self.run_core(&mut src, Some(trace.duration()), true, None)
     }
@@ -627,7 +693,23 @@ impl Cluster {
                 if self.now > deadline {
                     break;
                 }
-                self.on_arrival(idx);
+                // Overload admission (PR 8): fresh arrivals only. Heap
+                // Arrival events (reference mode, restarts) never pass
+                // through here, so already-admitted work is not re-gated.
+                let admitted = match self.cfg.admission {
+                    Some(ac) => {
+                        // `arrived` already counts this request; in-flight
+                        // is everyone else still in the system.
+                        let inflight = self.arrived - self.done - 1;
+                        ac.admits(self.slot(idx).req.class, inflight)
+                    }
+                    None => true,
+                };
+                if admitted {
+                    self.on_arrival(idx);
+                } else {
+                    self.shed(idx, ShedReason::NoCapacity);
+                }
             } else {
                 let Reverse(ev) = self.events.pop().unwrap();
                 debug_assert!(ev.time >= self.now - 1e-9, "time went backwards");
@@ -768,7 +850,15 @@ impl Cluster {
             rec.prefill_instance = Some(target);
             rec.state = RequestState::Prefilling;
         }
-        self.instances[target.0].enqueue_prefill(req.id, req.input_len);
+        // Priority enqueue (PR 8): strict-SLO classes jump ahead of lax
+        // ones in the prefill queue; equal ranks keep FIFO order, so an
+        // all-Standard trace reproduces the plain push_back schedule
+        // bit for bit.
+        self.instances[target.0].enqueue_prefill_ranked(
+            req.id,
+            req.input_len,
+            req.class.priority_rank(),
+        );
         self.touch();
         self.kick(target.0);
     }
@@ -1574,6 +1664,121 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// A non-binding admission gate must not perturb the schedule: the
+    /// gate only decides admit/shed, it never reorders events.
+    #[test]
+    fn slack_admission_gate_is_transparent() {
+        let trace = smoke(60, 2).generate(7);
+        let base = Cluster::homogeneous(
+            2,
+            small_cost(),
+            Box::new(AllToOne),
+            SimConfig::default(),
+        )
+        .run(&trace);
+        let gated = Cluster::homogeneous(
+            2,
+            small_cost(),
+            Box::new(AllToOne),
+            SimConfig {
+                admission: Some(AdmissionControl::new(10_000)),
+                ..SimConfig::default()
+            },
+        )
+        .run(&trace);
+        assert_eq!(base.events_processed, gated.events_processed);
+        for (x, y) in base.records.iter().zip(&gated.records) {
+            assert_eq!(x.token_times, y.token_times);
+            assert_eq!(x.state, y.state);
+        }
+    }
+
+    /// Deterministic overload burst: 12 simultaneous arrivals against an
+    /// in-flight cap of 8 (batch headroom 4, standard 6). The gate must
+    /// shed exactly the arrivals whose class cap is full — batch first —
+    /// and every shed must carry an explicit reason (no silent loss).
+    #[test]
+    fn admission_sheds_batch_first_under_burst() {
+        let classes = [
+            SloClass::Batch,
+            SloClass::Batch,
+            SloClass::Batch,
+            SloClass::Batch,
+            SloClass::Batch,
+            SloClass::Standard,
+            SloClass::Standard,
+            SloClass::Standard,
+            SloClass::Interactive,
+            SloClass::Interactive,
+            SloClass::Interactive,
+            SloClass::Interactive,
+        ];
+        let burst = |i: usize, class: SloClass| {
+            Request::new(i as u64, 0.0, 64, 4).with_class(class)
+        };
+        let trace = Trace::new(
+            "burst",
+            classes
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| burst(i, c))
+                .collect(),
+        );
+        let run = |class_aware: bool| {
+            let mut ac = AdmissionControl::new(8);
+            ac.class_aware = class_aware;
+            Cluster::homogeneous(
+                1,
+                small_cost(),
+                Box::new(AllToOne),
+                SimConfig {
+                    admission: Some(ac),
+                    ..SimConfig::default()
+                },
+            )
+            .run(&trace)
+        };
+
+        let aware = run(true);
+        let shed_idx: Vec<usize> = aware
+            .records
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.state == RequestState::Failed)
+            .map(|(i, _)| i)
+            .collect();
+        // Walk the burst: batch admits while <4 in flight (indices 0–3),
+        // standard while <6 (5, 6), interactive while <8 (8, 9).
+        assert_eq!(shed_idx, vec![4, 7, 10, 11]);
+        for rec in &aware.records {
+            if rec.state == RequestState::Failed {
+                assert_eq!(rec.shed, Some(ShedReason::NoCapacity));
+            } else {
+                assert!(rec.finished());
+            }
+        }
+
+        // Class-blind baseline: one cap of 8 for everyone — the first 8
+        // arrivals (all batch + standard) squeeze out every interactive.
+        let blind = run(false);
+        let blind_interactive_shed = blind
+            .records
+            .iter()
+            .filter(|r| {
+                r.class == SloClass::Interactive && r.state == RequestState::Failed
+            })
+            .count();
+        let aware_interactive_shed = aware
+            .records
+            .iter()
+            .filter(|r| {
+                r.class == SloClass::Interactive && r.state == RequestState::Failed
+            })
+            .count();
+        assert_eq!(blind_interactive_shed, 4);
+        assert_eq!(aware_interactive_shed, 2);
     }
 
     /// Regression for the latent `partial_cmp().unwrap()` panic: events

@@ -20,8 +20,56 @@
 //! marginal CDFs and the joint correlation are controlled.
 
 use super::Trace;
-use crate::request::Request;
+use crate::request::{Request, SloClass};
 use crate::util::rng::Rng;
+
+/// Deterministic SLO-class mix of a workload (PR 8): the fraction of
+/// requests assigned to the interactive and batch tiers (the remainder is
+/// standard). The default is all-zero — every request stays
+/// [`SloClass::Standard`] and generation is *bit-identical* to the
+/// pre-class trace layer (assignment is skipped entirely, and it never
+/// consumes the arrival/length RNG stream in any case).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ClassMix {
+    /// Fraction of requests in the interactive tier, in [0, 1].
+    pub interactive: f64,
+    /// Fraction of requests in the batch tier, in [0, 1].
+    pub batch: f64,
+}
+
+impl ClassMix {
+    /// All-standard mix — the transparent default.
+    pub fn standard_only() -> ClassMix {
+        ClassMix::default()
+    }
+
+    pub fn is_single_class(&self) -> bool {
+        self.interactive == 0.0 && self.batch == 0.0
+    }
+
+    /// Deterministic, seed-free class of request `id`: a bit-mixed hash
+    /// of the id mapped to [0, 1) and cut against the mix fractions.
+    /// Independent of the trace RNG stream, so turning a mix on or off
+    /// never perturbs arrivals or lengths — only the `class` field.
+    pub fn assign(&self, id: u64) -> SloClass {
+        if self.is_single_class() {
+            return SloClass::Standard;
+        }
+        // splitmix64 finalizer: uniform bits from sequential ids.
+        let mut h = id.wrapping_add(0x9e3779b97f4a7c15);
+        h = (h ^ (h >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        h = (h ^ (h >> 27)).wrapping_mul(0x94d049bb133111eb);
+        h ^= h >> 31;
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u < self.interactive {
+            SloClass::Interactive
+        } else if u < self.interactive + self.batch {
+            SloClass::Batch
+        } else {
+            SloClass::Standard
+        }
+    }
+}
 
 /// Complete parameterization of one synthetic workload.
 #[derive(Debug, Clone)]
@@ -49,6 +97,9 @@ pub struct WorkloadSpec {
     pub io_rho: f64,
     pub max_input: u32,
     pub max_output: u32,
+    /// SLO-class mix (PR 8). Defaults to all-standard, which leaves the
+    /// generated trace bit-identical to the pre-class generator.
+    pub class_mix: ClassMix,
 }
 
 impl WorkloadSpec {
@@ -109,13 +160,27 @@ impl WorkloadSpec {
     ) {
         out.clear();
         let count = poisson(rng, lam);
+        let single_class = self.class_mix.is_single_class();
         for _ in 0..count {
             let arrival = (minute as f64 + rng.f64()) * 60.0;
             let (inp, outl) = self.sample_lengths(rng);
-            out.push(Request::new(*id, arrival, inp, outl));
+            // Class assignment hashes the id — it never touches `rng`, so
+            // arrivals/lengths are identical whatever the mix; the
+            // single-class fast path skips even the hash.
+            let mut r = Request::new(*id, arrival, inp, outl);
+            if !single_class {
+                r = r.with_class(self.class_mix.assign(*id));
+            }
+            out.push(r);
             *id += 1;
         }
         out.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    }
+
+    /// Builder-style class-mix override (claims harness / tests).
+    pub fn with_class_mix(mut self, mix: ClassMix) -> Self {
+        self.class_mix = mix;
+        self
     }
 
     /// Correlated lognormal input/output lengths.
@@ -186,6 +251,7 @@ pub fn azure_code() -> WorkloadSpec {
         io_rho: 0.96,
         max_input: 120_000,
         max_output: 4_096,
+        class_mix: ClassMix::default(),
     }
 }
 
@@ -207,6 +273,7 @@ pub fn azure_conversation() -> WorkloadSpec {
         io_rho: 0.30,
         max_input: 100_000,
         max_output: 8_192,
+        class_mix: ClassMix::default(),
     }
 }
 
@@ -228,6 +295,7 @@ pub fn burstgpt() -> WorkloadSpec {
         io_rho: 0.45,
         max_input: 32_768,
         max_output: 4_096,
+        class_mix: ClassMix::default(),
     }
 }
 
@@ -249,6 +317,7 @@ pub fn mooncake_conversation() -> WorkloadSpec {
         io_rho: 0.25,
         max_input: 128_000,
         max_output: 8_192,
+        class_mix: ClassMix::default(),
     }
 }
 
@@ -270,6 +339,7 @@ pub fn smoke(n: usize, duration_min: usize) -> WorkloadSpec {
         io_rho: 0.5,
         max_input: 2_048,
         max_output: 256,
+        class_mix: ClassMix::default(),
     }
 }
 
@@ -377,6 +447,50 @@ mod tests {
                 / n as f64;
             assert!((m - lam).abs() / lam < 0.05, "lam={lam} mean={m}");
         }
+    }
+
+    #[test]
+    fn default_mix_is_all_standard() {
+        let t = smoke(300, 5).generate(42);
+        assert!(t.requests.iter().all(|r| r.class == SloClass::Standard));
+    }
+
+    #[test]
+    fn class_mix_never_perturbs_arrivals_or_lengths() {
+        // PR 8 bit-stability: the class hash must not consume the RNG
+        // stream — the mixed trace is the plain trace plus a class label.
+        let plain = smoke(300, 5).generate(42);
+        let mixed = smoke(300, 5)
+            .with_class_mix(ClassMix { interactive: 0.3, batch: 0.3 })
+            .generate(42);
+        assert_eq!(plain.len(), mixed.len());
+        for (a, b) in plain.requests.iter().zip(&mixed.requests) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!(a.input_len, b.input_len);
+            assert_eq!(a.output_len, b.output_len);
+        }
+        // And the label is a pure function of the id, not of the seed.
+        let reseeded = smoke(300, 5)
+            .with_class_mix(ClassMix { interactive: 0.3, batch: 0.3 })
+            .generate(43);
+        let class_of = |t: &Trace, id| t.requests.iter().find(|r| r.id.0 == id).map(|r| r.class);
+        for id in 0..20u64 {
+            if let (Some(a), Some(b)) = (class_of(&mixed, id), class_of(&reseeded, id)) {
+                assert_eq!(a, b, "class of id {id} must not depend on the seed");
+            }
+        }
+    }
+
+    #[test]
+    fn class_mix_fractions_approximately_honored() {
+        let mix = ClassMix { interactive: 0.25, batch: 0.50 };
+        let t = smoke(2000, 20).with_class_mix(mix).generate(7);
+        let n = t.len() as f64;
+        let count = |c: SloClass| t.requests.iter().filter(|r| r.class == c).count() as f64;
+        assert!((count(SloClass::Interactive) / n - 0.25).abs() < 0.05);
+        assert!((count(SloClass::Batch) / n - 0.50).abs() < 0.05);
+        assert!((count(SloClass::Standard) / n - 0.25).abs() < 0.05);
     }
 
     #[test]

@@ -22,9 +22,9 @@
 
 use arrow::costmodel::CostModel;
 use arrow::metrics::{max_sustainable_rate, SloReport};
-use arrow::request::Request;
-use arrow::scenarios::{build, build_time_scaled, spike_scale_out, System};
-use arrow::sim::SimResult;
+use arrow::request::{Request, SloClass};
+use arrow::scenarios::{build, build_arrow_classed, build_time_scaled, spike_scale_out, System};
+use arrow::sim::{AdmissionControl, SimResult};
 use arrow::trace::{catalog, Trace};
 use arrow::util::rng::Rng;
 
@@ -314,4 +314,116 @@ fn spare_instances_joining_mid_run_never_hurt() {
         re.goodput_tokens,
         rf.goodput_tokens
     );
+}
+
+// ---------------------------------------------------------------------------
+// SLO-class invariants (PR 8)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_class_trace_is_bit_identical_with_and_without_class_awareness() {
+    // The PR 8 contract: on an all-Standard trace (every synthetic
+    // workload's default), class-aware scheduling is a no-op — Standard's
+    // scaled targets *are* the base SLO pair and the all-zero rank stream
+    // reproduces FIFO enqueue order — so the schedule must not move by a
+    // single bit relative to the pre-class builder.
+    let w = catalog::by_name("azure_code").unwrap();
+    let trace = {
+        let t = w.generate(11).clip_seconds(60.0);
+        let r = t.rate();
+        t.with_rate(r * 8.0)
+    };
+    let base = CostModel::normalized();
+    let legacy = build(System::Arrow, 8, &base, w.ttft_slo, w.tpot_slo, false).run(&trace);
+    for aware in [true, false] {
+        let b = build_arrow_classed(8, &base, w.ttft_slo, w.tpot_slo, aware, None).run(&trace);
+        assert_eq!(legacy.records.len(), b.records.len());
+        for (ra, rb) in legacy.records.iter().zip(&b.records) {
+            assert_eq!(
+                ra.prefill_instance, rb.prefill_instance,
+                "class_aware={aware}: prefill placement moved on an all-Standard trace"
+            );
+            assert_eq!(ra.decode_instance, rb.decode_instance, "class_aware={aware}");
+            assert_eq!(ra.state, rb.state, "class_aware={aware}");
+            assert_eq!(ra.token_times.len(), rb.token_times.len());
+            for (ta, tb) in ra.token_times.iter().zip(&rb.token_times) {
+                assert_eq!(
+                    ta.to_bits(),
+                    tb.to_bits(),
+                    "class_aware={aware}: token time drifted on an all-Standard trace"
+                );
+            }
+        }
+        assert_eq!(legacy.total_flips, b.total_flips, "class_aware={aware}");
+        assert_eq!(legacy.total_iterations, b.total_iterations, "class_aware={aware}");
+        assert_eq!(legacy.events_processed, b.events_processed, "class_aware={aware}");
+    }
+}
+
+/// Instant flood of 40 heavy batch requests at t=0, then 5 light
+/// interactive arrivals inside the first half second — before any batch
+/// request can possibly complete (8192-token prefill + 1024 decode
+/// iterations each).
+fn flood_trace() -> Trace {
+    let mut reqs: Vec<Request> = (0..40)
+        .map(|i| Request::new(i, 0.0, 8192, 1024).with_class(SloClass::Batch))
+        .collect();
+    for i in 0..5u64 {
+        reqs.push(
+            Request::new(40 + i, 0.1 * (i + 1) as f64, 256, 16)
+                .with_class(SloClass::Interactive),
+        );
+    }
+    Trace::new("flood", reqs)
+}
+
+#[test]
+fn class_aware_admission_sheds_batch_where_blind_admission_sheds_interactive() {
+    // "Shed the right work": under an identical batch flood and an
+    // identical in-system cap of 12, the class-aware gate refuses batch
+    // at 6 (half headroom) and keeps every interactive request, while the
+    // class-blind gate fills the whole cap with batch and then refuses
+    // the interactive arrivals. The counts are fully determined by the
+    // arrival order (no completion can land inside the first 0.5s), so
+    // they are asserted exactly.
+    let trace = flood_trace();
+    let base = CostModel::normalized();
+    let (ttft_slo, tpot_slo) = (10.0, 0.5);
+    let run = |class_aware: bool| {
+        let mut adm = AdmissionControl::new(12);
+        adm.class_aware = class_aware;
+        build_arrow_classed(4, &base, ttft_slo, tpot_slo, class_aware, Some(adm)).run(&trace)
+    };
+    let failed_by_class = |res: &SimResult, class: SloClass| {
+        res.records
+            .iter()
+            .filter(|r| r.class == class && !r.finished())
+            .count()
+    };
+    let aware = run(true);
+    let blind = run(false);
+    assert_eq!(aware.records.len(), trace.len());
+    assert_eq!(blind.records.len(), trace.len());
+
+    // Aware: 6 of 40 batch admitted (cap 12 x 0.5 headroom), the rest
+    // shed; interactive arrivals see at most 6 + 4 = 10 in flight, under
+    // the full cap, so none is ever refused and all finish.
+    assert_eq!(failed_by_class(&aware, SloClass::Batch), 34);
+    assert_eq!(failed_by_class(&aware, SloClass::Interactive), 0);
+
+    // Blind: batch fills the whole cap (12 admitted, 28 shed) and every
+    // interactive arrival finds 12 in flight — all 5 refused.
+    assert_eq!(failed_by_class(&blind, SloClass::Batch), 28);
+    assert_eq!(failed_by_class(&blind, SloClass::Interactive), 5);
+
+    // The per-class metric agrees: interactive attainment can only be
+    // better under the class-aware gate (blind's is exactly zero).
+    let ra = report(&aware, ttft_slo, tpot_slo, trace.duration());
+    let rb = report(&blind, ttft_slo, tpot_slo, trace.duration());
+    assert_eq!(rb.class_attainment(SloClass::Interactive), 0.0);
+    assert!(
+        ra.class_attainment(SloClass::Interactive) >= rb.class_attainment(SloClass::Interactive)
+    );
+    assert_eq!(ra.n_finished + ra.n_failed, ra.n_requests);
+    assert_eq!(rb.n_finished + rb.n_failed, rb.n_requests);
 }
