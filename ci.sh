@@ -26,7 +26,10 @@
 # peak allocation exceeds 1.1x the 1M-request peak
 # (ARROW_SWEEP_MAX_MEM_RATIO) or throughput drops below 1M events/s;
 # request counts shrink via ARROW_SWEEP_BASE_REQS / ARROW_SWEEP_REQS
-# on slow hardware.
+# on slow hardware. The flight-recorder gate (PR 9) records a demo
+# journal and replays it through both scheduling oracles, exiting
+# non-zero on any decision divergence; the loadgen gate (PR 9) runs the
+# open-loop soak self-test and diffs BENCH_server.json.
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
@@ -143,6 +146,32 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo "== chaos conformance (smoke gate) =="
     ARROW_CHAOS_SMOKE=1 cargo run --release -q --bin arrow -- \
         chaos --out "$smoke_dir/chaos"
+
+    # Flight-recorder gate (PR 9): record a deterministic demo journal,
+    # then replay it through the server-view oracle and again with the
+    # simulator-substrate oracle. `arrow replay <journal>` exits non-zero
+    # on any divergence between a recorded decision and its re-derived
+    # counterpart (placement, pool states, flip count).
+    echo "== record/replay (smoke gate) =="
+    cargo run --release -q --bin arrow -- \
+        replay --record-demo "$smoke_dir/demo.arwj" --seed 42 --steps 400
+    cargo run --release -q --bin arrow -- \
+        replay "$smoke_dir/demo.arwj" --verify
+    cargo run --release -q --bin arrow -- \
+        replay "$smoke_dir/demo.arwj" --verify --sim
+
+    # Open-loop soak smoke (PR 9): the loadgen self-test drives the full
+    # pipeline (Poisson pacer, worker pool, ledger, /metrics cross-check)
+    # against the in-process stub server — exits non-zero on silent loss,
+    # shed-ledger mismatch, or SLO-attainment shortfall. The emitted
+    # BENCH_server.json then diffs against the committed baseline
+    # (sustained RPS higher-is-better, p99 TTFT lower-is-better).
+    echo "== loadgen soak (self-test smoke gate) =="
+    cargo run --release -q --bin arrow -- \
+        loadgen --self-test --smoke --rps 200 --duration 2 \
+        --out "$smoke_dir/BENCH_server.json"
+    cargo run --release -q --bin benchdiff -- \
+        BENCH_server.json "$smoke_dir/BENCH_server.json"
 fi
 
 echo "CI OK"

@@ -20,7 +20,9 @@
 //! * `scale` — `min_decisions_per_sec`,
 //! * `sweep` — `events_per_sec` (higher is better) AND
 //!   `peak_alloc_bytes` (lower is better — a memory regression fails the
-//!   gate exactly like a throughput one, PR 7).
+//!   gate exactly like a throughput one, PR 7),
+//! * `server` — `sustained_rps` (higher is better) AND `p99_ttft_s`
+//!   (lower is better), from the `arrow loadgen` open-loop soak (PR 9).
 //!
 //! Claims reports (`"report": "claims"`, PR 8) diff on the count of
 //! *core* holding claims — `slo_class:`-prefixed claims are excluded
@@ -95,6 +97,14 @@ fn headlines(doc: &Json) -> Vec<(String, f64, Dir)> {
                 doc.get("peak_alloc_bytes").as_f64(),
                 Dir::Lower,
             );
+        }
+        Some("server") => {
+            push(
+                "sustained rps",
+                doc.get("sustained_rps").as_f64(),
+                Dir::Higher,
+            );
+            push("p99 ttft s", doc.get("p99_ttft_s").as_f64(), Dir::Lower);
         }
         other => {
             eprintln!("benchdiff: unknown bench family {other:?}");

@@ -236,6 +236,17 @@ impl SimInstance {
         self.intervals.mean()
     }
 
+    /// Seed the monitor with one observed token interval — the replay
+    /// oracle's hook (PR 9) for reconstructing a recorded instance whose
+    /// `avg_token_interval` was `v`: a single-sample window's mean is
+    /// `v / 1.0`, bitwise `v`. Non-finite values (NaN = no evidence) are
+    /// represented by leaving the window empty, whose mean is NaN.
+    pub fn seed_token_interval(&mut self, v: f64) {
+        if v.is_finite() {
+            self.intervals.push(v);
+        }
+    }
+
     // ------------------------------------------------------------- intake
 
     /// Accept a prefill sub-request. Caller must have verified capacity.

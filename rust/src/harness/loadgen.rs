@@ -1,0 +1,605 @@
+//! Open-loop soak harness (PR 9): `arrow loadgen`.
+//!
+//! Drives `/v1/completions` with open-loop Poisson arrivals — the pacer
+//! sends on the arrival clock regardless of how the server is doing, so
+//! an overloaded server sees the queue it would see in production
+//! instead of the closed-loop mercy of a client that waits for each
+//! response. SLO classes ride along (`--mix`), every sent request is
+//! accounted into exactly one ledger bucket
+//! (`ok/shed/deadline/client-err/conn-err` — sent must equal the sum, so
+//! silent loss is a hard failure), `/metrics` is scraped before and
+//! after to cross-check the server's shed ledger against the client's,
+//! and the result is emitted as `BENCH_server.json` for the benchdiff
+//! trajectory (sustained RPS higher-is-better, p99 TTFT
+//! lower-is-better).
+//!
+//! `--self-test` runs the whole pipeline against an in-process stub
+//! server with a deterministic shed/error schedule — no artifacts, no
+//! live cluster — which is what ci.sh smokes. Wall-clock time is fine
+//! here (unlike the flight recorder's no-wall-clock rule): this is the
+//! measuring client, not the deterministic record.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::http::{self, HttpResponse};
+use crate::json::Json;
+use crate::request::SloClass;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+
+/// `arrow loadgen` configuration.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Base URL of the server under test, e.g. `http://127.0.0.1:8080`.
+    pub url: String,
+    /// Offered (open-loop Poisson) request rate.
+    pub rps: f64,
+    /// Length of the send window in seconds; workers drain afterwards.
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Worker threads issuing the paced requests. Workers bound the
+    /// request *concurrency*, never the arrival process — arrivals queue
+    /// when all workers are busy, exactly like an external load source.
+    pub workers: usize,
+    /// Class weights [interactive, standard, batch] for `Rng::weighted`.
+    pub class_mix: [f64; 3],
+    /// SLO targets used for the client-side attainment proxy: an ok
+    /// request attains its SLO when total latency is within
+    /// `ttft_slo + max_tokens * tpot_slo`.
+    pub ttft_slo: f64,
+    pub tpot_slo: f64,
+    /// Where to write the `BENCH_server.json` report (skipped if None).
+    pub out: Option<String>,
+    /// Mark the emitted report as a smoke-regime run (benchdiff refuses
+    /// cross-regime diffs, same convention as the cargo benches).
+    pub smoke: bool,
+    /// Run against the in-process stub server instead of `url`.
+    pub self_test: bool,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            url: "http://127.0.0.1:8080".into(),
+            rps: 8.0,
+            duration_s: 10.0,
+            seed: 42,
+            workers: 8,
+            class_mix: [0.3, 0.5, 0.2],
+            ttft_slo: 2.0,
+            tpot_slo: 0.5,
+            out: None,
+            smoke: false,
+            self_test: false,
+        }
+    }
+}
+
+/// One paced request, fully determined by the seed before sending starts.
+#[derive(Debug, Clone)]
+struct Planned {
+    /// Offset of the arrival from the start of the send window.
+    at_s: f64,
+    class: SloClass,
+    tokens: Vec<i64>,
+    max_tokens: u64,
+}
+
+/// Where a sent request ended up. Every request lands in exactly one
+/// bucket; `sent == sum(buckets)` is the no-silent-loss invariant.
+#[derive(Debug, Default)]
+struct Ledger {
+    ok: u64,
+    /// 503 admission sheds, by class index.
+    shed: [u64; 3],
+    /// 504 deadline expiries.
+    deadline: u64,
+    /// Any other HTTP status (4xx validation, 5xx handler faults).
+    client_err: u64,
+    /// Connect/socket failures and unparseable responses.
+    conn_err: u64,
+    /// Client-observed total latency of each ok request, seconds.
+    latencies: Vec<f64>,
+    /// Ok requests inside their latency budget (SLO attainment proxy).
+    attained: u64,
+}
+
+impl Ledger {
+    fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+    fn accounted(&self) -> u64 {
+        self.ok + self.shed_total() + self.deadline + self.client_err + self.conn_err
+    }
+}
+
+/// The soak verdict. `ok()` is what `arrow loadgen` exits on.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub mode: &'static str,
+    pub sent: u64,
+    pub ok: u64,
+    pub shed_by_class: [u64; 3],
+    pub deadline: u64,
+    pub client_err: u64,
+    pub conn_err: u64,
+    /// Completed-ok throughput over the whole run (send + drain).
+    pub sustained_rps: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    /// Fraction of ok requests inside their latency budget.
+    pub slo_attainment: f64,
+    /// Server-reported p99 TTFT from the closing `/metrics` scrape
+    /// (NaN when the scrape failed).
+    pub server_p99_ttft_s: f64,
+    /// Server-side shed growth across the run (closing minus opening
+    /// scrape), summed over classes; NaN when either scrape failed.
+    pub server_shed_delta: f64,
+    /// Violated invariants; empty means the soak passed.
+    pub failures: Vec<String>,
+}
+
+impl LoadReport {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "loadgen [{}]: {} sent = {} ok + {} shed + {} deadline + {} client-err + {} conn-err\n",
+            self.mode,
+            self.sent,
+            self.ok,
+            self.shed_by_class.iter().sum::<u64>(),
+            self.deadline,
+            self.client_err,
+            self.conn_err,
+        ));
+        s.push_str(&format!(
+            "  shed by class: interactive {} / standard {} / batch {}\n",
+            self.shed_by_class[0], self.shed_by_class[1], self.shed_by_class[2]
+        ));
+        s.push_str(&format!(
+            "  sustained {:.2} req/s, latency p50 {:.4}s p99 {:.4}s, SLO attainment {:.3}\n",
+            self.sustained_rps, self.p50_latency_s, self.p99_latency_s, self.slo_attainment
+        ));
+        if self.server_p99_ttft_s.is_finite() {
+            s.push_str(&format!(
+                "  server: p99 TTFT {:.4}s, shed delta {:.0}\n",
+                self.server_p99_ttft_s, self.server_shed_delta
+            ));
+        }
+        for f in &self.failures {
+            s.push_str(&format!("  FAIL: {f}\n"));
+        }
+        s
+    }
+
+    fn to_json(&self, cfg: &LoadgenConfig) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str("server".into())),
+            ("smoke", Json::Bool(cfg.smoke)),
+            ("mode", Json::Str(self.mode.into())),
+            ("rps_offered", Json::Num(cfg.rps)),
+            ("duration_s", Json::Num(cfg.duration_s)),
+            ("seed", Json::Num(cfg.seed as f64)),
+            ("workers", Json::Num(cfg.workers as f64)),
+            ("ttft_slo", Json::Num(cfg.ttft_slo)),
+            ("tpot_slo", Json::Num(cfg.tpot_slo)),
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            (
+                "shed_by_class",
+                Json::obj(
+                    SloClass::ALL
+                        .iter()
+                        .zip(self.shed_by_class)
+                        .map(|(c, n)| (c.label(), Json::Num(n as f64)))
+                        .collect(),
+                ),
+            ),
+            ("deadline", Json::Num(self.deadline as f64)),
+            ("client_err", Json::Num(self.client_err as f64)),
+            ("conn_err", Json::Num(self.conn_err as f64)),
+            ("sustained_rps", Json::Num(self.sustained_rps)),
+            ("p50_latency_s", Json::Num(self.p50_latency_s)),
+            ("p99_latency_s", Json::Num(self.p99_latency_s)),
+            ("slo_attainment", Json::Num(self.slo_attainment)),
+            // NaN encodes as JSON null (scrape unavailable).
+            ("p99_ttft_s", Json::Num(self.server_p99_ttft_s)),
+            ("server_shed_delta", Json::Num(self.server_shed_delta)),
+            ("passed", Json::Bool(self.ok())),
+        ])
+    }
+}
+
+/// Plan the whole arrival schedule up front — deterministic in the seed,
+/// independent of how the run goes.
+fn plan(cfg: &LoadgenConfig) -> Vec<Planned> {
+    let mut rng = Rng::new(cfg.seed ^ 0x10ad_6e4e);
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    loop {
+        t += rng.exp(cfg.rps.max(1e-9));
+        if t > cfg.duration_s {
+            return out;
+        }
+        let class = SloClass::ALL[rng.weighted(&cfg.class_mix)];
+        // Log-normal prompt lengths (heavy-tailed, like the paper's
+        // traces), clamped to something a stub engine finishes quickly.
+        let input_len = (rng.lognormal(3.0, 0.8) as i64).clamp(2, 256);
+        let tokens: Vec<i64> = (0..input_len).map(|_| rng.int_range(1, 999)).collect();
+        let max_tokens = rng.int_range(1, 8) as u64;
+        out.push(Planned {
+            at_s: t,
+            class,
+            tokens,
+            max_tokens,
+        });
+    }
+}
+
+/// Raw HTTP/1.1 POST over a fresh connection (the server speaks
+/// Connection: close). Returns (status, body) or None on socket failure.
+fn post_completions(addr: &str, body: &str, timeout: Duration) -> Option<(u16, String)> {
+    let mut s = TcpStream::connect(addr).ok()?;
+    s.set_read_timeout(Some(timeout)).ok();
+    s.set_write_timeout(Some(timeout)).ok();
+    let raw = format!(
+        "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(raw.as_bytes()).ok()?;
+    let mut out = String::new();
+    s.read_to_string(&mut out).ok()?;
+    let status: u16 = out
+        .strip_prefix("HTTP/1.1 ")?
+        .split_whitespace()
+        .next()?
+        .parse()
+        .ok()?;
+    let body = out.split_once("\r\n\r\n").map(|x| x.1.to_string())?;
+    Some((status, body))
+}
+
+/// Scrape `/metrics`; None when unreachable or unparseable.
+fn scrape_metrics(addr: &str) -> Option<Json> {
+    let mut s = TcpStream::connect(addr).ok()?;
+    s.set_read_timeout(Some(Duration::from_secs(10))).ok();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").ok()?;
+    let mut out = String::new();
+    s.read_to_string(&mut out).ok()?;
+    Json::parse(out.split_once("\r\n\r\n")?.1).ok()
+}
+
+fn shed_sum(metrics: &Json) -> f64 {
+    SloClass::ALL
+        .iter()
+        .filter_map(|c| metrics.get("shed_by_class").get(c.label()).as_f64())
+        .sum()
+}
+
+/// Deterministic stub server for `--self-test`: sequence number `i`
+/// (assigned per arriving request) answers 500 when `i % 13 == 0`, 503
+/// when `i % 5 == 0`, 200 otherwise — so the expected ledger is a pure
+/// function of how many requests arrive, and the stub's own shed
+/// counters must match the client's 503 count exactly.
+struct StubServer {
+    addr: String,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl StubServer {
+    fn start() -> Result<StubServer, String> {
+        // Bind :0 to learn a free port, then serve on it (http::serve
+        // binds by string address, same idiom as the http tests).
+        let probe = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
+        let addr = probe.local_addr().map_err(|e| e.to_string())?.to_string();
+        drop(probe);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sd = Arc::clone(&shutdown);
+        let seq = AtomicU64::new(0);
+        let completed = Arc::new(AtomicU64::new(0));
+        let shed: Arc<[AtomicU64; 3]> = Arc::new(Default::default());
+        let a = addr.clone();
+        std::thread::spawn(move || {
+            http::serve(&a, sd, move |req| match (req.method.as_str(), req.path.as_str()) {
+                ("POST", "/v1/completions") => {
+                    let i = seq.fetch_add(1, Ordering::Relaxed);
+                    if i % 13 == 0 {
+                        return HttpResponse::json(500, "{\"error\":\"stub fault\"}");
+                    }
+                    if i % 5 == 0 {
+                        let class = Json::parse(&req.body_str())
+                            .ok()
+                            .and_then(|b| {
+                                b.get("class").as_str().and_then(SloClass::from_label)
+                            })
+                            .unwrap_or(SloClass::Standard);
+                        shed[class.index()].fetch_add(1, Ordering::Relaxed);
+                        return HttpResponse::json(503, "{\"error\":\"queue full\"}");
+                    }
+                    completed.fetch_add(1, Ordering::Relaxed);
+                    HttpResponse::json(200, "{\"tokens\":[1],\"latency_s\":0.001}")
+                }
+                ("GET", "/metrics") => {
+                    let body = Json::obj(vec![
+                        (
+                            "completed_requests",
+                            Json::Num(completed.load(Ordering::Relaxed) as f64),
+                        ),
+                        ("p99_ttft_s", Json::Num(0.001)),
+                        ("p99_tpot_s", Json::Num(0.001)),
+                        (
+                            "shed_by_class",
+                            Json::obj(
+                                SloClass::ALL
+                                    .iter()
+                                    .map(|c| {
+                                        (
+                                            c.label(),
+                                            Json::Num(
+                                                shed[c.index()].load(Ordering::Relaxed) as f64,
+                                            ),
+                                        )
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ]);
+                    HttpResponse::json(200, &body.encode())
+                }
+                _ => HttpResponse::not_found(),
+            })
+        });
+        // Wait for the listener to come up.
+        let t0 = Instant::now();
+        loop {
+            if TcpStream::connect(&addr).is_ok() {
+                return Ok(StubServer { addr, shutdown });
+            }
+            if t0.elapsed() > Duration::from_secs(10) {
+                return Err("self-test stub server never came up".into());
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+impl Drop for StubServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Run the soak. Errors are setup problems (bad URL, stub failure);
+/// soak verdicts live in the returned report's `failures`.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
+    let stub = if cfg.self_test {
+        Some(StubServer::start()?)
+    } else {
+        None
+    };
+    let addr = match &stub {
+        Some(s) => s.addr.clone(),
+        None => cfg
+            .url
+            .strip_prefix("http://")
+            .ok_or("only http:// URLs are supported")?
+            .trim_end_matches('/')
+            .to_string(),
+    };
+
+    let schedule = plan(cfg);
+    let sent = schedule.len() as u64;
+    let before = scrape_metrics(&addr);
+
+    let ledger = Arc::new(Mutex::new(Ledger::default()));
+    let (tx, rx) = mpsc::channel::<Planned>();
+    let rx = Arc::new(Mutex::new(rx));
+    let deadline = Duration::from_secs_f64((cfg.ttft_slo + 8.0 * cfg.tpot_slo).max(30.0));
+    let mut workers = Vec::new();
+    for _ in 0..cfg.workers.max(1) {
+        let rx = Arc::clone(&rx);
+        let ledger = Arc::clone(&ledger);
+        let addr = addr.clone();
+        let (ttft_slo, tpot_slo) = (cfg.ttft_slo, cfg.tpot_slo);
+        workers.push(std::thread::spawn(move || loop {
+            // Hold the receiver lock only long enough to pull one job.
+            let job = match rx.lock().unwrap_or_else(|e| e.into_inner()).recv() {
+                Ok(j) => j,
+                Err(_) => return,
+            };
+            let toks: Vec<String> = job.tokens.iter().map(|t| t.to_string()).collect();
+            let body = format!(
+                "{{\"tokens\":[{}],\"max_tokens\":{},\"class\":\"{}\"}}",
+                toks.join(","),
+                job.max_tokens,
+                job.class.label()
+            );
+            let t0 = Instant::now();
+            let resp = post_completions(&addr, &body, deadline);
+            let dt = t0.elapsed().as_secs_f64();
+            let mut l = ledger.lock().unwrap_or_else(|e| e.into_inner());
+            match resp {
+                Some((200, _)) => {
+                    l.ok += 1;
+                    l.latencies.push(dt);
+                    if dt <= ttft_slo + job.max_tokens as f64 * tpot_slo {
+                        l.attained += 1;
+                    }
+                }
+                Some((503, _)) => l.shed[job.class.index()] += 1,
+                Some((504, _)) => l.deadline += 1,
+                Some(_) => l.client_err += 1,
+                None => l.conn_err += 1,
+            }
+        }));
+    }
+
+    // The pacer: send on the arrival clock, never on the response clock.
+    let t0 = Instant::now();
+    for job in schedule {
+        let target = Duration::from_secs_f64(job.at_s);
+        if let Some(wait) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        // A full channel is impossible (unbounded); a closed one means
+        // every worker died, which the balance check below will surface.
+        let _ = tx.send(job);
+    }
+    drop(tx);
+    for w in workers {
+        let _ = w.join();
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let after = scrape_metrics(&addr);
+    let l = Arc::try_unwrap(ledger)
+        .map_err(|_| "worker leaked the ledger")?
+        .into_inner()
+        .unwrap_or_else(|e| e.into_inner());
+
+    let server_shed_delta = match (&before, &after) {
+        (Some(b), Some(a)) => shed_sum(a) - shed_sum(b),
+        _ => f64::NAN,
+    };
+    let mut report = LoadReport {
+        mode: if cfg.self_test { "self-test" } else { "live" },
+        sent,
+        ok: l.ok,
+        shed_by_class: l.shed,
+        deadline: l.deadline,
+        client_err: l.client_err,
+        conn_err: l.conn_err,
+        sustained_rps: l.ok as f64 / elapsed,
+        p50_latency_s: percentile(&l.latencies, 50.0),
+        p99_latency_s: percentile(&l.latencies, 99.0),
+        slo_attainment: if l.ok > 0 {
+            l.attained as f64 / l.ok as f64
+        } else {
+            f64::NAN
+        },
+        server_p99_ttft_s: after
+            .as_ref()
+            .and_then(|m| m.get("p99_ttft_s").as_f64())
+            .unwrap_or(f64::NAN),
+        server_shed_delta,
+        failures: Vec::new(),
+    };
+
+    // No silent loss: every planned arrival must be accounted somewhere.
+    if l.accounted() != sent {
+        report.failures.push(format!(
+            "silent loss: sent {} but accounted {}",
+            sent,
+            l.accounted()
+        ));
+    }
+    // Shed accounting: the server must have counted at least as many
+    // sheds as we observed as 503s (exactly as many under --self-test,
+    // where we are the only client).
+    if server_shed_delta.is_finite() {
+        let client_shed = l.shed_total() as f64;
+        let consistent = if cfg.self_test {
+            server_shed_delta == client_shed
+        } else {
+            server_shed_delta >= client_shed
+        };
+        if !consistent {
+            report.failures.push(format!(
+                "shed accounting mismatch: client observed {client_shed} 503s, \
+                 server shed ledger grew by {server_shed_delta}"
+            ));
+        }
+    } else if cfg.self_test {
+        report
+            .failures
+            .push("self-test /metrics scrape failed".into());
+    }
+    // SLO attainment: ok requests must land inside their latency budget.
+    // The stub answers instantly, so self-test demands (near-)perfect
+    // attainment; a live soak tolerates a 10% tail.
+    let min_attainment = if cfg.self_test { 0.99 } else { 0.90 };
+    if report.slo_attainment.is_finite() && report.slo_attainment < min_attainment {
+        report.failures.push(format!(
+            "SLO attainment {:.3} below {min_attainment}",
+            report.slo_attainment
+        ));
+    }
+    if cfg.self_test && l.conn_err > 0 {
+        report
+            .failures
+            .push(format!("{} connection errors against the in-process stub", l.conn_err));
+    }
+
+    if let Some(out) = &cfg.out {
+        std::fs::write(out, report.to_json(cfg).encode()).map_err(|e| e.to_string())?;
+        println!("loadgen: wrote {out}");
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planning_is_deterministic_in_the_seed() {
+        let cfg = LoadgenConfig {
+            rps: 50.0,
+            duration_s: 2.0,
+            ..Default::default()
+        };
+        let a = plan(&cfg);
+        let b = plan(&cfg);
+        assert!(!a.is_empty());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_s.to_bits(), y.at_s.to_bits());
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.max_tokens, y.max_tokens);
+            assert_eq!(x.class, y.class);
+        }
+        let c = plan(&LoadgenConfig {
+            seed: 43,
+            ..cfg.clone()
+        });
+        assert!(
+            a.len() != c.len()
+                || a.iter().zip(&c).any(|(x, y)| x.tokens != y.tokens),
+            "different seeds must plan different schedules"
+        );
+    }
+
+    #[test]
+    fn self_test_soak_passes_and_balances() {
+        let cfg = LoadgenConfig {
+            rps: 200.0,
+            duration_s: 1.0,
+            workers: 4,
+            self_test: true,
+            ..Default::default()
+        };
+        let report = run(&cfg).expect("self-test runs");
+        assert!(report.ok(), "failures: {:?}", report.failures);
+        assert!(report.sent > 0);
+        assert!(report.ok > 0);
+        // The stub sheds every 5th non-faulted arrival — some sheds must
+        // have been observed and cross-checked against the stub's ledger.
+        assert!(report.shed_by_class.iter().sum::<u64>() > 0);
+        assert_eq!(
+            report.sent,
+            report.ok
+                + report.shed_by_class.iter().sum::<u64>()
+                + report.deadline
+                + report.client_err
+                + report.conn_err
+        );
+    }
+}

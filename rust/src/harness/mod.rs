@@ -44,6 +44,7 @@ use crate::trace::Trace;
 use crate::util::threads::{default_workers, parallel_map};
 
 pub mod chaos;
+pub mod loadgen;
 
 /// The §7.1/§7.3 baselines that disaggregate with *fixed* roles — the
 /// systems the paper's "vs static PD disaggregation" claims range over.

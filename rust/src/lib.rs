@@ -36,5 +36,6 @@ pub mod util;
 pub mod cli;
 pub mod figures;
 pub mod http;
+pub mod replay;
 pub mod runtime;
 pub mod server;

@@ -5,6 +5,9 @@
 //!   claims [--smoke]                                       paper-claims conformance sweep
 //!   chaos [--smoke]                                        seeded fault-plan robustness sweep
 //!   replay --system S --workload W --rate-mult M          one simulated run
+//!   replay <journal> [--verify] [--sim]                    flight-recorder journal replay
+//!   replay --record-demo PATH [--seed N]                   record a demo journal offline
+//!   loadgen [--rps R] [--duration S] [--self-test]        open-loop soak against /v1/completions
 //!   serve --artifacts DIR [--port P] [--instances N]      real-mode HTTP serving (PJRT)
 //!   calibrate --artifacts DIR                              profile PJRT executables, fit cost model
 //!   traces [--out DIR]                                     dump synthetic traces as JSONL
@@ -35,8 +38,26 @@ subcommands:
   replay  --system <arrow|vllm|vllm-disagg|distserve|minimal-load|round-robin>
           --workload <azure_code|azure_conv|burstgpt|mooncake_conv|smoke>
           [--rate-mult M] [--seed N] [--clip SECONDS] [--gpus N]
+  replay  <journal.arwj> [--verify] [--sim] [--max-reported N]
+          (flight-recorder mode: re-derive every recorded scheduling
+           decision through the journalled policy and compare placements,
+           pool states and flip counts byte-for-byte; exits non-zero on
+           any divergence. --sim additionally re-derives each decision
+           through the simulator substrate as an independent oracle)
+  replay  --record-demo PATH [--seed N] [--steps N] [--engines N]
+          [--policy <arrow-slo-aware|all-to-one|static-split>]
+          [--no-membership]
+          (record a deterministic demo journal without a live server —
+           the same bytes for the same flags, every run)
+  loadgen [--url http://HOST:PORT] [--rps R] [--duration SECONDS]
+          [--seed N] [--workers N] [--mix I,S,B] [--ttft-slo S]
+          [--tpot-slo S] [--out BENCH_server.json] [--smoke] [--self-test]
+          (open-loop Poisson soak against /v1/completions: every sent
+           request is accounted ok/shed/deadline/client-err/conn-err —
+           exits non-zero on silent loss; --self-test runs against an
+           in-process stub server, no live cluster needed)
   serve   [--artifacts DIR] [--port P] [--instances N] [--ttft-slo S] [--tpot-slo S]
-          [--max-inflight N] [--deadline SECONDS]
+          [--max-inflight N] [--deadline SECONDS] [--journal PATH]
   calibrate [--artifacts DIR]
   traces  [--out DIR] [--seed N]
   info"
@@ -67,6 +88,7 @@ fn main() {
         "claims" => cmd_claims(&p),
         "chaos" => cmd_chaos(&p),
         "replay" => cmd_replay(&p),
+        "loadgen" => cmd_loadgen(&p),
         "serve" => cmd_serve(&p),
         "calibrate" => cmd_calibrate(&p),
         "traces" => cmd_traces(&p),
@@ -138,6 +160,15 @@ fn cmd_chaos(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
 }
 
 fn cmd_replay(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
+    // Three modes share the subcommand: flight-recorder demo recording,
+    // flight-recorder journal verification (a positional journal path
+    // selects it), and the legacy simulated-run replay.
+    if p.has("record-demo") {
+        return cmd_replay_record_demo(p);
+    }
+    if p.positional.get(1).is_some() {
+        return cmd_replay_verify(p);
+    }
     p.check_known(&["system", "workload", "rate-mult", "seed", "clip", "gpus"])?;
     let sys = System::by_label(&p.str_or("system", "arrow")).ok_or("unknown --system")?;
     let workload = p.str_or("workload", "smoke");
@@ -145,6 +176,133 @@ fn cmd_replay(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
     let opts = fig_opts(p)?;
     print!("{}", figures::replay(sys, &workload, mult, &opts));
     Ok(())
+}
+
+fn cmd_replay_record_demo(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
+    p.check_known(&[
+        "record-demo",
+        "seed",
+        "steps",
+        "engines",
+        "policy",
+        "no-membership",
+    ])?;
+    let path = p.str_or("record-demo", "");
+    if path.is_empty() || path == "true" {
+        return Err("--record-demo needs a journal path (--record-demo out.arwj)".into());
+    }
+    let mut cfg = arrow::replay::demo::DemoConfig::default();
+    cfg.seed = p.u64_or("seed", cfg.seed)?;
+    cfg.steps = p.u64_or("steps", cfg.steps)?;
+    cfg.engines = p.usize_or("engines", cfg.engines)?;
+    cfg.policy = p.str_or("policy", &cfg.policy);
+    cfg.membership = !p.has("no-membership");
+    let events = arrow::replay::demo::record_demo(std::path::Path::new(&path), &cfg)?;
+    println!(
+        "recorded {events} decision events to {path} (seed {}, {} engines, policy {})",
+        cfg.seed, cfg.engines, cfg.policy
+    );
+    Ok(())
+}
+
+fn cmd_replay_verify(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
+    p.check_known(&["verify", "sim", "max-reported"])?;
+    let journal = p.positional.get(1).cloned().ok_or("missing journal path")?;
+    let opts = arrow::replay::verify::VerifyOptions {
+        sim_oracle: p.has("sim"),
+        max_reported: p.usize_or("max-reported", 16)?,
+    };
+    let report =
+        arrow::replay::verify::verify_journal(std::path::Path::new(&journal), &opts)?;
+    println!(
+        "journal {journal}: policy {}, {} records",
+        report.policy, report.records
+    );
+    println!(
+        "  server oracle: {} re-derived, {} divergence(s)",
+        report.verified, report.divergences
+    );
+    if opts.sim_oracle {
+        println!(
+            "  sim oracle:    {} re-derived, {} skipped (sim-unrepresentable)",
+            report.sim_verified, report.sim_skipped
+        );
+    }
+    if report.dropped > 0 {
+        println!(
+            "  {} record(s) dropped under backpressure while recording",
+            report.dropped
+        );
+    }
+    if let Some(g) = &report.stopped_at_gap {
+        println!("  {g}");
+    }
+    if let Some(t) = &report.torn {
+        println!(
+            "  torn tail: journal truncated at byte {} ({}); intact prefix replayed",
+            t.offset, t.reason
+        );
+    }
+    for d in &report.detail {
+        println!("  DIVERGENCE {d}");
+    }
+    if report.ok() {
+        println!("replay OK: every re-derived decision matches the record");
+        Ok(())
+    } else {
+        Err(format!(
+            "replay FAILED: {} divergence(s) between the journal and the \
+             re-derived schedule",
+            report.divergences
+        )
+        .into())
+    }
+}
+
+fn cmd_loadgen(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
+    p.check_known(&[
+        "url",
+        "rps",
+        "duration",
+        "seed",
+        "workers",
+        "mix",
+        "ttft-slo",
+        "tpot-slo",
+        "out",
+        "smoke",
+        "self-test",
+    ])?;
+    let mut cfg = arrow::harness::loadgen::LoadgenConfig::default();
+    cfg.url = p.str_or("url", &cfg.url);
+    cfg.rps = p.f64_or("rps", cfg.rps)?;
+    cfg.duration_s = p.f64_or("duration", cfg.duration_s)?;
+    cfg.seed = p.u64_or("seed", cfg.seed)?;
+    cfg.workers = p.usize_or("workers", cfg.workers)?;
+    cfg.ttft_slo = p.f64_or("ttft-slo", cfg.ttft_slo)?;
+    cfg.tpot_slo = p.f64_or("tpot-slo", cfg.tpot_slo)?;
+    cfg.out = p.flag("out").map(String::from);
+    cfg.smoke = p.has("smoke");
+    cfg.self_test = p.has("self-test");
+    if let Some(mix) = p.flag("mix") {
+        let parts: Vec<f64> = mix
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<Result<_, _>>()
+            .map_err(|_| "--mix expects three comma-separated weights, e.g. 0.5,0.4,0.1")?;
+        if parts.len() != 3 || parts.iter().any(|w| !w.is_finite() || *w < 0.0) {
+            return Err("--mix expects three non-negative weights (interactive,standard,batch)"
+                .into());
+        }
+        cfg.class_mix = [parts[0], parts[1], parts[2]];
+    }
+    let report = arrow::harness::loadgen::run(&cfg)?;
+    print!("{}", report.render());
+    if report.ok() {
+        Ok(())
+    } else {
+        Err("loadgen FAILED (see ledger above)".into())
+    }
 }
 
 fn cmd_serve(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
@@ -156,6 +314,7 @@ fn cmd_serve(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
         "tpot-slo",
         "max-inflight",
         "deadline",
+        "journal",
     ])?;
     let cfg = arrow::server::ServeConfig {
         artifacts_dir: p.str_or("artifacts", "artifacts"),
@@ -170,6 +329,9 @@ fn cmd_serve(p: &cli::ParsedArgs) -> Result<(), Box<dyn std::error::Error>> {
         // the per-request deadline (old behavior was a fixed 120 s hang).
         max_inflight: p.usize_or("max-inflight", 256)?,
         request_deadline_s: p.f64_or("deadline", 120.0)?,
+        // Flight recorder (PR 9): journal every scheduling decision for
+        // deterministic offline replay via `arrow replay <journal>`.
+        journal_path: p.flag("journal").map(String::from),
     };
     arrow::server::serve(cfg)?;
     Ok(())

@@ -1,0 +1,457 @@
+//! Deterministic replay of a flight-recorder journal.
+//!
+//! Two oracles, one contract:
+//!
+//! 1. **Server replay** — rebuild each recorded [`super::Snap`] as the
+//!    exact `ServerView` the live coordinator handed its policy
+//!    (recorded `change_epoch` included, so the O(1) epoch fast path
+//!    replays as it ran), feed it to a freshly constructed instance of
+//!    the same `Box<dyn Policy>`, and assert byte-identical placements,
+//!    pool states `[P, D, P→D, D→P]`, and flip counts.
+//! 2. **Sim oracle** (`--sim`) — reconstruct each snapshot as a
+//!    `SimInstance` table and re-derive the same decision through
+//!    `SimView`, the *other* substrate's adapter, with `change_epoch`
+//!    unknown (every read fully verified, no fast path). This leans on
+//!    the PR-2/PR-4 cross-substrate bit-identity contract: identical
+//!    snapshots must produce identical placement keys on both
+//!    substrates, so a sim-side divergence indicts the substrate
+//!    adapters, not the policy.
+//!
+//! Replay stops strict verification at the first [`super::Record::Gap`]:
+//! records were dropped under backpressure there, so the live policy's
+//! internal state beyond that point is unknowable — the report says so
+//! loudly instead of manufacturing false divergences.
+
+use std::path::Path;
+
+use super::{
+    liveness_from_code, load, Decision, Meta, Record, Snap, TornTail, MEMBER_DRAINING,
+    MEMBER_JOINED, MEMBER_LOST,
+};
+use crate::coordinator::arrow::{ArrowConfig, ArrowPolicy};
+use crate::costmodel::CostModel;
+use crate::engine::SimInstance;
+use crate::request::{InstanceId, Request, RequestId, SloClass};
+use crate::sched::{tests_support, MembershipEvent, Policy};
+use crate::sim::SimView;
+
+/// Replay options.
+#[derive(Debug, Clone)]
+pub struct VerifyOptions {
+    /// Also re-derive every decision through the `SimView` oracle.
+    pub sim_oracle: bool,
+    /// Stop collecting divergence details after this many (the count
+    /// keeps climbing; only the narrative is capped).
+    pub max_reported: usize,
+}
+
+impl Default for VerifyOptions {
+    fn default() -> Self {
+        VerifyOptions {
+            sim_oracle: true,
+            max_reported: 16,
+        }
+    }
+}
+
+/// Outcome of a journal replay.
+#[derive(Debug)]
+pub struct VerifyReport {
+    pub policy: String,
+    /// Records in the intact journal after `Meta` (gap markers included).
+    pub records: u64,
+    /// Decisions strictly re-derived and compared on the server oracle.
+    pub verified: u64,
+    /// Total decision mismatches (server + sim oracles).
+    pub divergences: u64,
+    /// Human-readable detail for the first `max_reported` divergences.
+    pub detail: Vec<String>,
+    /// Decisions additionally confirmed by the sim oracle.
+    pub sim_verified: u64,
+    /// Records the sim oracle could not represent (e.g. decode KV
+    /// resident while no decode work is visible) — skipped, not failed.
+    pub sim_skipped: u64,
+    /// Verification stopped early at a backpressure gap.
+    pub stopped_at_gap: Option<String>,
+    /// The journal tail was torn/corrupt; the intact prefix was replayed.
+    pub torn: Option<TornTail>,
+    /// Total records dropped under backpressure (sum of gap markers).
+    pub dropped: u64,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.divergences == 0
+    }
+}
+
+/// Construct the policy a journal's `Meta` record describes, exactly as
+/// the live server constructed it.
+pub fn build_policy(meta: &Meta) -> Result<Box<dyn Policy>, String> {
+    match meta.policy.as_str() {
+        "arrow-slo-aware" => {
+            let n = meta.instances as usize;
+            let mut cfg = ArrowConfig::new(meta.ttft_slo, meta.tpot_slo, n);
+            cfg.initial_prefill = meta.initial_prefill as usize;
+            cfg.decode_low_watermark = meta.decode_low_watermark;
+            cfg.tpot_violation_ticks = meta.tpot_violation_ticks;
+            cfg.tpot_violation_frac = meta.tpot_violation_frac;
+            cfg.class_aware = meta.class_aware;
+            Ok(Box::new(ArrowPolicy::new(cfg, n)))
+        }
+        "all-to-one" => Ok(Box::new(tests_support::AllToOne)),
+        "static-split" => Ok(Box::new(tests_support::StaticSplit {
+            prefill: meta.split_prefill.iter().map(|&i| i as usize).collect(),
+            decode: meta.split_decode.iter().map(|&i| i as usize).collect(),
+        })),
+        other => Err(format!(
+            "journal was recorded by policy {other:?}, which has no replay constructor"
+        )),
+    }
+}
+
+fn request_of(r: &super::ReqRec) -> Request {
+    // Struct literal, not `Request::new` — the constructor clamps
+    // degenerate lengths, and replay must consume the recorded bytes
+    // verbatim.
+    Request {
+        id: RequestId(r.id),
+        arrival: r.arrival,
+        input_len: r.input_len,
+        output_len: r.output_len,
+        class: SloClass::ALL[r.class as usize],
+    }
+}
+
+fn membership_event(kind: u8, engine: u32) -> Result<MembershipEvent, String> {
+    let id = InstanceId(engine as usize);
+    match kind {
+        MEMBER_JOINED => Ok(MembershipEvent::InstanceJoined { id }),
+        MEMBER_DRAINING => Ok(MembershipEvent::InstanceDraining { id }),
+        MEMBER_LOST => Ok(MembershipEvent::InstanceLost { id }),
+        other => Err(format!("unknown membership kind {other}")),
+    }
+}
+
+/// Capture a policy's observable decision the same way the recorder did.
+fn decision_of(policy: &dyn Policy, target: Option<InstanceId>) -> Decision {
+    Decision {
+        target: target.map(|t| t.0 as u32),
+        pools: policy.pool_sizes().map(|p| p.map(|v| v as u64)),
+        flips: policy.flip_count(),
+    }
+}
+
+fn describe(d: &Decision) -> String {
+    format!(
+        "target={:?} pools={:?} flips={}",
+        d.target, d.pools, d.flips
+    )
+}
+
+/// Reconstruct a recorded snapshot as a `SimInstance` table for the
+/// cross-substrate oracle. Returns `None` when the snapshot is not
+/// representable in the simulator's state space:
+/// * a queued prefill with chunk progress (`remaining != input_len`) —
+///   never produced by the live path, which observes no chunk progress;
+/// * resident decode KV with `has_decode_work == false` (tokens cached
+///   for a request the engine no longer reports) — transiently possible
+///   live, meaningless in sim;
+/// * reconstructed moments that disagree with the recorded aggregates
+///   (would silently verify against different state than was recorded).
+fn sim_instances(snap: &Snap) -> Option<Vec<SimInstance>> {
+    let mut insts = Vec::with_capacity(snap.engines.len());
+    for (i, e) in snap.engines.iter().enumerate() {
+        let mut inst = SimInstance::new(InstanceId(i), CostModel::h800_llama8b());
+        // Chunk first: enqueue_prefill prices the moments with it.
+        inst.chunk_tokens = e.chunk_tokens;
+        inst.cost_mut().max_kv_tokens = e.max_kv_tokens;
+        let mut synth = 0u64;
+        for &(l, r) in &e.queued {
+            if l != r {
+                return None;
+            }
+            inst.enqueue_prefill(RequestId(synth), l);
+            synth += 1;
+        }
+        if inst.prefill_queue_moments() != e.moments {
+            return None;
+        }
+        if e.running_tokens > 0 {
+            if !e.has_decode_work {
+                return None;
+            }
+            // Split into u32-sized decode contexts; running_tokens and
+            // has_decode_work are all the view exposes, so any split
+            // reconstructs the observable state exactly.
+            let mut left = e.running_tokens;
+            while left > 0 {
+                let c = left.min(u32::MAX as u64) as u32;
+                inst.enqueue_decode(RequestId(synth), c, 1);
+                synth += 1;
+                left -= c as u64;
+            }
+        } else if e.has_decode_work {
+            // Active slots with zero resident tokens: a just-adopted
+            // zero-context decode.
+            inst.enqueue_decode(RequestId(synth), 0, 1);
+        }
+        inst.seed_token_interval(e.avg_token_interval);
+        inst.life = liveness_from_code(e.liveness);
+        insts.push(inst);
+    }
+    Some(insts)
+}
+
+/// Replay `path` and verify every recorded decision. Errors are reserved
+/// for unreplayable journals (unreadable, wrong format, unknown policy);
+/// divergences are data, reported in the `VerifyReport`.
+pub fn verify_journal(path: &Path, opts: &VerifyOptions) -> Result<VerifyReport, String> {
+    let journal = load(path)?;
+    let meta = &journal.meta;
+    let profile = meta.profile.to_fixed();
+
+    let mut policy = build_policy(meta)?;
+    policy.init(&profile);
+    // Independent instance for the sim oracle: its internal state must
+    // evolve through its own call sequence, never borrow the server
+    // replayer's.
+    let mut sim_policy = build_policy(meta)?;
+    sim_policy.init(&profile);
+
+    let mut report = VerifyReport {
+        policy: meta.policy.clone(),
+        records: journal.records.len() as u64,
+        verified: 0,
+        divergences: 0,
+        detail: Vec::new(),
+        sim_verified: 0,
+        sim_skipped: 0,
+        stopped_at_gap: None,
+        torn: journal.torn.clone(),
+        dropped: journal.gaps,
+    };
+
+    let mut diverge = |report: &mut VerifyReport, idx: usize, what: &str, rec: &Decision, got: &Decision| {
+        report.divergences += 1;
+        if report.detail.len() < opts.max_reported {
+            report.detail.push(format!(
+                "record {idx}: {what}: recorded {} / replayed {}",
+                describe(rec),
+                describe(got)
+            ));
+        }
+    };
+
+    for (idx, rec) in journal.records.iter().enumerate() {
+        // Each record carries the recorded (now, inputs, snapshot); the
+        // replayed decision must match the recorded one bit for bit.
+        let (snap, recorded): (&Snap, &Decision) = match rec {
+            Record::Prefill { snap, out, .. }
+            | Record::Decode { snap, out, .. }
+            | Record::Tick { snap, out, .. }
+            | Record::Membership { snap, out, .. } => (snap, out),
+            Record::Gap { dropped } => {
+                report.stopped_at_gap = Some(format!(
+                    "backpressure gap at record {idx} ({dropped} decisions dropped) — \
+                     policy state beyond this point is unknowable; verified {} of {} records",
+                    report.verified, report.records
+                ));
+                break;
+            }
+            Record::Meta(_) => {
+                report.divergences += 1;
+                if report.detail.len() < opts.max_reported {
+                    report
+                        .detail
+                        .push(format!("record {idx}: unexpected mid-journal Meta record"));
+                }
+                break;
+            }
+        };
+
+        let view = snap.to_server_view();
+        let got = match rec {
+            Record::Prefill { now, req, .. } => {
+                let r = request_of(req);
+                let t = policy.place_prefill(*now, &r, &view);
+                decision_of(policy.as_ref(), Some(t))
+            }
+            Record::Decode { now, req, from, .. } => {
+                let r = request_of(req);
+                let t = policy.place_decode(*now, &r, InstanceId(*from as usize), &view);
+                decision_of(policy.as_ref(), Some(t))
+            }
+            Record::Tick { now, .. } => {
+                policy.on_tick(*now, &view);
+                decision_of(policy.as_ref(), None)
+            }
+            Record::Membership {
+                now,
+                kind,
+                engine,
+                profile,
+                ..
+            } => {
+                let ev = membership_event(*kind, *engine)?;
+                let fixed = profile.to_fixed();
+                policy.on_membership(*now, ev, &view, &fixed);
+                decision_of(policy.as_ref(), None)
+            }
+            Record::Gap { .. } | Record::Meta(_) => unreachable!("handled above"),
+        };
+        report.verified += 1;
+        if got != *recorded {
+            diverge(&mut report, idx, "server replay diverged", recorded, &got);
+        }
+
+        if opts.sim_oracle {
+            // The sim policy's state must advance on every record even
+            // when the snapshot is sim-unrepresentable — fall back to the
+            // server view for state-keeping and count the record skipped
+            // rather than letting the oracle drift out of sync.
+            let insts = sim_instances(snap);
+            let sim_checked = insts.is_some();
+            let sview;
+            let view_for_sim: &dyn crate::sched::ClusterView = match &insts {
+                Some(table) => {
+                    sview = SimView(table);
+                    &sview
+                }
+                None => {
+                    report.sim_skipped += 1;
+                    &view
+                }
+            };
+            let sim_got = match rec {
+                Record::Prefill { now, req, .. } => {
+                    let r = request_of(req);
+                    let t = sim_policy.place_prefill(*now, &r, view_for_sim);
+                    decision_of(sim_policy.as_ref(), Some(t))
+                }
+                Record::Decode { now, req, from, .. } => {
+                    let r = request_of(req);
+                    let t =
+                        sim_policy.place_decode(*now, &r, InstanceId(*from as usize), view_for_sim);
+                    decision_of(sim_policy.as_ref(), Some(t))
+                }
+                Record::Tick { now, .. } => {
+                    sim_policy.on_tick(*now, view_for_sim);
+                    decision_of(sim_policy.as_ref(), None)
+                }
+                Record::Membership {
+                    now,
+                    kind,
+                    engine,
+                    profile,
+                    ..
+                } => {
+                    let ev = membership_event(*kind, *engine)?;
+                    let fixed = profile.to_fixed();
+                    sim_policy.on_membership(*now, ev, view_for_sim, &fixed);
+                    decision_of(sim_policy.as_ref(), None)
+                }
+                Record::Gap { .. } | Record::Meta(_) => unreachable!("handled above"),
+            };
+            if sim_checked {
+                if sim_got == *recorded {
+                    report.sim_verified += 1;
+                } else {
+                    diverge(&mut report, idx, "sim oracle diverged", recorded, &sim_got);
+                }
+            }
+        }
+    }
+
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::ClusterView;
+
+    #[test]
+    fn build_policy_covers_all_recordable_policies() {
+        let mut meta = Meta {
+            policy: "arrow-slo-aware".into(),
+            ttft_slo: 2.0,
+            tpot_slo: 0.5,
+            initial_prefill: 2,
+            decode_low_watermark: 0.5,
+            tpot_violation_ticks: 2,
+            tpot_violation_frac: 0.5,
+            class_aware: true,
+            instances: 4,
+            split_prefill: vec![0, 1],
+            split_decode: vec![2, 3],
+            profile: super::super::Profile { engines: vec![] },
+        };
+        assert_eq!(build_policy(&meta).unwrap().name(), "arrow-slo-aware");
+        meta.policy = "all-to-one".into();
+        assert_eq!(build_policy(&meta).unwrap().name(), "all-to-one");
+        meta.policy = "static-split".into();
+        assert_eq!(build_policy(&meta).unwrap().name(), "static-split");
+        meta.policy = "no-such-policy".into();
+        assert!(build_policy(&meta).is_err());
+    }
+
+    #[test]
+    fn sim_reconstruction_matches_recorded_observables() {
+        use crate::sched::PrefillQueueMoments;
+        let chunk = crate::sched::DEFAULT_CHUNK_TOKENS;
+        let mut moments = PrefillQueueMoments::default();
+        moments.add_task(100, 100, chunk);
+        moments.add_task(5000, 5000, chunk);
+        let snap = Snap {
+            change_epoch: 3,
+            engines: vec![super::super::EngineRec {
+                queued: vec![(100, 100), (5000, 5000)],
+                moments,
+                chunk_tokens: chunk,
+                running_tokens: 640,
+                max_kv_tokens: 1 << 20,
+                avg_token_interval: 0.0125,
+                has_decode_work: true,
+                liveness: 0,
+            }],
+        };
+        let insts = sim_instances(&snap).expect("representable");
+        let v = SimView(&insts);
+        let e = &snap.engines[0];
+        assert_eq!(v.prefill_queue_moments(0), e.moments);
+        assert_eq!(v.running_tokens(0), e.running_tokens);
+        assert_eq!(v.max_kv_tokens(0), e.max_kv_tokens);
+        assert_eq!(v.avg_token_interval(0).to_bits(), e.avg_token_interval.to_bits());
+        assert!(v.has_decode_work(0) && v.has_prefill_work(0));
+        // And the server rebuild serves the identical observables.
+        let sv = snap.to_server_view();
+        assert_eq!(sv.prefill_queue_moments(0), e.moments);
+        assert_eq!(sv.change_epoch(), 3);
+    }
+
+    #[test]
+    fn unrepresentable_snapshots_are_refused_not_faked() {
+        let base = |running, decode| Snap {
+            change_epoch: 0,
+            engines: vec![super::super::EngineRec {
+                queued: vec![],
+                moments: Default::default(),
+                chunk_tokens: crate::sched::DEFAULT_CHUNK_TOKENS,
+                running_tokens: running,
+                max_kv_tokens: 1000,
+                avg_token_interval: f64::NAN,
+                has_decode_work: decode,
+                liveness: 0,
+            }],
+        };
+        // Resident decode KV but no visible decode work: sim can't say that.
+        assert!(sim_instances(&base(50, false)).is_none());
+        assert!(sim_instances(&base(50, true)).is_some());
+        assert!(sim_instances(&base(0, true)).is_some());
+        // Chunk progress in the queue: live path never records it.
+        let mut torn = base(0, false);
+        torn.engines[0].queued = vec![(100, 60)];
+        assert!(sim_instances(&torn).is_none());
+    }
+}

@@ -31,6 +31,7 @@ use crate::coordinator::arrow::{ArrowConfig, ArrowPolicy};
 use crate::coordinator::predictor::TtftPredictor;
 use crate::http::{self, HttpRequest, HttpResponse};
 use crate::json::Json;
+use crate::replay;
 use crate::request::{InstanceId, Request, SloClass};
 use crate::sched::{
     FixedProfile, Liveness, MembershipEvent, Policy, PrefillQueueMoments, EPOCH_UNKNOWN,
@@ -59,6 +60,12 @@ pub struct ServeConfig {
     /// cannot finish in time answers 504 instead of hanging the client
     /// socket forever.
     pub request_deadline_s: f64,
+    /// Flight-recorder journal (PR 9): when set, every scheduling
+    /// decision — placements, ticks, membership — is recorded here for
+    /// deterministic offline replay (`arrow replay <journal>`). Recording
+    /// never blocks dispatch: under backpressure records are dropped and
+    /// counted (`/metrics` `journal_dropped`).
+    pub journal_path: Option<String>,
 }
 
 /// Poison-tolerant lock (PR 6): a panicking handler thread must not wedge
@@ -276,6 +283,10 @@ struct Coordinator {
     /// soundly collapses those repeat index-verify scans into the O(1)
     /// skip (`ArrowPolicy::refresh_index`).
     snapshot_epoch: u64,
+    /// Flight recorder (PR 9): journals every policy decision with the
+    /// exact `(now, inputs, snapshot)` it consumed. `None` when
+    /// `--journal` was not given; recording never blocks this thread.
+    recorder: Option<replay::Recorder>,
 }
 
 impl Coordinator {
@@ -337,6 +348,55 @@ impl Coordinator {
         self.started.elapsed().as_secs_f64()
     }
 
+    // ------------------------------------------------ flight recorder (PR 9)
+    // Each hook runs right after its policy call, capturing the logical
+    // timestamp, the request fields, the snapshot the call consumed, and
+    // the decision (target + pool sizes + flip count) — everything replay
+    // needs to re-derive the decision bit-for-bit. All hooks no-op
+    // without a recorder, and the recorder itself never blocks (bounded
+    // channel, drop-and-count under backpressure).
+
+    /// The policy's observable decision, captured the instant after the
+    /// call — raw (pre-clamp) placement output, as replay re-derives it.
+    fn journal_decision(&self, target: Option<usize>) -> replay::Decision {
+        replay::Decision {
+            target: target.map(|t| t as u32),
+            pools: self.policy.pool_sizes().map(|p| p.map(|v| v as u64)),
+            flips: self.policy.flip_count(),
+        }
+    }
+
+    fn journal_req(r: &Request) -> replay::ReqRec {
+        replay::ReqRec {
+            id: r.id.0,
+            arrival: r.arrival,
+            input_len: r.input_len,
+            output_len: r.output_len,
+            class: r.class.index() as u8,
+        }
+    }
+
+    fn journal(&mut self, rec: &replay::Record) {
+        if let Some(r) = self.recorder.as_mut() {
+            r.record(rec);
+        }
+    }
+
+    fn journal_membership(&mut self, now: f64, kind: u8, engine: usize, snapshot: &ServerView) {
+        if self.recorder.is_none() {
+            return;
+        }
+        let rec = replay::Record::Membership {
+            now,
+            kind,
+            engine: engine as u32,
+            snap: replay::Snap::from_server(snapshot, &self.queued),
+            profile: replay::Profile::from_fixed(&self.profile),
+            out: self.journal_decision(None),
+        };
+        self.journal(&rec);
+    }
+
     fn publish_sched(&self) {
         self.sched
             .store_pools(self.policy.pool_sizes().unwrap_or([0; 4]));
@@ -394,6 +454,14 @@ impl Coordinator {
                 let now = self.now_s();
                 let snapshot = self.view();
                 self.policy.on_tick(now, &snapshot);
+                if self.recorder.is_some() {
+                    let rec = replay::Record::Tick {
+                        now,
+                        snap: replay::Snap::from_server(&snapshot, &self.queued),
+                        out: self.journal_decision(None),
+                    };
+                    self.journal(&rec);
+                }
                 // Draining engines that emptied out shut down here.
                 for i in 0..self.engines.len() {
                     self.maybe_finish_drain(i);
@@ -510,6 +578,15 @@ impl Coordinator {
         let r = Request::new(req, now, prompt.len() as u32, max_tokens as u32)
             .with_class(class);
         let target = self.policy.place_prefill(now, &r, &snapshot);
+        if self.recorder.is_some() {
+            let rec = replay::Record::Prefill {
+                now,
+                req: Self::journal_req(&r),
+                snap: replay::Snap::from_server(&snapshot, &self.queued),
+                out: self.journal_decision(Some(target.0)),
+            };
+            self.journal(&rec);
+        }
         // A policy must only name real instances; clamp in
         // release (stay serving) but fail loudly in debug.
         debug_assert!(target.0 < self.engines.len(), "policy placed on {target}");
@@ -620,6 +697,9 @@ impl Coordinator {
                     &snapshot,
                     &self.profile,
                 );
+                // The record carries the post-join profile: replay
+                // re-seeds with exactly what the live policy saw.
+                self.journal_membership(now, replay::MEMBER_JOINED, id, &snapshot);
                 println!("engine {id} joined ({} total)", self.engines.len());
                 self.publish_sched();
                 self.publish_membership();
@@ -637,6 +717,7 @@ impl Coordinator {
                     &snapshot,
                     &self.profile,
                 );
+                self.journal_membership(now, replay::MEMBER_DRAINING, engine, &snapshot);
                 println!("engine {engine} draining");
                 self.publish_membership();
                 self.maybe_finish_drain(engine);
@@ -656,6 +737,10 @@ impl Coordinator {
                     &snapshot,
                     &self.profile,
                 );
+                // Journaled before the re-dispatch loop below: replay
+                // must observe the loss, then each re-placement, in the
+                // exact order the policy was called.
+                self.journal_membership(now, replay::MEMBER_LOST, engine, &snapshot);
                 // Re-dispatch everything the engine held: queued prefills
                 // restart verbatim; decodes restart from prefill (their
                 // KV died with the engine). Stateless instances make this
@@ -734,6 +819,16 @@ impl Coordinator {
                 let target =
                     self.policy
                         .place_decode(now, &r, InstanceId(engine), &snapshot);
+                if self.recorder.is_some() {
+                    let rec = replay::Record::Decode {
+                        now,
+                        req: Self::journal_req(&r),
+                        from: engine as u32,
+                        snap: replay::Snap::from_server(&snapshot, &self.queued),
+                        out: self.journal_decision(Some(target.0)),
+                    };
+                    self.journal(&rec);
+                }
                 debug_assert!(target.0 < self.engines.len(), "policy placed on {target}");
                 let t = target.0.min(self.engines.len() - 1);
                 if self.life[t] == Liveness::Dead {
@@ -850,12 +945,39 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
     );
 
     // The scheduling brain: the identical ArrowPolicy the simulator runs.
-    let mut policy: Box<dyn Policy> = Box::new(ArrowPolicy::new(
-        ArrowConfig::new(cfg.ttft_slo, cfg.tpot_slo, cfg.instances),
-        cfg.instances,
-    ));
+    let arrow_cfg = ArrowConfig::new(cfg.ttft_slo, cfg.tpot_slo, cfg.instances);
+    let mut policy: Box<dyn Policy> =
+        Box::new(ArrowPolicy::new(arrow_cfg.clone(), cfg.instances));
     policy.init(&profile);
     println!("scheduling policy: {}", policy.name());
+
+    // Flight recorder (PR 9): journal header + policy-reconstruction
+    // metadata, written before the first decision can happen.
+    let (mut recorder, flusher, jstats) = match &cfg.journal_path {
+        Some(p) => {
+            let (r, f, s) =
+                replay::Recorder::create(std::path::Path::new(p), replay::DEFAULT_JOURNAL_CAPACITY)?;
+            println!("flight recorder: journaling decisions to {p}");
+            (Some(r), Some(f), Some(s))
+        }
+        None => (None, None, None),
+    };
+    if let Some(r) = recorder.as_mut() {
+        r.record(&replay::Record::Meta(replay::Meta {
+            policy: "arrow-slo-aware".into(),
+            ttft_slo: arrow_cfg.ttft_slo,
+            tpot_slo: arrow_cfg.tpot_slo,
+            initial_prefill: arrow_cfg.initial_prefill as u64,
+            decode_low_watermark: arrow_cfg.decode_low_watermark,
+            tpot_violation_ticks: arrow_cfg.tpot_violation_ticks,
+            tpot_violation_frac: arrow_cfg.tpot_violation_frac,
+            class_aware: arrow_cfg.class_aware,
+            instances: cfg.instances as u64,
+            split_prefill: Vec::new(),
+            split_decode: Vec::new(),
+            profile: replay::Profile::from_fixed(&profile),
+        }));
+    }
 
     let waiters: Arc<Mutex<HashMap<u64, mpsc::Sender<(Vec<i32>, f64, f64)>>>> =
         Arc::new(Mutex::new(HashMap::new()));
@@ -918,6 +1040,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
         sched: Arc::clone(&sched),
         started: Instant::now(),
         snapshot_epoch: 0,
+        recorder,
     };
     coord.publish_sched(); // initial pool split visible before traffic
     coord.publish_membership(); // …and the initial membership table
@@ -936,7 +1059,12 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
     let done_http = Arc::clone(&done);
     let sched_http = Arc::clone(&sched);
     let cfg_http = cfg.clone();
-    http::serve(&addr, shutdown, move |req| {
+    let journal = JournalHandles {
+        stats: jstats,
+        flusher: flusher.clone(),
+        shutdown: Arc::clone(&shutdown),
+    };
+    http::serve(&addr, Arc::clone(&shutdown), move |req| {
         route(
             req,
             &registry_http,
@@ -946,9 +1074,27 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
             &next_id,
             &msg_tx,
             &cfg_http,
+            &journal,
         )
     })?;
+    // Clean exit (`POST /admin/shutdown`): the accept loop has returned;
+    // flush + fsync whatever the coordinator journaled since the
+    // endpoint's own barrier (e.g. the drain-path membership records).
+    if let Some(f) = &flusher {
+        f.flush_sync();
+        println!("flight recorder: journal flushed");
+    }
     Ok(())
+}
+
+/// Journal + shutdown plumbing shared with the HTTP handler threads.
+struct JournalHandles {
+    /// `/metrics` counters (`journal_events` / `journal_dropped`).
+    stats: Option<Arc<replay::JournalStats>>,
+    /// Durability barrier for `/admin/shutdown`.
+    flusher: Option<replay::Flusher>,
+    /// The accept-loop stop flag — set by `/admin/shutdown`.
+    shutdown: Arc<AtomicBool>,
 }
 
 /// Time real prefills at each bucket through engine 0, fit the TTFT
@@ -999,6 +1145,7 @@ fn route(
     next_id: &Arc<AtomicU64>,
     submit: &mpsc::Sender<CoordMsg>,
     cfg: &ServeConfig,
+    journal: &JournalHandles,
 ) -> HttpResponse {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => HttpResponse::text(200, "ok"),
@@ -1086,6 +1233,18 @@ fn route(
                     ),
                 ),
                 ("engines", Json::Arr(stats)),
+                // Flight-recorder ledger (PR 9): decisions journaled vs
+                // dropped under backpressure. Zero/zero when recording
+                // is off; a nonzero dropped count means the journal has
+                // a gap (replay reports exactly where).
+                (
+                    "journal_events",
+                    Json::Num(journal.stats.as_ref().map_or(0, |s| s.events()) as f64),
+                ),
+                (
+                    "journal_dropped",
+                    Json::Num(journal.stats.as_ref().map_or(0, |s| s.dropped()) as f64),
+                ),
             ]);
             HttpResponse::json(200, &body.encode())
         }
@@ -1123,6 +1282,29 @@ fn route(
                 Ok(()) => HttpResponse::json(202, accepted),
                 Err(_) => HttpResponse::json(503, "{\"error\":\"coordinator unavailable\"}"),
             }
+        }
+        // --------------------------------------------- shutdown (PR 9)
+        // Clean stop: drain every engine through the normal membership
+        // path (no new placements; in-flight work completes), fsync the
+        // flight-recorder journal, then stop the accept loop. The old
+        // `shutdown` AtomicBool existed since PR 2 but nothing ever set
+        // it — the server could only be killed, which tears the journal.
+        ("POST", "/admin/shutdown") => {
+            if !admin_authorized(req, cfg) {
+                return admin_forbidden();
+            }
+            let n = lock_ok(registry).len();
+            for engine in 0..n {
+                let _ = submit.send(CoordMsg::Membership(MembershipCmd::Drain { engine }));
+            }
+            // Durability barrier: everything journaled up to this point
+            // is on disk before we advertise the shutdown. The drain
+            // records above land via the final flush in `serve`.
+            if let Some(f) = &journal.flusher {
+                f.flush_sync();
+            }
+            journal.shutdown.store(true, Ordering::Relaxed);
+            HttpResponse::json(202, "{\"status\":\"shutting down\"}")
         }
         // ------------------------------------------------ chaos (PR 6)
         // Deterministic fault injection for live drills: degrade/restore
@@ -1281,10 +1463,30 @@ fn route(
     }
 }
 
+/// Constant-time byte-string equality for secret comparison. `==` on
+/// slices bails at the first differing byte, so response timing leaks
+/// how long a correct prefix an attacker has guessed — with 0.0.0.0
+/// admin endpoints, that is an oracle for recovering the token byte by
+/// byte. This fold always walks `max(len_a, len_b)` positions and ORs
+/// every difference into one accumulator: timing depends only on the
+/// lengths, never on where (or whether) the contents differ.
+fn ct_eq(a: &[u8], b: &[u8]) -> bool {
+    let mut diff = a.len() ^ b.len();
+    for i in 0..a.len().max(b.len()) {
+        let x = a.get(i).copied().unwrap_or(0) as usize;
+        let y = b.get(i).copied().unwrap_or(0) as usize;
+        diff |= x ^ y;
+    }
+    diff == 0
+}
+
 /// Shared guard for every destructive `/admin/*` endpoint.
 fn admin_authorized(req: &HttpRequest, cfg: &ServeConfig) -> bool {
     match &cfg.admin_token {
-        Some(tok) => req.headers.get("x-admin-token").is_some_and(|v| v == tok),
+        Some(tok) => req
+            .headers
+            .get("x-admin-token")
+            .is_some_and(|v| ct_eq(v.as_bytes(), tok.as_bytes())),
         None => false,
     }
 }
@@ -1295,4 +1497,70 @@ fn admin_forbidden() -> HttpResponse {
         "{\"error\":\"admin endpoints require X-Admin-Token (set \
          admin_token / ARROW_ADMIN_TOKEN to enable)\"}",
     )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ct_eq_agrees_with_slice_equality() {
+        let cases: &[(&[u8], &[u8])] = &[
+            (b"", b""),
+            (b"", b"a"),
+            (b"a", b""),
+            (b"secret-token", b"secret-token"),
+            (b"secret-token", b"secret-tokem"),
+            (b"secret-token", b"Aecret-token"),
+            (b"secret-token", b"secret-token-longer"),
+            (b"short", b"a-much-longer-candidate"),
+            (b"\x00\x00", b"\x00\x00"),
+            (b"\x00\x01", b"\x00\x00"),
+        ];
+        for (a, b) in cases {
+            assert_eq!(ct_eq(a, b), a == b, "ct_eq({a:?}, {b:?})");
+        }
+    }
+
+    fn cfg_with_token(tok: Option<&str>) -> ServeConfig {
+        ServeConfig {
+            artifacts_dir: String::new(),
+            port: 0,
+            instances: 1,
+            ttft_slo: 2.0,
+            tpot_slo: 0.5,
+            admin_token: tok.map(String::from),
+            max_inflight: 8,
+            request_deadline_s: 1.0,
+            journal_path: None,
+        }
+    }
+
+    fn req_with_header(value: Option<&str>) -> HttpRequest {
+        let mut headers = std::collections::BTreeMap::new();
+        if let Some(v) = value {
+            headers.insert("x-admin-token".to_string(), v.to_string());
+        }
+        HttpRequest {
+            method: "POST".into(),
+            path: "/admin/drain".into(),
+            headers,
+            body: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn admin_guard_accepts_only_the_exact_token() {
+        let cfg = cfg_with_token(Some("test-admin-token"));
+        assert!(admin_authorized(&req_with_header(Some("test-admin-token")), &cfg));
+        assert!(!admin_authorized(&req_with_header(Some("test-admin-tokeX")), &cfg));
+        assert!(!admin_authorized(&req_with_header(Some("test-admin-token2")), &cfg));
+        assert!(!admin_authorized(&req_with_header(Some("")), &cfg));
+        assert!(!admin_authorized(&req_with_header(None), &cfg));
+        // No configured token disables admin entirely — even an empty
+        // header must not match an unset secret.
+        let off = cfg_with_token(None);
+        assert!(!admin_authorized(&req_with_header(Some("")), &off));
+        assert!(!admin_authorized(&req_with_header(None), &off));
+    }
 }

@@ -1,0 +1,253 @@
+//! Flight-recorder durability and determinism contract (PR 9).
+//!
+//! Property-tests the record→replay loop end to end: journals recorded
+//! by the demo mini-coordinator must round-trip byte-identically across
+//! seeds and policies, every recorded decision must re-derive to the
+//! same placement/pool-state/flip-count through both the server-view
+//! oracle and (where representable) the simulator oracle, and a torn or
+//! corrupted tail must replay the intact prefix with an explicit cut
+//! report — never a panic, never silent divergence.
+
+use std::path::PathBuf;
+
+use arrow::replay::demo::{record_demo, DemoConfig};
+use arrow::replay::verify::{verify_journal, VerifyOptions};
+use arrow::replay::{load, Record};
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "arrow-replay-test-{tag}-{}-{:?}.arwj",
+        std::process::id(),
+        std::thread::current().id()
+    ))
+}
+
+/// Record a demo journal and return its raw bytes (file is removed).
+fn demo_bytes(cfg: &DemoConfig, tag: &str) -> Vec<u8> {
+    let path = temp_path(tag);
+    record_demo(&path, cfg).expect("record demo journal");
+    let bytes = std::fs::read(&path).expect("read journal");
+    let _ = std::fs::remove_file(&path);
+    bytes
+}
+
+#[test]
+fn record_replay_round_trips_across_seeds_and_policies() {
+    for policy in ["arrow-slo-aware", "all-to-one", "static-split"] {
+        for seed in [1u64, 7, 42] {
+            let cfg = DemoConfig {
+                seed,
+                steps: 200,
+                policy: policy.into(),
+                ..Default::default()
+            };
+            let path = temp_path(&format!("prop-{policy}-{seed}"));
+            record_demo(&path, &cfg).expect("record");
+            let report = verify_journal(
+                &path,
+                &VerifyOptions {
+                    sim_oracle: true,
+                    max_reported: 16,
+                },
+            )
+            .expect("verify");
+            assert!(
+                report.ok(),
+                "{policy}/seed {seed} diverged: {:?}",
+                report.detail
+            );
+            assert_eq!(
+                report.verified, report.records,
+                "{policy}/seed {seed}: every record must be re-derived"
+            );
+            assert_eq!(
+                report.sim_verified + report.sim_skipped,
+                report.verified,
+                "{policy}/seed {seed}: sim oracle must account for every decision"
+            );
+            assert!(report.torn.is_none());
+            assert!(report.stopped_at_gap.is_none());
+            assert_eq!(report.dropped, 0);
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+#[test]
+fn recording_is_byte_deterministic_per_config() {
+    let cfg = DemoConfig {
+        seed: 9,
+        steps: 150,
+        ..Default::default()
+    };
+    let a = demo_bytes(&cfg, "det-a");
+    let b = demo_bytes(&cfg, "det-b");
+    assert_eq!(a, b, "same config must record identical bytes");
+    let c = demo_bytes(
+        &DemoConfig {
+            seed: 10,
+            ..cfg
+        },
+        "det-c",
+    );
+    assert_ne!(a, c, "a different seed must record a different journal");
+}
+
+#[test]
+fn truncated_tail_replays_the_intact_prefix_and_reports_the_cut() {
+    let cfg = DemoConfig {
+        seed: 3,
+        steps: 120,
+        ..Default::default()
+    };
+    let bytes = demo_bytes(&cfg, "trunc-src");
+    let whole = load_from_bytes(&bytes, "trunc-whole");
+    let total = whole.records.len();
+    assert!(total > 10, "need a non-trivial journal to truncate");
+
+    // Chop mid-record: the final record loses part of its body.
+    for cut in [3usize, 9, 15] {
+        let torn_bytes = &bytes[..bytes.len() - cut];
+        let path = temp_path(&format!("trunc-{cut}"));
+        std::fs::write(&path, torn_bytes).expect("write torn journal");
+        let j = load(&path).expect("torn journal must still load");
+        let t = j.torn.as_ref().expect("cut must be reported");
+        assert!(
+            (t.offset as usize) < bytes.len(),
+            "cut offset {} past file end",
+            t.offset
+        );
+        assert_eq!(
+            j.records.len(),
+            total - 1,
+            "exactly the torn final record is dropped (cut {cut})"
+        );
+        assert_eq!(j.records, whole.records[..total - 1]);
+
+        // The intact prefix still verifies cleanly.
+        let report = verify_journal(&path, &VerifyOptions::default()).expect("verify prefix");
+        assert!(report.ok(), "prefix diverged: {:?}", report.detail);
+        assert!(report.torn.is_some(), "verify must surface the cut");
+        assert_eq!(report.verified, (total - 1) as u64);
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn corrupted_tail_is_cut_at_the_checksum_not_trusted() {
+    let cfg = DemoConfig {
+        seed: 4,
+        steps: 120,
+        ..Default::default()
+    };
+    let mut bytes = demo_bytes(&cfg, "corrupt-src");
+    let whole = load_from_bytes(&bytes, "corrupt-whole");
+    let total = whole.records.len();
+
+    // Flip the last payload byte: the final record's checksum no longer
+    // matches, so replay must cut there and keep the prefix.
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xff;
+    let path = temp_path("corrupt");
+    std::fs::write(&path, &bytes).expect("write corrupted journal");
+    let j = load(&path).expect("corrupted tail must still load");
+    let t = j.torn.as_ref().expect("corruption must be reported");
+    assert!(t.reason.contains("checksum"), "reason: {}", t.reason);
+    assert_eq!(j.records.len(), total - 1);
+    assert_eq!(j.records, whole.records[..total - 1]);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn mid_file_corruption_truncates_everything_after_it() {
+    let cfg = DemoConfig {
+        seed: 5,
+        steps: 120,
+        ..Default::default()
+    };
+    let mut bytes = demo_bytes(&cfg, "midflip-src");
+    let whole = load_from_bytes(&bytes, "midflip-whole");
+    let total = whole.records.len();
+
+    // Flip one byte around the middle of the file. Whatever field it
+    // lands in (length, checksum, payload), nothing at or after the
+    // damaged record may be trusted — and nothing before it may be lost.
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    let path = temp_path("midflip");
+    std::fs::write(&path, &bytes).expect("write corrupted journal");
+    let j = load(&path).expect("mid-file corruption must still load");
+    assert!(j.torn.is_some(), "corruption must be reported");
+    assert!(j.records.len() < total);
+    assert_eq!(j.records[..], whole.records[..j.records.len()]);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn header_damage_is_a_hard_error_not_a_guess() {
+    let cfg = DemoConfig {
+        seed: 6,
+        steps: 40,
+        ..Default::default()
+    };
+    let bytes = demo_bytes(&cfg, "header-src");
+
+    // Bad magic: not a journal at all.
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xff;
+    let path = temp_path("header-magic");
+    std::fs::write(&path, &bad).expect("write");
+    assert!(load(&path).unwrap_err().contains("magic"));
+    let _ = std::fs::remove_file(&path);
+
+    // Future version: refuse loudly (format versioning), never
+    // misinterpret a newer layout as this one.
+    let mut future = bytes.clone();
+    future[4] = 0xEE;
+    let path = temp_path("header-version");
+    std::fs::write(&path, &future).expect("write");
+    assert!(load(&path).unwrap_err().contains("journal format"));
+    let _ = std::fs::remove_file(&path);
+
+    // Header-only file: nothing intact to replay.
+    let path = temp_path("header-only");
+    std::fs::write(&path, &bytes[..8]).expect("write");
+    assert!(load(&path).is_err());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn membership_churn_still_replays_exactly() {
+    // Heavier churn than the default config: more steps on a smaller
+    // cluster makes joins/drains/failures (and the post-failure
+    // re-dispatch records) much denser in the journal.
+    let cfg = DemoConfig {
+        seed: 11,
+        steps: 500,
+        engines: 2,
+        membership: true,
+        ..Default::default()
+    };
+    let path = temp_path("churn");
+    record_demo(&path, &cfg).expect("record");
+    let j = load(&path).expect("load");
+    assert!(
+        j.records
+            .iter()
+            .any(|r| matches!(r, Record::Membership { .. })),
+        "churn config must actually journal membership events"
+    );
+    let report = verify_journal(&path, &VerifyOptions::default()).expect("verify");
+    assert!(report.ok(), "churn diverged: {:?}", report.detail);
+    assert_eq!(report.verified, report.records);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Load a journal from raw bytes via a scratch file.
+fn load_from_bytes(bytes: &[u8], tag: &str) -> arrow::replay::LoadedJournal {
+    let path = temp_path(tag);
+    std::fs::write(&path, bytes).expect("write scratch journal");
+    let j = load(&path).expect("load scratch journal");
+    let _ = std::fs::remove_file(&path);
+    j
+}
