@@ -15,7 +15,8 @@
 # with `benchdiff` (PR 4): >20% regression on the headline metric fails
 # CI; placeholder or mode-mismatched baselines skip with a warning
 # (ROADMAP open item). The paper-claims conformance gate (PR 5) then
-# runs `arrow claims` in smoke mode: all 6 systems x all Table-1
+# runs `arrow claims` in smoke mode: all 8 systems (the paper's six plus
+# the PR-10 scheduling adversaries deflect/unified) x all Table-1
 # workloads under CostModel::normalized(), exiting non-zero when any
 # paper claim fails. The chaos gate (PR 6) runs `arrow chaos` in smoke
 # mode: seeded fault plans against the recovery-armed cluster, exiting
@@ -122,18 +123,20 @@ if [[ "${1:-}" != "--fast" ]]; then
 
     # Paper-claims conformance gate (PR 5): the normalized-cost-model
     # claims sweep in smoke mode (capped clips + coarse rate grid, all
-    # 6 systems x all Table-1 workloads). `arrow claims` exits non-zero
-    # when any paper claim fails; the full report lands next to the
-    # bench smoke outputs.
+    # 8 systems x all Table-1 workloads — the paper's six plus the PR-10
+    # adversaries deflect/unified). `arrow claims` exits non-zero when
+    # any paper claim fails; the full report lands next to the bench
+    # smoke outputs.
     echo "== paper-claims conformance (smoke gate) =="
     ARROW_CLAIMS_SMOKE=1 cargo run --release -q --bin arrow -- \
         claims --out "$smoke_dir/claims"
 
     # Claims-report drift diff (PR 8): the headline is the count of
-    # *core* holding claims — slo_class:* claims are excluded by
-    # benchdiff so a baseline committed before the per-class claims
-    # existed still compares like-for-like. Warn-skips until a smoke
-    # claims.json baseline is committed at the repo root.
+    # *core* holding claims — slo_class:* (PR 8) and deflect:*/unified:*
+    # (PR 10) claims are excluded by benchdiff so a baseline committed
+    # before those claims existed still compares like-for-like.
+    # Warn-skips until a smoke claims.json baseline is committed at the
+    # repo root.
     cargo run --release -q --bin benchdiff -- \
         claims.json "$smoke_dir/claims/claims.json"
 

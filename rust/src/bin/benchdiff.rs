@@ -25,11 +25,12 @@
 //!   (lower is better), from the `arrow loadgen` open-loop soak (PR 9).
 //!
 //! Claims reports (`"report": "claims"`, PR 8) diff on the count of
-//! *core* holding claims — `slo_class:`-prefixed claims are excluded
-//! from the headline so a baseline emitted before the per-class claims
-//! existed still compares like-for-like against a fresh report that
-//! carries them (the slo_class claims are gated by `tests/claims.rs`
-//! and `arrow claims` itself, not by benchdiff).
+//! *core* holding claims — `slo_class:`-prefixed claims (PR 8) and the
+//! `deflect:`/`unified:` adversary claims (PR 10) are excluded from the
+//! headline so a baseline emitted before those claims existed still
+//! compares like-for-like against a fresh report that carries them (the
+//! excluded claims are gated by `tests/claims.rs` and `arrow claims`
+//! itself, not by benchdiff).
 
 use arrow::json::Json;
 
@@ -50,13 +51,19 @@ fn headlines(doc: &Json) -> Vec<(String, f64, Dir)> {
         }
     };
     if doc.get("report").as_str() == Some("claims") {
-        // Count only core claims: slo_class:* were added in PR 8 and
-        // must not break comparisons against older baselines.
+        // Count only core claims: slo_class:* (PR 8) and the
+        // deflect:*/unified:* adversary claims (PR 10) were added later
+        // and must not break comparisons against older baselines.
+        let is_core = |n: &str| {
+            !n.starts_with("slo_class:")
+                && !n.starts_with("deflect:")
+                && !n.starts_with("unified:")
+        };
         let holding = doc.get("claims").as_arr().map(|claims| {
             claims
                 .iter()
                 .filter(|c| {
-                    !c.get("claim").as_str().map_or(false, |n| n.starts_with("slo_class:"))
+                    c.get("claim").as_str().map_or(true, is_core)
                         && c.get("holds").as_bool() == Some(true)
                 })
                 .count() as f64

@@ -28,14 +28,16 @@ subcommands:
           [--workers N] [--target FRAC]
   claims  [--smoke] [--seed N] [--clip SECONDS] [--gpus N] [--out DIR]
           [--workers N] [--target FRAC]
-          (normalized-cost-model conformance sweep; exits non-zero when a
-           paper claim fails; ARROW_CLAIMS_SMOKE=1 implies --smoke)
+          (normalized-cost-model conformance sweep over all eight systems —
+           the paper's six plus the PR-10 adversaries deflect/unified;
+           exits non-zero when a paper claim fails;
+           ARROW_CLAIMS_SMOKE=1 implies --smoke)
   chaos   [--smoke] [--seed N] [--clip SECONDS] [--gpus N] [--out DIR]
           [--workers N]
           (goodput vs seeded fault intensity; exits non-zero when a chaos
            invariant fails — e.g. a silently lost request;
            ARROW_CHAOS_SMOKE=1 implies --smoke)
-  replay  --system <arrow|vllm|vllm-disagg|distserve|minimal-load|round-robin>
+  replay  --system <arrow|vllm|vllm-disagg|distserve|minimal-load|round-robin|deflect|unified>
           --workload <azure_code|azure_conv|burstgpt|mooncake_conv|smoke>
           [--rate-mult M] [--seed N] [--clip SECONDS] [--gpus N]
   replay  <journal.arwj> [--verify] [--sim] [--max-reported N]

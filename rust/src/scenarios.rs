@@ -10,6 +10,10 @@
 //! |                   |                           | low KV cap (long-ctx OOM) |
 //! | Minimal Load      | n/2 P + n/2 D, TP=1       | ablation arm (§7.3)       |
 //! | Round Robin       | n/2 P + n/2 D, TP=1       | ablation arm (§7.3)       |
+//! | Deflect (PR 10)   | n × TP=1 stateless        | Arrow + load-aware        |
+//! |                   |                           | prefill deflection        |
+//! | Unified (PR 10)   | n × TP=1 stateless        | every instance both       |
+//! |                   |                           | phases, movable cut point |
 
 use std::sync::Arc;
 
@@ -19,6 +23,7 @@ use crate::costmodel::CostModel;
 use crate::engine::SimInstance;
 use crate::fault::TransferRetryPolicy;
 use crate::request::InstanceId;
+use crate::sched::{DeflectConfig, DeflectPolicy, UnifiedConfig, UnifiedPolicy};
 use crate::sim::{AdmissionControl, Cluster, MembershipChange, SimConfig, MONITOR_PERIOD};
 
 /// Systems evaluated in Fig. 7 / Fig. 8.
@@ -30,6 +35,12 @@ pub enum System {
     DistServe,
     MinimalLoad,
     RoundRobin,
+    /// PR 10: Arrow + load-aware prefill deflection
+    /// ([`crate::sched::DeflectPolicy`]).
+    Deflect,
+    /// PR 10: unified-elastic, every instance serves both phases behind
+    /// a movable cut point ([`crate::sched::UnifiedPolicy`]).
+    Unified,
 }
 
 impl System {
@@ -41,10 +52,12 @@ impl System {
             System::DistServe => "distserve",
             System::MinimalLoad => "minimal-load",
             System::RoundRobin => "round-robin",
+            System::Deflect => "deflect",
+            System::Unified => "unified",
         }
     }
 
-    pub fn all() -> [System; 6] {
+    pub fn all() -> [System; 8] {
         [
             System::Arrow,
             System::VllmColocated,
@@ -52,6 +65,8 @@ impl System {
             System::DistServe,
             System::MinimalLoad,
             System::RoundRobin,
+            System::Deflect,
+            System::Unified,
         ]
     }
 
@@ -223,6 +238,38 @@ pub fn build_time_scaled(
             );
             Cluster::homogeneous(n_gpus, base.clone(), Box::new(policy), cfg)
         }
+        System::Deflect => {
+            // Arrow's exact topology — n stateless TP=1 instances with
+            // SLO-aware chunking — under the deflection wrapper. The
+            // deflection cap is a token count and both guards are
+            // SLO-ratio tests, so the arm dilates exactly like Arrow's.
+            let policy = DeflectPolicy::new(DeflectConfig::new(ttft_slo, tpot_slo, n_gpus), n_gpus);
+            let cost = Arc::new(base.clone());
+            let instances: Vec<SimInstance> = (0..n_gpus)
+                .map(|i| {
+                    let mut inst = SimInstance::new(InstanceId(i), Arc::clone(&cost));
+                    inst.iter_time_budget = Some(0.8 * tpot_slo);
+                    inst
+                })
+                .collect();
+            Cluster::new(instances, Box::new(policy), cfg)
+        }
+        System::Unified => {
+            // Unified-elastic: same stateless instances, but every one
+            // serves both phases — the iteration budget is what protects
+            // decode TPOT inside every mixed batch, so it is essential
+            // here rather than transitional.
+            let policy = UnifiedPolicy::new(UnifiedConfig::new(ttft_slo, tpot_slo), n_gpus);
+            let cost = Arc::new(base.clone());
+            let instances: Vec<SimInstance> = (0..n_gpus)
+                .map(|i| {
+                    let mut inst = SimInstance::new(InstanceId(i), Arc::clone(&cost));
+                    inst.iter_time_budget = Some(0.8 * tpot_slo);
+                    inst
+                })
+                .collect();
+            Cluster::new(instances, Box::new(policy), cfg)
+        }
     }
 }
 
@@ -234,10 +281,45 @@ pub fn build_time_scaled(
 // static arms have nothing to re-seed).
 // ---------------------------------------------------------------------------
 
-/// An Arrow cluster whose instance table has `n_total` slots but only
-/// `n_live` live at t=0 — the substrate for every elastic scenario.
-/// Spare slots (`n_live..n_total`) join whenever the caller schedules it.
-pub fn arrow_elastic(
+/// Policy arm for the *dynamic* (membership-aware) schedulers — Arrow
+/// and the PR-10 adversaries. The static baselines are membership-blind
+/// by design (§7.3 has nothing to re-seed), so asking for one here is a
+/// caller bug. `n_seed` sizes the pool seed to the live set at t=0;
+/// `n_total` sizes the instance table (spares join later).
+fn dynamic_policy(
+    system: System,
+    n_seed: usize,
+    n_total: usize,
+    ttft_slo: f64,
+    tpot_slo: f64,
+) -> Box<dyn crate::sched::Policy> {
+    match system {
+        System::Arrow => Box::new(ArrowPolicy::new(
+            ArrowConfig::new(ttft_slo, tpot_slo, n_seed),
+            n_total,
+        )),
+        System::Deflect => Box::new(DeflectPolicy::new(
+            DeflectConfig::new(ttft_slo, tpot_slo, n_seed),
+            n_total,
+        )),
+        System::Unified => Box::new(UnifiedPolicy::new(
+            UnifiedConfig::new(ttft_slo, tpot_slo),
+            n_total,
+        )),
+        other => panic!(
+            "{} is membership-blind; elastic/chaos scenarios cover the dynamic schedulers",
+            other.label()
+        ),
+    }
+}
+
+/// A dynamic-scheduler cluster whose instance table has `n_total` slots
+/// but only `n_live` live at t=0 — the substrate for every elastic
+/// scenario. Spare slots (`n_live..n_total`) join whenever the caller
+/// schedules it. `elastic_for(System::Arrow, ..)` is byte-identical to
+/// [`arrow_elastic`].
+pub fn elastic_for(
+    system: System,
     n_total: usize,
     n_live: usize,
     base: &CostModel,
@@ -252,9 +334,9 @@ pub fn arrow_elastic(
         ..Default::default()
     };
     // Pool seed is sized to the *live* set: spares start outside the
-    // cluster and join into whichever pool the policy's Alg. 1 test
-    // picks at join time.
-    let policy = ArrowPolicy::new(ArrowConfig::new(ttft_slo, tpot_slo, n_live), n_total);
+    // cluster and join into whichever pool the policy's membership
+    // handling picks at join time.
+    let policy = dynamic_policy(system, n_live, n_total, ttft_slo, tpot_slo);
     let cost = Arc::new(base.clone());
     let instances: Vec<SimInstance> = (0..n_total)
         .map(|i| {
@@ -263,11 +345,24 @@ pub fn arrow_elastic(
             inst
         })
         .collect();
-    let mut cl = Cluster::new(instances, Box::new(policy), cfg);
+    let mut cl = Cluster::new(instances, policy, cfg);
     if n_live < n_total {
         cl.set_initial_live((0..n_total).map(|i| i < n_live).collect());
     }
     cl
+}
+
+/// An Arrow cluster whose instance table has `n_total` slots but only
+/// `n_live` live at t=0. See [`elastic_for`].
+pub fn arrow_elastic(
+    n_total: usize,
+    n_live: usize,
+    base: &CostModel,
+    ttft_slo: f64,
+    tpot_slo: f64,
+    record_timeline: bool,
+) -> Cluster {
+    elastic_for(System::Arrow, n_total, n_live, base, ttft_slo, tpot_slo, record_timeline)
 }
 
 /// Spike scale-out: `n_spare` instances join at `join_at` (the moment a
@@ -282,7 +377,23 @@ pub fn spike_scale_out(
     tpot_slo: f64,
     join_at: f64,
 ) -> Cluster {
-    let mut cl = arrow_elastic(n_base + n_spare, n_base, base, ttft_slo, tpot_slo, false);
+    spike_scale_out_for(System::Arrow, n_base, n_spare, base, ttft_slo, tpot_slo, join_at)
+}
+
+/// [`spike_scale_out`] under any dynamic scheduler (PR 10): the same
+/// spare-join schedule with the policy arm selected by `system`, so the
+/// elastic-membership dominance property can be asserted for the
+/// scheduling adversaries too.
+pub fn spike_scale_out_for(
+    system: System,
+    n_base: usize,
+    n_spare: usize,
+    base: &CostModel,
+    ttft_slo: f64,
+    tpot_slo: f64,
+    join_at: f64,
+) -> Cluster {
+    let mut cl = elastic_for(system, n_base + n_spare, n_base, base, ttft_slo, tpot_slo, false);
     for s in 0..n_spare {
         cl.schedule_membership(join_at, MembershipChange::Join(n_base + s));
     }
@@ -346,6 +457,22 @@ pub fn arrow_chaos(
     ttft_slo: f64,
     tpot_slo: f64,
 ) -> Cluster {
+    system_chaos(System::Arrow, n, base, ttft_slo, tpot_slo)
+}
+
+/// [`arrow_chaos`]'s recovery-armed configuration under any dynamic
+/// scheduler (PR 10): the same bounded fabric, retry policy and
+/// straggler detection with the policy arm selected by `system`, so the
+/// chaos tier's no-silent-loss and determinism contracts can be enforced
+/// on the scheduling adversaries too. `system_chaos(System::Arrow, ..)`
+/// is byte-identical to [`arrow_chaos`].
+pub fn system_chaos(
+    system: System,
+    n: usize,
+    base: &CostModel,
+    ttft_slo: f64,
+    tpot_slo: f64,
+) -> Cluster {
     assert!(n >= 2, "chaos scenarios need >= 2 instances");
     let cfg = SimConfig {
         record_timeline: false,
@@ -358,7 +485,7 @@ pub fn arrow_chaos(
         straggler_factor: Some(3.0),
         ..Default::default()
     };
-    let policy = ArrowPolicy::new(ArrowConfig::new(ttft_slo, tpot_slo, n), n);
+    let policy = dynamic_policy(system, n, n, ttft_slo, tpot_slo);
     let cost = Arc::new(base.clone());
     let instances: Vec<SimInstance> = (0..n)
         .map(|i| {
@@ -367,7 +494,7 @@ pub fn arrow_chaos(
             inst
         })
         .collect();
-    Cluster::new(instances, Box::new(policy), cfg)
+    Cluster::new(instances, policy, cfg)
 }
 
 // ---------------------------------------------------------------------------
@@ -521,6 +648,30 @@ mod tests {
         let finished = res.records.iter().filter(|r| r.finished()).count();
         assert_eq!(finished, trace.len(), "fault-free chaos builder lost requests");
         assert!(res.records.iter().all(|r| r.shed.is_none()));
+    }
+
+    #[test]
+    fn adversary_elastic_and_chaos_builders_complete_light_load() {
+        // The PR-10 arms of the generic builders: membership churn and the
+        // armed (fault-free) recovery fabric must both be inert at light
+        // load, exactly like Arrow's.
+        let base = CostModel::h800_llama8b();
+        let trace = smoke(120, 2).generate(17);
+        let d = trace.duration();
+        for sys in [System::Deflect, System::Unified] {
+            let res = spike_scale_out_for(sys, 4, 2, &base, 2.0, 0.1, 0.3 * d).run(&trace);
+            assert!(
+                res.records.iter().all(|r| r.finished()),
+                "{}: elastic light load lost requests",
+                sys.label()
+            );
+            let res = system_chaos(sys, 4, &base, 2.0, 0.1).run(&trace);
+            assert!(
+                res.records.iter().all(|r| r.finished()),
+                "{}: fault-free chaos light load lost requests",
+                sys.label()
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,420 @@
+//! Load-aware prefill deflection (PR 10): Arrow's elastic pools plus the
+//! *Towards Load-Aware Prefill Deflection* insight — a flip takes a
+//! drain window to pay off, but a **small** prefill can be chunk-
+//! colocated onto a decode instance *right now*.
+//!
+//! [`DeflectPolicy`] wraps a plain [`ArrowPolicy`] and intercepts exactly
+//! one decision: when Algorithm 1's SLO test fails on every prefill-
+//! capable candidate (the condition under which Arrow would wait for —
+//! or burn — a whole-instance flip), a prefill no longer than the
+//! deflection cap is sent to the least-loaded decode-capable instance
+//! instead. The engine's SLO-aware chunking (`iter_time_budget`) mixes
+//! the deflected chunk with the decode batch, so the colocated window
+//! needs **no new substrate hook**: the ranked-enqueue path and decode
+//! priority already protect the co-resident decode head.
+//!
+//! Guards (all ratio-of-SLO or token-count based — no absolute-seconds
+//! constants, so cost-scale invariance holds by construction):
+//!
+//! * **Trigger** — deflection happens only under prefill pressure: both
+//!   Alg. 1 acceptance tests (P, then D→P pool argmin) must fail for the
+//!   request's own class TTFT target. On a quiescent cluster the wrapper
+//!   delegates every decision verbatim, so its schedule is bit-identical
+//!   to plain Arrow's (`tests/deflection.rs` pins this).
+//! * **Size cap** — only prefills with `input_len <=`
+//!   [`DeflectConfig::deflect_max_tokens`] are eligible; an oversized
+//!   prefill would monopolize the mixed iterations it shares with
+//!   decode.
+//! * **Interference guard** — a target whose recent token interval
+//!   already breaches the request's TPOT budget is refused: deflecting
+//!   onto it would convert a TTFT miss into a TPOT miss.
+//! * **Capacity** — the target must fit the deflected KV within both its
+//!   profiled Max Running Tokens and its KV memory (the request decodes
+//!   locally afterwards — zero transfer, like Arrow's local handoff).
+//! * **Hopelessness** — a request whose own prefill time alone exceeds
+//!   its TTFT target is never deflected (Insight 2 monotonicity: no
+//!   placement can rescue it; Arrow's hopeless branch handles it
+//!   without a flip).
+//!
+//! Everything else — decode placement, monitor ticks, membership events,
+//! pool bookkeeping — is delegated to the wrapped Arrow policy, so every
+//! PR-1..9 contract (allocation-free placement, determinism, substrate
+//! blindness, chaos recovery) is inherited rather than re-implemented.
+
+use crate::coordinator::arrow::{ArrowConfig, ArrowPolicy};
+use crate::coordinator::pools::Pool;
+use crate::coordinator::predictor::TtftPredictor;
+use crate::request::{InstanceId, Request, Time};
+use crate::sched::{ClusterView, MembershipEvent, Policy, ProfileSource, DEFAULT_CHUNK_TOKENS};
+
+/// Tunables for [`DeflectPolicy`].
+#[derive(Debug, Clone)]
+pub struct DeflectConfig {
+    /// The wrapped Arrow policy's configuration (SLOs, watermarks, class
+    /// awareness) — deflection judges pressure against the same targets.
+    pub arrow: ArrowConfig,
+    /// Largest prefill (input tokens) eligible for deflection. Defaults
+    /// to one chunk budget: a deflected prefill then completes in a
+    /// single mixed iteration, the regime the deflection paper targets.
+    /// Dimensionless (a token count), so time dilation leaves it alone.
+    pub deflect_max_tokens: u32,
+}
+
+impl DeflectConfig {
+    pub fn new(ttft_slo: f64, tpot_slo: f64, n_instances: usize) -> Self {
+        DeflectConfig {
+            arrow: ArrowConfig::new(ttft_slo, tpot_slo, n_instances),
+            deflect_max_tokens: DEFAULT_CHUNK_TOKENS,
+        }
+    }
+}
+
+/// Arrow + load-aware prefill deflection. See module docs.
+pub struct DeflectPolicy {
+    cfg: DeflectConfig,
+    inner: ArrowPolicy,
+    /// Own predictor/capacity tables (same [`ProfileSource`] data the
+    /// inner policy fits): the wrapper prices queues itself so the
+    /// pressure test never has to reach into Arrow's private cache.
+    predictors: Vec<TtftPredictor>,
+    max_running_tokens: Vec<u64>,
+    /// Prefills deflected so far (ablation metric, mirrors flip_count).
+    deflections: u64,
+}
+
+impl DeflectPolicy {
+    pub fn new(cfg: DeflectConfig, n_instances: usize) -> Self {
+        let inner = ArrowPolicy::new(cfg.arrow.clone(), n_instances);
+        DeflectPolicy {
+            cfg,
+            inner,
+            predictors: Vec::new(),
+            max_running_tokens: Vec::new(),
+            deflections: 0,
+        }
+    }
+
+    /// Number of prefills deflected onto decode instances so far.
+    pub fn deflection_count(&self) -> u64 {
+        self.deflections
+    }
+
+    /// The wrapped policy's pool bookkeeping (conformance tests).
+    pub fn pools(&self) -> &crate::coordinator::pools::Pools {
+        self.inner.pools()
+    }
+
+    fn predictor(&self, inst: usize) -> &TtftPredictor {
+        self.predictors.get(inst).expect("policy not initialized")
+    }
+
+    fn mrt(&self, inst: usize) -> u64 {
+        self.max_running_tokens.get(inst).copied().unwrap_or(u64::MAX)
+    }
+
+    /// Argmin of predicted prefill queue delay over `pool`, by direct
+    /// member scan (allocation-free; O(1) moments per member). Ties go to
+    /// the lowest id and NaN orders last — the same semantics as Arrow's
+    /// keyed index, so the pressure test below reproduces Alg. 1's
+    /// acceptance decisions exactly.
+    fn min_delay_scan(&self, pool: Pool, view: &dyn ClusterView) -> Option<(InstanceId, f64)> {
+        let mut best: Option<(InstanceId, f64)> = None;
+        for id in self.inner.pools().members_iter(pool) {
+            let m = view.prefill_queue_moments(id.0);
+            let d = self.predictor(id.0).queue_delay_moments(&m);
+            let better = match best {
+                None => true,
+                Some((bid, bd)) => match d.total_cmp(&bd) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Equal => id < bid,
+                    std::cmp::Ordering::Greater => false,
+                },
+            };
+            if better {
+                best = Some((id, d));
+            }
+        }
+        best
+    }
+
+    /// Would Alg. 1 accept this pool's argmin for `req`? (the exact
+    /// acceptance predicate of the wrapped policy: queue delay + own
+    /// prefill time within the class TTFT target, candidate not a
+    /// straggler).
+    fn pool_accepts(
+        &self,
+        pool: Pool,
+        req: &Request,
+        ttft_slo: f64,
+        view: &dyn ClusterView,
+    ) -> bool {
+        self.min_delay_scan(pool, view).is_some_and(|(id, delay)| {
+            delay + self.predictor(id.0).prefill_seconds(req.input_len) <= ttft_slo
+                && !view.liveness(id.0).is_degraded()
+        })
+    }
+
+    /// The request's class-scaled targets (mirrors the wrapped policy's
+    /// PR-8 semantics, including the class-blind toggle).
+    fn ttft_slo_for(&self, req: &Request) -> f64 {
+        if self.cfg.arrow.class_aware {
+            req.class.ttft_slo(self.cfg.arrow.ttft_slo)
+        } else {
+            self.cfg.arrow.ttft_slo
+        }
+    }
+
+    fn tpot_slo_for(&self, req: &Request) -> f64 {
+        if self.cfg.arrow.class_aware {
+            req.class.tpot_slo(self.cfg.arrow.tpot_slo)
+        } else {
+            self.cfg.arrow.tpot_slo
+        }
+    }
+
+    /// The deflection decision: `Some(target)` iff the size cap, the
+    /// pressure trigger, and every target guard all pass. Read-only —
+    /// pool bookkeeping is untouched, so a refused deflection leaves the
+    /// wrapped policy to decide exactly as plain Arrow would.
+    fn try_deflect(&self, req: &Request, view: &dyn ClusterView) -> Option<InstanceId> {
+        // Size cap: oversized prefills are never deflected.
+        if req.input_len > self.cfg.deflect_max_tokens {
+            return None;
+        }
+        let ttft_slo = self.ttft_slo_for(req);
+        // Trigger: only under prefill pressure — i.e. when both Alg. 1
+        // acceptance tests would fail and Arrow would look for a flip.
+        if self.pool_accepts(Pool::Prefill, req, ttft_slo, view)
+            || self.pool_accepts(Pool::DecodeToPrefill, req, ttft_slo, view)
+        {
+            return None;
+        }
+        // Hopeless requests gain nothing from deflection: own prefill
+        // time alone already exceeds the target on every instance of a
+        // homogeneous cluster, and on heterogeneous ones the hopeless
+        // branch of the wrapped Alg. 1 still avoids burning a flip.
+        let hopeless = self
+            .min_delay_scan(Pool::Prefill, view)
+            .or_else(|| self.min_delay_scan(Pool::DecodeToPrefill, view))
+            .is_some_and(|(id, _)| {
+                self.predictor(id.0).prefill_seconds(req.input_len) > ttft_slo
+            });
+        if hopeless {
+            return None;
+        }
+        // Target: least-loaded decode-capable instance — load counts both
+        // resident decode tokens and already-queued (possibly previously
+        // deflected) prefill tokens, so a burst of deflections spreads
+        // across targets instead of thundering onto one. Ties go to the
+        // lowest id. One allocation-free pass over D ∪ P→D.
+        let tpot_slo = self.tpot_slo_for(req);
+        let incoming = req.input_len as u64;
+        let mut best: Option<(InstanceId, u64)> = None;
+        for id in self
+            .inner
+            .pools()
+            .members_iter(Pool::Decode)
+            .chain(self.inner.pools().members_iter(Pool::PrefillToDecode))
+        {
+            let i = id.0;
+            let life = view.liveness(i);
+            if !life.placeable() || life.is_degraded() {
+                continue;
+            }
+            // Interference guard: a target already past the TPOT budget
+            // must not absorb extra prefill work (NaN = no evidence =
+            // admissible, matching Alg. 2's convention).
+            let interval = view.avg_token_interval(i);
+            if !(interval.is_nan() || interval <= tpot_slo) {
+                continue;
+            }
+            // Capacity: the deflected KV must fit — the request decodes
+            // locally afterwards, so judge it like a decode admission.
+            let tokens = view.running_tokens(i);
+            if tokens + incoming > self.mrt(i).min(view.max_kv_tokens(i)) {
+                continue;
+            }
+            let load = tokens + view.queued_prefill_tokens(i);
+            let better = match best {
+                None => true,
+                Some((bid, bt)) => load < bt || (load == bt && id < bid),
+            };
+            if better {
+                best = Some((id, load));
+            }
+        }
+        best.map(|(id, _)| id)
+    }
+}
+
+impl Policy for DeflectPolicy {
+    fn name(&self) -> &'static str {
+        "arrow-deflect"
+    }
+
+    fn init(&mut self, profile: &dyn ProfileSource) {
+        let n = profile.n_instances();
+        self.predictors = (0..n).map(|i| profile.fit_predictor(i)).collect();
+        self.max_running_tokens = (0..n)
+            .map(|i| profile.max_running_tokens(i, self.cfg.arrow.tpot_slo))
+            .collect();
+        self.inner.init(profile);
+    }
+
+    fn place_prefill(&mut self, now: Time, req: &Request, view: &dyn ClusterView) -> InstanceId {
+        if let Some(target) = self.try_deflect(req, view) {
+            self.deflections += 1;
+            return target;
+        }
+        self.inner.place_prefill(now, req, view)
+    }
+
+    fn place_decode(
+        &mut self,
+        now: Time,
+        req: &Request,
+        prefill_instance: InstanceId,
+        view: &dyn ClusterView,
+    ) -> InstanceId {
+        // Delegated verbatim. A deflected request prefilled on a decode-
+        // capable instance, so Arrow's local-handoff branch keeps its
+        // decode there — zero KV transfer, the whole point of deflection.
+        self.inner.place_decode(now, req, prefill_instance, view)
+    }
+
+    fn on_tick(&mut self, now: Time, view: &dyn ClusterView) {
+        self.inner.on_tick(now, view);
+    }
+
+    fn on_membership(
+        &mut self,
+        now: Time,
+        ev: MembershipEvent,
+        view: &dyn ClusterView,
+        profile: &dyn ProfileSource,
+    ) {
+        // Keep the wrapper's own tables in sync with joiners before the
+        // wrapped policy re-seeds its pools (same refresh rule Arrow
+        // applies: a rejoining slot may carry different hardware).
+        if let MembershipEvent::InstanceJoined { id } = ev {
+            let i = id.0;
+            while self.predictors.len() <= i {
+                let j = self.predictors.len();
+                self.predictors.push(profile.fit_predictor(j));
+                self.max_running_tokens
+                    .push(profile.max_running_tokens(j, self.cfg.arrow.tpot_slo));
+            }
+            self.predictors[i] = profile.fit_predictor(i);
+            self.max_running_tokens[i] =
+                profile.max_running_tokens(i, self.cfg.arrow.tpot_slo);
+        }
+        self.inner.on_membership(now, ev, view, profile);
+    }
+
+    fn pool_sizes(&self) -> Option<[usize; 4]> {
+        self.inner.pool_sizes()
+    }
+
+    fn flip_count(&self) -> u64 {
+        self.inner.flip_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::CostModel;
+    use crate::engine::SimInstance;
+    use crate::request::RequestId;
+    use crate::sim::SimView;
+
+    fn cluster(n: usize) -> Vec<SimInstance> {
+        (0..n)
+            .map(|i| SimInstance::new(InstanceId(i), CostModel::h800_llama8b()))
+            .collect()
+    }
+
+    fn policy(n: usize) -> (DeflectPolicy, Vec<SimInstance>) {
+        let insts = cluster(n);
+        let mut p = DeflectPolicy::new(DeflectConfig::new(3.0, 0.1, n), n);
+        p.init(&SimView(&insts));
+        (p, insts)
+    }
+
+    fn req(id: u64, input: u32, output: u32) -> Request {
+        Request::new(id, 0.0, input, output)
+    }
+
+    fn press_prefill_pool(insts: &mut [SimInstance]) {
+        // Backlog both seed prefill instances (0, 1) far past any SLO.
+        for inst in insts.iter_mut().take(2) {
+            for r in 0..4 {
+                inst.enqueue_prefill(RequestId(100 + r), 100_000);
+            }
+        }
+    }
+
+    #[test]
+    fn quiescent_cluster_delegates_to_arrow() {
+        let (mut p, insts) = policy(4);
+        let t = p.place_prefill(0.0, &req(1, 1000, 10), &SimView(&insts));
+        assert!(t.0 < 2, "no pressure: plain Arrow placement, got {t}");
+        assert_eq!(p.deflection_count(), 0);
+    }
+
+    #[test]
+    fn pressure_deflects_small_prefill_instead_of_flipping() {
+        let (mut p, mut insts) = policy(4);
+        press_prefill_pool(&mut insts);
+        assert_eq!(p.pools().sizes(), [2, 2, 0, 0]);
+        let t = p.place_prefill(0.0, &req(1, 1000, 10), &SimView(&insts));
+        assert!(t.0 >= 2, "small prefill deflects to a decode instance, got {t}");
+        assert_eq!(p.deflection_count(), 1);
+        // No flip was burned: the pools are untouched.
+        assert_eq!(p.pools().sizes(), [2, 2, 0, 0]);
+        assert_eq!(p.flip_count(), 0);
+        // The decode then stays local — zero KV transfer.
+        let d = p.place_decode(0.0, &req(1, 1000, 10), t, &SimView(&insts));
+        assert_eq!(d, t);
+    }
+
+    #[test]
+    fn oversized_prefill_is_never_deflected() {
+        let (mut p, mut insts) = policy(4);
+        press_prefill_pool(&mut insts);
+        // Same pressure, but the request exceeds the deflection cap: the
+        // wrapped Arrow decides — and under idle decode it flips.
+        let big = req(1, DEFAULT_CHUNK_TOKENS + 1, 10);
+        let t = p.place_prefill(0.0, &big, &SimView(&insts));
+        assert_eq!(p.deflection_count(), 0);
+        assert!(t.0 >= 2, "Arrow's own steal still applies, got {t}");
+        assert!(p.flip_count() >= 1, "delegation reached Arrow's flip");
+    }
+
+    #[test]
+    fn interference_guard_refuses_tpot_breaching_target() {
+        let (mut p, mut insts) = policy(4);
+        press_prefill_pool(&mut insts);
+        // Both decode instances report token intervals far past the TPOT
+        // budget: the guard must refuse deflection entirely.
+        for inst in insts.iter_mut().skip(2) {
+            inst.seed_token_interval(0.5); // >> 0.1s TPOT SLO
+        }
+        p.place_prefill(0.0, &req(1, 1000, 10), &SimView(&insts));
+        assert_eq!(p.deflection_count(), 0, "guard must block deflection");
+    }
+
+    #[test]
+    fn capacity_guard_skips_full_target() {
+        let (mut p, mut insts) = policy(4);
+        press_prefill_pool(&mut insts);
+        // Fill instance 2's KV completely; 3 stays empty: the deflection
+        // argmin must land on 3.
+        let cap = insts[2].cost.max_kv_tokens;
+        assert!(insts[2].try_reserve_kv(cap));
+        insts[2].enqueue_decode(RequestId(60), cap as u32, 100);
+        let t = p.place_prefill(0.0, &req(1, 1000, 10), &SimView(&insts));
+        assert_eq!(t, InstanceId(3));
+        assert_eq!(p.deflection_count(), 1);
+    }
+}

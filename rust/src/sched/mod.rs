@@ -37,9 +37,13 @@
 //!   per-instance freshness check when the substrate proves nothing
 //!   changed. See ROADMAP "Scale architecture (PR 4)".
 
+pub mod deflect;
 pub mod policy;
+pub mod unified;
 
+pub use deflect::{DeflectConfig, DeflectPolicy};
 pub use policy::{tests_support, Policy};
+pub use unified::{UnifiedConfig, UnifiedPolicy};
 
 use crate::coordinator::predictor::TtftPredictor;
 use crate::request::InstanceId;

@@ -1,0 +1,442 @@
+//! Unified-elastic scheduling (PR 10): the DynaServe/DOPD-style
+//! adversary where **every** instance serves both phases and a movable
+//! **cut point** balances prefill-vs-decode token share per instance.
+//!
+//! Where Arrow partitions instances into elastic *pools* and moves whole
+//! instances between roles, [`UnifiedPolicy`] keeps one flat membership
+//! (each instance sits in exactly one pool slot — the `Prefill` slot, by
+//! convention — and never flips) and instead moves a scalar `cut ∈
+//! [cut_min, cut_max]`: the target fraction of each instance's resident
+//! token load that should be prefill work. Placement steers toward the
+//! cut:
+//!
+//! * **Prefill** goes to the member with the least *cut-weighted* token
+//!   load — prefill tokens priced at `1/cut`, decode tokens at
+//!   `1/(1-cut)` — so at equilibrium every member's prefill share of
+//!   resident tokens converges to the cut.
+//! * **Decode** stays **local** to the prefill instance (every member is
+//!   decode-capable, so the KV never moves — the unified design's core
+//!   economy); only a departed instance forces a migration to the
+//!   least-loaded member.
+//!
+//! The cut itself is re-derived on monitor ticks from the same integer
+//! queue-delay moments Arrow prices queues with: mean predicted prefill
+//! delay (via [`TtftPredictor::queue_delay_moments`]) against the TTFT
+//! budget raises it, TPOT breaches or decode utilization above the
+//! watermark lower it, calm reverts it toward the balanced midpoint.
+//! Every comparison is a ratio of SLO-derived quantities and every step
+//! is a dimensionless fraction, so cost-scale invariance holds by
+//! construction — the metamorphic tier pins it.
+
+use crate::coordinator::pools::{Pool, Pools};
+use crate::coordinator::predictor::TtftPredictor;
+use crate::request::{InstanceId, Request, Time};
+use crate::sched::{ClusterView, MembershipEvent, Policy, ProfileSource};
+
+/// Tunables for [`UnifiedPolicy`]. All fractions/ratios — no absolute
+/// seconds anywhere near a placement path.
+#[derive(Debug, Clone)]
+pub struct UnifiedConfig {
+    /// TTFT SLO the cut controller judges prefill pressure against.
+    pub ttft_slo: f64,
+    /// TPOT SLO the cut controller judges decode pressure against.
+    pub tpot_slo: f64,
+    /// Decode utilization (fraction of each member's capacity) above
+    /// which decode counts as pressed.
+    pub decode_watermark: f64,
+    /// Cut-point bounds: prefill may never claim less/more than this
+    /// share of a member's token load.
+    pub cut_min: f64,
+    pub cut_max: f64,
+    /// Per-tick cut adjustment step.
+    pub cut_step: f64,
+    /// Fraction of the TTFT budget the mean predicted queue delay may
+    /// reach before prefill counts as pressed.
+    pub pressure_frac: f64,
+}
+
+impl UnifiedConfig {
+    pub fn new(ttft_slo: f64, tpot_slo: f64) -> Self {
+        UnifiedConfig {
+            ttft_slo,
+            tpot_slo,
+            decode_watermark: 0.5,
+            cut_min: 0.1,
+            cut_max: 0.9,
+            cut_step: 0.05,
+            pressure_frac: 0.5,
+        }
+    }
+}
+
+/// Unified-elastic policy. See module docs.
+pub struct UnifiedPolicy {
+    cfg: UnifiedConfig,
+    /// Flat membership: every member lives in the `Prefill` slot and
+    /// never transitions — `pool_sizes()` reports `[n, 0, 0, 0]` and
+    /// `flip_count()` stays 0 (the flip-conservation property is trivial
+    /// for a policy that moves a cut point instead of instances).
+    members: Pools,
+    /// Movable cut point: target prefill share of per-member token load.
+    cut: f64,
+    predictors: Vec<TtftPredictor>,
+    max_running_tokens: Vec<u64>,
+}
+
+impl UnifiedPolicy {
+    pub fn new(cfg: UnifiedConfig, n_instances: usize) -> Self {
+        let cut = ((cfg.cut_min + cfg.cut_max) / 2.0).clamp(cfg.cut_min, cfg.cut_max);
+        UnifiedPolicy {
+            cfg,
+            members: Pools::new(n_instances, n_instances),
+            cut,
+            predictors: Vec::new(),
+            max_running_tokens: Vec::new(),
+        }
+    }
+
+    /// Current cut point (tests / snapshots).
+    pub fn cut(&self) -> f64 {
+        self.cut
+    }
+
+    /// Flat membership bookkeeping (conformance tests).
+    pub fn members(&self) -> &Pools {
+        &self.members
+    }
+
+    fn predictor(&self, inst: usize) -> &TtftPredictor {
+        self.predictors.get(inst).expect("policy not initialized")
+    }
+
+    fn mrt(&self, inst: usize) -> u64 {
+        self.max_running_tokens.get(inst).copied().unwrap_or(u64::MAX)
+    }
+
+    /// Cut-weighted token load of member `i` if it accepted `incoming`
+    /// more prefill tokens: prefill tokens priced at `1/cut`, decode
+    /// tokens at `1/(1-cut)`. Argmin placement over this score drives
+    /// each member's prefill share of resident tokens toward the cut
+    /// (the bounds keep both denominators away from zero).
+    fn weighted_load(&self, view: &dyn ClusterView, i: usize, incoming: u64) -> f64 {
+        let p = view.prefill_queue_moments(i).sum_remaining + incoming;
+        let d = view.running_tokens(i);
+        p as f64 / self.cut + d as f64 / (1.0 - self.cut)
+    }
+
+    /// Last-ditch placement when the membership table is empty
+    /// (everything lost/draining): first healthy live instance, then any
+    /// placeable, else 0 — the same ladder Arrow ends on.
+    fn last_ditch(view: &dyn ClusterView) -> InstanceId {
+        (0..view.n_instances())
+            .map(InstanceId)
+            .find(|id| {
+                let l = view.liveness(id.0);
+                l.placeable() && !l.is_degraded()
+            })
+            .or_else(|| {
+                (0..view.n_instances())
+                    .map(InstanceId)
+                    .find(|id| view.liveness(id.0).placeable())
+            })
+            .unwrap_or(InstanceId(0))
+    }
+}
+
+impl Policy for UnifiedPolicy {
+    fn name(&self) -> &'static str {
+        "unified-elastic"
+    }
+
+    fn init(&mut self, profile: &dyn ProfileSource) {
+        let n = profile.n_instances();
+        self.predictors = (0..n).map(|i| profile.fit_predictor(i)).collect();
+        self.max_running_tokens = (0..n)
+            .map(|i| profile.max_running_tokens(i, self.cfg.tpot_slo))
+            .collect();
+    }
+
+    fn place_prefill(&mut self, _now: Time, req: &Request, view: &dyn ClusterView) -> InstanceId {
+        let incoming = req.input_len as u64;
+        // First pass: healthy members with KV headroom, minimizing the
+        // post-acceptance cut-weighted load (ties to lowest id; NaN
+        // cannot arise — the score is a sum of finite ratios).
+        let mut best: Option<(InstanceId, f64)> = None;
+        let mut fallback: Option<InstanceId> = None;
+        for id in self.members.members_iter(Pool::Prefill) {
+            let i = id.0;
+            let life = view.liveness(i);
+            if !life.placeable() {
+                continue;
+            }
+            if fallback.map_or(true, |f| id < f) {
+                fallback = Some(id);
+            }
+            if life.is_degraded()
+                || view.running_tokens(i) + incoming > view.max_kv_tokens(i)
+            {
+                continue;
+            }
+            let score = self.weighted_load(view, i, incoming);
+            let better = match best {
+                None => true,
+                Some((bid, bs)) => match score.total_cmp(&bs) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Equal => id < bid,
+                    std::cmp::Ordering::Greater => false,
+                },
+            };
+            if better {
+                best = Some((id, score));
+            }
+        }
+        best.map(|(id, _)| id)
+            .or(fallback)
+            .unwrap_or_else(|| Self::last_ditch(view))
+    }
+
+    fn place_decode(
+        &mut self,
+        _now: Time,
+        req: &Request,
+        prefill_instance: InstanceId,
+        view: &dyn ClusterView,
+    ) -> InstanceId {
+        // Every member serves both phases: decode stays where the KV
+        // already is. Only a departed prefill instance forces migration.
+        if self.members.contains(prefill_instance)
+            && view.liveness(prefill_instance.0).in_cluster()
+        {
+            return prefill_instance;
+        }
+        // Migration target: least-loaded healthy member that fits the
+        // incoming KV within capacity and its TPOT budget.
+        let incoming = req.input_len as u64;
+        let mut best: Option<(InstanceId, u64)> = None;
+        let mut fallback: Option<InstanceId> = None;
+        for id in self.members.members_iter(Pool::Prefill) {
+            let i = id.0;
+            if !view.liveness(i).placeable() {
+                continue;
+            }
+            if fallback.map_or(true, |f| id < f) {
+                fallback = Some(id);
+            }
+            let tokens = view.running_tokens(i);
+            let interval = view.avg_token_interval(i);
+            if view.liveness(i).is_degraded()
+                || tokens + incoming > self.mrt(i).min(view.max_kv_tokens(i))
+                || !(interval.is_nan() || interval <= self.cfg.tpot_slo)
+            {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bid, bt)) => tokens < bt || (tokens == bt && id < bid),
+            };
+            if better {
+                best = Some((id, tokens));
+            }
+        }
+        best.map(|(id, _)| id)
+            .or(fallback)
+            .unwrap_or(prefill_instance)
+    }
+
+    /// Monitor tick: re-derive the cut point from the same integer
+    /// queue-delay moments Arrow prices with. Pure ratios — see module
+    /// docs for the invariance argument.
+    fn on_tick(&mut self, _now: Time, view: &dyn ClusterView) {
+        let mut n = 0usize;
+        let mut delay_sum = 0.0;
+        let mut util_sum = 0.0;
+        let mut tpot_breach = false;
+        for id in self.members.members_iter(Pool::Prefill) {
+            let i = id.0;
+            let m = view.prefill_queue_moments(i);
+            delay_sum += self.predictor(i).queue_delay_moments(&m);
+            let cap = self.mrt(i).min(view.max_kv_tokens(i)) as f64;
+            util_sum += view.running_tokens(i) as f64 / cap.max(1.0);
+            let v = view.avg_token_interval(i);
+            tpot_breach |= !v.is_nan() && v > self.cfg.tpot_slo;
+            n += 1;
+        }
+        if n == 0 {
+            return;
+        }
+        let mean_delay = delay_sum / n as f64;
+        let mean_util = util_sum / n as f64;
+        // NaN (broken predictor) counts as pressure, never a free pass.
+        let prefill_pressed = !(mean_delay <= self.cfg.pressure_frac * self.cfg.ttft_slo);
+        let decode_pressed = tpot_breach || mean_util > self.cfg.decode_watermark;
+        let mid = (self.cfg.cut_min + self.cfg.cut_max) / 2.0;
+        if prefill_pressed && !decode_pressed {
+            self.cut += self.cfg.cut_step;
+        } else if decode_pressed && !prefill_pressed {
+            self.cut -= self.cfg.cut_step;
+        } else if !prefill_pressed && !decode_pressed {
+            // Calm: decay toward the balanced midpoint, without
+            // overshooting it.
+            if self.cut > mid {
+                self.cut = (self.cut - self.cfg.cut_step).max(mid);
+            } else if self.cut < mid {
+                self.cut = (self.cut + self.cfg.cut_step).min(mid);
+            }
+        }
+        self.cut = self.cut.clamp(self.cfg.cut_min, self.cfg.cut_max);
+    }
+
+    fn on_membership(
+        &mut self,
+        _now: Time,
+        ev: MembershipEvent,
+        _view: &dyn ClusterView,
+        profile: &dyn ProfileSource,
+    ) {
+        match ev {
+            MembershipEvent::InstanceJoined { id } => {
+                if self.members.contains(id) {
+                    return; // idempotent, like Arrow's membership
+                }
+                let i = id.0;
+                while self.predictors.len() <= i {
+                    let j = self.predictors.len();
+                    self.predictors.push(profile.fit_predictor(j));
+                    self.max_running_tokens
+                        .push(profile.max_running_tokens(j, self.cfg.tpot_slo));
+                }
+                self.predictors[i] = profile.fit_predictor(i);
+                self.max_running_tokens[i] =
+                    profile.max_running_tokens(i, self.cfg.tpot_slo);
+                // A joiner lands in the one slot every member occupies —
+                // there is no role decision to make in a unified design.
+                self.members.join(id, Pool::Prefill);
+            }
+            MembershipEvent::InstanceDraining { id } | MembershipEvent::InstanceLost { id } => {
+                self.members.remove(id);
+            }
+        }
+    }
+
+    fn pool_sizes(&self) -> Option<[usize; 4]> {
+        Some(self.members.sizes())
+    }
+
+    fn flip_count(&self) -> u64 {
+        self.members.flip_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::CostModel;
+    use crate::engine::SimInstance;
+    use crate::request::RequestId;
+    use crate::sim::SimView;
+
+    fn cluster(n: usize) -> Vec<SimInstance> {
+        (0..n)
+            .map(|i| SimInstance::new(InstanceId(i), CostModel::h800_llama8b()))
+            .collect()
+    }
+
+    fn policy(n: usize) -> (UnifiedPolicy, Vec<SimInstance>) {
+        let insts = cluster(n);
+        let mut p = UnifiedPolicy::new(UnifiedConfig::new(3.0, 0.1), n);
+        p.init(&SimView(&insts));
+        (p, insts)
+    }
+
+    fn req(id: u64, input: u32, output: u32) -> Request {
+        Request::new(id, 0.0, input, output)
+    }
+
+    #[test]
+    fn every_instance_sits_in_exactly_one_slot_and_never_flips() {
+        let (p, _) = policy(4);
+        assert_eq!(p.pool_sizes(), Some([4, 0, 0, 0]));
+        assert_eq!(p.flip_count(), 0);
+        for i in 0..4 {
+            assert_eq!(p.members().pool_of(InstanceId(i)), Some(Pool::Prefill));
+        }
+    }
+
+    #[test]
+    fn prefill_spreads_by_token_share() {
+        let (mut p, mut insts) = policy(4);
+        // Instance 0 carries prefill backlog, 1 carries decode load:
+        // a fresh prefill must land on an unloaded member (2, by tie).
+        insts[0].enqueue_prefill(RequestId(9), 50_000);
+        assert!(insts[1].try_reserve_kv(20_000));
+        insts[1].enqueue_decode(RequestId(10), 20_000, 100);
+        let t = p.place_prefill(0.0, &req(1, 1000, 10), &SimView(&insts));
+        assert_eq!(t, InstanceId(2));
+    }
+
+    #[test]
+    fn decode_always_stays_local_to_a_live_member() {
+        let (mut p, mut insts) = policy(4);
+        for i in 0..4 {
+            let t = p.place_decode(0.0, &req(i as u64, 1000, 10), InstanceId(i), &SimView(&insts));
+            assert_eq!(t, InstanceId(i), "unified decode never migrates KV");
+        }
+        // A departed instance forces migration to the least-loaded member.
+        insts[3].life = crate::sched::Liveness::Dead;
+        p.on_membership(
+            0.0,
+            MembershipEvent::InstanceLost { id: InstanceId(3) },
+            &SimView(&insts),
+            &SimView(&insts),
+        );
+        let t = p.place_decode(0.0, &req(9, 1000, 10), InstanceId(3), &SimView(&insts));
+        assert_eq!(t, InstanceId(0), "migrated off the lost instance");
+        assert_eq!(p.pool_sizes(), Some([3, 0, 0, 0]));
+    }
+
+    #[test]
+    fn cut_point_tracks_pressure_and_stays_bounded() {
+        let (mut p, mut insts) = policy(4);
+        let mid = p.cut();
+        // Prefill pressure on every member: cut rises.
+        for (r, inst) in insts.iter_mut().enumerate() {
+            for k in 0..4 {
+                inst.enqueue_prefill(RequestId((100 + 10 * r + k) as u64), 100_000);
+            }
+        }
+        for tick in 0..64 {
+            p.on_tick(tick as f64, &SimView(&insts));
+        }
+        assert!(p.cut() > mid, "prefill pressure must raise the cut");
+        assert!(p.cut() <= 0.9, "cut stays within bounds");
+        // Decode pressure (TPOT breach) with no prefill queue: cut falls.
+        let (mut p2, mut insts2) = policy(4);
+        for inst in insts2.iter_mut() {
+            inst.seed_token_interval(0.5); // >> 0.1s TPOT SLO
+        }
+        for tick in 0..64 {
+            p2.on_tick(tick as f64, &SimView(&insts2));
+        }
+        assert!(p2.cut() < mid, "decode pressure must lower the cut");
+        assert!(p2.cut() >= 0.1, "cut stays within bounds");
+        // Calm again: the cut decays back to the midpoint exactly.
+        for inst in insts2.iter_mut() {
+            inst.reset_monitor();
+        }
+        for tick in 0..64 {
+            p2.on_tick(tick as f64, &SimView(&insts2));
+        }
+        assert_eq!(p2.cut(), mid, "calm reverts the cut to the midpoint");
+    }
+
+    #[test]
+    fn degraded_member_is_deprioritized_but_still_last_resort() {
+        let (mut p, mut insts) = policy(2);
+        insts[0].life = crate::sched::Liveness::Degraded;
+        let t = p.place_prefill(0.0, &req(1, 1000, 10), &SimView(&insts));
+        assert_eq!(t, InstanceId(1), "healthy member preferred");
+        insts[1].life = crate::sched::Liveness::Degraded;
+        let t = p.place_prefill(0.0, &req(2, 1000, 10), &SimView(&insts));
+        assert_eq!(t, InstanceId(0), "a straggler beats nothing");
+    }
+}

@@ -28,10 +28,10 @@ use arrow::engine::SimInstance;
 use arrow::fault::{FaultKind, FaultPlan, TransferRetryPolicy};
 use arrow::harness::chaos::{run_chaos_for, ChaosConfig};
 use arrow::request::{InstanceId, Request, RequestState, ShedReason};
-use arrow::scenarios::arrow_chaos;
+use arrow::scenarios::{arrow_chaos, build, system_chaos, System};
 use arrow::sched::{Liveness, Policy};
 use arrow::server::view::mirror_sim_instances;
-use arrow::sim::{Cluster, SimConfig, SimResult, SimView};
+use arrow::sim::{Cluster, MembershipChange, SimConfig, SimResult, SimView};
 use arrow::trace::catalog;
 use arrow::trace::Trace;
 use arrow::util::rng::Rng;
@@ -181,6 +181,146 @@ fn chaos_harness_invariants_hold_end_to_end() {
             .collect::<Vec<_>>()
     );
     assert!(report.points[1].n_faults > 0, "faulted point injected nothing");
+}
+
+/// PR 10: the scheduling adversaries inherit the chaos contracts — the
+/// no-silent-loss accounting holds under seeded fault plans for both new
+/// policies, through the same recovery-armed builder Arrow uses.
+#[test]
+fn adversary_chaos_never_silently_loses_requests() {
+    let base = CostModel::h800_llama8b();
+    for sys in [System::Deflect, System::Unified] {
+        for seed in [7u64, 42] {
+            let trace = chaos_trace(seed);
+            let plan = FaultPlan::seeded(seed, 4, trace.duration(), 2.0);
+            assert!(!plan.is_empty(), "intensity 2.0 must inject faults");
+            let mut cl = system_chaos(sys, 4, &base, TTFT_SLO, TPOT_SLO);
+            cl.schedule_fault_plan(&plan);
+            let res = cl.run(&trace);
+            let ctx = format!("{} seed {seed}", sys.label());
+            assert_fully_accounted(&res, &ctx);
+            let finished = res.records.iter().filter(|r| r.finished()).count();
+            assert!(
+                finished * 2 > res.records.len(),
+                "{ctx}: fewer than half the requests survived ({finished}/{})",
+                res.records.len()
+            );
+        }
+    }
+}
+
+/// PR 10: cursor/heap-reference byte identity with faults, under both
+/// adversaries — the PR-6 determinism contract is policy-independent.
+#[test]
+fn adversary_chaos_schedules_byte_identical_across_loop_modes() {
+    let base = CostModel::h800_llama8b();
+    for sys in [System::Deflect, System::Unified] {
+        let trace = chaos_trace(11);
+        let plan = FaultPlan::seeded(11 ^ 0xC0FFEE, 4, trace.duration(), 1.5);
+        let mut cursor = system_chaos(sys, 4, &base, TTFT_SLO, TPOT_SLO);
+        cursor.schedule_fault_plan(&plan);
+        let a = cursor.run(&trace);
+        let mut reference = system_chaos(sys, 4, &base, TTFT_SLO, TPOT_SLO);
+        reference.schedule_fault_plan(&plan);
+        let b = reference.run_reference(&trace);
+        assert_identical(&a, &b, &format!("{} chaos", sys.label()));
+    }
+}
+
+/// PR 10: a deflected prefill whose target decode instance crashes is
+/// recovered by the PR-3 machinery — requeued, re-placed off the dead
+/// slot, and finished with its full token count.
+///
+/// Construction: four huge prefills press the seed prefill pool (0, 1)
+/// far past the TTFT target, then a stream of cap-sized prefills arrives
+/// and deflects onto the decode instances (2, 3). The fault-free run
+/// identifies a victim — a small prefill placed on instance 3 whose
+/// first token lands *after* the chosen crash time, so at that moment
+/// its work lives on instance 3 — and the fault run kills instance 3 at
+/// exactly that time. Determinism makes the two runs identical up to the
+/// crash, so the victim's exposure is guaranteed, not probabilistic.
+#[test]
+fn deflected_prefill_on_crashed_target_restarts_elsewhere() {
+    let base = CostModel::h800_llama8b();
+    let mut reqs = Vec::new();
+    // Pool pressure: ~10s of prefill backlog per seed prefill instance.
+    for id in 0..4u64 {
+        reqs.push(Request::new(id, 0.0, 100_000, 10));
+    }
+    // Deflectable stream: well under the one-chunk deflection cap.
+    for i in 0..20u64 {
+        reqs.push(Request::new(4 + i, 0.001 * (i + 1) as f64, 1_500, 20));
+    }
+    let trace = Trace::new("deflect-recovery", reqs);
+
+    // Fault-free baseline: the smalls must actually deflect (no flip was
+    // burned, yet they sit on decode-side instances), spread over both
+    // targets, and instance 3 must carry some of them.
+    let baseline = build(System::Deflect, 4, &base, TTFT_SLO, TPOT_SLO, false).run(&trace);
+    assert_fully_accounted(&baseline, "baseline");
+    assert!(
+        baseline.records.iter().all(|r| r.finished()),
+        "fault-free baseline must finish everything"
+    );
+    assert_eq!(baseline.total_flips, 0, "pressure must deflect, not flip");
+    let small_on = |res: &SimResult, inst: usize| -> Vec<u64> {
+        res.records
+            .iter()
+            .filter(|r| r.id.0 >= 4 && r.prefill_instance == Some(InstanceId(inst)))
+            .map(|r| r.id.0)
+            .collect()
+    };
+    assert!(
+        !small_on(&baseline, 2).is_empty() && !small_on(&baseline, 3).is_empty(),
+        "deflections must spread over both decode instances"
+    );
+
+    // Pick the crash time from the baseline: half-way to the latest
+    // first token among instance-3 smalls. Everything scheduled before
+    // that instant replays identically in the fault run.
+    let t_fail = baseline
+        .records
+        .iter()
+        .filter(|r| r.id.0 >= 4 && r.prefill_instance == Some(InstanceId(3)))
+        .map(|r| r.token_times[0])
+        .fold(0.0f64, f64::max)
+        * 0.5;
+    let victims: Vec<u64> = baseline
+        .records
+        .iter()
+        .filter(|r| {
+            r.id.0 >= 4
+                && r.prefill_instance == Some(InstanceId(3))
+                && r.token_times[0] > t_fail
+        })
+        .map(|r| r.id.0)
+        .collect();
+    assert!(
+        !victims.is_empty() && t_fail > 0.021,
+        "victim selection degenerated (t_fail={t_fail})"
+    );
+
+    let mut cl = build(System::Deflect, 4, &base, TTFT_SLO, TPOT_SLO, false);
+    cl.schedule_membership(t_fail, MembershipChange::Fail(3));
+    let failed = cl.run(&trace);
+    assert_fully_accounted(&failed, "crashed target");
+    for r in &failed.records {
+        if !victims.contains(&r.id.0) {
+            continue;
+        }
+        assert_eq!(
+            r.state,
+            RequestState::Finished,
+            "victim {} must be recovered, not shed",
+            r.id
+        );
+        assert_ne!(
+            r.prefill_instance,
+            Some(InstanceId(3)),
+            "victim {} must be re-placed off the dead instance",
+            r.id
+        );
+    }
 }
 
 /// Satellite: buffer exhaustion + fail_timeout on a flapped link. The

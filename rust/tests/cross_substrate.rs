@@ -156,6 +156,163 @@ fn arrow_decisions_identical_across_adapters() {
     );
 }
 
+/// PR 10: the scheduling adversaries are bound by the same substrate-
+/// blindness contract as Arrow. One randomized sequence of placements,
+/// ticks, engine progress and membership churn runs in lockstep through
+/// `SimView` and the materialized `ServerView`; every placement, pool
+/// state and flip count must agree bit-for-bit.
+fn adversary_lockstep<P, F>(mk: F, seed: u64, bias_small: bool) -> (P, P)
+where
+    P: Policy,
+    F: Fn() -> P,
+{
+    let n = 6;
+    let mut insts = cluster(n);
+    let mut sim_policy = mk();
+    let mut srv_policy = mk();
+    sim_policy.init(&SimView(&insts));
+    srv_policy.init(&SimView(&insts));
+    let profile = fixed_profile(&insts, 0.1);
+
+    let mut rng = Rng::new(seed);
+    for step in 0..240u64 {
+        match rng.index(4) {
+            0 => {
+                // Prefill placement. `bias_small` keeps a healthy share of
+                // requests under the deflection cap so the intercepted
+                // path is actually exercised.
+                let input = if bias_small && rng.bool(0.4) {
+                    rng.int_range(100, 2_048) as u32
+                } else {
+                    rng.int_range(100, 60_000) as u32
+                };
+                let r = Request::new(step, step as f64, input, 16);
+                let snap = snapshot(&insts);
+                let a = sim_policy.place_prefill(step as f64, &r, &SimView(&insts));
+                let b = srv_policy.place_prefill(step as f64, &r, &snap);
+                assert_eq!(a, b, "step {step}: prefill placement diverged");
+                assert!(insts[a.0].life.placeable(), "step {step}: placed on departed");
+                insts[a.0].enqueue_prefill(RequestId(step), r.input_len);
+            }
+            1 => {
+                let live: Vec<usize> = (0..n)
+                    .filter(|&i| insts[i].life.in_cluster())
+                    .collect();
+                let from = InstanceId(live[rng.index(live.len())]);
+                let r = Request::new(step, step as f64, rng.int_range(100, 20_000) as u32, 16);
+                let snap = snapshot(&insts);
+                let a = sim_policy.place_decode(step as f64, &r, from, &SimView(&insts));
+                let b = srv_policy.place_decode(step as f64, &r, from, &snap);
+                assert_eq!(a, b, "step {step}: decode placement diverged");
+                assert!(insts[a.0].life.placeable(), "step {step}: decoded on departed");
+                if a != from && insts[a.0].try_reserve_kv(r.input_len as u64) {
+                    insts[a.0].enqueue_decode(RequestId(step), r.input_len, 8);
+                }
+            }
+            2 => {
+                let dead: Vec<usize> =
+                    (0..n).filter(|&i| insts[i].life == Liveness::Dead).collect();
+                let active: Vec<usize> = (0..n)
+                    .filter(|&i| insts[i].life == Liveness::Active)
+                    .collect();
+                let ev = if !dead.is_empty() && rng.bool(0.5) {
+                    let i = dead[rng.index(dead.len())];
+                    insts[i].life = Liveness::Active;
+                    Some(MembershipEvent::InstanceJoined { id: InstanceId(i) })
+                } else if active.len() > 3 {
+                    let i = active[rng.index(active.len())];
+                    if rng.bool(0.5) {
+                        insts[i].life = Liveness::Dead;
+                        let mut scrap = Vec::new();
+                        insts[i].drain_request_ids(&mut scrap);
+                        Some(MembershipEvent::InstanceLost { id: InstanceId(i) })
+                    } else {
+                        insts[i].life = Liveness::Draining;
+                        Some(MembershipEvent::InstanceDraining { id: InstanceId(i) })
+                    }
+                } else {
+                    None
+                };
+                if let Some(ev) = ev {
+                    let snap = snapshot(&insts);
+                    sim_policy.on_membership(
+                        step as f64,
+                        ev,
+                        &SimView(&insts),
+                        &SimView(&insts),
+                    );
+                    srv_policy.on_membership(step as f64, ev, &snap, &profile);
+                }
+            }
+            _ => {
+                for i in 0..n {
+                    if !insts[i].life.in_cluster() {
+                        continue;
+                    }
+                    if let Some(plan) = insts[i].plan_iteration() {
+                        let now = step as f64 + 0.01 * (i + 1) as f64;
+                        insts[i].finish_iteration(&plan, now);
+                    }
+                }
+                let snap = snapshot(&insts);
+                sim_policy.on_tick(step as f64, &SimView(&insts));
+                srv_policy.on_tick(step as f64, &snap);
+            }
+        }
+        assert_eq!(
+            sim_policy.pool_sizes(),
+            srv_policy.pool_sizes(),
+            "step {step}: pool states diverged"
+        );
+        assert_eq!(
+            sim_policy.flip_count(),
+            srv_policy.flip_count(),
+            "step {step}: flip decisions diverged"
+        );
+    }
+    (sim_policy, srv_policy)
+}
+
+#[test]
+fn deflect_decisions_identical_across_adapters() {
+    use arrow::sched::{DeflectConfig, DeflectPolicy};
+    let (sim_p, srv_p) = adversary_lockstep(
+        || DeflectPolicy::new(DeflectConfig::new(2.0, 0.1, 6), 6),
+        42,
+        true,
+    );
+    assert_eq!(
+        sim_p.deflection_count(),
+        srv_p.deflection_count(),
+        "deflection decisions diverged across adapters"
+    );
+    // The sequence must actually reach the pressure machinery one way or
+    // the other — a run with neither a deflection nor a flip proves
+    // nothing about the intercepted path.
+    assert!(
+        sim_p.deflection_count() > 0 || sim_p.flip_count() > 0,
+        "golden sequence never pressured the prefill pool — test got weaker"
+    );
+}
+
+#[test]
+fn unified_decisions_identical_across_adapters() {
+    use arrow::sched::{UnifiedConfig, UnifiedPolicy};
+    let (sim_p, srv_p) = adversary_lockstep(
+        || UnifiedPolicy::new(UnifiedConfig::new(2.0, 0.1), 6),
+        1337,
+        false,
+    );
+    // Unified never flips: the cut point moves instead, and it must move
+    // identically over both adapters.
+    assert_eq!(sim_p.flip_count(), 0, "unified must never flip an instance");
+    assert_eq!(
+        sim_p.cut().to_bits(),
+        srv_p.cut().to_bits(),
+        "cut controllers diverged across adapters"
+    );
+}
+
 #[test]
 fn minimal_load_baseline_identical_across_adapters() {
     use arrow::baselines::{PickRule, StaticDisaggPolicy};

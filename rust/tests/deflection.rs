@@ -1,0 +1,287 @@
+//! Deflection conformance tier (PR 10 satellite).
+//!
+//! [`DeflectPolicy`] is Arrow plus exactly one extra move — chunk-
+//! colocating a small prefill onto a decode instance when the prefill
+//! side is pressed — so its contract is "Arrow, except where the
+//! deflection paper says otherwise". Five properties pin that down:
+//!
+//! 1. **Quiescent bit-identity** — with no prefill pressure the wrapper
+//!    delegates every decision, so a light-load schedule is
+//!    bit-identical to plain Arrow's (placements, token times, flips,
+//!    iterations, event counts).
+//! 2. **No decode displacement** — a deflected prefill shares mixed
+//!    iterations with the target's in-progress decode head; the decode
+//!    batch keeps emitting a token every iteration (decode priority +
+//!    `iter_time_budget` chunking, the PR-1 engine contract the
+//!    deflection design leans on).
+//! 3. **Interference guard** — a target past the TPOT budget refuses
+//!    deflection, identically through the simulator borrow and the
+//!    live-server snapshot.
+//! 4. **Size cap** — an oversized prefill is never deflected: under the
+//!    exact same pressure the wrapper's decision equals plain Arrow's.
+//! 5. **Hand-walked burst** — with the prefill pool pressed by a long
+//!    backlog, N small prefills deflect and complete their prefills
+//!    strictly before the pressed queue's own predicted drain window
+//!    (the window a flip-based resolution necessarily waits on) closes
+//!    — and no flip is burned doing it.
+
+use arrow::coordinator::arrow::{ArrowConfig, ArrowPolicy};
+use arrow::costmodel::CostModel;
+use arrow::engine::{Produced, SimInstance};
+use arrow::request::{InstanceId, Request, RequestId};
+use arrow::scenarios::{build, System};
+use arrow::sched::{DeflectConfig, DeflectPolicy, Policy, ProfileSource, DEFAULT_CHUNK_TOKENS};
+use arrow::server::view::mirror_sim_instances;
+use arrow::sim::SimView;
+use arrow::trace::synthetic::smoke;
+
+const TTFT_SLO: f64 = 3.0;
+const TPOT_SLO: f64 = 0.1;
+
+fn cluster(n: usize) -> Vec<SimInstance> {
+    (0..n)
+        .map(|i| SimInstance::new(InstanceId(i), CostModel::h800_llama8b()))
+        .collect()
+}
+
+fn deflect_policy(insts: &[SimInstance]) -> DeflectPolicy {
+    let n = insts.len();
+    let mut p = DeflectPolicy::new(DeflectConfig::new(TTFT_SLO, TPOT_SLO, n), n);
+    p.init(&SimView(insts));
+    p
+}
+
+/// Backlog every seed prefill instance far past any SLO (the pressure
+/// regime in which Arrow hunts for a flip and deflection triggers).
+fn press_prefill_pool(insts: &mut [SimInstance], n_prefill: usize) {
+    for inst in insts.iter_mut().take(n_prefill) {
+        for r in 0..4 {
+            inst.enqueue_prefill(RequestId(900 + r), 100_000);
+        }
+    }
+}
+
+fn small(id: u64, input: u32) -> Request {
+    Request::new(id, 0.0, input, 10)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Quiescent bit-identity to Arrow
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quiescent_schedule_is_bit_identical_to_arrow() {
+    // Light load on 8 instances: predicted queue delays never approach
+    // the TTFT SLO, so the deflection trigger must never fire and the
+    // wrapper is a transparent proxy — down to the last token-time bit.
+    let base = CostModel::h800_llama8b();
+    let trace = smoke(150, 2).generate(3);
+    let a = build(System::Arrow, 8, &base, 2.0, 0.1, false).run(&trace);
+    let d = build(System::Deflect, 8, &base, 2.0, 0.1, false).run(&trace);
+    assert_eq!(a.records.len(), d.records.len());
+    for (ra, rd) in a.records.iter().zip(&d.records) {
+        assert_eq!(ra.prefill_instance, rd.prefill_instance, "req {}", ra.id);
+        assert_eq!(ra.decode_instance, rd.decode_instance, "req {}", ra.id);
+        assert_eq!(ra.state, rd.state, "req {}", ra.id);
+        assert_eq!(ra.token_times.len(), rd.token_times.len(), "req {}", ra.id);
+        for (ta, td) in ra.token_times.iter().zip(&rd.token_times) {
+            assert_eq!(
+                ta.to_bits(),
+                td.to_bits(),
+                "req {}: quiescent deflect drifted from Arrow",
+                ra.id
+            );
+        }
+    }
+    assert_eq!(a.total_flips, d.total_flips, "flip decisions diverged");
+    assert_eq!(a.total_iterations, d.total_iterations);
+    assert_eq!(a.events_processed, d.events_processed);
+}
+
+// ---------------------------------------------------------------------------
+// 2. Deflected prefill never displaces the in-progress decode head
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deflected_prefill_never_displaces_in_progress_decode() {
+    // n=2: one prefill instance (0, pressed), one decode instance (1)
+    // with a decode in flight. The deflected prefill must share mixed
+    // iterations with that decode — which keeps emitting a token every
+    // single iteration until the prefill completes.
+    let mut insts = cluster(2);
+    insts[1].iter_time_budget = Some(0.8 * TPOT_SLO);
+    let mut p = deflect_policy(&insts);
+    press_prefill_pool(&mut insts, 1);
+    let decode_id = RequestId(500);
+    assert!(insts[1].try_reserve_kv(4_000));
+    insts[1].enqueue_decode(decode_id, 4_000, 50);
+
+    let req = small(1, 1_200);
+    let target = p.place_prefill(0.0, &req, &SimView(&insts));
+    assert_eq!(target, InstanceId(1), "small prefill deflects to the decode instance");
+    assert_eq!(p.deflection_count(), 1);
+    insts[1].enqueue_prefill(RequestId(1), req.input_len);
+
+    let mut now = 0.0;
+    let mut prefill_done = false;
+    for _ in 0..64 {
+        let plan = insts[1]
+            .plan_iteration()
+            .expect("decode + deflected prefill leave work to do");
+        // The decode head is in every mixed iteration, and the deflected
+        // chunk rides along rather than displacing it.
+        assert_eq!(plan.decode_reqs, 1, "decode head dropped from the batch");
+        now += plan.duration;
+        let produced = insts[1].finish_iteration(&plan, now);
+        assert!(
+            produced
+                .iter()
+                .any(|ev| matches!(ev, Produced::Token { id } | Produced::FinalToken { id, .. } if *id == decode_id)),
+            "decode head skipped a token while the deflected prefill ran"
+        );
+        if produced
+            .iter()
+            .any(|ev| matches!(ev, Produced::PrefillDone { id, .. } if *id == RequestId(1)))
+        {
+            prefill_done = true;
+            break;
+        }
+    }
+    assert!(prefill_done, "deflected prefill never completed");
+}
+
+// ---------------------------------------------------------------------------
+// 3. Interference guard, across both adapters
+// ---------------------------------------------------------------------------
+
+#[test]
+fn interference_guard_holds_across_adapters() {
+    let mut insts = cluster(4);
+    let mut sim_p = deflect_policy(&insts);
+    let mut srv_p = deflect_policy(&insts);
+    press_prefill_pool(&mut insts, 2);
+    // Every decode-capable target reports token intervals past the TPOT
+    // budget: deflection is off the table, and the wrapped Arrow decides
+    // — identically through both adapters.
+    for inst in insts.iter_mut().skip(2) {
+        inst.seed_token_interval(0.5); // >> 0.1s TPOT SLO
+    }
+    for step in 0..8u64 {
+        let r = small(step, 1_000);
+        let snap = mirror_sim_instances(&insts);
+        let a = sim_p.place_prefill(step as f64, &r, &SimView(&insts));
+        let b = srv_p.place_prefill(step as f64, &r, &snap);
+        assert_eq!(a, b, "step {step}: guard decision diverged across adapters");
+        assert_eq!(sim_p.deflection_count(), 0, "guard must block deflection");
+        assert_eq!(srv_p.deflection_count(), 0);
+        assert_eq!(sim_p.pool_sizes(), srv_p.pool_sizes(), "step {step}");
+        assert_eq!(sim_p.flip_count(), srv_p.flip_count(), "step {step}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Oversized prefills follow Arrow exactly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn oversized_prefill_is_never_deflected_and_matches_arrow() {
+    // Two identically initialized policies over identical state: for a
+    // request past the deflection cap, the wrapper must reproduce plain
+    // Arrow's decision (flip and all), not merely "not deflect".
+    let mut insts = cluster(4);
+    let mut wrapped = deflect_policy(&insts);
+    let mut plain = ArrowPolicy::new(ArrowConfig::new(TTFT_SLO, TPOT_SLO, 4), 4);
+    plain.init(&SimView(&insts));
+    press_prefill_pool(&mut insts, 2);
+
+    let big = small(1, DEFAULT_CHUNK_TOKENS + 1);
+    let a = wrapped.place_prefill(0.0, &big, &SimView(&insts));
+    let b = plain.place_prefill(0.0, &big, &SimView(&insts));
+    assert_eq!(a, b, "oversized request must fall through to Arrow verbatim");
+    assert_eq!(wrapped.deflection_count(), 0);
+    assert_eq!(wrapped.flip_count(), plain.flip_count(), "flip decisions must match");
+    assert_eq!(wrapped.pool_sizes(), plain.pool_sizes());
+}
+
+// ---------------------------------------------------------------------------
+// 5. Hand-walked burst: deflection beats the flip-drain window
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hand_walked_burst_completes_small_prefills_inside_the_drain_window() {
+    // Pools seed [0,1] prefill / [2,3] decode. Both prefill instances are
+    // pressed with 400k tokens of backlog; the predicted drain of that
+    // backlog is the window any flip-based resolution waits on (a freshly
+    // flipped instance only relieves requests that queue *behind* the
+    // decision, and the pressed queues keep draining meanwhile). Three
+    // small prefills deflect instead — and all three complete while that
+    // window is still open, without burning a single flip.
+    let n = 4;
+    let mut insts = cluster(n);
+    for inst in insts.iter_mut() {
+        inst.iter_time_budget = Some(0.8 * TPOT_SLO);
+    }
+    let mut p = deflect_policy(&insts);
+    press_prefill_pool(&mut insts, 2);
+    assert_eq!(p.pools().sizes(), [2, 2, 0, 0]);
+
+    // The drain window, priced by the same fitted predictor the policy
+    // uses: the shorter of the two pressed queues.
+    let profile = SimView(&insts);
+    let window = (0..2)
+        .map(|i| profile.fit_predictor(i).queue_delay_view(&SimView(&insts), i))
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        window > TTFT_SLO,
+        "backlog must exceed the SLO for the burst to be pressure at all"
+    );
+
+    // Deflect N small prefills; each lands on a decode instance and the
+    // load metric (resident + queued tokens) spreads them.
+    let n_small = 3u64;
+    let mut targets = Vec::new();
+    for id in 0..n_small {
+        let r = small(id, 1_500);
+        let t = p.place_prefill(0.0, &r, &SimView(&insts));
+        assert!(t.0 >= 2, "small prefill {id} must deflect, got {t}");
+        insts[t.0].enqueue_prefill(RequestId(id), r.input_len);
+        targets.push(t);
+    }
+    assert_eq!(p.deflection_count(), n_small);
+    assert_eq!(p.flip_count(), 0, "deflection must not burn a flip");
+    assert_eq!(p.pools().sizes(), [2, 2, 0, 0], "pools untouched");
+    assert!(
+        targets.iter().any(|t| *t != targets[0]),
+        "consecutive deflections must spread over the decode pool"
+    );
+
+    // Hand-walk the decode instances until every deflected prefill has
+    // produced its first token; each instance's clock advances by its
+    // own iteration durations.
+    let mut clock = [0.0f64; 4];
+    let mut done = [false; 3];
+    for _ in 0..256 {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        for i in 2..n {
+            if let Some(plan) = insts[i].plan_iteration() {
+                clock[i] += plan.duration;
+                let t = clock[i];
+                for ev in insts[i].finish_iteration(&plan, t) {
+                    if let Produced::PrefillDone { id, .. } = ev {
+                        if (id.0 as usize) < done.len() {
+                            done[id.0 as usize] = true;
+                            assert!(
+                                t < window,
+                                "deflected prefill {id} completed at {t:.3}s, after \
+                                 the {window:.3}s flip-drain window closed"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(done.iter().all(|&d| d), "not every deflected prefill completed");
+}

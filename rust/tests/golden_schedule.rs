@@ -16,6 +16,8 @@
 //! PR 5 adds `*@normalized` entries: the same workload digested under
 //! `CostModel::normalized()` for all six systems, so placement drift on
 //! the paper-claims conformance path is caught by the same golden gate.
+//! PR 10 extends the normalized set with the two scheduling adversaries
+//! (`deflect`, `unified`) the claims sweep now also measures.
 
 use arrow::costmodel::CostModel;
 use arrow::json::Json;
@@ -101,8 +103,8 @@ fn schedule_digests_stable_across_runs_modes_and_commits() {
     // Claims-path coverage (PR 5): the paper-claims tier runs every
     // system under `CostModel::normalized()`, so placement drift on the
     // normalized path must fail CI exactly like drift on the calibrated
-    // path — all six systems are digested (the claims sweep exercises
-    // all six).
+    // path — all eight systems are digested (the claims sweep exercises
+    // all eight since PR 10).
     let norm = CostModel::normalized();
     check("arrow@normalized", &|| {
         build(System::Arrow, 8, &norm, ttft, tpot, false)
@@ -121,6 +123,15 @@ fn schedule_digests_stable_across_runs_modes_and_commits() {
     });
     check("round-robin@normalized", &|| {
         build(System::RoundRobin, 8, &norm, ttft, tpot, false)
+    });
+    // PR 10: the scheduling adversaries get their own stable digests —
+    // the deflection trigger and the cut controller are placement paths
+    // like any other, so drift there must fail CI identically.
+    check("deflect@normalized", &|| {
+        build(System::Deflect, 8, &norm, ttft, tpot, false)
+    });
+    check("unified@normalized", &|| {
+        build(System::Unified, 8, &norm, ttft, tpot, false)
     });
 
     // Cross-commit regression: enforce (or record) the golden file.

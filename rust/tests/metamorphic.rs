@@ -23,7 +23,9 @@
 use arrow::costmodel::CostModel;
 use arrow::metrics::{max_sustainable_rate, SloReport};
 use arrow::request::{Request, SloClass};
-use arrow::scenarios::{build, build_arrow_classed, build_time_scaled, spike_scale_out, System};
+use arrow::scenarios::{
+    build, build_arrow_classed, build_time_scaled, spike_scale_out, spike_scale_out_for, System,
+};
 use arrow::sim::{AdmissionControl, SimResult};
 use arrow::trace::{catalog, Trace};
 use arrow::util::rng::Rng;
@@ -93,7 +95,13 @@ fn equal_time_equal_shape_arrivals_are_order_invariant() {
     rng.shuffle(&mut shuffled);
     let permuted = Trace::new("ties", shuffled);
     let base = CostModel::normalized();
-    for sys in [System::Arrow, System::MinimalLoad, System::RoundRobin] {
+    for sys in [
+        System::Arrow,
+        System::MinimalLoad,
+        System::RoundRobin,
+        System::Deflect,
+        System::Unified,
+    ] {
         let a = build(sys, 8, &base, 2.0, 0.1, false).run(&forward);
         let b = build(sys, 8, &base, 2.0, 0.1, false).run(&permuted);
         assert_eq!(a.records.len(), b.records.len());
@@ -129,7 +137,7 @@ fn tie_heavy_trace_schedules_identically_in_cursor_and_heap_modes() {
     let (reqs, _) = tie_trace();
     let trace = Trace::new("ties", reqs);
     let base = CostModel::normalized();
-    for sys in [System::Arrow, System::MinimalLoad] {
+    for sys in [System::Arrow, System::MinimalLoad, System::Deflect, System::Unified] {
         let cur = build(sys, 8, &base, 2.0, 0.1, false).run(&trace);
         let heap = build(sys, 8, &base, 2.0, 0.1, false).run_reference(&trace);
         assert_eq!(cur.events_processed, heap.events_processed, "{}", sys.label());
@@ -314,6 +322,51 @@ fn spare_instances_joining_mid_run_never_hurt() {
         re.goodput_tokens,
         rf.goodput_tokens
     );
+}
+
+#[test]
+fn spare_instances_never_hurt_the_scheduling_adversaries_either() {
+    // PR 10: the elastic-membership dominance property extends to both
+    // new adversaries — deflection (whose inner Arrow re-seeds pools on
+    // joins) and the unified design (where a joiner simply takes the one
+    // slot every member occupies).
+    let w = catalog::by_name("azure_code").unwrap();
+    let trace = {
+        let t = w.generate(9).clip_seconds(120.0);
+        let r = t.rate();
+        t.with_rate(r * 10.0)
+    };
+    let base = CostModel::normalized();
+    for sys in [System::Deflect, System::Unified] {
+        let fixed = build(sys, 4, &base, w.ttft_slo, w.tpot_slo, false).run(&trace);
+        let elastic = spike_scale_out_for(
+            sys,
+            4,
+            4,
+            &base,
+            w.ttft_slo,
+            w.tpot_slo,
+            0.25 * trace.duration(),
+        )
+        .run(&trace);
+        let rf = report(&fixed, w.ttft_slo, w.tpot_slo, trace.duration());
+        let re = report(&elastic, w.ttft_slo, w.tpot_slo, trace.duration());
+        assert_eq!(re.n_finished + re.n_failed, re.n_requests, "{}", sys.label());
+        assert!(
+            re.slo_attainment >= rf.slo_attainment - 0.02,
+            "{}: scale-out attainment {:.3} fell below fixed-membership {:.3}",
+            sys.label(),
+            re.slo_attainment,
+            rf.slo_attainment
+        );
+        assert!(
+            re.goodput_tokens >= rf.goodput_tokens * 0.98,
+            "{}: scale-out goodput {:.1} fell below fixed-membership {:.1}",
+            sys.label(),
+            re.goodput_tokens,
+            rf.goodput_tokens
+        );
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -182,3 +182,163 @@ fn prop_live_partition_flip_conservation_no_dead_placements() {
         Ok(())
     });
 }
+
+/// PR 10: the same randomized membership gauntlet, generic over the new
+/// scheduling adversaries. `check_sizes(sizes, live)` encodes each
+/// policy's own pool contract; everything else (live partition, adapter
+/// bit-identity, no dead placements) is shared.
+fn adversary_partition_prop<P, F>(seed: u64, mk: F, check_sizes: fn(&[usize; 4], usize) -> bool)
+where
+    P: Policy,
+    F: Fn(usize) -> P,
+{
+    prop::check_with(seed, 48, |rng: &mut Rng| {
+        let n = rng.index(5) + 3; // 3..=7 instances
+        let mut insts: Vec<SimInstance> = (0..n)
+            .map(|i| SimInstance::new(InstanceId(i), CostModel::h800_llama8b()))
+            .collect();
+        let mut sim_p = mk(n);
+        let mut srv_p = mk(n);
+        sim_p.init(&SimView(&insts));
+        srv_p.init(&SimView(&insts));
+        let profile = fixed_profile(&insts, 0.1);
+        let mut live = n;
+
+        for step in 0..80u64 {
+            let now = step as f64;
+            match rng.index(6) {
+                0 | 1 => {
+                    // Mix small (deflectable) and large prefills so the
+                    // deflection interceptor sees both sides of its cap.
+                    let input = if rng.bool(0.5) {
+                        rng.int_range(100, 2_048) as u32
+                    } else {
+                        rng.int_range(100, 60_000) as u32
+                    };
+                    let r = Request::new(step, now, input, 16);
+                    let snap = snapshot(&insts);
+                    let a = sim_p.place_prefill(now, &r, &SimView(&insts));
+                    let b = srv_p.place_prefill(now, &r, &snap);
+                    prop_assert!(a == b, "step {step}: prefill diverged {a} vs {b}");
+                    prop_assert!(
+                        insts[a.0].life.placeable(),
+                        "step {step}: prefill placed on departed {a}"
+                    );
+                    insts[a.0].enqueue_prefill(RequestId(step), r.input_len);
+                }
+                2 => {
+                    let from = pick(rng, &insts, Liveness::Active)
+                        .or_else(|| pick(rng, &insts, Liveness::Draining));
+                    if let Some(from) = from {
+                        let r = Request::new(
+                            step,
+                            now,
+                            rng.int_range(100, 20_000) as u32,
+                            16,
+                        );
+                        let snap = snapshot(&insts);
+                        let a = sim_p.place_decode(
+                            now,
+                            &r,
+                            InstanceId(from),
+                            &SimView(&insts),
+                        );
+                        let b = srv_p.place_decode(now, &r, InstanceId(from), &snap);
+                        prop_assert!(a == b, "step {step}: decode diverged {a} vs {b}");
+                        prop_assert!(
+                            insts[a.0].life.placeable(),
+                            "step {step}: decode placed on departed {a}"
+                        );
+                        if a.0 != from && insts[a.0].try_reserve_kv(r.input_len as u64) {
+                            insts[a.0].enqueue_decode(RequestId(step), r.input_len, 8);
+                        }
+                    }
+                }
+                3 => {
+                    for i in 0..n {
+                        if !insts[i].life.in_cluster() {
+                            continue;
+                        }
+                        if let Some(plan) = insts[i].plan_iteration() {
+                            let t = now + 0.01 * (i + 1) as f64;
+                            insts[i].finish_iteration(&plan, t);
+                        }
+                    }
+                    let snap = snapshot(&insts);
+                    sim_p.on_tick(now, &SimView(&insts));
+                    srv_p.on_tick(now, &snap);
+                }
+                4 => {
+                    if live > 2 {
+                        if let Some(i) = pick(rng, &insts, Liveness::Active) {
+                            let id = InstanceId(i);
+                            let ev = if rng.bool(0.5) {
+                                insts[i].life = Liveness::Dead;
+                                let mut scrap = Vec::new();
+                                insts[i].drain_request_ids(&mut scrap);
+                                MembershipEvent::InstanceLost { id }
+                            } else {
+                                insts[i].life = Liveness::Draining;
+                                MembershipEvent::InstanceDraining { id }
+                            };
+                            let snap = snapshot(&insts);
+                            sim_p.on_membership(now, ev, &SimView(&insts), &SimView(&insts));
+                            srv_p.on_membership(now, ev, &snap, &profile);
+                            live -= 1;
+                        }
+                    }
+                }
+                _ => {
+                    if let Some(i) = pick(rng, &insts, Liveness::Dead) {
+                        insts[i].life = Liveness::Active;
+                        let ev = MembershipEvent::InstanceJoined { id: InstanceId(i) };
+                        let snap = snapshot(&insts);
+                        sim_p.on_membership(now, ev, &SimView(&insts), &SimView(&insts));
+                        srv_p.on_membership(now, ev, &snap, &profile);
+                        live += 1;
+                    }
+                }
+            }
+
+            let sizes = sim_p.pool_sizes().expect("adversaries expose pools");
+            prop_assert!(
+                check_sizes(&sizes, live),
+                "step {step}: pools {sizes:?} violate the policy's contract \
+                 for {live} live instances"
+            );
+            prop_assert!(
+                sim_p.pool_sizes() == srv_p.pool_sizes(),
+                "step {step}: pool states diverged across adapters"
+            );
+            prop_assert!(
+                sim_p.flip_count() == srv_p.flip_count(),
+                "step {step}: flip counts diverged across adapters"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deflect_preserves_live_partition_and_flip_conservation() {
+    use arrow::sched::{DeflectConfig, DeflectPolicy};
+    // Deflection is a placement-time interception: the Arrow pools
+    // underneath must keep partitioning the live set exactly as before.
+    adversary_partition_prop(
+        911,
+        |n| DeflectPolicy::new(DeflectConfig::new(2.0, 0.1, n), n),
+        |sizes, live| sizes.iter().sum::<usize>() == live,
+    );
+}
+
+#[test]
+fn prop_unified_keeps_every_instance_in_exactly_one_slot() {
+    use arrow::sched::{UnifiedConfig, UnifiedPolicy};
+    // Unified has no P/D split: every live instance sits in exactly one
+    // pool slot (the first), and nothing ever flips out of it.
+    adversary_partition_prop(
+        912,
+        |n| UnifiedPolicy::new(UnifiedConfig::new(2.0, 0.1), n),
+        |sizes, live| *sizes == [live, 0, 0, 0],
+    );
+}
